@@ -1,0 +1,74 @@
+//! Carbon report: the sustainability story end to end — Fig 1's GPU
+//! landscape, then per-request footprints for every model on the
+//! old-fashioned testbed, M2Cache vs ZeRO-Inference, including the
+//! embodied-carbon argument for reusing deployed hardware.
+//!
+//!   cargo run --release --example carbon_report
+
+use m2cache::baseline::ZeroInfinityEngine;
+use m2cache::carbon::{self, find_gpu, RunProfile};
+use m2cache::coordinator::{EngineConfig, SimEngine};
+use m2cache::memsim::HardwareSpec;
+use m2cache::model::spec::ModelSpec;
+use m2cache::util::bench::Table;
+
+fn main() {
+    // Part 1: the hardware landscape (Fig 1).
+    print!("{}", m2cache::experiments::fig1::run());
+
+    // Part 2: per-request footprint, M2Cache vs ZeRO-Inf (Fig 12 style)
+    // for a 64-in / 128-out request.
+    println!("\nPer-request carbon (64 prompt + 128 generated tokens):");
+    let hw = HardwareSpec::rtx3090_testbed();
+    let gpu = find_gpu("RTX3090").unwrap();
+    let mut t = Table::new(["model", "engine", "time s", "gCO2", "g/token"]);
+    for spec in [
+        ModelSpec::llama2_7b(),
+        ModelSpec::llama2_13b(),
+        ModelSpec::llama2_70b(),
+    ] {
+        let mut m2 = SimEngine::new(spec.clone(), hw.clone(), EngineConfig::full());
+        let rm = m2.run(64, 128, gpu);
+        t.row([
+            spec.name.clone(),
+            "M2Cache".into(),
+            format!("{:.1}", rm.total_s),
+            format!("{:.2}", rm.carbon.total_g()),
+            format!("{:.4}", rm.carbon.total_g() / 128.0),
+        ]);
+        let mut zi = ZeroInfinityEngine::new(spec.clone(), hw.clone(), 64 << 30);
+        let rz = zi.run(64, 128, gpu);
+        t.row([
+            spec.name.clone(),
+            "ZeRO-Inf".into(),
+            format!("{:.1}", rz.total_s),
+            format!("{:.2}", rz.carbon.total_g()),
+            format!("{:.4}", rz.carbon.total_g() / 128.0),
+        ]);
+    }
+    t.print();
+
+    // Part 3: the embodied argument — serving on an already-deployed
+    // 3090 vs buying an H100 (1 year of continuous 13B serving).
+    println!("\nEmbodied-carbon argument (1 year of continuous serving):");
+    let year = RunProfile {
+        wall_s: 365.0 * 24.0 * 3600.0,
+        gpu_util: 0.6,
+        dram_gib: 48.0,
+        ssd_active: true,
+        cpu_cores: 1.0,
+    };
+    let old = carbon::footprint(gpu, &year, carbon::PAPER_INTENSITY_G_PER_KWH, false);
+    let h100 = find_gpu("H100").unwrap();
+    let new = carbon::footprint(h100, &year, carbon::PAPER_INTENSITY_G_PER_KWH, true);
+    println!(
+        "  deployed RTX3090 (no new embodied): {:.0} kgCO2e",
+        old.total_g() / 1000.0
+    );
+    println!(
+        "  new H100 (embodied amortized):      {:.0} kgCO2e ({:.0} kg operational + {:.1} kg embodied share)",
+        new.total_g() / 1000.0,
+        new.operational_g() / 1000.0,
+        new.embodied_g / 1000.0
+    );
+}

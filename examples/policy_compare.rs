@@ -1,0 +1,52 @@
+//! Cache-policy ablation (DESIGN.md's design-choice study): ATU vs LRU
+//! vs LLM-in-a-Flash's sliding window on the same simulated 13B decode,
+//! reporting hit ratio, PCIe traffic, and tokens/s — the quantitative
+//! version of the paper's §5.3 argument for ATU.
+//!
+//!   cargo run --release --example policy_compare
+
+use m2cache::coordinator::{EngineConfig, PolicyKind, SimEngine};
+use m2cache::memsim::HardwareSpec;
+use m2cache::model::spec::ModelSpec;
+use m2cache::util::bench::Table;
+
+fn main() {
+    let gpu = m2cache::carbon::find_gpu("RTX3090").unwrap();
+    let hw = HardwareSpec::rtx3090_testbed();
+    let mut t = Table::new([
+        "policy", "tok/s", "hit%", "pcie GiB", "evictions", "HBM unit slots",
+    ]);
+    for (name, policy) in [
+        ("ATU (paper)", PolicyKind::Atu),
+        ("LRU 2x", PolicyKind::Lru),
+        ("sliding-window 3", PolicyKind::SlidingWindow(3)),
+    ] {
+        let mut cfg = EngineConfig::full();
+        cfg.policy = policy;
+        let mut e = SimEngine::new(ModelSpec::llama2_13b(), hw.clone(), cfg.clone());
+        let r = e.run(32, 64, gpu);
+        t.row([
+            name.to_string(),
+            format!("{:.2}", r.tokens_per_s),
+            format!("{:.1}%", r.telemetry.hit_ratio() * 100.0),
+            format!(
+                "{:.2}",
+                r.telemetry.traffic.dram_to_hbm as f64 / (1u64 << 30) as f64
+            ),
+            r.telemetry
+                .counters
+                .get("evictions")
+                .copied()
+                .unwrap_or(0)
+                .to_string(),
+            cfg.unit_capacity(ModelSpec::llama2_13b().ffn_hidden).to_string(),
+        ]);
+    }
+    println!("Cache-policy comparison, simulated LLaMA-13B, 32-in/64-out:\n");
+    t.print();
+    println!(
+        "\nATU trades a slightly lower hit ratio for 1x unit memory and\n\
+         near-zero management cost; LRU needs 2x HBM slots for its gains\n\
+         (the paper's §5.3 trade-off)."
+    );
+}

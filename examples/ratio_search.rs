@@ -1,0 +1,16 @@
+//! Algorithm 1 in action: the offline uncertainty-guided neuron-ratio
+//! search, executed on the real tiny model (UQEst = Eq. 2 decoding
+//! entropy through the PJRT engine) and on the analytic surrogate.
+//!
+//!   make artifacts && cargo run --release --example ratio_search
+
+use m2cache::experiments::{ratio, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let out = ratio::run(ExpOpts {
+        quick: false,
+        artifacts: "artifacts",
+    })?;
+    print!("{out}");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run): starts the
+//! M2Cache TCP server on the executed tiny model, fires a batch of
+//! concurrent client requests at it, and reports per-request latency +
+//! aggregate throughput — proving L3 (rust coordinator + caches +
+//! preloader) ∘ L2 (JAX layer graph) ∘ L1 (Pallas sparse-FFN kernel)
+//! compose on a real serving workload with Python nowhere in sight.
+//!
+//!   make artifacts && cargo run --release --example serve_e2e
+
+use m2cache::coordinator::{server, EngineConfig, ExecEngine};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+const N_CLIENTS: usize = 4;
+const REQS_PER_CLIENT: usize = 3;
+const GEN_TOKENS: usize = 32;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("layer_step.hlo.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let total = (N_CLIENTS * REQS_PER_CLIENT) as u64;
+
+    // Server thread. The engine is built *inside* the thread: PJRT
+    // handles are not Send, and the decode loop owns them for life —
+    // exactly the paper's single-GPU, batch-1 serving shape.
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let engine = ExecEngine::new(Path::new("artifacts"), EngineConfig::full())?;
+        server::serve(engine, "127.0.0.1:0", Some(total), move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv()?;
+    println!("server on {addr}; {N_CLIENTS} clients x {REQS_PER_CLIENT} requests x {GEN_TOKENS} tokens");
+
+    let prompts = [
+        "the quick brown fox ",
+        "a journey of a thousand ",
+        "large language models ",
+        "the cache keeps the ",
+    ];
+    let bench_start = Instant::now();
+    let (res_tx, res_rx) = mpsc::channel();
+    for c in 0..N_CLIENTS {
+        let tx = res_tx.clone();
+        let prompt = prompts[c % prompts.len()].to_string();
+        std::thread::spawn(move || {
+            for r in 0..REQS_PER_CLIENT {
+                let t0 = Instant::now();
+                let line = request(addr, &format!("GEN {GEN_TOKENS} {prompt}"))
+                    .unwrap_or_else(|e| format!("ERR {e}"));
+                let dt = t0.elapsed().as_secs_f64();
+                tx.send((c, r, dt, line)).unwrap();
+            }
+        });
+    }
+    drop(res_tx);
+
+    let mut latencies = Vec::new();
+    let mut failures = 0;
+    for (c, r, dt, line) in res_rx {
+        if line.starts_with("OK") {
+            let preview: String = line.chars().skip(3).take(48).collect();
+            println!("client {c} req {r}: {dt:.2}s  {preview}...");
+            latencies.push(dt);
+        } else {
+            println!("client {c} req {r}: FAILED: {line}");
+            failures += 1;
+        }
+    }
+    let wall = bench_start.elapsed().as_secs_f64();
+    server.join().expect("server thread")?;
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    anyhow::ensure!(failures == 0, "{failures} requests failed");
+    let n = latencies.len();
+    println!("\n--- e2e serving summary ---");
+    println!("requests  : {n} ok, {failures} failed");
+    println!(
+        "latency   : p50 {:.2}s  p95 {:.2}s  max {:.2}s",
+        latencies[n / 2],
+        latencies[(n - 1) * 95 / 100],
+        latencies[n - 1]
+    );
+    println!(
+        "throughput: {:.2} req/s | {:.1} generated tok/s aggregate",
+        n as f64 / wall,
+        (n * GEN_TOKENS) as f64 / wall
+    );
+    Ok(())
+}
+
+fn request(addr: std::net::SocketAddr, line: &str) -> anyhow::Result<String> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.write_all(line.as_bytes())?;
+    conn.write_all(b"\n")?;
+    let mut reader = BufReader::new(conn);
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    Ok(reply.trim().to_string())
+}

@@ -1,0 +1,191 @@
+"""AOT build: train the tiny model, fit predictors, write the rust
+weight store, and lower the decode-step functions to HLO *text* for the
+rust PJRT runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run from `python/`:  python -m compile.aot --out ../artifacts
+This is `make artifacts`; it is skipped when artifacts are up to date.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import quant as Q
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(params, cfg: M.TinyConfig, out_dir: str):
+    """Lower each decode-step function with fixed shapes to HLO text."""
+    d, S, V = cfg.d_model, cfg.max_seq, cfg.vocab
+    K = cfg.ffn_hidden  # full-width kernel; the mask kills dead slots
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+
+    def emit(name, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}.hlo.txt  ({len(text)} chars)")
+
+    emit("embed", M.embed_step, sd((V, d), f32), sd((), jnp.int32))
+    emit(
+        "predictor",
+        M.predictor_step,
+        sd((d,), f32),
+        sd((d, cfg.rank), f32),
+        sd((cfg.rank, cfg.ffn_hidden), f32),
+    )
+    emit(
+        "layer_step",
+        lambda *a: M.layer_step(*a, n_heads=cfg.n_heads),
+        sd((d,), f32),                  # x
+        sd((d, d), f32), sd((d, d), f32), sd((d, d), f32), sd((d, d), f32),
+        sd((d,), f32), sd((d,), f32),   # ln1, ln2
+        sd((S, d), f32), sd((S, d), f32),  # k_cache, v_cache
+        sd((), jnp.int32),              # pos
+        sd((K, 3 * d), f32),            # ffn cache-unit buffer
+        sd((K,), f32),                  # mask
+    )
+    emit("logits", M.logits_step, sd((d,), f32), sd((V, d), f32), sd((d,), f32))
+
+
+def write_weight_store(params, preds, cfg: M.TinyConfig, out_dir: str,
+                       seed: int):
+    """Write the rust-format weight store (rust/src/model/weights.rs)."""
+    wdir = os.path.join(out_dir, "weights", "tiny")
+    os.makedirs(wdir, exist_ok=True)
+    d = cfg.d_model
+
+    def dump(name, arr):
+        np.asarray(arr, dtype="<f4").tofile(os.path.join(wdir, name))
+
+    dump("embed.f32", params["embed"])
+    dump("final_norm.f32", params["final_norm"])
+    for li, lp in enumerate(params["layers"]):
+        attn = np.concatenate(
+            [
+                np.asarray(lp[k], dtype=np.float32).reshape(-1)
+                for k in ("wq", "wk", "wv", "wo", "ln1", "ln2")
+            ]
+        )
+        dump(f"layer{li}.attn.f32", attn)
+
+        ffn = np.asarray(lp["ffn"], dtype=np.float32)  # [n, 3d]
+        fp16 = bytearray()
+        int8 = bytearray()
+        int4 = bytearray()
+        for neuron in ffn:
+            fp16 += Q.encode_fp16(neuron)
+            int8 += Q.encode_int8(neuron)
+            int4 += Q.encode_int4(neuron)
+        with open(os.path.join(wdir, f"layer{li}.ffn.fp16"), "wb") as f:
+            f.write(bytes(fp16))
+        with open(os.path.join(wdir, f"layer{li}.ffn.int8"), "wb") as f:
+            f.write(bytes(int8))
+        with open(os.path.join(wdir, f"layer{li}.ffn.int4"), "wb") as f:
+            f.write(bytes(int4))
+
+        A, B = preds[li]
+        pred = np.concatenate([A.reshape(-1), B.reshape(-1)])
+        dump(f"predictor{li}.f32", pred)
+
+    meta = (
+        f"name = tiny-1M\nfamily = llama_reglu\nn_layers = {cfg.n_layers}\n"
+        f"d_model = {d}\nffn_hidden = {cfg.ffn_hidden}\n"
+        f"n_heads = {cfg.n_heads}\nn_kv_heads = {cfg.n_heads}\n"
+        f"vocab = {cfg.vocab}\nint4_group = {Q.INT4_GROUP}\n"
+        f"rank = {cfg.rank}\nseed = {seed}\n"
+    )
+    with open(os.path.join(wdir, "meta.cfg"), "w") as f:
+        f.write(meta)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="use untrained weights (CI smoke only)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.TinyConfig()
+    t0 = time.time()
+    print("== M2Cache AOT build ==")
+    print(f"model: {cfg}")
+
+    corpus = M.synthetic_corpus()
+    params = M.init_params(cfg, seed=args.seed)
+    curve = []
+    if not args.skip_train:
+        print(f"training {args.steps} steps on {corpus.shape[0]}-byte corpus ...")
+        params, curve = M.train(params, corpus, cfg, steps=args.steps,
+                                seed=args.seed)
+        print(f"  loss {curve[0]:.3f} -> {curve[-1]:.3f}")
+
+    print("fitting low-rank predictors ...")
+    xs, gates = M.collect_activations(params, corpus, cfg)
+    preds = M.fit_predictors(xs, gates, cfg.rank)
+    recalls = [
+        M.predictor_recall(A, B, X, G, top_frac=0.2, pred_frac=0.5)
+        for (A, B), X, G in zip(preds, xs, gates)
+    ]
+    print("  coverage of true top-20% within predicted top-50%:",
+          " ".join(f"{r:.3f}" for r in recalls))
+
+    # Self-check: the decode path (per-token step functions, full mask)
+    # must agree with the dense training forward.
+    toks = corpus[:16]
+    dense = M.forward_seq(params, jnp.asarray(toks), cfg)[-1]
+    stepped = M.decode_reference(params, toks, cfg)
+    err = float(jnp.max(jnp.abs(dense - stepped)))
+    print(f"decode-vs-dense max|err| = {err:.2e}")
+    assert err < 2e-3, "decode path disagrees with training forward"
+
+    print("writing weight store ...")
+    write_weight_store(params, preds, cfg, args.out, args.seed)
+
+    print("lowering HLO artifacts ...")
+    lower_artifacts(params, cfg, args.out)
+
+    # Runtime metadata + loss curve for EXPERIMENTS.md.
+    with open(os.path.join(args.out, "meta.cfg"), "w") as f:
+        f.write(
+            f"d_model = {cfg.d_model}\nn_layers = {cfg.n_layers}\n"
+            f"n_heads = {cfg.n_heads}\nffn_hidden = {cfg.ffn_hidden}\n"
+            f"vocab = {cfg.vocab}\nmax_seq = {cfg.max_seq}\n"
+            f"rank = {cfg.rank}\nkernel_k = {cfg.ffn_hidden}\n"
+            f"predictor_recall = {np.mean(recalls):.4f}\n"
+            f"train_steps = {len(curve)}\n"
+            f"train_loss_final = {curve[-1] if curve else float('nan'):.4f}\n"
+        )
+    if curve:
+        with open(os.path.join(args.out, "train_loss.txt"), "w") as f:
+            f.writelines(f"{i} {v:.6f}\n" for i, v in enumerate(curve))
+    print(f"done in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: single-token (decode) multi-head attention over a
+padded KV cache.
+
+Decode attention is a batch of H independent (1 x hd) @ (hd x S) GEMVs
+plus a masked softmax — bandwidth-bound on the KV cache, which is why
+the engine keeps KV HBM-resident (the paper offloads *FFN weights*, not
+KV). The kernel runs as one block: the tiny model's whole cache
+(S x d = 256 x 128 f32 = 128 KiB x2) fits VMEM comfortably; for larger S
+the S-axis would tile with an online softmax, which the CPU-interpret
+path does not need.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, n_heads):
+    S, d = k_ref.shape
+    hd = d // n_heads
+    q = q_ref[...].reshape(n_heads, hd)
+    k = k_ref[...].reshape(S, n_heads, hd)
+    v = v_ref[...].reshape(S, n_heads, hd)
+    pos = pos_ref[0]
+    # scores[h, s] = q[h] . k[s, h] / sqrt(hd)
+    scores = jnp.einsum("hd,shd->hs", q, k) / jnp.sqrt(float(hd))
+    valid = jnp.arange(S)[None, :] <= pos
+    masked = jnp.where(valid, scores, -1e30)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("hs,shd->hd", probs, v)
+    o_ref[...] = out.reshape(d)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads",))
+def decode_attention(q, k_cache, v_cache, pos, n_heads):
+    """See kernels.ref.ref_attention.
+
+    q: [d], k_cache/v_cache: [S, d], pos: i32 scalar -> [d].
+    """
+    S, d = k_cache.shape
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, n_heads=n_heads),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((S, d), lambda i: (0, 0)),
+            pl.BlockSpec((S, d), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, pos_arr)

@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: low-rank Deja-Vu activation predictor.
+
+scores = (x @ A) @ B with A: [d, r], B: [r, n]. Rank r is tiny (16), so
+the kernel keeps the whole factor pair in VMEM and the n-axis tiles on
+the grid — the predictor must be cheap enough to run *before* the FFN
+weights are even resident (it decides what to load).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pred_kernel(x_ref, a_ref, b_ref, o_ref):
+    # One grid step: one tile of output neurons.
+    h = x_ref[...] @ a_ref[...]          # [r]
+    o_ref[...] = h @ b_ref[...]          # [block_n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def predict_scores(x, a, b, block_n=128):
+    """See kernels.ref.ref_predictor. x: [d], a: [d, r], b: [r, n] -> [n]."""
+    d, r = a.shape
+    n = b.shape[1]
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    return pl.pallas_call(
+        _pred_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, a, b)

@@ -1,0 +1,88 @@
+"""Build-time quantization: produces the exact on-disk record formats
+the rust weight store reads (rust/src/model/weights.rs).
+
+Record layouts (little-endian), per neuron of v = 3*d values:
+  fp16:  v × u16                                   (IEEE binary16)
+  int8:  f32 scale + v × i8                        (symmetric, amax/127)
+  int4:  ceil(v/G) × f32 scales + ceil(v/2) bytes  (two's-complement
+         nibbles, low nibble first, symmetric amax/7 per group)
+"""
+
+import numpy as np
+
+INT4_GROUP = 64
+
+
+def encode_fp16(values: np.ndarray) -> bytes:
+    return values.astype("<f2").tobytes()
+
+
+def quantize_int8(values: np.ndarray):
+    """-> (scale: float, q: int8 array)."""
+    amax = float(np.max(np.abs(values))) if values.size else 0.0
+    scale = amax / 127.0 if amax > 0 else 1.0
+    q = np.clip(np.round(values / scale), -127, 127).astype(np.int8)
+    return scale, q
+
+
+def encode_int8(values: np.ndarray) -> bytes:
+    scale, q = quantize_int8(values)
+    return np.float32(scale).tobytes() + q.tobytes()
+
+
+def quantize_int4(values: np.ndarray, group: int = INT4_GROUP):
+    """-> (scales: f32 array per group, q: int8 array of nibble values)."""
+    n = values.size
+    n_groups = -(-n // group)
+    scales = np.empty(n_groups, dtype=np.float32)
+    q = np.empty(n, dtype=np.int8)
+    for g in range(n_groups):
+        lo, hi = g * group, min((g + 1) * group, n)
+        chunk = values[lo:hi]
+        amax = float(np.max(np.abs(chunk))) if chunk.size else 0.0
+        scale = amax / 7.0 if amax > 0 else 1.0
+        scales[g] = scale
+        q[lo:hi] = np.clip(np.round(chunk / scale), -8, 7).astype(np.int8)
+    return scales, q
+
+
+def pack_nibbles(q: np.ndarray) -> bytes:
+    """Two's-complement nibbles, low nibble first; odd tail padded 0."""
+    u = (q.astype(np.int16) & 0x0F).astype(np.uint8)
+    if u.size % 2 == 1:
+        u = np.concatenate([u, np.zeros(1, dtype=np.uint8)])
+    return (u[0::2] | (u[1::2] << 4)).tobytes()
+
+
+def encode_int4(values: np.ndarray, group: int = INT4_GROUP) -> bytes:
+    scales, q = quantize_int4(values, group)
+    return scales.astype("<f4").tobytes() + pack_nibbles(q)
+
+
+# ---- decoders (used by tests to verify the formats round-trip) ----
+
+def decode_fp16(raw: bytes, n: int) -> np.ndarray:
+    return np.frombuffer(raw, dtype="<f2", count=n).astype(np.float32)
+
+
+def decode_int8(raw: bytes, n: int) -> np.ndarray:
+    scale = np.frombuffer(raw[:4], dtype="<f4")[0]
+    q = np.frombuffer(raw[4 : 4 + n], dtype=np.int8)
+    return q.astype(np.float32) * scale
+
+
+def decode_int4(raw: bytes, n: int, group: int = INT4_GROUP) -> np.ndarray:
+    n_groups = -(-n // group)
+    scales = np.frombuffer(raw[: 4 * n_groups], dtype="<f4")
+    packed = np.frombuffer(raw[4 * n_groups :], dtype=np.uint8)
+    lo = (packed & 0x0F).astype(np.int8)
+    hi = (packed >> 4).astype(np.int8)
+    # Sign-extend 4-bit two's complement.
+    lo = np.where(lo >= 8, lo - 16, lo)
+    hi = np.where(hi >= 8, hi - 16, hi)
+    nibbles = np.empty(packed.size * 2, dtype=np.int8)
+    nibbles[0::2] = lo
+    nibbles[1::2] = hi
+    nibbles = nibbles[:n]
+    g = np.arange(n) // group
+    return nibbles.astype(np.float32) * scales[g]

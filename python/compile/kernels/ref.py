@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each L1 kernel in this package is
+pinned against the corresponding function here by pytest + hypothesis
+(`python/tests/`). They are also the L2 fallback when a kernel variant is
+not available for a shape.
+
+Shapes follow the decode path (batch = 1, one token at a time):
+  d  — model width
+  K  — cache-unit slots (FFN weight operand rows)
+  S  — padded KV-cache length
+  r  — predictor rank
+  V  — vocabulary size
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_rmsnorm(x, w, eps=1e-5):
+    """RMSNorm: x * w / rms(x). x: [d], w: [d]."""
+    ms = jnp.mean(x * x)
+    return x * w / jnp.sqrt(ms + eps)
+
+
+def ref_sparse_ffn(x, weights, mask):
+    """Masked mixed-precision sparse ReGLU FFN over a cache unit.
+
+    The cache unit's contiguous buffer is the weight operand directly
+    (paper Fig 7): ``weights[k] = [gate_k | up_k | down_k]``, each of
+    length d. Dead slots are killed by ``mask`` (no memset on eviction).
+
+      out = sum_k mask_k * relu(gate_k . x) * (up_k . x) * down_k
+
+    x: [d], weights: [K, 3d], mask: [K] -> [d].
+    """
+    d = x.shape[0]
+    gate = weights[:, :d] @ x          # [K]
+    up = weights[:, d : 2 * d] @ x     # [K]
+    h = jnp.maximum(gate, 0.0) * up * mask
+    return h @ weights[:, 2 * d :]     # [d]
+
+
+def ref_attention(q, k_cache, v_cache, pos, n_heads):
+    """Single-token causal attention over a padded KV cache.
+
+    q: [d]; k_cache, v_cache: [S, d] with valid rows 0..pos inclusive
+    (the current token's k/v must already be written at row ``pos``).
+    Positions > pos are masked out. Multi-head with head_dim = d/H.
+    """
+    S, d = k_cache.shape
+    hd = d // n_heads
+    qh = q.reshape(n_heads, hd)                       # [H, hd]
+    kh = k_cache.reshape(S, n_heads, hd)              # [S, H, hd]
+    vh = v_cache.reshape(S, n_heads, hd)
+    scores = jnp.einsum("hd,shd->hs", qh, kh) / jnp.sqrt(float(hd))
+    idx = jnp.arange(S)
+    masked = jnp.where(idx[None, :] <= pos, scores, -1e30)
+    probs = jax.nn.softmax(masked, axis=-1)           # [H, S]
+    out = jnp.einsum("hs,shd->hd", probs, vh)         # [H, hd]
+    return out.reshape(d)
+
+
+def ref_predictor(x, a, b):
+    """Low-rank Deja-Vu predictor scores: (x @ A) @ B.
+
+    x: [d], a: [d, r], b: [r, n] -> [n].
+    """
+    return (x @ a) @ b
+
+
+def ref_rope(v, pos, base=10000.0):
+    """Rotary position embedding, rotating (first-half, second-half)
+    pairs — matches model.py's tiny-model convention."""
+    d = v.shape[0]
+    half = d // 2
+    freqs = base ** (-jnp.arange(half) / half)
+    angle = pos * freqs
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    v1, v2 = v[:half], v[half:]
+    return jnp.concatenate([v1 * cos - v2 * sin, v1 * sin + v2 * cos])
+
+
+def ref_logits(x, embed, norm_w):
+    """Final norm + tied LM head. x: [d], embed: [V, d] -> [V]."""
+    return embed @ ref_rmsnorm(x, norm_w)

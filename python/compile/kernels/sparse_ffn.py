@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: masked sparse mixed-precision ReGLU FFN.
+
+This is the paper's compute hot-spot. The HBM cache unit's contiguous
+``[K, 3d]`` buffer (gate row | up row | down column per slot) is the
+weight operand *directly* — no gather between cache and kernel — and the
+per-slot ``mask`` kills evicted slots, so cache eviction costs zero
+memset (paper §5.3 "management overhead is nearly zero").
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks K in
+``block_k`` tiles; each step stages one ``[block_k, 3d]`` weight tile
+HBM→VMEM via BlockSpec (the Pallas analogue of the paper's
+threadblock-staged GEMV), computes the gated products on the VPU/MXU,
+and accumulates into the output block, which stays resident in VMEM
+across the whole grid. Lowered with ``interpret=True`` — the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w_ref, m_ref, o_ref, *, d):
+    """One grid step: accumulate a block of slots into the output.
+
+    x_ref: [d] (full vector each step), w_ref: [block_k, 3d] tile,
+    m_ref: [block_k] mask tile, o_ref: [d] accumulator.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    gate = w[:, :d] @ x                      # [block_k]
+    up = w[:, d : 2 * d] @ x                 # [block_k]
+    h = jnp.maximum(gate, 0.0) * up * m_ref[...]
+    o_ref[...] += h @ w[:, 2 * d :]          # [d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def sparse_ffn(x, weights, mask, block_k=64):
+    """Masked sparse ReGLU FFN: see kernels.ref.ref_sparse_ffn.
+
+    x: [d] f32, weights: [K, 3d] f32, mask: [K] f32 -> [d] f32.
+    K must be a multiple of block_k (cache units are sized that way).
+    """
+    K, w3d = weights.shape
+    d = x.shape[0]
+    assert w3d == 3 * d, f"weights last dim {w3d} != 3*{d}"
+    assert K % block_k == 0, f"K={K} not a multiple of block_k={block_k}"
+    grid = (K // block_k,)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda k: (0,)),            # x: whole vector
+            pl.BlockSpec((block_k, 3 * d), lambda k: (k, 0)),  # weight tile
+            pl.BlockSpec((block_k,), lambda k: (k,)),      # mask tile
+        ],
+        out_specs=pl.BlockSpec((d,), lambda k: (0,)),      # resident accum
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(x, weights, mask)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Tests import `compile.*` relative to python/.
+sys.path.insert(0, os.path.dirname(__file__))

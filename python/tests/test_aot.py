@@ -1,0 +1,82 @@
+"""AOT lowering: the HLO-text artifacts must exist (after `make
+artifacts`), be parseable-looking HLO modules with the expected
+parameter arity, and the decode shapes must round-trip."""
+
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+EXPECTED = {
+    "embed": 2,        # embed table, token
+    "predictor": 3,    # x, A, B
+    "layer_step": 12,  # x, wq,wk,wv,wo, ln1,ln2, kc,vc, pos, ffn_w, mask
+    "logits": 3,       # x, embed, final_norm
+}
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "layer_step.hlo.txt")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name,arity", sorted(EXPECTED.items()))
+def test_artifact_exists_and_has_arity(name, arity):
+    path = os.path.join(ART, f"{name}.hlo.txt")
+    text = open(path).read()
+    assert text.startswith("HloModule"), f"{name}: not HLO text"
+    assert "ENTRY" in text
+    # Count parameters of the ENTRY computation only (sub-computations
+    # also contain `parameter(N)` lines).
+    entry = text.split("ENTRY", 1)[1]
+    n_params = (
+        max(
+            int(line.split("parameter(")[1].split(")")[0])
+            for line in entry.splitlines()
+            if "parameter(" in line
+        )
+        + 1
+    )
+    assert n_params == arity, f"{name}: {n_params} params, expected {arity}"
+
+
+@needs_artifacts
+def test_layer_step_mentions_expected_shapes():
+    text = open(os.path.join(ART, "layer_step.hlo.txt")).read()
+    assert "f32[256,128]" in text, "KV cache shape"
+    assert "f32[512,384]" in text, "cache-unit weight shape [K, 3d]"
+
+
+@needs_artifacts
+def test_meta_cfg_consistent():
+    meta = open(os.path.join(ART, "meta.cfg")).read()
+    kv = dict(
+        line.split(" = ")
+        for line in meta.strip().splitlines()
+        if " = " in line
+    )
+    assert kv["d_model"] == "128"
+    assert kv["kernel_k"] == kv["ffn_hidden"]
+    assert float(kv["predictor_recall"]) > 0.7
+
+
+@needs_artifacts
+def test_weight_store_complete():
+    wdir = os.path.join(ART, "weights", "tiny")
+    meta = open(os.path.join(wdir, "meta.cfg")).read()
+    n_layers = int(meta.split("n_layers = ")[1].split("\n")[0])
+    for l in range(n_layers):
+        for ext in ("attn.f32", "ffn.fp16", "ffn.int8", "ffn.int4"):
+            assert os.path.exists(os.path.join(wdir, f"layer{l}.{ext}"))
+        assert os.path.exists(os.path.join(wdir, f"predictor{l}.f32"))
+
+
+@needs_artifacts
+def test_train_loss_curve_decreasing():
+    path = os.path.join(ART, "train_loss.txt")
+    if not os.path.exists(path):
+        pytest.skip("built with --skip-train")
+    losses = [float(l.split()[1]) for l in open(path)]
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])

@@ -1,0 +1,156 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py,
+swept over shapes/seeds with hypothesis. This is the core correctness
+signal for the compute hot path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.predictor import predict_scores
+from compile.kernels.sparse_ffn import sparse_ffn
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- ffn
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([16, 64, 128]),
+    kblocks=st.integers(1, 8),
+    block_k=st.sampled_from([16, 64]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_ffn_matches_ref(d, kblocks, block_k, density, seed):
+    rng = np.random.default_rng(seed)
+    K = kblocks * block_k
+    x = rnd(rng, d)
+    w = rnd(rng, K, 3 * d)
+    mask = jnp.asarray((rng.random(K) < density).astype(np.float32))
+    out = sparse_ffn(x, w, mask, block_k=block_k)
+    expect = ref.ref_sparse_ffn(x, w, mask)
+    scale = float(jnp.max(jnp.abs(expect))) + 1.0
+    assert_allclose(np.asarray(out), np.asarray(expect),
+                    atol=2e-4 * scale, rtol=1e-4)
+
+
+def test_sparse_ffn_zero_mask_gives_zero():
+    rng = np.random.default_rng(0)
+    out = sparse_ffn(rnd(rng, 64), rnd(rng, 128, 192), jnp.zeros(128))
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_sparse_ffn_mask_equals_row_removal():
+    """Masking slot k must equal physically deleting neuron k — the
+    property that lets eviction skip the memset."""
+    rng = np.random.default_rng(3)
+    d, K = 32, 64
+    x, w = rnd(rng, d), rnd(rng, K, 3 * d)
+    mask = np.ones(K, np.float32)
+    dead = [3, 17, 40]
+    mask[dead] = 0.0
+    out = sparse_ffn(x, w, jnp.asarray(mask), block_k=16)
+    keep = [i for i in range(K) if i not in dead]
+    # 48 rows: pad back to a block multiple by appending masked zeros.
+    w_kept = np.asarray(w)[keep]
+    expect = ref.ref_sparse_ffn(x, jnp.asarray(w_kept), jnp.ones(len(keep)))
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+def test_sparse_ffn_rejects_bad_block():
+    rng = np.random.default_rng(1)
+    with pytest.raises(AssertionError):
+        sparse_ffn(rnd(rng, 16), rnd(rng, 100, 48), jnp.ones(100), block_k=64)
+
+
+# ----------------------------------------------------------- attention
+
+@settings(**SETTINGS)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([8, 32]),
+    S=st.sampled_from([16, 64]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(heads, hd, S, pos_frac, seed):
+    rng = np.random.default_rng(seed)
+    d = heads * hd
+    pos = min(S - 1, int(pos_frac * S))
+    q, kc, vc = rnd(rng, d), rnd(rng, S, d), rnd(rng, S, d)
+    out = decode_attention(q, kc, vc, pos, heads)
+    expect = ref.ref_attention(q, kc, vc, pos, heads)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+def test_attention_pos_zero_returns_first_value():
+    """With pos=0 only row 0 is visible: softmax over one entry = v[0]."""
+    rng = np.random.default_rng(5)
+    d, S, H = 32, 16, 4
+    q, kc, vc = rnd(rng, d), rnd(rng, S, d), rnd(rng, S, d)
+    out = decode_attention(q, kc, vc, 0, H)
+    assert_allclose(np.asarray(out), np.asarray(vc[0]), atol=1e-5, rtol=1e-5)
+
+
+def test_attention_ignores_future_rows():
+    """Rows beyond pos must not affect the output."""
+    rng = np.random.default_rng(6)
+    d, S, H, pos = 16, 32, 2, 7
+    q, kc, vc = rnd(rng, d), rnd(rng, S, d), rnd(rng, S, d)
+    out1 = decode_attention(q, kc, vc, pos, H)
+    kc2 = kc.at[pos + 1 :].set(999.0)
+    vc2 = vc.at[pos + 1 :].set(-999.0)
+    out2 = decode_attention(q, kc2, vc2, pos, H)
+    assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------- predictor
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([16, 128]),
+    r=st.sampled_from([4, 32]),
+    nblocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predictor_matches_ref(d, r, nblocks, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * 128
+    x, a, b = rnd(rng, d), rnd(rng, d, r), rnd(rng, r, n)
+    out = predict_scores(x, a, b)
+    expect = ref.ref_predictor(x, a, b)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-3, rtol=1e-4)
+
+
+# ----------------------------------------------------------- rmsnorm/rope
+
+def test_rmsnorm_unit_scale_idempotent_on_unit_rms():
+    x = jnp.ones(64)
+    out = ref.ref_rmsnorm(x, jnp.ones(64))
+    assert_allclose(np.asarray(out), np.ones(64), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), pos=st.integers(0, 255))
+def test_rope_preserves_norm(seed, pos):
+    rng = np.random.default_rng(seed)
+    v = rnd(rng, 64)
+    out = ref.ref_rope(v, pos)
+    assert np.isclose(float(jnp.linalg.norm(out)),
+                      float(jnp.linalg.norm(v)), rtol=1e-5)
+
+
+def test_rope_pos_zero_is_identity():
+    rng = np.random.default_rng(9)
+    v = rnd(rng, 32)
+    assert_allclose(np.asarray(ref.ref_rope(v, 0)), np.asarray(v), atol=1e-6)

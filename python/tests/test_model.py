@@ -1,0 +1,168 @@
+"""L2 correctness: the decode-step functions must compose to the same
+function as the dense training forward; predictor fitting must recover
+the active sets; the weight-store writer must honour the rust layout."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import quant as Q
+
+CFG = M.TinyConfig(n_layers=2, max_seq=32)  # small for test speed
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=1)
+
+
+def test_decode_path_matches_dense_forward(params):
+    toks = M.synthetic_corpus()[:12]
+    dense = M.forward_seq(params, jnp.asarray(toks), CFG)
+    stepped = M.decode_reference(params, toks, CFG)
+    assert_allclose(np.asarray(stepped), np.asarray(dense[-1]),
+                    atol=2e-4, rtol=1e-3)
+
+
+def test_layer_step_full_mask_equals_dense_layer(params):
+    """One layer_step with all slots live == dense layer math at pos 0."""
+    lp = params["layers"][0]
+    d = CFG.d_model
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=d), jnp.float32)
+    S = CFG.max_seq
+    kc = jnp.zeros((S, d))
+    vc = jnp.zeros((S, d))
+    x2, k_new, v_new = M.layer_step(
+        x, lp["wq"], lp["wk"], lp["wv"], lp["wo"], lp["ln1"], lp["ln2"],
+        kc, vc, jnp.asarray(0, jnp.int32), lp["ffn"],
+        jnp.ones(CFG.ffn_hidden), CFG.n_heads,
+    )
+    # At pos 0 attention sees only itself: out = v_new.
+    h = M.rmsnorm(x, lp["ln1"])
+    assert_allclose(np.asarray(v_new), np.asarray(h @ lp["wv"]),
+                    atol=1e-5, rtol=1e-5)
+    x1 = x + v_new @ lp["wo"]
+    h2 = M.rmsnorm(x1, lp["ln2"])
+    gate = h2 @ lp["ffn"][:, :d].T
+    up = h2 @ lp["ffn"][:, d : 2 * d].T
+    expect = x1 + (jnp.maximum(gate, 0) * up) @ lp["ffn"][:, 2 * d :]
+    assert_allclose(np.asarray(x2), np.asarray(expect), atol=2e-4, rtol=1e-3)
+
+
+def test_masked_decode_changes_little_when_mask_covers_top(params):
+    """Keeping the top-50% of neurons (by true gate) must perturb the
+    last-token logits far less than keeping a random 50%."""
+    toks = M.synthetic_corpus()[:10]
+    d = CFG.d_model
+
+    def run_masked(choose):
+        S = CFG.max_seq
+        caches = [(jnp.zeros((S, d)), jnp.zeros((S, d)))
+                  for _ in params["layers"]]
+        x = None
+        for pos, tok in enumerate(toks):
+            (x,) = M.embed_step(params["embed"], jnp.asarray(tok, jnp.int32))
+            for li, lp in enumerate(params["layers"]):
+                kc, vc = caches[li]
+                h2_probe = M.rmsnorm(x, lp["ln2"])
+                gate = h2_probe @ lp["ffn"][:, :d].T
+                mask = choose(np.asarray(gate), pos, li)
+                x, k_new, v_new = M.layer_step(
+                    x, lp["wq"], lp["wk"], lp["wv"], lp["wo"], lp["ln1"],
+                    lp["ln2"], kc, vc, jnp.asarray(pos, jnp.int32),
+                    lp["ffn"], jnp.asarray(mask), CFG.n_heads)
+                caches[li] = (kc.at[pos].set(k_new), vc.at[pos].set(v_new))
+        (lg,) = M.logits_step(x, params["embed"], params["final_norm"])
+        return np.asarray(lg)
+
+    full = run_masked(lambda g, p, l: np.ones(CFG.ffn_hidden, np.float32))
+
+    def top_half(g, p, l):
+        m = np.zeros(CFG.ffn_hidden, np.float32)
+        m[np.argsort(-g)[: CFG.ffn_hidden // 2]] = 1.0
+        return m
+
+    rng = np.random.default_rng(0)
+
+    def rand_half(g, p, l):
+        m = np.zeros(CFG.ffn_hidden, np.float32)
+        m[rng.permutation(CFG.ffn_hidden)[: CFG.ffn_hidden // 2]] = 1.0
+        return m
+
+    err_top = np.abs(run_masked(top_half) - full).mean()
+    err_rand = np.abs(run_masked(rand_half) - full).mean()
+    assert err_top < err_rand, (err_top, err_rand)
+
+
+def test_training_reduces_loss():
+    cfg = M.TinyConfig(n_layers=1, max_seq=32)
+    corpus = M.synthetic_corpus(repeat=4)
+    params = M.init_params(cfg, seed=0)
+    _, curve = M.train(params, corpus, cfg, steps=30, seq=32, batch=4,
+                       log_every=0)
+    assert curve[-1] < curve[0] * 0.7, curve[::10]
+
+
+def test_predictor_fit_beats_random_ranking(params):
+    corpus = M.synthetic_corpus(repeat=4)
+    xs, gs = M.collect_activations(params, corpus, CFG, n_windows=8,
+                                   seq=32)
+    preds = M.fit_predictors(xs, gs, rank=32)
+    rng = np.random.default_rng(0)
+    for (A, B), X, G in zip(preds, xs, gs):
+        fit = M.predictor_recall(A, B, X, G, 0.2, 0.5)
+        Ar = rng.normal(size=A.shape).astype(np.float32)
+        Br = rng.normal(size=B.shape).astype(np.float32)
+        rand = M.predictor_recall(Ar, Br, X, G, 0.2, 0.5)
+        assert fit > rand + 0.2, (fit, rand)
+        assert fit > 0.8, fit
+
+
+def test_corpus_is_deterministic_ascii():
+    a = M.synthetic_corpus(repeat=2)
+    b = M.synthetic_corpus(repeat=2)
+    assert np.array_equal(a, b)
+    assert a.max() < 128, "ascii-only byte vocab"
+
+
+def test_rope_relative_shift_property():
+    """RoPE inner products depend only on relative position."""
+    rng = np.random.default_rng(2)
+    d, H = 64, 4
+    q = jnp.asarray(rng.normal(size=d), jnp.float32)
+    k = jnp.asarray(rng.normal(size=d), jnp.float32)
+    def dot(p1, p2):
+        qh = M.rope(q, p1, H).reshape(H, d // H)
+        kh = M.rope(k, p2, H).reshape(H, d // H)
+        return np.asarray(jnp.einsum("hd,hd->h", qh, kh))
+    assert_allclose(dot(3, 1), dot(7, 5), atol=1e-4)
+
+
+def test_weight_store_writer_layout(tmp_path, params):
+    """The python writer must produce files the rust reader's geometry
+    check accepts (sizes) with the documented record layout."""
+    from compile.aot import write_weight_store
+    preds = [(np.zeros((CFG.d_model, CFG.rank), np.float32),
+              np.zeros((CFG.rank, CFG.ffn_hidden), np.float32))
+             for _ in range(CFG.n_layers)]
+    write_weight_store(params, preds, CFG, str(tmp_path), seed=0)
+    wdir = tmp_path / "weights" / "tiny"
+    d, v = CFG.d_model, 3 * CFG.d_model
+    assert (wdir / "embed.f32").stat().st_size == CFG.vocab * d * 4
+    assert (wdir / "layer0.ffn.fp16").stat().st_size == CFG.ffn_hidden * 2 * v
+    assert (wdir / "layer0.ffn.int8").stat().st_size == CFG.ffn_hidden * (4 + v)
+    rec4 = 4 * (v // Q.INT4_GROUP) + v // 2
+    assert (wdir / "layer0.ffn.int4").stat().st_size == CFG.ffn_hidden * rec4
+    # Record 0 of fp16 must decode back to the master neuron.
+    raw = (wdir / "layer0.ffn.fp16").read_bytes()[: 2 * v]
+    back = Q.decode_fp16(raw, v)
+    master = np.asarray(params["layers"][0]["ffn"][0])
+    assert np.abs(back - master).max() < np.abs(master).max() / 512
+    meta = (wdir / "meta.cfg").read_text()
+    assert "family = llama_reglu" in meta

@@ -1,0 +1,79 @@
+"""Quantization record formats: roundtrip error bounds and byte-level
+layout (these records are read by rust/src/model/weights.rs — layout
+constants here are the cross-language contract)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant as Q
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-3, 1e3))
+def test_int8_roundtrip_bound(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    v = (rng.normal(size=n) * scale).astype(np.float32)
+    raw = Q.encode_int8(v)
+    assert len(raw) == 4 + n
+    back = Q.decode_int8(raw, n)
+    s = np.frombuffer(raw[:4], dtype="<f4")[0]
+    assert np.all(np.abs(back - v) <= s / 2 + 1e-6)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1),
+       group=st.sampled_from([8, 64, 128]))
+def test_int4_roundtrip_bound(n, seed, group):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=n).astype(np.float32)
+    raw = Q.encode_int4(v, group)
+    n_groups = -(-n // group)
+    assert len(raw) == 4 * n_groups + -(-n // 2)
+    back = Q.decode_int4(raw, n, group)
+    scales = np.frombuffer(raw[: 4 * n_groups], dtype="<f4")
+    bound = scales[np.arange(n) // group] / 2 + 1e-6
+    assert np.all(np.abs(back - v) <= bound)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_fp16_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=n).astype(np.float32)
+    back = Q.decode_fp16(Q.encode_fp16(v), n)
+    assert np.all(np.abs(back - v) <= np.abs(v) / 1024.0 + 1e-4)
+
+
+def test_pack_nibbles_layout():
+    """Low nibble first; two's complement; odd tail zero-padded."""
+    q = np.array([1, -1, 7, -8, 3], dtype=np.int8)
+    packed = Q.pack_nibbles(q)
+    assert packed == bytes([0x01 | (0x0F << 4), 0x07 | (0x08 << 4), 0x03])
+
+
+def test_int8_zero_vector():
+    raw = Q.encode_int8(np.zeros(16, np.float32))
+    assert Q.decode_int8(raw, 16).tolist() == [0.0] * 16
+
+
+def test_precision_ladder():
+    """fp16 < int8 < int4 reconstruction error on the same data."""
+    rng = np.random.default_rng(7)
+    v = rng.normal(size=384).astype(np.float32)
+    e16 = np.abs(Q.decode_fp16(Q.encode_fp16(v), 384) - v).mean()
+    e8 = np.abs(Q.decode_int8(Q.encode_int8(v), 384) - v).mean()
+    e4 = np.abs(Q.decode_int4(Q.encode_int4(v), 384) - v).mean()
+    assert e16 < e8 < e4
+
+
+def test_record_sizes_match_rust_contract():
+    """Sizes must equal rust's WeightStore::record_bytes for v = 3*128."""
+    v = 3 * 128
+    data = np.zeros(v, np.float32)
+    assert len(Q.encode_fp16(data)) == 2 * v
+    assert len(Q.encode_int8(data)) == 4 + v
+    assert len(Q.encode_int4(data)) == 4 * (v // Q.INT4_GROUP) + v // 2

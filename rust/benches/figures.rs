@@ -1,0 +1,38 @@
+//! `cargo bench --bench figures` — regenerates every table AND figure
+//! of the paper's evaluation (quick-scale) and times each driver.
+//! One bench section per paper artifact; the printed rows are the same
+//! series the paper reports (see EXPERIMENTS.md for paper-vs-measured).
+
+use m2cache::experiments::{self, ExpOpts};
+use std::time::Instant;
+
+fn main() {
+    let opts = ExpOpts {
+        quick: true,
+        artifacts: "artifacts",
+    };
+    let mut failures = 0;
+    println!("== M2Cache paper-figure bench suite (quick scale) ==\n");
+    for id in experiments::ALL {
+        let t0 = Instant::now();
+        match experiments::run(id, opts) {
+            Ok(out) => {
+                println!(
+                    "──────────────────────────── {id} ({:.2}s)",
+                    t0.elapsed().as_secs_f64()
+                );
+                println!("{out}");
+            }
+            Err(e) => {
+                println!("──────────────────────────── {id}: SKIPPED ({e:#})\n");
+                if !format!("{e:#}").contains("artifacts") {
+                    failures += 1;
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} experiments failed");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,194 @@
+//! `cargo bench --bench microbench` — hot-path microbenchmarks for the
+//! L3 coordinator (the §Perf working set): ATU reconciliation, top-k
+//! selection, predictor scoring, quantization codecs, f16 conversion,
+//! transfer-cost model, and the executed engine's per-token step.
+//! Built on the from-scratch `util::bench` harness (criterion is
+//! unavailable offline).
+
+use m2cache::cache::{AtuPolicy, CacheUnit, HbmPolicy};
+use m2cache::coordinator::{tokenize, EngineConfig, ExecEngine};
+use m2cache::memsim::{HardwareSpec, Link};
+use m2cache::model::weights::PredictorWeights;
+use m2cache::precision::plan::{plan_from_scores, PrecisionRatios};
+use m2cache::precision::{f16, quant};
+use m2cache::sparsity;
+use m2cache::util::bench::{fmt_dur, Bench, Table};
+use m2cache::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut t = Table::new(["bench", "mean", "p50", "p99", "throughput"]);
+    let mut rng = Rng::new(7);
+
+    // --- ATU reconciliation over a 13B-sized layer (n=13824, 20% active)
+    {
+        let n = 13824usize;
+        let active = n / 5;
+        let mut unit = CacheUnit::meta_only(active);
+        let mut policy = AtuPolicy;
+        let ratios = PrecisionRatios::new(0.05, 0.05, 0.10);
+        let mut scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let plan0 = plan_from_scores(&scores, &ratios);
+        for na in policy.update(&mut unit, &plan0).load {
+            unit.insert(na.neuron, na.dtype, &[]);
+        }
+        let stats = b.run(|| {
+            // Perturb 20% of scores (token churn), replan, reconcile.
+            for _ in 0..n / 5 {
+                let i = rng.range(0, n);
+                scores[i] = rng.f32();
+            }
+            let plan = plan_from_scores(&scores, &ratios);
+            let upd = policy.update(&mut unit, &plan);
+            for na in &upd.load {
+                unit.insert(na.neuron, na.dtype, &[]);
+            }
+            upd.hits
+        });
+        t.row([
+            "atu_reconcile_13b_layer".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!("{:.0} plans/s", stats.throughput(1.0)),
+        ]);
+    }
+
+    // --- top-k over 28672 scores (70B layer width)
+    {
+        let scores: Vec<f32> = (0..28672).map(|_| rng.f32()).collect();
+        let stats = b.run(|| sparsity::top_k(&scores, 5734));
+        t.row([
+            "topk_70b_layer".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!("{:.1} M scores/s", 28672.0 * stats.throughput(1.0) / 1e6),
+        ]);
+    }
+
+    // --- native predictor scoring (tiny-model geometry)
+    {
+        let (d, r, n) = (128usize, 32usize, 512usize);
+        let pred = PredictorWeights {
+            a: (0..d * r).map(|_| rng.f32()).collect(),
+            b: (0..r * n).map(|_| rng.f32()).collect(),
+            rank: r,
+        };
+        let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let mut out = Vec::new();
+        let stats = b.run(|| {
+            sparsity::score(&pred, &x, &mut out);
+            out.len()
+        });
+        t.row([
+            "predictor_score_tiny".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!("{:.2} M scores/s", n as f64 * stats.throughput(1.0) / 1e6),
+        ]);
+    }
+
+    // --- quantization codecs over one neuron record (3*4096 values, 7B)
+    {
+        let vals: Vec<f32> = (0..3 * 4096).map(|_| rng.f32() - 0.5).collect();
+        let stats = b.run(|| quant::quantize_int8(&vals));
+        t.row([
+            "quantize_int8_neuron_7b".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!(
+                "{:.2} GB/s",
+                4.0 * vals.len() as f64 * stats.throughput(1.0) / 1e9
+            ),
+        ]);
+        let block = quant::quantize_int4(&vals, 64);
+        let mut out = Vec::new();
+        let stats = b.run(|| {
+            out.clear();
+            quant::dequantize_int4(&block, &mut out);
+            out.len()
+        });
+        t.row([
+            "dequantize_int4_neuron_7b".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!(
+                "{:.2} M vals/s",
+                vals.len() as f64 * stats.throughput(1.0) / 1e6
+            ),
+        ]);
+    }
+
+    // --- f16 batch decode (gather path)
+    {
+        let vals: Vec<f32> = (0..3 * 4096).map(|_| rng.f32() - 0.5).collect();
+        let mut bytes = Vec::new();
+        f16::encode_slice(&vals, &mut bytes);
+        let mut out = Vec::new();
+        let stats = b.run(|| {
+            out.clear();
+            f16::decode_slice(&bytes, &mut out);
+            out.len()
+        });
+        t.row([
+            "f16_decode_neuron_7b".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!(
+                "{:.2} M vals/s",
+                vals.len() as f64 * stats.throughput(1.0) / 1e6
+            ),
+        ]);
+    }
+
+    // --- transfer cost model evaluation (hot in the sim engine loop)
+    {
+        let hw = HardwareSpec::rtx3090_testbed();
+        let stats = b.run(|| {
+            let mut acc = 0.0f64;
+            for i in 0..100u64 {
+                acc += hw.links.get(Link::DramToHbm).time_s(4096 * (i + 1));
+            }
+            acc
+        });
+        t.row([
+            "xfer_cost_model_x100".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!("{:.1} M evals/s", 100.0 * stats.throughput(1.0) / 1e6),
+        ]);
+    }
+
+    // --- executed per-token step (full PJRT path, needs artifacts)
+    if std::path::Path::new("artifacts/layer_step.hlo.txt").exists() {
+        let mut eng =
+            ExecEngine::new(std::path::Path::new("artifacts"), EngineConfig::full())
+                .expect("engine");
+        let prompt = tokenize("the quick brown fox ");
+        eng.generate(&prompt, 4).expect("warmup");
+        let quick = Bench::quick();
+        eng.reset();
+        let stats = quick.run(|| {
+            if eng.pos() + 1 >= eng.max_seq() {
+                eng.reset();
+            }
+            eng.feed(b't' as u32).expect("feed")
+        });
+        t.row([
+            "exec_engine_token_step".into(),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p99),
+            format!("{:.1} tok/s", stats.throughput(1.0)),
+        ]);
+    }
+
+    println!("== M2Cache L3 microbenchmarks ==\n");
+    t.print();
+}

@@ -1,0 +1,14 @@
+//! Baselines the paper compares against, implemented over the same
+//! memory-hierarchy simulator as the M2Cache engine so ratios are
+//! apples-to-apples:
+//!
+//! - [`zero_infinity`]: DeepSpeed ZeRO-Inference-style dense layer
+//!   streaming (the paper's main comparator, Figs 9/12).
+//! - [`media`]: the Fig 4 media study — identical dense decode with
+//!   weights resident in HBM, DRAM, or SSD.
+
+pub mod media;
+pub mod zero_infinity;
+
+pub use media::{media_decode_latency, Medium};
+pub use zero_infinity::ZeroInfinityEngine;

@@ -1,0 +1,181 @@
+//! ZeRO-Inference (DeepSpeed "ZeRO-Infinity" offload) baseline: dense
+//! FP16 weights streamed layer-by-layer to the GPU for *every* token,
+//! with a one-layer prefetch pipeline. No sparsity, no quantization, no
+//! neuron cache. When the model exceeds DRAM, the overflow fraction of
+//! every layer must additionally traverse SSD→DRAM first — this is why
+//! the paper measures ~0.02 tok/s for LLaMA-70B on a 64 GB host.
+
+use crate::carbon::{self, CarbonBreakdown, GpuSpec, RunProfile};
+use crate::coordinator::engine_sim::SimResult;
+use crate::memsim::{Channel, HardwareSpec, Link, SimClock};
+use crate::model::spec::ModelSpec;
+use crate::telemetry::Telemetry;
+
+pub struct ZeroInfinityEngine {
+    pub spec: ModelSpec,
+    pub hw: HardwareSpec,
+    /// Host DRAM available for weight staging (bytes).
+    pub dram_capacity: u64,
+    clock: SimClock,
+    kv_len: usize,
+    pub tel: Telemetry,
+}
+
+impl ZeroInfinityEngine {
+    pub fn new(spec: ModelSpec, hw: HardwareSpec, dram_capacity: u64) -> Self {
+        ZeroInfinityEngine {
+            spec,
+            hw,
+            dram_capacity,
+            clock: SimClock::new(),
+            kv_len: 0,
+            tel: Telemetry::default(),
+        }
+    }
+
+    /// FP16 bytes of one layer (attention + dense FFN — ZeRO streams
+    /// the full layer).
+    fn layer_bytes(&self) -> u64 {
+        2 * (self.spec.ffn_params_per_layer() + self.spec.attn_params_per_layer())
+    }
+
+    /// Fraction of the model that exceeds DRAM and lives on SSD/NVMe.
+    fn ssd_fraction(&self) -> f64 {
+        let total = self.layer_bytes() * self.spec.n_layers as u64;
+        if total <= self.dram_capacity {
+            0.0
+        } else {
+            1.0 - self.dram_capacity as f64 / total as f64
+        }
+    }
+
+    /// One full forward pass over all layers for `batch_tokens` tokens
+    /// of compute (decode: 1; prefill: prompt length).
+    fn full_pass(&mut self, batch_tokens: usize) {
+        let lb = self.layer_bytes();
+        let ssd_frac = self.ssd_fraction();
+        let h2d = self.hw.links.get(Link::DramToHbm);
+        let ssd = self.hw.links.get(Link::SsdToDram);
+        for _layer in 0..self.spec.n_layers {
+            // Prefetch pipeline: the copy of layer l is submitted ahead
+            // and overlaps the previous layer's compute through channel
+            // concurrency; the SSD-resident overflow must reach DRAM
+            // first (submit_after chains the stages).
+            let ssd_bytes = (lb as f64 * ssd_frac) as u64;
+            let copy = if ssd_bytes > 0 {
+                let stage = self.clock.submit(Channel::Ssd, ssd.time_s(ssd_bytes));
+                self.tel.traffic.ssd_to_dram += ssd_bytes;
+                self.clock
+                    .submit_after(Channel::PcieH2d, h2d.time_s(lb), stage)
+            } else {
+                self.clock.submit(Channel::PcieH2d, h2d.time_s(lb))
+            };
+            self.tel.traffic.dram_to_hbm += lb;
+            let flops = batch_tokens as f64
+                * 2.0
+                * (self.spec.ffn_params_per_layer() + self.spec.attn_params_per_layer())
+                    as f64;
+            let t = self.hw.gpu_time_s(flops, lb);
+            self.clock.join(copy);
+            let before = self.clock.now_s();
+            self.clock.run(Channel::Gpu, t);
+            self.tel.phases.ffn_s += self.clock.now_s() - before;
+        }
+        // Fixed per-token framework overhead (host glue + sampling).
+        self.clock.run(Channel::Cpu, self.hw.token_overhead_s);
+    }
+
+    pub fn run(&mut self, prompt_len: usize, gen_tokens: usize, gpu: &GpuSpec) -> SimResult {
+        self.full_pass(prompt_len); // prefill
+        self.kv_len = prompt_len;
+        self.tel.prefill_tokens = prompt_len as u64;
+        let mut ttft = self.clock.now_s();
+        let decode_start = self.clock.now_s();
+        for i in 0..gen_tokens {
+            self.full_pass(1);
+            self.kv_len += 1;
+            self.tel.tokens_generated += 1;
+            if i == 0 {
+                ttft = self.clock.now_s();
+            }
+        }
+        let total_s = self.clock.now_s();
+        self.tel.ttft_s = ttft;
+        self.tel.peak_dram_bytes = self
+            .dram_capacity
+            .min(self.layer_bytes() * self.spec.n_layers as u64);
+        let profile = RunProfile {
+            wall_s: total_s,
+            gpu_util: self.clock.utilization(Channel::Gpu),
+            dram_gib: self.tel.peak_dram_bytes as f64 / (1u64 << 30) as f64,
+            ssd_active: self.ssd_fraction() > 0.0,
+            cpu_cores: 1.0,
+        };
+        let carbon: CarbonBreakdown =
+            carbon::footprint(gpu, &profile, carbon::PAPER_INTENSITY_G_PER_KWH, false);
+        let decode_s = total_s - decode_start;
+        SimResult {
+            total_s,
+            ttft_s: ttft,
+            tokens_per_s: if decode_s > 0.0 {
+                gen_tokens as f64 / decode_s
+            } else {
+                0.0
+            },
+            telemetry: self.tel.clone(),
+            carbon,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::find_gpu;
+
+    fn run(spec: ModelSpec, dram_gib: u64) -> SimResult {
+        let hw = HardwareSpec::rtx3090_testbed();
+        let mut e = ZeroInfinityEngine::new(spec, hw, dram_gib << 30);
+        e.run(16, 8, find_gpu("RTX3090").unwrap())
+    }
+
+    #[test]
+    fn bandwidth_bound_decode_rate_7b() {
+        // 7B fp16 ≈ 13 GB over a 16 GB/s PCIe link ⇒ ~1.2 tok/s ceiling.
+        let r = run(ModelSpec::llama2_7b(), 64);
+        assert!(
+            (0.5..2.5).contains(&r.tokens_per_s),
+            "7B ZeRO-Inf {} tok/s",
+            r.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn seventy_b_collapses_on_ssd_overflow() {
+        // Paper: "~0.02 tokens per second" for 70B.
+        let r = run(ModelSpec::llama2_70b(), 64);
+        assert!(
+            r.tokens_per_s < 0.08,
+            "70B ZeRO-Inf {} tok/s",
+            r.tokens_per_s
+        );
+        assert!(r.telemetry.traffic.ssd_to_dram > 0);
+    }
+
+    #[test]
+    fn no_ssd_traffic_when_model_fits_dram() {
+        let r = run(ModelSpec::llama2_7b(), 64);
+        assert_eq!(r.telemetry.traffic.ssd_to_dram, 0);
+    }
+
+    #[test]
+    fn streams_full_model_per_token() {
+        let spec = ModelSpec::llama2_7b();
+        let r = run(spec.clone(), 64);
+        let per_pass =
+            2 * (spec.ffn_params_per_layer() + spec.attn_params_per_layer())
+                * spec.n_layers as u64;
+        // prefill + 8 decode passes
+        assert_eq!(r.telemetry.traffic.dram_to_hbm, per_pass * 9);
+    }
+}

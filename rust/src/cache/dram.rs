@@ -1,0 +1,277 @@
+//! Two-level DRAM cache (paper §5.4, Fig 8): a *fixed area* pinning the
+//! first `n` layers (avoids reloading them at every new token's first
+//! layers) and a *dynamic area* holding upcoming layers relative to the
+//! current one, managed as a layer-aware FIFO.
+//!
+//! In executed mode frames carry the layer's actual neuron records (all
+//! precision variants, so any plan can be served from DRAM); in
+//! simulated mode frames are metadata-only and just account bytes.
+
+use crate::precision::Dtype;
+use std::collections::{HashMap, VecDeque};
+
+/// A layer's record blocks per precision (executed mode).
+#[derive(Debug, Clone, Default)]
+pub struct LayerData {
+    pub blocks: HashMap<Dtype, Vec<u8>>,
+}
+
+impl LayerData {
+    pub fn bytes(&self) -> u64 {
+        self.blocks.values().map(|b| b.len() as u64).sum()
+    }
+
+    /// Slice one neuron's raw record out of a block.
+    pub fn neuron_record(&self, dtype: Dtype, neuron: u32, record_bytes: usize) -> Option<&[u8]> {
+        let block = self.blocks.get(&dtype)?;
+        let lo = neuron as usize * record_bytes;
+        block.get(lo..lo + record_bytes)
+    }
+}
+
+#[derive(Debug)]
+struct Frame {
+    bytes: u64,
+    fixed: bool,
+    data: Option<LayerData>,
+}
+
+/// The two-level DRAM cache.
+#[derive(Debug)]
+pub struct DramCache {
+    capacity_bytes: u64,
+    fixed_layers: usize,
+    frames: HashMap<usize, Frame>,
+    /// Dynamic-area insertion order (layer ids, oldest first).
+    fifo: VecDeque<usize>,
+    used: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl DramCache {
+    /// `fixed_layers` are pinned once inserted; everything else competes
+    /// in the FIFO dynamic area under `capacity_bytes`.
+    pub fn new(capacity_bytes: u64, fixed_layers: usize) -> DramCache {
+        DramCache {
+            capacity_bytes,
+            fixed_layers,
+            frames: HashMap::new(),
+            fifo: VecDeque::new(),
+            used: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn is_resident(&self, layer: usize) -> bool {
+        self.frames.contains_key(&layer)
+    }
+
+    pub fn resident_layers(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.frames.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Look up a layer, counting hit/miss.
+    pub fn lookup(&mut self, layer: usize) -> Option<&LayerData> {
+        match self.frames.get(&layer) {
+            Some(f) => {
+                self.hits += 1;
+                f.data.as_ref()
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Hit/miss-counting residency probe (sim mode has no data).
+    pub fn probe(&mut self, layer: usize) -> bool {
+        if self.frames.contains_key(&layer) {
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Insert a layer frame of `bytes` (with optional data). Evicts
+    /// dynamic-area layers FIFO until it fits. Returns evicted layers.
+    ///
+    /// Panics if `bytes` cannot fit even with the dynamic area empty —
+    /// that is a configuration error (fixed area overcommitted).
+    pub fn insert_layer(
+        &mut self,
+        layer: usize,
+        bytes: u64,
+        data: Option<LayerData>,
+    ) -> Vec<usize> {
+        if self.frames.contains_key(&layer) {
+            return Vec::new();
+        }
+        let mut evicted = Vec::new();
+        while self.used + bytes > self.capacity_bytes {
+            let victim = self
+                .fifo
+                .pop_front()
+                .unwrap_or_else(|| {
+                    panic!(
+                        "DRAM cache cannot fit layer {layer} ({bytes} B) — \
+                         fixed area uses {} of {} B",
+                        self.used, self.capacity_bytes
+                    )
+                });
+            let f = self.frames.remove(&victim).expect("fifo/frames in sync");
+            debug_assert!(!f.fixed);
+            self.used -= f.bytes;
+            self.evictions += 1;
+            evicted.push(victim);
+        }
+        let fixed = layer < self.fixed_layers;
+        if !fixed {
+            self.fifo.push_back(layer);
+        }
+        self.frames.insert(layer, Frame { bytes, fixed, data });
+        self.used += bytes;
+        evicted
+    }
+
+    /// Drop a specific dynamic layer (e.g. after inference passed it and
+    /// the preloader wants room). Fixed layers are never dropped.
+    pub fn drop_layer(&mut self, layer: usize) -> bool {
+        match self.frames.get(&layer) {
+            Some(f) if !f.fixed => {
+                let f = self.frames.remove(&layer).unwrap();
+                self.used -= f.bytes;
+                self.fifo.retain(|&l| l != layer);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data_of(bytes: usize) -> LayerData {
+        let mut d = LayerData::default();
+        d.blocks.insert(Dtype::F16, vec![0u8; bytes]);
+        d
+    }
+
+    #[test]
+    fn insert_and_probe() {
+        let mut c = DramCache::new(1000, 1);
+        assert!(!c.probe(0));
+        c.insert_layer(0, 400, None);
+        assert!(c.probe(0));
+        assert_eq!(c.used_bytes(), 400);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn fifo_eviction_spares_fixed_area() {
+        let mut c = DramCache::new(1000, 2);
+        c.insert_layer(0, 300, None); // fixed
+        c.insert_layer(1, 300, None); // fixed
+        c.insert_layer(2, 300, None); // dynamic
+        let ev = c.insert_layer(3, 300, None); // must evict layer 2 only
+        assert_eq!(ev, vec![2]);
+        assert!(c.is_resident(0) && c.is_resident(1) && c.is_resident(3));
+        assert!(!c.is_resident(2));
+    }
+
+    #[test]
+    fn eviction_order_is_fifo() {
+        let mut c = DramCache::new(900, 0);
+        c.insert_layer(5, 300, None);
+        c.insert_layer(6, 300, None);
+        c.insert_layer(7, 300, None);
+        let ev = c.insert_layer(8, 600, None);
+        assert_eq!(ev, vec![5, 6], "oldest dynamic layers go first");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot fit")]
+    fn overcommitted_fixed_area_panics() {
+        let mut c = DramCache::new(500, 4);
+        c.insert_layer(0, 300, None);
+        c.insert_layer(1, 300, None); // fixed layers exceed capacity
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let mut c = DramCache::new(1000, 0);
+        c.insert_layer(1, 400, None);
+        let ev = c.insert_layer(1, 400, None);
+        assert!(ev.is_empty());
+        assert_eq!(c.used_bytes(), 400);
+    }
+
+    #[test]
+    fn drop_layer_respects_pinning() {
+        let mut c = DramCache::new(1000, 1);
+        c.insert_layer(0, 100, None);
+        c.insert_layer(3, 100, None);
+        assert!(!c.drop_layer(0), "fixed layer is pinned");
+        assert!(c.drop_layer(3));
+        assert_eq!(c.used_bytes(), 100);
+        assert!(!c.drop_layer(3), "double drop is a no-op");
+    }
+
+    #[test]
+    fn layer_data_neuron_slicing() {
+        let mut d = LayerData::default();
+        let block: Vec<u8> = (0..40u8).collect();
+        d.blocks.insert(Dtype::Int8, block);
+        let rec = d.neuron_record(Dtype::Int8, 2, 10).unwrap();
+        assert_eq!(rec, &[20, 21, 22, 23, 24, 25, 26, 27, 28, 29]);
+        assert!(d.neuron_record(Dtype::Int8, 4, 10).is_none(), "oob");
+        assert!(d.neuron_record(Dtype::F16, 0, 10).is_none(), "absent dtype");
+    }
+
+    #[test]
+    fn lookup_returns_data_and_counts() {
+        let mut c = DramCache::new(10_000, 0);
+        c.insert_layer(2, 64, Some(data_of(64)));
+        assert!(c.lookup(2).is_some());
+        assert!(c.lookup(9).is_none());
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn used_bytes_never_exceed_capacity() {
+        let mut c = DramCache::new(1024, 0);
+        for l in 0..50 {
+            c.insert_layer(l, 100, None);
+            assert!(c.used_bytes() <= c.capacity_bytes());
+        }
+        assert!(c.evictions > 0);
+    }
+}

@@ -1,0 +1,579 @@
+//! High-performance layer-based HBM cache (paper §5.3, Fig 7).
+//!
+//! Each transformer layer owns an *isolated cache unit*: one contiguous
+//! buffer sized for the activated-neuron count. The buffer layout is
+//! `[slot, 3·d]` f32 (gate row | up row | down column per slot) plus a
+//! per-slot activity mask, so the unit's storage is *directly* the FFN
+//! kernel's weight operand — no gather copy on the compute path, which
+//! is exactly the paper's "continuous memory ... directly used for
+//! inference computation" design. Because the sparse-FFN reduction is
+//! order-invariant, slot order never needs fixing up.
+//!
+//! The update policy is pluggable ([`HbmPolicy`]): the paper's ATU
+//! (Adjacent Token Update) is the default; LRU and LLM-in-a-Flash's
+//! sliding window are provided as comparators for the ablations.
+
+use crate::precision::plan::LayerPlan;
+use crate::precision::Dtype;
+use std::collections::HashMap;
+
+/// Residency key: the paper reloads a neuron when its *precision class*
+/// changes, since the stored bytes differ per class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NeuronAt {
+    pub neuron: u32,
+    pub dtype: Dtype,
+}
+
+/// Result of one cache update: what must be loaded (DRAM→HBM traffic)
+/// and how much was reused.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateResult {
+    /// Neurons to fetch from DRAM, with target precision.
+    pub load: Vec<NeuronAt>,
+    /// Neurons evicted from the unit.
+    pub evicted: usize,
+    /// Plan entries already resident (cache hits).
+    pub hits: usize,
+}
+
+/// One layer's isolated cache unit.
+#[derive(Debug)]
+pub struct CacheUnit {
+    /// Slot count (= activated-neuron budget of the layer).
+    pub capacity: usize,
+    /// f32 values per slot (3·d_model; 0 in simulated mode → no storage).
+    pub values: usize,
+    /// Contiguous `[capacity, values]` weight buffer (kernel operand).
+    pub storage: Vec<f32>,
+    /// Per-slot activity mask (kernel operand; 0.0 = dead slot).
+    pub mask: Vec<f32>,
+    resident: HashMap<u32, (usize, Dtype)>,
+    free: Vec<usize>,
+    /// Monotone use counter for LRU bookkeeping.
+    tick: u64,
+    last_use: Vec<u64>,
+}
+
+impl CacheUnit {
+    pub fn new(capacity: usize, values: usize) -> CacheUnit {
+        CacheUnit {
+            capacity,
+            values,
+            storage: vec![0.0; capacity * values],
+            mask: vec![0.0; capacity],
+            resident: HashMap::with_capacity(capacity),
+            free: (0..capacity).rev().collect(),
+            tick: 0,
+            last_use: vec![0; capacity],
+        }
+    }
+
+    /// Simulated-mode unit: tracks residency but stores no data.
+    pub fn meta_only(capacity: usize) -> CacheUnit {
+        CacheUnit::new(capacity, 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    pub fn contains(&self, neuron: u32, dtype: Dtype) -> bool {
+        matches!(self.resident.get(&neuron), Some((_, d)) if *d == dtype)
+    }
+
+    pub fn dtype_of(&self, neuron: u32) -> Option<Dtype> {
+        self.resident.get(&neuron).map(|(_, d)| *d)
+    }
+
+    /// Insert a neuron's dequantized values (len must equal `values`).
+    /// Returns the slot. Panics if full — policies must evict first.
+    pub fn insert(&mut self, neuron: u32, dtype: Dtype, data: &[f32]) -> usize {
+        assert!(
+            !self.resident.contains_key(&neuron),
+            "neuron {neuron} already resident; evict before re-insert"
+        );
+        let slot = self.free.pop().expect("cache unit full");
+        if self.values > 0 {
+            assert_eq!(data.len(), self.values, "record length mismatch");
+            self.storage[slot * self.values..(slot + 1) * self.values]
+                .copy_from_slice(data);
+        }
+        self.mask[slot] = 1.0;
+        self.tick += 1;
+        self.last_use[slot] = self.tick;
+        self.resident.insert(neuron, (slot, dtype));
+        slot
+    }
+
+    /// Remove a neuron; its slot is masked dead (no memset needed — the
+    /// kernel's mask kills the contribution, the paper's "management
+    /// overhead is nearly zero" property).
+    pub fn evict(&mut self, neuron: u32) -> bool {
+        if let Some((slot, _)) = self.resident.remove(&neuron) {
+            self.mask[slot] = 0.0;
+            self.free.push(slot);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Slot index of a resident neuron.
+    pub fn slot_of(&self, neuron: u32) -> Option<usize> {
+        self.resident.get(&neuron).map(|(slot, _)| *slot)
+    }
+
+    /// Mark a resident neuron as used now (for LRU).
+    pub fn touch(&mut self, neuron: u32) {
+        if let Some(&(slot, _)) = self.resident.get(&neuron) {
+            self.tick += 1;
+            self.last_use[slot] = self.tick;
+        }
+    }
+
+    /// Least-recently-used resident neuron, if any.
+    pub fn lru_victim(&self) -> Option<u32> {
+        self.resident
+            .iter()
+            .min_by_key(|(n, (slot, _))| (self.last_use[*slot], **n))
+            .map(|(n, _)| *n)
+    }
+
+    pub fn resident_neurons(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.resident.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.resident.clear();
+        self.free = (0..self.capacity).rev().collect();
+        self.mask.fill(0.0);
+    }
+
+    /// HBM bytes held by this unit's buffer (the capacity reservation,
+    /// as units are fixed contiguous allocations).
+    pub fn reserved_bytes(&self) -> u64 {
+        (self.capacity * self.values * 4 + self.capacity * 4) as u64
+    }
+}
+
+/// Pluggable update policy (paper §5.3 "Cache Policy").
+pub trait HbmPolicy {
+    /// Reconcile the unit with the new plan. Must leave every planned
+    /// neuron either resident or listed in `UpdateResult::load` (the
+    /// engine inserts loaded data afterwards via [`CacheUnit::insert`]).
+    fn update(&mut self, unit: &mut CacheUnit, plan: &LayerPlan) -> UpdateResult;
+    fn name(&self) -> &'static str;
+}
+
+/// Adjacent Token Update: evict exactly the residents that the new plan
+/// no longer wants; load exactly the planned neurons not resident at the
+/// right precision. No popularity tracking — the paper's measured ~80 %
+/// token-to-token overlap does the work.
+#[derive(Debug, Default, Clone)]
+pub struct AtuPolicy;
+
+impl HbmPolicy for AtuPolicy {
+    fn update(&mut self, unit: &mut CacheUnit, plan: &LayerPlan) -> UpdateResult {
+        let mut wanted: HashMap<u32, Dtype> =
+            HashMap::with_capacity(plan.total_active());
+        for (n, dt) in plan.iter() {
+            wanted.insert(n, dt);
+        }
+        // Evict residents that are unplanned or precision-stale.
+        let stale: Vec<u32> = unit
+            .resident
+            .iter()
+            .filter(|(n, (_, d))| wanted.get(n) != Some(d))
+            .map(|(n, _)| *n)
+            .collect();
+        let evicted = stale.len();
+        for n in stale {
+            unit.evict(n);
+        }
+        // Remaining residents are hits; the rest must load.
+        let mut load = Vec::new();
+        let mut hits = 0;
+        for (n, dt) in wanted {
+            if unit.contains(n, dt) {
+                unit.touch(n);
+                hits += 1;
+            } else {
+                load.push(NeuronAt { neuron: n, dtype: dt });
+            }
+        }
+        load.sort_by_key(|na| na.neuron);
+        UpdateResult { load, evicted, hits }
+    }
+
+    fn name(&self) -> &'static str {
+        "atu"
+    }
+}
+
+/// Classic LRU over a unit whose capacity exceeds the per-token active
+/// count: planned-but-missing neurons load; evictions only happen when
+/// slots run out, preferring the least recently used resident. Models
+/// the "dynamic cache designs ... high overhead" comparator of §5.3.
+#[derive(Debug, Default, Clone)]
+pub struct LruPolicy;
+
+impl HbmPolicy for LruPolicy {
+    fn update(&mut self, unit: &mut CacheUnit, plan: &LayerPlan) -> UpdateResult {
+        let mut load: Vec<NeuronAt> = Vec::new();
+        let mut hits = 0;
+        let mut evicted = 0;
+        let planned: std::collections::HashSet<u32> =
+            plan.iter().map(|(n, _)| n).collect();
+        for (n, dt) in plan.iter() {
+            if unit.contains(n, dt) {
+                unit.touch(n);
+                hits += 1;
+                continue;
+            }
+            if unit.dtype_of(n).is_some() {
+                // Precision-stale: must reload.
+                unit.evict(n);
+                evicted += 1;
+            }
+            // The engine inserts `load` only after this update returns,
+            // so slots already promised to earlier loads count as used.
+            if unit.free_slots() <= load.len() {
+                // Evict LRU victims that are NOT in this plan.
+                let victim = unit
+                    .resident
+                    .iter()
+                    .filter(|(n, _)| !planned.contains(n))
+                    .min_by_key(|(n, (slot, _))| (unit.last_use[*slot], **n))
+                    .map(|(n, _)| *n);
+                match victim {
+                    Some(v) => {
+                        unit.evict(v);
+                        evicted += 1;
+                    }
+                    None => panic!("LRU cache smaller than plan"),
+                }
+            }
+            load.push(NeuronAt { neuron: n, dtype: dt });
+        }
+        load.sort_by_key(|na| na.neuron);
+        UpdateResult { load, evicted, hits }
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+/// LLM-in-a-Flash's sliding window: keep the union of the last `window`
+/// plans resident; evict neurons that age out.
+#[derive(Debug, Clone)]
+pub struct SlidingWindowPolicy {
+    pub window: usize,
+    history: std::collections::VecDeque<Vec<u32>>,
+}
+
+impl SlidingWindowPolicy {
+    pub fn new(window: usize) -> SlidingWindowPolicy {
+        assert!(window >= 1);
+        SlidingWindowPolicy {
+            window,
+            history: Default::default(),
+        }
+    }
+}
+
+impl HbmPolicy for SlidingWindowPolicy {
+    fn update(&mut self, unit: &mut CacheUnit, plan: &LayerPlan) -> UpdateResult {
+        let ids: Vec<u32> = plan.iter().map(|(n, _)| n).collect();
+        self.history.push_back(ids);
+        if self.history.len() > self.window {
+            self.history.pop_front();
+        }
+        let keep: std::collections::HashSet<u32> =
+            self.history.iter().flatten().copied().collect();
+        let aged: Vec<u32> = unit
+            .resident
+            .keys()
+            .filter(|n| !keep.contains(n))
+            .copied()
+            .collect();
+        let mut evicted = aged.len();
+        for n in aged {
+            unit.evict(n);
+        }
+        let mut load: Vec<NeuronAt> = Vec::new();
+        let mut hits = 0;
+        let planned: std::collections::HashSet<u32> =
+            plan.iter().map(|(n, _)| n).collect();
+        for (n, dt) in plan.iter() {
+            if unit.contains(n, dt) {
+                unit.touch(n);
+                hits += 1;
+            } else {
+                if unit.dtype_of(n).is_some() {
+                    unit.evict(n);
+                    evicted += 1;
+                }
+                // Deferred inserts: slots promised to earlier loads
+                // count as used (see LruPolicy).
+                if unit.free_slots() <= load.len() {
+                    // Window too wide for the unit: drop oldest extras.
+                    let victim = unit
+                        .resident
+                        .keys()
+                        .find(|n| !planned.contains(n))
+                        .copied()
+                        .expect("sliding window smaller than plan");
+                    unit.evict(victim);
+                    evicted += 1;
+                }
+                load.push(NeuronAt { neuron: n, dtype: dt });
+            }
+        }
+        load.sort_by_key(|na| na.neuron);
+        UpdateResult { load, evicted, hits }
+    }
+
+    fn name(&self) -> &'static str {
+        "sliding_window"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::plan::{plan_from_scores, PrecisionRatios};
+    use crate::util::check::Check;
+    use crate::util::rng::Rng;
+
+    fn plan_of(fp16: &[u32], int8: &[u32], int4: &[u32]) -> LayerPlan {
+        LayerPlan {
+            fp16: fp16.to_vec(),
+            int8: int8.to_vec(),
+            int4: int4.to_vec(),
+        }
+    }
+
+    #[test]
+    fn insert_evict_roundtrip_with_storage() {
+        let mut u = CacheUnit::new(4, 3);
+        let s = u.insert(7, Dtype::F16, &[1.0, 2.0, 3.0]);
+        assert!(u.contains(7, Dtype::F16));
+        assert!(!u.contains(7, Dtype::Int8), "dtype is part of the key");
+        assert_eq!(u.mask[s], 1.0);
+        assert_eq!(&u.storage[s * 3..s * 3 + 3], &[1.0, 2.0, 3.0]);
+        assert!(u.evict(7));
+        assert_eq!(u.mask[s], 0.0);
+        assert!(!u.evict(7), "double evict is a no-op");
+    }
+
+    #[test]
+    #[should_panic(expected = "full")]
+    fn insert_past_capacity_panics() {
+        let mut u = CacheUnit::meta_only(1);
+        u.insert(0, Dtype::Int8, &[]);
+        u.insert(1, Dtype::Int8, &[]);
+    }
+
+    #[test]
+    fn atu_loads_everything_on_cold_start() {
+        let mut u = CacheUnit::meta_only(8);
+        let plan = plan_of(&[1, 2], &[3], &[4, 5]);
+        let r = AtuPolicy.update(&mut u, &plan);
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.load.len(), 5);
+        assert_eq!(r.evicted, 0);
+    }
+
+    #[test]
+    fn atu_diff_is_exact_set_difference() {
+        let mut u = CacheUnit::meta_only(8);
+        let p1 = plan_of(&[1, 2], &[3, 4], &[]);
+        let r1 = AtuPolicy.update(&mut u, &p1);
+        for na in &r1.load {
+            u.insert(na.neuron, na.dtype, &[]);
+        }
+        // Next token: 2,3 persist at same precision; 1 changes precision
+        // (fp16 -> int8) => reload; 4 dropped; 9 fresh.
+        let p2 = plan_of(&[2], &[3, 1], &[9]);
+        let r2 = AtuPolicy.update(&mut u, &p2);
+        assert_eq!(r2.hits, 2, "2@fp16 and 3@int8 reused");
+        let loads: Vec<u32> = r2.load.iter().map(|n| n.neuron).collect();
+        assert_eq!(loads, vec![1, 9]);
+        assert_eq!(r2.evicted, 2, "4 dropped + 1 precision-stale");
+    }
+
+    #[test]
+    fn atu_hit_ratio_tracks_overlap() {
+        // With an 80%-overlap trace, steady-state hit ratio ≈ 80% (Fig 6
+        // -> paper's claimed ~80% ATU hit ratio).
+        use crate::sparsity::trace::{ActivationTrace, TraceConfig};
+        let cfg = TraceConfig {
+            n_neurons: 500,
+            active: 100,
+            overlap: 0.8,
+            zipf_s: 1.0,
+        };
+        let mut trace = ActivationTrace::new(cfg, 3);
+        let mut u = CacheUnit::meta_only(100);
+        let mut pol = AtuPolicy;
+        let ratios = PrecisionRatios::new(1.0, 0.0, 0.0);
+        let (mut hits, mut total) = (0usize, 0usize);
+        for t in 0..60 {
+            let (ids, _) = trace.next_token();
+            // Build a plan over the full neuron population scores.
+            let mut scores = vec![f32::NEG_INFINITY; 500];
+            for (rank, &id) in ids.iter().enumerate() {
+                scores[id as usize] = 1000.0 - rank as f32;
+            }
+            let plan = plan_from_scores(&scores, &PrecisionRatios::new(0.2, 0.0, 0.0));
+            let _ = ratios;
+            let r = pol.update(&mut u, &plan);
+            for na in &r.load {
+                u.insert(na.neuron, na.dtype, &[]);
+            }
+            if t >= 10 {
+                hits += r.hits;
+                total += plan.total_active();
+            }
+        }
+        let ratio = hits as f64 / total as f64;
+        assert!(
+            (0.70..0.95).contains(&ratio),
+            "steady-state ATU hit ratio {ratio:.2} (paper ~0.8)"
+        );
+    }
+
+    #[test]
+    fn lru_keeps_extras_until_pressure() {
+        let mut u = CacheUnit::meta_only(4);
+        let mut pol = LruPolicy;
+        let p1 = plan_of(&[1, 2], &[], &[]);
+        let r1 = pol.update(&mut u, &p1);
+        for na in &r1.load {
+            u.insert(na.neuron, na.dtype, &[]);
+        }
+        // Plan moves on to 3,4 — with capacity 4, 1 and 2 stay cached.
+        let p2 = plan_of(&[3, 4], &[], &[]);
+        let r2 = pol.update(&mut u, &p2);
+        for na in &r2.load {
+            u.insert(na.neuron, na.dtype, &[]);
+        }
+        assert_eq!(u.len(), 4);
+        // Plan returns to 1,2: all hits, unlike ATU which would reload.
+        let p3 = plan_of(&[1, 2], &[], &[]);
+        let r3 = pol.update(&mut u, &p3);
+        assert_eq!(r3.hits, 2);
+        assert!(r3.load.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_under_pressure() {
+        let mut u = CacheUnit::meta_only(2);
+        let mut pol = LruPolicy;
+        for p in [plan_of(&[1], &[], &[]), plan_of(&[2], &[], &[])] {
+            for na in pol.update(&mut u, &p).load {
+                u.insert(na.neuron, na.dtype, &[]);
+            }
+        }
+        // Touch 1 again, then insert 3 => victim must be 2.
+        let _ = pol.update(&mut u, &plan_of(&[1], &[], &[]));
+        let r = pol.update(&mut u, &plan_of(&[3], &[], &[]));
+        for na in r.load {
+            u.insert(na.neuron, na.dtype, &[]);
+        }
+        assert!(u.contains(1, Dtype::F16));
+        assert!(u.contains(3, Dtype::F16));
+        assert!(u.dtype_of(2).is_none());
+    }
+
+    #[test]
+    fn sliding_window_ages_out() {
+        let mut u = CacheUnit::meta_only(8);
+        let mut pol = SlidingWindowPolicy::new(2);
+        for p in [
+            plan_of(&[1], &[], &[]),
+            plan_of(&[2], &[], &[]),
+            plan_of(&[3], &[], &[]),
+        ] {
+            for na in pol.update(&mut u, &p).load {
+                u.insert(na.neuron, na.dtype, &[]);
+            }
+        }
+        // Window 2 keeps {2,3}; 1 aged out.
+        assert!(u.dtype_of(1).is_none());
+        assert!(u.dtype_of(2).is_some());
+        assert!(u.dtype_of(3).is_some());
+    }
+
+    #[test]
+    fn policies_leave_plan_fully_serviceable() {
+        // Property: after update + inserting all loads, every planned
+        // neuron is resident at the planned precision — for all policies.
+        Check::new(48, 0xCAC4E).run("plan serviceable", |rng| {
+            let n = 64usize;
+            let mut unit = CacheUnit::meta_only(n);
+            let mut policies: Vec<Box<dyn HbmPolicy>> = vec![
+                Box::new(AtuPolicy),
+                Box::new(LruPolicy),
+                Box::new(SlidingWindowPolicy::new(3)),
+            ];
+            let pol = &mut policies[rng.range(0, 3)];
+            for _ in 0..8 {
+                let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let plan =
+                    plan_from_scores(&scores, &PrecisionRatios::new(0.1, 0.1, 0.2));
+                let r = pol.update(&mut unit, &plan);
+                for na in &r.load {
+                    unit.insert(na.neuron, na.dtype, &[]);
+                }
+                for (neuron, dt) in plan.iter() {
+                    if !unit.contains(neuron, dt) {
+                        return Err(format!(
+                            "{}: neuron {neuron} not serviceable at {:?}",
+                            pol.name(),
+                            dt
+                        ));
+                    }
+                }
+                if r.hits + r.load.len() != plan.total_active() {
+                    return Err(format!(
+                        "{}: hits {} + loads {} != plan {}",
+                        pol.name(),
+                        r.hits,
+                        r.load.len(),
+                        plan.total_active()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slot_of_tracks_residency() {
+        let mut u = CacheUnit::meta_only(2);
+        assert_eq!(u.slot_of(5), None);
+        let s = u.insert(5, Dtype::F16, &[]);
+        assert_eq!(u.slot_of(5), Some(s));
+        u.evict(5);
+        assert_eq!(u.slot_of(5), None);
+    }
+
+    #[test]
+    fn reserved_bytes_accounting() {
+        let u = CacheUnit::new(10, 384);
+        assert_eq!(u.reserved_bytes(), (10 * 384 * 4 + 40) as u64);
+    }
+}

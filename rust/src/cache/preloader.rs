@@ -1,0 +1,250 @@
+//! Pattern-aware SSD→DRAM preloader (paper §5.4, Fig 8).
+//!
+//! The paper's timing rule: loading one layer from SSD takes ≈2× one
+//! layer's inference time, so the preloader must stay ≥2 layers ahead
+//! of compute (`depth`, default 2). Look-ahead wraps around the layer
+//! ring because decoding token t+1 re-enters layer 0 right after layer
+//! L-1 of token t — which is also why the *fixed area* pins the first
+//! layers.
+//!
+//! Executed mode: reads run on dedicated I/O threads (the paper's
+//! "separate I/O threads facilitate the movement of data between host
+//! memory and SSDs"), with completions drained into the [`DramCache`]
+//! between steps. Simulated mode costs the same reads on the
+//! [`SimClock`]'s SSD channel instead (see `coordinator::engine`).
+
+use crate::cache::dram::{DramCache, LayerData};
+use crate::cache::ssd::FlashStore;
+use crate::util::pool::ThreadPool;
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+type Done = (usize, Result<Option<LayerData>>);
+
+pub struct Preloader {
+    flash: Arc<dyn FlashStore + Sync>,
+    pool: ThreadPool,
+    tx: Sender<Done>,
+    rx: Receiver<Done>,
+    inflight: HashSet<usize>,
+    /// Look-ahead depth in layers (paper: 2).
+    pub depth: usize,
+    /// Telemetry: bytes read from SSD, completed loads, failed loads.
+    pub bytes_loaded: u64,
+    pub loads: u64,
+    pub failures: u64,
+}
+
+impl Preloader {
+    pub fn new(
+        flash: Arc<dyn FlashStore + Sync>,
+        io_threads: usize,
+        depth: usize,
+    ) -> Preloader {
+        let (tx, rx) = channel();
+        Preloader {
+            flash,
+            pool: ThreadPool::new(io_threads.max(1)),
+            tx,
+            rx,
+            inflight: HashSet::new(),
+            depth,
+            bytes_loaded: 0,
+            loads: 0,
+            failures: 0,
+        }
+    }
+
+    /// Request layers `current+1 ..= current+depth` (mod ring) that are
+    /// neither DRAM-resident nor already in flight.
+    pub fn kick(&mut self, current_layer: usize, dram: &DramCache) {
+        let n = self.flash.n_layers();
+        for ahead in 1..=self.depth {
+            let layer = (current_layer + ahead) % n;
+            if dram.is_resident(layer) || self.inflight.contains(&layer) {
+                continue;
+            }
+            self.request(layer);
+        }
+    }
+
+    /// Issue one async layer read.
+    pub fn request(&mut self, layer: usize) {
+        if !self.inflight.insert(layer) {
+            return;
+        }
+        let flash = Arc::clone(&self.flash);
+        let tx = self.tx.clone();
+        self.pool.submit(move || {
+            let result = flash.read_layer(layer);
+            // Receiver may be gone during shutdown; ignore send errors.
+            let _ = tx.send((layer, result));
+        });
+    }
+
+    /// Non-blocking: insert every completed frame into DRAM. Returns the
+    /// number of layers inserted. Failed loads are dropped from the
+    /// in-flight set (the demand path will retry synchronously).
+    pub fn drain(&mut self, dram: &mut DramCache) -> usize {
+        let mut inserted = 0;
+        while let Ok((layer, result)) = self.rx.try_recv() {
+            self.complete(layer, result, dram, &mut inserted);
+        }
+        inserted
+    }
+
+    fn complete(
+        &mut self,
+        layer: usize,
+        result: Result<Option<LayerData>>,
+        dram: &mut DramCache,
+        inserted: &mut usize,
+    ) {
+        self.inflight.remove(&layer);
+        match result {
+            Ok(data) => {
+                let bytes = self.flash.layer_bytes(layer);
+                self.bytes_loaded += bytes;
+                self.loads += 1;
+                dram.insert_layer(layer, bytes, data);
+                *inserted += 1;
+            }
+            Err(_) => {
+                self.failures += 1;
+            }
+        }
+    }
+
+    /// Block until `layer` is DRAM-resident: drains completions, waits
+    /// for an in-flight read, or falls back to a synchronous demand read
+    /// (with one retry, covering transient injected faults).
+    pub fn ensure(&mut self, layer: usize, dram: &mut DramCache) -> Result<()> {
+        let mut scratch = 0;
+        loop {
+            if dram.is_resident(layer) {
+                return Ok(());
+            }
+            if self.inflight.contains(&layer) {
+                // An async read is coming; block on the channel.
+                let (done_layer, result) = self
+                    .rx
+                    .recv()
+                    .context("preloader I/O thread channel closed")?;
+                self.complete(done_layer, result, dram, &mut scratch);
+                continue;
+            }
+            // Demand miss: synchronous read with one retry.
+            let result = self
+                .flash
+                .read_layer(layer)
+                .or_else(|_| {
+                    self.failures += 1;
+                    self.flash.read_layer(layer)
+                })
+                .with_context(|| format!("demand read of layer {layer} failed twice"))?;
+            let bytes = self.flash.layer_bytes(layer);
+            self.bytes_loaded += bytes;
+            self.loads += 1;
+            dram.insert_layer(layer, bytes, result);
+        }
+    }
+
+    /// Wait for all outstanding reads and drain them.
+    pub fn quiesce(&mut self, dram: &mut DramCache) {
+        self.pool.wait_idle();
+        self.drain(dram);
+    }
+
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::ssd::{FaultyFlash, FileFlash, SimFlash, StorageMix};
+    use crate::model::spec::ModelSpec;
+    use crate::model::weights::WeightStore;
+
+    fn sim_preloader(depth: usize) -> (Preloader, DramCache) {
+        let flash = Arc::new(SimFlash::new(ModelSpec::tiny(), StorageMix::dense_fp16()));
+        let bytes = flash.layer_bytes(0);
+        let pre = Preloader::new(flash, 1, depth);
+        let dram = DramCache::new(bytes * 8, 1);
+        (pre, dram)
+    }
+
+    #[test]
+    fn kick_requests_look_ahead_with_wraparound() {
+        let (mut pre, mut dram) = sim_preloader(2);
+        // Current layer 3 of a 4-layer ring -> preload layers 0 and 1.
+        pre.kick(3, &dram);
+        assert_eq!(pre.inflight_count(), 2);
+        pre.quiesce(&mut dram);
+        assert!(dram.is_resident(0));
+        assert!(dram.is_resident(1));
+        assert_eq!(pre.loads, 2);
+    }
+
+    #[test]
+    fn kick_skips_resident_and_inflight() {
+        let (mut pre, mut dram) = sim_preloader(2);
+        let bytes = pre.flash.layer_bytes(1);
+        dram.insert_layer(1, bytes, None);
+        pre.kick(0, &dram); // wants 1 (resident) and 2
+        assert_eq!(pre.inflight_count(), 1);
+        pre.kick(0, &dram); // idempotent while in flight
+        assert_eq!(pre.inflight_count(), 1);
+        pre.quiesce(&mut dram);
+        assert!(dram.is_resident(2));
+    }
+
+    #[test]
+    fn ensure_blocks_until_resident() {
+        let (mut pre, mut dram) = sim_preloader(2);
+        pre.request(2);
+        pre.ensure(2, &mut dram).unwrap();
+        assert!(dram.is_resident(2));
+    }
+
+    #[test]
+    fn ensure_demand_reads_on_cold_miss() {
+        let (mut pre, mut dram) = sim_preloader(2);
+        pre.ensure(3, &mut dram).unwrap();
+        assert!(dram.is_resident(3));
+        assert_eq!(pre.loads, 1);
+    }
+
+    #[test]
+    fn ensure_retries_transient_fault() {
+        // FaultyFlash fails every 2nd read: the demand path's retry
+        // absorbs a single failure.
+        let flash = Arc::new(FaultyFlash::new(SimFlash::new(ModelSpec::tiny(), StorageMix::dense_fp16()), 2));
+        let bytes = flash.layer_bytes(0);
+        let mut pre = Preloader::new(flash, 1, 2);
+        let mut dram = DramCache::new(bytes * 8, 0);
+        pre.ensure(0, &mut dram).unwrap(); // read 1 ok
+        pre.ensure(1, &mut dram).unwrap(); // read 2 fails -> retry ok
+        assert!(dram.is_resident(0) && dram.is_resident(1));
+        assert_eq!(pre.failures, 1);
+    }
+
+    #[test]
+    fn executed_mode_carries_real_data() {
+        let dir = std::env::temp_dir().join(format!("m2c-pre-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = WeightStore::create(&dir, &ModelSpec::tiny(), 7).unwrap();
+        let flash = Arc::new(FileFlash::new(store));
+        let bytes = flash.layer_bytes(0);
+        let mut pre = Preloader::new(flash, 2, 2);
+        let mut dram = DramCache::new(bytes * 8, 1);
+        pre.kick(3, &dram);
+        pre.quiesce(&mut dram);
+        let frame = dram.lookup(0).unwrap();
+        assert_eq!(frame.bytes(), bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,109 @@
+//! GPU database backing Figure 1: release year, FP16 throughput, HBM
+//! size, TDP, embodied carbon, and per-hour operational carbon at the
+//! paper's grid intensity. Values are public-spec numbers (TechPowerUp /
+//! vendor datasheets) plus the embodied estimates the paper cites
+//! (A100 ≈ 150 kgCO2e, [75]); older dies scaled by area/node per ACT [72].
+
+/// One GPU entry.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub year: u32,
+    /// Peak FP16 (or FP32 for pre-tensor-core parts) TFLOPs.
+    pub tflops: f64,
+    /// On-board memory in GiB.
+    pub mem_gib: f64,
+    /// Memory bandwidth GB/s.
+    pub mem_bw_gbps: f64,
+    /// Board power (TDP) in watts.
+    pub tdp_w: f64,
+    /// Embodied manufacturing footprint, kgCO2e.
+    pub embodied_kg: f64,
+    /// Class: consumer ("old-fashioned") vs datacenter ("top-tier").
+    pub top_tier: bool,
+}
+
+/// The Fig 1 population, K40 (2013) through H100 (2022).
+pub const GPUS: &[GpuSpec] = &[
+    GpuSpec { name: "K40",      year: 2013, tflops: 4.29,  mem_gib: 12.0, mem_bw_gbps: 288.0,  tdp_w: 235.0, embodied_kg: 35.0,  top_tier: true },
+    GpuSpec { name: "M40",      year: 2015, tflops: 6.84,  mem_gib: 24.0, mem_bw_gbps: 288.0,  tdp_w: 250.0, embodied_kg: 45.0,  top_tier: true },
+    GpuSpec { name: "P100",     year: 2016, tflops: 19.05, mem_gib: 16.0, mem_bw_gbps: 732.0,  tdp_w: 300.0, embodied_kg: 70.0,  top_tier: true },
+    GpuSpec { name: "V100",     year: 2017, tflops: 31.4,  mem_gib: 32.0, mem_bw_gbps: 900.0,  tdp_w: 300.0, embodied_kg: 95.0,  top_tier: true },
+    GpuSpec { name: "RTX3060",  year: 2021, tflops: 12.74, mem_gib: 12.0, mem_bw_gbps: 360.0,  tdp_w: 170.0, embodied_kg: 55.0,  top_tier: false },
+    GpuSpec { name: "RTX3090",  year: 2020, tflops: 35.58, mem_gib: 24.0, mem_bw_gbps: 936.0,  tdp_w: 350.0, embodied_kg: 85.0,  top_tier: false },
+    GpuSpec { name: "RTX4090",  year: 2022, tflops: 82.58, mem_gib: 24.0, mem_bw_gbps: 1008.0, tdp_w: 450.0, embodied_kg: 110.0, top_tier: false },
+    GpuSpec { name: "A100",     year: 2020, tflops: 77.97, mem_gib: 80.0, mem_bw_gbps: 2039.0, tdp_w: 400.0, embodied_kg: 150.0, top_tier: true },
+    GpuSpec { name: "H100",     year: 2022, tflops: 133.8, mem_gib: 80.0, mem_bw_gbps: 3350.0, tdp_w: 700.0, embodied_kg: 255.0, top_tier: true },
+];
+
+pub fn find(name: &str) -> Option<&'static GpuSpec> {
+    GPUS.iter().find(|g| g.name.eq_ignore_ascii_case(name))
+}
+
+impl GpuSpec {
+    /// Operational carbon per hour at full TDP, grams CO2e, at the given
+    /// grid intensity (gCO2/kWh).
+    pub fn oce_per_hour_g(&self, intensity_g_per_kwh: f64) -> f64 {
+        self.tdp_w / 1000.0 * intensity_g_per_kwh
+    }
+
+    /// FLOPs per watt — the sustainability-efficiency axis of Fig 1.
+    pub fn tflops_per_watt(&self) -> f64 {
+        self.tflops / self.tdp_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name_case_insensitive() {
+        assert!(find("rtx3090").is_some());
+        assert!(find("H100").is_some());
+        assert!(find("TPUv9").is_none());
+    }
+
+    #[test]
+    fn fig1_trends_hold() {
+        // Over the decade: FLOPs growth outpaces memory growth (the
+        // paper's headline observation on Fig 1).
+        let k40 = find("K40").unwrap();
+        let h100 = find("H100").unwrap();
+        let flops_growth = h100.tflops / k40.tflops;
+        let mem_growth = h100.mem_gib / k40.mem_gib;
+        assert!(
+            flops_growth > 3.0 * mem_growth,
+            "flops x{flops_growth:.1} vs mem x{mem_growth:.1}"
+        );
+    }
+
+    #[test]
+    fn m40_vs_h100_carbon_claim() {
+        // Paper abstract: M40 has ~1/3 the (operational) carbon of H100.
+        let m40 = find("M40").unwrap();
+        let h100 = find("H100").unwrap();
+        let ratio = m40.oce_per_hour_g(820.0) / h100.oce_per_hour_g(820.0);
+        assert!(
+            (0.25..0.45).contains(&ratio),
+            "M40/H100 OCE ratio {ratio:.2} outside paper band"
+        );
+    }
+
+    #[test]
+    fn embodied_monotone_with_recency_within_tier() {
+        let tiers: Vec<&GpuSpec> = GPUS.iter().filter(|g| g.top_tier).collect();
+        for w in tiers.windows(2) {
+            if w[1].year >= w[0].year {
+                assert!(w[1].embodied_kg >= w[0].embodied_kg);
+            }
+        }
+    }
+
+    #[test]
+    fn oce_formula() {
+        let g = find("RTX3090").unwrap();
+        // 350 W for 1 h at 820 g/kWh = 287 g.
+        assert!((g.oce_per_hour_g(820.0) - 287.0).abs() < 1e-9);
+    }
+}

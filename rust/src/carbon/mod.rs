@@ -1,0 +1,10 @@
+//! Carbon-footprint accounting: the Fig 1 GPU database and the
+//! embodied + operational emission model (Formula 1).
+
+pub mod gpu_db;
+pub mod model;
+
+pub use gpu_db::{find as find_gpu, GpuSpec, GPUS};
+pub use model::{
+    footprint, g_per_token, CarbonBreakdown, RunProfile, PAPER_INTENSITY_G_PER_KWH,
+};

@@ -1,0 +1,166 @@
+//! Carbon accounting (paper §2.2, Formula 1, and the Fig 13 caption's
+//! constants): total footprint = embodied share + operational emissions.
+//!
+//!   OCE = Σ_component power(W) × busy_time(h) × intensity(gCO2/kWh)
+//!   ECE = embodied_kg × (runtime / lifespan)
+//!
+//! Component powers follow the paper: DRAM 26 W per 256 GiB (GreenDIMM),
+//! SSD 2 W, GPU at TDP scaled by utilization.
+
+use crate::carbon::gpu_db::GpuSpec;
+
+/// Grid carbon intensity used throughout the paper's evaluation.
+pub const PAPER_INTENSITY_G_PER_KWH: f64 = 820.0;
+/// DRAM power per GiB (26 W / 256 GiB).
+pub const DRAM_W_PER_GIB: f64 = 26.0 / 256.0;
+/// SSD active power.
+pub const SSD_W: f64 = 2.0;
+/// Host CPU share attributed to cache management (paper pins 1 core).
+pub const CPU_CORE_W: f64 = 12.0;
+/// Assumed device lifespan for embodied amortization (5 years, ACT).
+pub const LIFESPAN_HOURS: f64 = 5.0 * 365.0 * 24.0;
+
+/// Activity profile of one inference run, produced by the engine's
+/// telemetry and consumed here.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunProfile {
+    /// Wall-clock duration of the run, seconds.
+    pub wall_s: f64,
+    /// GPU busy fraction in [0,1] (compute + HBM traffic).
+    pub gpu_util: f64,
+    /// Peak DRAM working set attributed to the run, GiB.
+    pub dram_gib: f64,
+    /// Whether the SSD tier was active at all.
+    pub ssd_active: bool,
+    /// CPU cores dedicated to cache management.
+    pub cpu_cores: f64,
+}
+
+/// Carbon breakdown in grams CO2e.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CarbonBreakdown {
+    pub gpu_oce_g: f64,
+    pub dram_oce_g: f64,
+    pub ssd_oce_g: f64,
+    pub cpu_oce_g: f64,
+    pub embodied_g: f64,
+}
+
+impl CarbonBreakdown {
+    pub fn operational_g(&self) -> f64 {
+        self.gpu_oce_g + self.dram_oce_g + self.ssd_oce_g + self.cpu_oce_g
+    }
+
+    pub fn total_g(&self) -> f64 {
+        self.operational_g() + self.embodied_g
+    }
+}
+
+/// Compute the carbon footprint of a run on `gpu` at `intensity`
+/// (gCO2/kWh). `include_embodied=false` models the paper's "existing
+/// old-fashioned hardware incurs no additional embodied emissions"
+/// argument (§3.2 Opportunity 1).
+pub fn footprint(
+    gpu: &GpuSpec,
+    profile: &RunProfile,
+    intensity: f64,
+    include_embodied: bool,
+) -> CarbonBreakdown {
+    let hours = profile.wall_s / 3600.0;
+    let kwh = |watts: f64| watts * hours / 1000.0;
+    CarbonBreakdown {
+        gpu_oce_g: kwh(gpu.tdp_w * profile.gpu_util.clamp(0.0, 1.0)) * intensity,
+        dram_oce_g: kwh(DRAM_W_PER_GIB * profile.dram_gib) * intensity,
+        ssd_oce_g: if profile.ssd_active {
+            kwh(SSD_W) * intensity
+        } else {
+            0.0
+        },
+        cpu_oce_g: kwh(CPU_CORE_W * profile.cpu_cores) * intensity,
+        embodied_g: if include_embodied {
+            gpu.embodied_kg * 1000.0 * (hours / LIFESPAN_HOURS)
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Grams CO2e per generated token, the per-request metric of Fig 12.
+pub fn g_per_token(breakdown: &CarbonBreakdown, tokens: u64) -> f64 {
+    if tokens == 0 {
+        0.0
+    } else {
+        breakdown.total_g() / tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::gpu_db::find;
+
+    fn profile_1h() -> RunProfile {
+        RunProfile {
+            wall_s: 3600.0,
+            gpu_util: 1.0,
+            dram_gib: 256.0,
+            ssd_active: true,
+            cpu_cores: 1.0,
+        }
+    }
+
+    #[test]
+    fn one_hour_at_tdp_matches_hand_math() {
+        let gpu = find("RTX3090").unwrap();
+        let b = footprint(gpu, &profile_1h(), 820.0, false);
+        assert!((b.gpu_oce_g - 287.0).abs() < 1e-6); // 0.35 kWh * 820
+        assert!((b.dram_oce_g - 26.0 * 0.82).abs() < 1e-6); // 26 W -> 0.026 kWh
+        assert!((b.ssd_oce_g - 2.0 * 0.82).abs() < 1e-6);
+        assert_eq!(b.embodied_g, 0.0);
+    }
+
+    #[test]
+    fn embodied_amortization() {
+        let gpu = find("A100").unwrap();
+        let b = footprint(gpu, &profile_1h(), 820.0, true);
+        // 150 kg over 5y: 1 hour is 150_000 / 43800 g ≈ 3.42 g.
+        assert!((b.embodied_g - 150_000.0 / LIFESPAN_HOURS).abs() < 1e-6);
+        assert!(b.total_g() > b.operational_g());
+    }
+
+    #[test]
+    fn idle_gpu_emits_nothing_operationally() {
+        let gpu = find("RTX3090").unwrap();
+        let p = RunProfile {
+            wall_s: 3600.0,
+            gpu_util: 0.0,
+            dram_gib: 0.0,
+            ssd_active: false,
+            cpu_cores: 0.0,
+        };
+        let b = footprint(gpu, &p, 820.0, false);
+        assert_eq!(b.operational_g(), 0.0);
+    }
+
+    #[test]
+    fn per_token_metric() {
+        let gpu = find("RTX3090").unwrap();
+        let b = footprint(gpu, &profile_1h(), 820.0, false);
+        let g = g_per_token(&b, 1000);
+        assert!(g > 0.0);
+        assert_eq!(g_per_token(&b, 0), 0.0);
+    }
+
+    #[test]
+    fn lower_dram_footprint_lowers_carbon() {
+        // The Fig 13 "+SSDs saves 22 GB DRAM" effect.
+        let gpu = find("RTX3090").unwrap();
+        let mut hi = profile_1h();
+        hi.dram_gib = 60.0;
+        let mut lo = profile_1h();
+        lo.dram_gib = 38.0;
+        let bh = footprint(gpu, &hi, 820.0, false);
+        let bl = footprint(gpu, &lo, 820.0, false);
+        assert!(bl.total_g() < bh.total_g());
+    }
+}

@@ -1,0 +1,177 @@
+//! Engine configuration: precision ratios, cache policy selection, and
+//! the ablation feature flags of Fig 13.
+
+use crate::precision::plan::PrecisionRatios;
+
+/// Which HBM cache policy reconciles cache units with plans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Paper default: Adjacent Token Update.
+    Atu,
+    /// Classic LRU with capacity slack (comparator).
+    Lru,
+    /// LLM-in-a-Flash sliding window (comparator).
+    SlidingWindow(usize),
+}
+
+impl PolicyKind {
+    pub fn build(self) -> Box<dyn crate::cache::HbmPolicy> {
+        match self {
+            PolicyKind::Atu => Box::new(crate::cache::AtuPolicy),
+            PolicyKind::Lru => Box::new(crate::cache::LruPolicy),
+            PolicyKind::SlidingWindow(w) => {
+                Box::new(crate::cache::SlidingWindowPolicy::new(w))
+            }
+        }
+    }
+
+    /// Capacity multiplier over the per-token plan size: ATU needs
+    /// exactly the plan; LRU/sliding-window hold extras.
+    pub fn capacity_factor(self) -> usize {
+        match self {
+            PolicyKind::Atu => 1,
+            PolicyKind::Lru => 2,
+            PolicyKind::SlidingWindow(w) => w.max(1).min(4),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "atu" => Some(PolicyKind::Atu),
+            "lru" => Some(PolicyKind::Lru),
+            "window" | "sliding" => Some(PolicyKind::SlidingWindow(3)),
+            _ => None,
+        }
+    }
+}
+
+/// Full engine configuration. The three booleans are the Fig 13
+/// ablation stages:
+///   +MP Inference  = `use_mp` (sparse mixed precision, no HBM cache,
+///                    whole model in DRAM)
+///   +LRU Cache     = `use_hbm_cache` (the neuron-level HBM cache)
+///   +SSDs          = `use_ssd` (DRAM shrinks to fixed+dynamic window,
+///                    the rest lives on SSD behind the preloader)
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Population-level precision fractions; their sum is the active
+    /// fraction (Deja-Vu sparsity).
+    pub ratios: PrecisionRatios,
+    pub policy: PolicyKind,
+    pub use_mp: bool,
+    pub use_hbm_cache: bool,
+    pub use_ssd: bool,
+    /// DRAM budget for the weight cache (bytes); only binding when
+    /// `use_ssd` (otherwise the whole model is DRAM-pinned).
+    pub dram_capacity: u64,
+    /// Fixed-area layers pinned in DRAM (paper §5.4).
+    pub fixed_layers: usize,
+    /// Preload look-ahead depth (paper: 2).
+    pub preload_depth: usize,
+    pub int4_group: usize,
+    pub seed: u64,
+    /// Token-to-token overlap for synthetic traces (Fig 6: ~0.8).
+    pub trace_overlap: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            // Paper Fig 9 mix (25/25/50 of the active set) at 20%
+            // Deja-Vu activity: population fractions 0.05/0.05/0.10.
+            ratios: PrecisionRatios::new(0.05, 0.05, 0.10),
+            policy: PolicyKind::Atu,
+            use_mp: true,
+            use_hbm_cache: true,
+            use_ssd: true,
+            dram_capacity: 40 * (1 << 30),
+            fixed_layers: 2,
+            preload_depth: 2,
+            int4_group: crate::model::weights::INT4_GROUP,
+            seed: 0,
+            trace_overlap: 0.8,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Fig 13 stage 1: sparse MP inference only, DRAM-pinned model,
+    /// no neuron reuse across tokens.
+    pub fn ablation_mp_only() -> Self {
+        EngineConfig {
+            use_hbm_cache: false,
+            use_ssd: false,
+            ..Default::default()
+        }
+    }
+
+    /// Fig 13 stage 2: + the HBM neuron cache.
+    pub fn ablation_with_cache() -> Self {
+        EngineConfig {
+            use_ssd: false,
+            ..Default::default()
+        }
+    }
+
+    /// Fig 13 stage 3 = the full system (also `Default`).
+    pub fn full() -> Self {
+        Default::default()
+    }
+
+    /// Per-token plan size for a layer of `n` neurons.
+    pub fn plan_size(&self, n: usize) -> usize {
+        (self.ratios.active_fraction() * n as f64).round() as usize
+    }
+
+    /// Cache-unit slot count for a layer of `n` neurons.
+    pub fn unit_capacity(&self, n: usize) -> usize {
+        (self.plan_size(n) * self.policy.capacity_factor()).min(n).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_mix() {
+        let c = EngineConfig::default();
+        let a = c.ratios.active_fraction();
+        assert!((a - 0.20).abs() < 1e-9);
+        // Within the active set: 25% fp16, 25% int8, 50% int4.
+        assert!((c.ratios.fp16 / a - 0.25).abs() < 1e-9);
+        assert!((c.ratios.int4 / a - 0.50).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ablation_stages_nest() {
+        let s1 = EngineConfig::ablation_mp_only();
+        let s2 = EngineConfig::ablation_with_cache();
+        let s3 = EngineConfig::full();
+        assert!(s1.use_mp && !s1.use_hbm_cache && !s1.use_ssd);
+        assert!(s2.use_mp && s2.use_hbm_cache && !s2.use_ssd);
+        assert!(s3.use_mp && s3.use_hbm_cache && s3.use_ssd);
+    }
+
+    #[test]
+    fn plan_and_capacity_sizing() {
+        let c = EngineConfig::default();
+        assert_eq!(c.plan_size(11008), 2202);
+        assert_eq!(c.unit_capacity(11008), 2202); // ATU factor 1
+        let mut lru = EngineConfig::default();
+        lru.policy = PolicyKind::Lru;
+        assert_eq!(lru.unit_capacity(11008), 4404);
+        assert_eq!(lru.unit_capacity(100), 40); // clamped to n? 20*2=40
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(PolicyKind::parse("ATU"), Some(PolicyKind::Atu));
+        assert_eq!(PolicyKind::parse("lru"), Some(PolicyKind::Lru));
+        assert!(matches!(
+            PolicyKind::parse("window"),
+            Some(PolicyKind::SlidingWindow(_))
+        ));
+        assert_eq!(PolicyKind::parse("fifo"), None);
+    }
+}

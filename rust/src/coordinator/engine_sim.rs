@@ -1,0 +1,556 @@
+//! Simulated-mode M2Cache engine: runs the *same control flow* as the
+//! executed engine (predict → plan → ATU cache diff → transfers →
+//! compute → preload), but costs every operation on the calibrated
+//! [`SimClock`] instead of executing it. This is how the 7B–70B
+//! geometries run on one CPU core and how Figs 9/11/12/13 regenerate.
+
+use crate::carbon::{self, CarbonBreakdown, GpuSpec, RunProfile};
+use crate::cache::{CacheUnit, DramCache, FlashStore, HbmPolicy, SimFlash, StorageMix};
+use crate::coordinator::config::EngineConfig;
+use crate::memsim::{Channel, Completion, HardwareSpec, Link, SimClock};
+use crate::model::spec::ModelSpec;
+use crate::precision::plan::{plan_from_active, LayerPlan};
+use crate::precision::quant::wire_bytes;
+use crate::sparsity::{ActivationTrace, OverlapTracker, TraceConfig};
+use crate::telemetry::Telemetry;
+use std::collections::HashMap;
+
+/// Result of one simulated generation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Simulated wall-clock of the whole request, seconds.
+    pub total_s: f64,
+    /// Time to first token (prefill + first decode step), seconds.
+    pub ttft_s: f64,
+    /// Decode throughput over the generated tokens.
+    pub tokens_per_s: f64,
+    pub telemetry: Telemetry,
+    pub carbon: CarbonBreakdown,
+}
+
+/// Per-layer simulated state.
+struct LayerState {
+    unit: CacheUnit,
+    trace: ActivationTrace,
+}
+
+pub struct SimEngine {
+    pub spec: ModelSpec,
+    pub hw: HardwareSpec,
+    pub cfg: EngineConfig,
+    clock: SimClock,
+    layers: Vec<LayerState>,
+    policy: Box<dyn HbmPolicy>,
+    dram: DramCache,
+    flash: SimFlash,
+    /// In-flight simulated SSD→DRAM preloads.
+    pending: HashMap<usize, Completion>,
+    pub overlap: OverlapTracker,
+    pub tel: Telemetry,
+    /// Whether attention weights fit HBM (streamed otherwise).
+    attn_resident: bool,
+    kv_len: usize,
+    /// Predictor rank used for cost modelling (Deja-Vu: ~d/8).
+    rank: usize,
+}
+
+impl SimEngine {
+    pub fn new(spec: ModelSpec, hw: HardwareSpec, cfg: EngineConfig) -> SimEngine {
+        let n = spec.ffn_hidden;
+        let unit_cap = cfg.unit_capacity(n);
+        let plan_sz = cfg.plan_size(n);
+        let layers = (0..spec.n_layers)
+            .map(|l| LayerState {
+                unit: CacheUnit::meta_only(unit_cap.max(plan_sz)),
+                trace: ActivationTrace::new(
+                    TraceConfig {
+                        n_neurons: n,
+                        active: plan_sz,
+                        overlap: cfg.trace_overlap,
+                        zipf_s: 1.0,
+                    },
+                    cfg.seed ^ (l as u64) << 32,
+                ),
+            })
+            .collect();
+        // DRAM frames store each neuron at its stable class precision
+        // (top fp16-frac at FP16, next at INT8, rest INT4) — the
+        // storage-side effect of mixed precision that makes 70B's
+        // working set ~35 GB instead of 128 GB (DESIGN.md §1).
+        // With the SSD tier, frames hold the quantized class mix; the
+        // DRAM-pinned ablation stages (no SSD) keep FP16 masters in
+        // DRAM and quantize on the H2D path — which is exactly the DRAM
+        // the "+SSDs" stage then saves (Fig 13's ~22 GB).
+        let storage_mix = if cfg.use_mp && cfg.use_ssd {
+            StorageMix::from_ratios(&cfg.ratios)
+        } else {
+            StorageMix::dense_fp16()
+        };
+        let flash = SimFlash::new(spec.clone(), storage_mix);
+        // Does everything non-FFN fit HBM? attn fp16 + embeddings + the
+        // cache units + KV headroom (25% of HBM).
+        let attn_bytes = 2 * spec.attn_params_per_layer() * spec.n_layers as u64;
+        let embed_bytes = 2 * 2 * (spec.vocab * spec.d_model) as u64;
+        let unit_bytes: u64 = spec.n_layers as u64
+            * (unit_cap as u64 * spec.values_per_neuron() as u64 * 2);
+        let attn_resident =
+            attn_bytes + embed_bytes + unit_bytes < (hw.hbm_bytes as f64 * 0.75) as u64;
+        // When attention spills out of HBM it is DRAM-pinned and
+        // streamed per layer, shrinking the FFN frame budget.
+        let attn_dram = if attn_resident { 0 } else { attn_bytes };
+        let total_frames: u64 = (0..spec.n_layers).map(|l| flash.layer_bytes(l)).sum();
+        let min_working = flash.layer_bytes(0)
+            * (cfg.fixed_layers as u64 + cfg.preload_depth as u64 + 2);
+        let dram_cap = if cfg.use_ssd {
+            cfg.dram_capacity
+                .saturating_sub(attn_dram)
+                .max(min_working)
+        } else {
+            // Without the SSD tier the whole model is DRAM-pinned
+            // (Fig 13 stage 1/2 configuration).
+            total_frames + attn_dram + (1 << 20)
+        };
+        let fixed = if cfg.use_ssd {
+            // Auto-grow the fixed area to pin as many layers as fit
+            // (leaving preload-window slack). A small fixed area under
+            // a cyclic layer walk degenerates to FIFO thrash: the
+            // oldest frame is always the next one needed.
+            let fit = (dram_cap / flash.layer_bytes(0).max(1)) as usize;
+            cfg.fixed_layers
+                .max(fit.saturating_sub(cfg.preload_depth + 2))
+                .min(spec.n_layers)
+        } else {
+            spec.n_layers
+        };
+        let mut dram = DramCache::new(dram_cap, fixed);
+        if !cfg.use_ssd {
+            for l in 0..spec.n_layers {
+                dram.insert_layer(l, flash.layer_bytes(l), None);
+            }
+        }
+        let rank = (spec.d_model / 8).max(8);
+        let policy = cfg.policy.build();
+        SimEngine {
+            spec,
+            hw,
+            cfg,
+            clock: SimClock::new(),
+            layers,
+            policy,
+            dram,
+            flash,
+            pending: HashMap::new(),
+            overlap: OverlapTracker::new(0),
+            tel: Telemetry::default(),
+            attn_resident,
+            kv_len: 0,
+            rank,
+        }
+    }
+
+    // ---------------- cost helpers ----------------
+
+    fn values(&self) -> usize {
+        self.spec.values_per_neuron()
+    }
+
+    /// GPU time for the per-layer predictor (scores = (x·A)·B).
+    fn predictor_time_s(&self) -> f64 {
+        let d = self.spec.d_model as f64;
+        let n = self.spec.ffn_hidden as f64;
+        let r = self.rank as f64;
+        let flops = 2.0 * (d * r + r * n);
+        let bytes = ((d * r + r * n) * 2.0) as u64;
+        self.hw.gpu_time_s(flops, bytes)
+    }
+
+    /// GPU time for one layer's attention at the current KV length.
+    fn attn_time_s(&self) -> f64 {
+        let p = self.spec.attn_params_per_layer() as f64;
+        let flops = 2.0 * p
+            + 4.0 * self.spec.d_model as f64 * self.kv_len as f64;
+        let kv_bytes = self.kv_len as u64
+            * (self.spec.kv_bytes_per_token() / self.spec.n_layers as u64);
+        self.hw.gpu_time_s(flops, 2 * self.spec.attn_params_per_layer() + kv_bytes)
+    }
+
+    /// GPU time for the sparse FFN over `plan`.
+    fn ffn_time_s(&self, plan: &LayerPlan) -> f64 {
+        let active = plan.total_active() as f64;
+        let flops = 2.0 * active * self.values() as f64;
+        let bytes = plan.wire_bytes(self.values(), self.cfg.int4_group);
+        self.hw.gpu_time_s(flops, bytes)
+    }
+
+    /// Wire bytes for a set of neuron loads.
+    fn load_bytes(&self, loads: &[crate::cache::NeuronAt]) -> u64 {
+        let v = self.values();
+        loads
+            .iter()
+            .map(|na| wire_bytes(na.dtype, v, self.cfg.int4_group))
+            .sum()
+    }
+
+    // ---------------- simulated preloader ----------------
+
+    fn preloader_kick(&mut self, current: usize) {
+        if !self.cfg.use_ssd {
+            return;
+        }
+        let n = self.spec.n_layers;
+        for ahead in 1..=self.cfg.preload_depth {
+            let layer = (current + ahead) % n;
+            if self.dram.is_resident(layer) || self.pending.contains_key(&layer) {
+                continue;
+            }
+            let bytes = self.flash.layer_bytes(layer);
+            let spec = self.hw.links.get(Link::SsdToDram);
+            let done = self.clock.submit(Channel::Ssd, spec.time_s(bytes));
+            self.pending.insert(layer, done);
+            self.tel.traffic.ssd_to_dram += bytes;
+        }
+    }
+
+    fn dram_ensure(&mut self, layer: usize) {
+        // Collect any already-finished preloads first.
+        let now = self.clock.now_ns();
+        let finished: Vec<usize> = self
+            .pending
+            .iter()
+            .filter(|(_, c)| c.0 <= now)
+            .map(|(&l, _)| l)
+            .collect();
+        for l in finished {
+            let c = self.pending.remove(&l).unwrap();
+            self.clock.join(c);
+            self.dram.insert_layer(l, self.flash.layer_bytes(l), None);
+        }
+        if self.dram.probe(layer) {
+            self.tel.dram_hits += 1;
+            return;
+        }
+        self.tel.dram_misses += 1;
+        if let Some(c) = self.pending.remove(&layer) {
+            // In flight: block until the preload lands.
+            self.clock.join(c);
+        } else {
+            // Demand miss: synchronous SSD read.
+            let bytes = self.flash.layer_bytes(layer);
+            let spec = self.hw.links.get(Link::SsdToDram);
+            self.clock.run(Channel::Ssd, spec.time_s(bytes));
+            self.tel.traffic.ssd_to_dram += bytes;
+        }
+        self.dram
+            .insert_layer(layer, self.flash.layer_bytes(layer), None);
+    }
+
+    // ---------------- decode ----------------
+
+    /// Process the prompt: one batched pass that streams each layer's
+    /// *full* active-precision weights once (prefill touches the union
+    /// of active sets ≈ the whole layer) and computes prompt_len tokens
+    /// of work per layer.
+    pub fn prefill(&mut self, prompt_len: usize) {
+        if self.overlap.mean_per_layer().len() != self.spec.n_layers {
+            self.overlap = OverlapTracker::new(self.spec.n_layers);
+        }
+        self.tel.prefill_tokens = prompt_len as u64;
+        let v = self.values();
+        let n = self.spec.ffn_hidden;
+        for layer in 0..self.spec.n_layers {
+            self.preloader_kick(layer);
+            self.dram_ensure(layer);
+            // Stream the layer's weights at the configured mix (dense
+            // fp16 when MP inference is off).
+            // Prefill touches the union of active sets ≈ the whole
+            // layer, at the mixed precision's mean bytes/value.
+            let bytes = if self.cfg.use_mp {
+                ((n * v) as f64 * self.cfg.ratios.mean_bytes_per_value()) as u64
+            } else {
+                (n * v * 2) as u64
+            };
+            let h2d = self.hw.links.get(Link::DramToHbm);
+            let copy = self.clock.submit(Channel::PcieH2d, h2d.time_s(bytes));
+            self.tel.traffic.dram_to_hbm += bytes;
+            // Batched prompt compute for this layer.
+            let flops = prompt_len as f64
+                * 2.0
+                * (self.spec.attn_params_per_layer() as f64 + (n * v) as f64);
+            let t = self.hw.gpu_time_s(flops, bytes);
+            self.clock.join(copy);
+            self.clock.run(Channel::Gpu, t);
+        }
+        self.kv_len = prompt_len;
+        self.tel.ttft_s = self.clock.now_s();
+    }
+
+    /// One decode step; returns the simulated time of the step.
+    pub fn step(&mut self) -> f64 {
+        let t0 = self.clock.now_s();
+        for layer in 0..self.spec.n_layers {
+            // 1. Predict the active set for this token.
+            let t_pred = self.predictor_time_s();
+            self.clock.run(Channel::Gpu, t_pred);
+            self.tel.phases.predict_s += t_pred;
+            let (ids, scores) = {
+                let st = &mut self.layers[layer];
+                st.trace.next_token()
+            };
+            self.overlap.record(layer, &ids);
+            let plan = if self.cfg.use_mp {
+                plan_from_active(&ids, &scores, &self.cfg.ratios)
+            } else {
+                // Dense fp16 active set (no quantization classes).
+                LayerPlan {
+                    fp16: ids.clone(),
+                    int8: vec![],
+                    int4: vec![],
+                }
+            };
+
+            // 2. DRAM residency (SSD tier).
+            self.dram_ensure(layer);
+
+            // 3. HBM cache reconciliation.
+            let (loads, hits) = if self.cfg.use_hbm_cache {
+                let st = &mut self.layers[layer];
+                let upd = self.policy.update(&mut st.unit, &plan);
+                for na in &upd.load {
+                    st.unit.insert(na.neuron, na.dtype, &[]);
+                }
+                self.tel.bump("evictions", upd.evicted as u64);
+                (upd.load, upd.hits)
+            } else {
+                // No cache: everything in the plan reloads every token.
+                let loads: Vec<crate::cache::NeuronAt> = plan
+                    .iter()
+                    .map(|(neuron, dtype)| crate::cache::NeuronAt { neuron, dtype })
+                    .collect();
+                (loads, 0)
+            };
+            self.tel.cache_hits += hits as u64;
+            self.tel.cache_misses += loads.len() as u64;
+
+            // 4. Transfers: CPU gathers the records into a staging
+            // buffer, then one PCIe H2D copy. Attention weights stream
+            // too when they don't fit HBM (70B/40B).
+            let mut bytes = self.load_bytes(&loads);
+            if !self.attn_resident {
+                bytes += 2 * self.spec.attn_params_per_layer();
+            }
+            let cpu = self.hw.links.get(Link::DramInternal);
+            // Per-neuron management cost: the paper pins ONE CPU core
+            // for cache management; per-record bookkeeping + pinned-
+            // buffer staging costs ~2 µs/neuron at Python-framework
+            // granularity (calibrated to Fig 9's absolute tok/s).
+            const NEURON_MGMT_S: f64 = 2.0e-6;
+            let gather = self.clock.submit(
+                Channel::Cpu,
+                cpu.time_s(bytes) + loads.len() as f64 * NEURON_MGMT_S,
+            );
+            let h2d = self.hw.links.get(Link::DramToHbm);
+            let copy = self
+                .clock
+                .submit_after(Channel::PcieH2d, h2d.time_s(bytes), gather);
+            self.tel.traffic.dram_to_hbm += bytes;
+            let t_mgmt = cpu.time_s(bytes);
+            self.tel.phases.cache_mgmt_s += loads.len() as f64 * NEURON_MGMT_S;
+
+            // 5. Attention overlaps the FFN-weight transfer.
+            let t_attn = self.attn_time_s();
+            self.clock.run(Channel::Gpu, t_attn);
+            self.tel.phases.attention_s += t_attn;
+
+            // 6. FFN waits for its weights.
+            let before = self.clock.now_s();
+            self.clock.join(copy);
+            self.tel.phases.transfer_s += self.clock.now_s() - before + t_mgmt;
+            let t_ffn = self.ffn_time_s(&plan);
+            self.clock.run(Channel::Gpu, t_ffn);
+            self.tel.phases.ffn_s += t_ffn;
+
+            // 7. Keep the preloader ahead.
+            self.preloader_kick(layer);
+        }
+        // LM head.
+        let d = self.spec.d_model as f64;
+        let vcb = self.spec.vocab as f64;
+        let t_head = self.hw.gpu_time_s(2.0 * d * vcb, (2.0 * d * vcb) as u64);
+        self.clock.run(Channel::Gpu, t_head);
+        // Fixed per-token framework overhead (host glue + sampling).
+        self.clock.run(Channel::Cpu, self.hw.token_overhead_s);
+        self.tel.phases.other_s += t_head + self.hw.token_overhead_s;
+
+        self.kv_len += 1;
+        self.tel.tokens_generated += 1;
+        self.clock.now_s() - t0
+    }
+
+    /// Full request: prefill + decode. Returns timing, telemetry, carbon.
+    pub fn run(&mut self, prompt_len: usize, gen_tokens: usize, gpu: &GpuSpec) -> SimResult {
+        self.prefill(prompt_len);
+        let decode_start = self.clock.now_s();
+        let mut first_decode = 0.0;
+        for i in 0..gen_tokens {
+            let t = self.step();
+            if i == 0 {
+                first_decode = t;
+            }
+        }
+        let total_s = self.clock.now_s();
+        self.tel.ttft_s += first_decode;
+        let decode_s = total_s - decode_start;
+        self.tel.peak_dram_bytes = self.dram.used_bytes();
+        self.tel.peak_hbm_bytes = self.hbm_bytes();
+        let profile = RunProfile {
+            wall_s: total_s,
+            gpu_util: self.clock.utilization(Channel::Gpu),
+            dram_gib: self.dram.used_bytes() as f64 / (1u64 << 30) as f64,
+            ssd_active: self.cfg.use_ssd,
+            cpu_cores: 1.0,
+        };
+        let carbon =
+            carbon::footprint(gpu, &profile, carbon::PAPER_INTENSITY_G_PER_KWH, false);
+        SimResult {
+            total_s,
+            ttft_s: self.tel.ttft_s,
+            tokens_per_s: if decode_s > 0.0 {
+                gen_tokens as f64 / decode_s
+            } else {
+                0.0
+            },
+            telemetry: self.tel.clone(),
+            carbon,
+        }
+    }
+
+    /// Modelled HBM working set: resident attention + units + KV.
+    pub fn hbm_bytes(&self) -> u64 {
+        let attn = if self.attn_resident {
+            2 * self.spec.attn_params_per_layer() * self.spec.n_layers as u64
+        } else {
+            2 * self.spec.attn_params_per_layer() // one layer staged
+        };
+        let units: u64 = self
+            .layers
+            .iter()
+            .map(|l| {
+                l.unit.capacity as u64
+                    * self.spec.values_per_neuron() as u64
+                    * 2
+            })
+            .sum();
+        let kv = self.kv_len as u64 * self.spec.kv_bytes_per_token();
+        attn + units + kv
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    pub fn dram(&self) -> &DramCache {
+        &self.dram
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::find_gpu;
+
+    fn engine(spec: ModelSpec, cfg: EngineConfig) -> SimEngine {
+        SimEngine::new(spec, HardwareSpec::rtx3090_testbed(), cfg)
+    }
+
+    #[test]
+    fn decode_produces_tokens_and_traffic() {
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let r = e.run(16, 8, find_gpu("RTX3090").unwrap());
+        assert_eq!(r.telemetry.tokens_generated, 8);
+        assert!(r.tokens_per_s > 0.1, "tok/s {}", r.tokens_per_s);
+        assert!(r.telemetry.traffic.dram_to_hbm > 0);
+        assert!(r.ttft_s > 0.0 && r.ttft_s < r.total_s);
+        assert!(r.carbon.total_g() > 0.0);
+    }
+
+    #[test]
+    fn hbm_cache_reduces_pcie_traffic() {
+        // Fig 13: +LRU(ATU) cache cuts DRAM->HBM volume vs no-cache.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut with = engine(ModelSpec::llama2_7b(), EngineConfig::ablation_with_cache());
+        let mut without = engine(ModelSpec::llama2_7b(), EngineConfig::ablation_mp_only());
+        let rw = with.run(8, 16, gpu);
+        let ro = without.run(8, 16, gpu);
+        assert!(
+            rw.telemetry.traffic.dram_to_hbm < ro.telemetry.traffic.dram_to_hbm / 2,
+            "cache {} vs none {}",
+            rw.telemetry.traffic.dram_to_hbm,
+            ro.telemetry.traffic.dram_to_hbm
+        );
+        assert!(rw.tokens_per_s > ro.tokens_per_s);
+    }
+
+    #[test]
+    fn hit_ratio_near_trace_overlap() {
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let _ = e.run(4, 30, find_gpu("RTX3090").unwrap());
+        let hr = e.tel.hit_ratio();
+        assert!((0.6..0.95).contains(&hr), "hit ratio {hr}");
+    }
+
+    #[test]
+    fn ssd_tier_caps_dram_usage() {
+        // Fig 13: +SSDs cuts DRAM residency to the configured budget.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut cfg = EngineConfig::full();
+        cfg.dram_capacity = 8 * (1 << 30);
+        let mut full = engine(ModelSpec::llama2_13b(), cfg);
+        let mut pinned = engine(ModelSpec::llama2_13b(), EngineConfig::ablation_with_cache());
+        let rf = full.run(4, 8, gpu);
+        let rp = pinned.run(4, 8, gpu);
+        assert!(rf.telemetry.peak_dram_bytes <= 8 * (1 << 30));
+        assert!(rf.telemetry.peak_dram_bytes < rp.telemetry.peak_dram_bytes);
+        assert!(rf.telemetry.traffic.ssd_to_dram > 0);
+        assert_eq!(rp.telemetry.traffic.ssd_to_dram, 0);
+    }
+
+    #[test]
+    fn mixed_precision_beats_dense_fp16_streaming() {
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut mp = engine(ModelSpec::llama2_7b(), EngineConfig::ablation_mp_only());
+        let mut dense_cfg = EngineConfig::ablation_mp_only();
+        dense_cfg.use_mp = false;
+        let mut dense = engine(ModelSpec::llama2_7b(), dense_cfg);
+        let rm = mp.run(4, 8, gpu);
+        let rd = dense.run(4, 8, gpu);
+        assert!(
+            rm.tokens_per_s > rd.tokens_per_s,
+            "mp {} vs dense {}",
+            rm.tokens_per_s,
+            rd.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn overlap_tracker_sees_paper_band() {
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let _ = e.run(2, 20, find_gpu("RTX3090").unwrap());
+        let mean = e.overlap.mean();
+        assert!((0.7..0.95).contains(&mean), "overlap {mean}");
+    }
+
+    #[test]
+    fn seventy_b_runs_within_small_dram() {
+        // The headline capability: 70B on 24 GB HBM + limited DRAM.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut cfg = EngineConfig::full();
+        cfg.dram_capacity = 40 * (1 << 30);
+        let mut e = engine(ModelSpec::llama2_70b(), cfg);
+        let r = e.run(4, 4, gpu);
+        assert!(r.tokens_per_s > 0.01);
+        assert!(r.telemetry.peak_dram_bytes <= cfg_dram());
+        fn cfg_dram() -> u64 {
+            40 * (1 << 30)
+        }
+    }
+}

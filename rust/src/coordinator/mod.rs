@@ -1,0 +1,23 @@
+//! L3 coordinator — the paper's system contribution. Two engines share
+//! one control flow (predict → plan → cache-diff → transfer → compute →
+//! preload):
+//!
+//! - [`engine_exec::ExecEngine`]: the executed path — tiny model, real
+//!   weight records, real PJRT compute (quickstart / serving / accuracy
+//!   experiments).
+//! - [`engine_sim::SimEngine`]: the simulated path — 7B–70B geometries
+//!   costed on the calibrated memory-hierarchy simulator (throughput /
+//!   carbon / ablation experiments).
+//!
+//! Plus the request plumbing: FIFO admission queue and the TCP server.
+
+pub mod config;
+pub mod engine_exec;
+pub mod engine_sim;
+pub mod request;
+pub mod server;
+
+pub use config::{EngineConfig, PolicyKind};
+pub use engine_exec::ExecEngine;
+pub use engine_sim::{SimEngine, SimResult};
+pub use request::{detokenize, tokenize, Request, RequestQueue, Response};

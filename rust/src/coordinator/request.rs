@@ -1,0 +1,122 @@
+//! Request types and the FIFO admission queue used by the server and
+//! batcher. The paper serves batch-size-1 decode (§5.5.2: the Deja Vu
+//! predictor degrades under large batches), so "batching" here means
+//! admission control + fair queueing across connections, not token
+//! batching.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt tokens (byte-level for the tiny model).
+    pub prompt: Vec<u32>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+    pub arrived: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Queueing delay before decode started, seconds.
+    pub queue_s: f64,
+    /// Total service time including generation, seconds.
+    pub total_s: f64,
+}
+
+/// FIFO queue with depth limiting (backpressure) and wait metrics.
+#[derive(Debug)]
+pub struct RequestQueue {
+    queue: VecDeque<Request>,
+    pub max_depth: usize,
+    pub enqueued: u64,
+    pub rejected: u64,
+}
+
+impl RequestQueue {
+    pub fn new(max_depth: usize) -> RequestQueue {
+        RequestQueue {
+            queue: VecDeque::new(),
+            max_depth,
+            enqueued: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Admit a request; returns false (rejected) when full.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.max_depth {
+            self.rejected += 1;
+            return false;
+        }
+        self.enqueued += 1;
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// Tokenize prompt text for the byte-vocab tiny model.
+pub fn tokenize(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+/// Detokenize generated tokens (lossy on non-UTF8).
+pub fn detokenize(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2],
+            max_new: 4,
+            arrived: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = RequestQueue::new(10);
+        q.push(req(1));
+        q.push(req(2));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut q = RequestQueue::new(1);
+        assert!(q.push(req(1)));
+        assert!(!q.push(req(2)));
+        assert_eq!(q.rejected, 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let text = "the quick brown fox";
+        assert_eq!(detokenize(&tokenize(text)), text);
+        assert!(tokenize(text).iter().all(|&t| t < 256));
+    }
+}

@@ -1,0 +1,189 @@
+//! Line-protocol TCP server over the executed engine (tokio is
+//! unavailable offline; std::net + a dispatcher thread is all a
+//! batch-1 decode server needs — the GPU loop is the bottleneck, not
+//! connection handling).
+//!
+//! Protocol (one request per line):
+//!   `GEN <max_new> <prompt text...>`  →  `OK <id> <queue_ms> <total_ms> <text...>`
+//!   `STATS`                           →  one-line JSON telemetry
+//!   anything else                     →  `ERR <reason>`
+//!
+//! The acceptor thread reads lines into the shared [`RequestQueue`];
+//! the single decode thread (owning the [`ExecEngine`]) drains it FIFO
+//! and writes responses back on the request's connection.
+
+use crate::coordinator::engine_exec::ExecEngine;
+use crate::coordinator::request::{detokenize, tokenize, Request, RequestQueue};
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+struct Pending {
+    req: Request,
+    conn: TcpStream,
+}
+
+struct Shared {
+    queue: Mutex<(RequestQueue, Vec<Pending>)>,
+    cv: Condvar,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+}
+
+/// Serve until `max_requests` have been answered (None = forever).
+/// Returns the bound local address via the callback before blocking.
+pub fn serve(
+    mut engine: ExecEngine,
+    addr: &str,
+    max_requests: Option<u64>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_bound(listener.local_addr()?);
+    let shared = Arc::new(Shared {
+        queue: Mutex::new((RequestQueue::new(64), Vec::new())),
+        cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+        next_id: AtomicU64::new(1),
+    });
+
+    // Acceptor thread: parse lines, enqueue.
+    let acc_shared = Arc::clone(&shared);
+    let acceptor = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if acc_shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(conn) = conn else { continue };
+            let sh = Arc::clone(&acc_shared);
+            std::thread::spawn(move || handle_conn(conn, sh));
+        }
+    });
+
+    // Decode loop (this thread owns the engine).
+    let mut served = 0u64;
+    loop {
+        if let Some(max) = max_requests {
+            if served >= max {
+                shared.stop.store(true, Ordering::SeqCst);
+                // Nudge the acceptor loop awake.
+                let _ = TcpStream::connect(format!(
+                    "127.0.0.1:{}",
+                    addr.rsplit(':').next().unwrap_or("0")
+                ));
+                break;
+            }
+        }
+        let pending = {
+            let mut guard = shared.queue.lock().unwrap();
+            loop {
+                let (ref mut q, ref mut conns) = *guard;
+                if let Some(req) = q.pop() {
+                    let idx = conns
+                        .iter()
+                        .position(|p| p.req.id == req.id)
+                        .expect("conn for queued request");
+                    break conns.swap_remove(idx);
+                }
+                guard = shared.cv.wait(guard).unwrap();
+            }
+        };
+        let Pending { req, mut conn } = pending;
+        let queue_s = req.arrived.elapsed().as_secs_f64();
+        let start = Instant::now();
+        let reply = match engine.generate(&req.prompt, req.max_new) {
+            Ok(tokens) => format!(
+                "OK {} {:.1} {:.1} {}\n",
+                req.id,
+                queue_s * 1e3,
+                (queue_s + start.elapsed().as_secs_f64()) * 1e3,
+                detokenize(&tokens).replace('\n', " ")
+            ),
+            Err(e) => format!("ERR {e:#}\n"),
+        };
+        let _ = conn.write_all(reply.as_bytes());
+        served += 1;
+    }
+    drop(acceptor); // detach; process exit reaps it in CLI usage
+    Ok(())
+}
+
+fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
+    let reader = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut lines = BufReader::new(reader).lines();
+    while let Some(Ok(line)) = lines.next() {
+        let line = line.trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let mut reply_conn = match conn.try_clone() {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        if line == "STATS" {
+            // Stats come from the queue side; engine telemetry is
+            // reported by the CLI at shutdown.
+            let g = shared.queue.lock().unwrap();
+            let msg = format!(
+                "{{\"depth\":{},\"enqueued\":{},\"rejected\":{}}}\n",
+                g.0.len(),
+                g.0.enqueued,
+                g.0.rejected
+            );
+            drop(g);
+            let _ = reply_conn.write_all(msg.as_bytes());
+            continue;
+        }
+        let Some(rest) = line.strip_prefix("GEN ") else {
+            let _ = reply_conn.write_all(b"ERR expected GEN or STATS\n");
+            continue;
+        };
+        let mut parts = rest.splitn(2, ' ');
+        let max_new: usize = match parts.next().and_then(|s| s.parse().ok()) {
+            Some(n) => n,
+            None => {
+                let _ = reply_conn.write_all(b"ERR bad max_new\n");
+                continue;
+            }
+        };
+        let prompt_text = parts.next().unwrap_or("");
+        let req = Request {
+            id: shared.next_id.fetch_add(1, Ordering::SeqCst),
+            prompt: tokenize(prompt_text),
+            max_new,
+            arrived: Instant::now(),
+        };
+        let admitted = {
+            let mut g = shared.queue.lock().unwrap();
+            let ok = g.0.push(req.clone());
+            if ok {
+                g.1.push(Pending {
+                    req,
+                    conn: reply_conn,
+                });
+            }
+            ok
+        };
+        if admitted {
+            shared.cv.notify_one();
+        } else {
+            let mut c = match conn.try_clone() {
+                Ok(c) => c,
+                Err(_) => return,
+            };
+            let _ = c.write_all(b"ERR queue full\n");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The server is exercised end-to-end by rust/tests/server_e2e.rs
+    // (needs artifacts). Protocol parsing is covered there too.
+}

@@ -1,0 +1,58 @@
+//! Figure 1: operational carbon emission, FLOPs, and memory of GPUs
+//! over release years — the paper's motivation chart. Reproduced from
+//! the `carbon::gpu_db` specification table.
+
+use crate::carbon::{GPUS, PAPER_INTENSITY_G_PER_KWH};
+use crate::util::bench::Table;
+
+pub fn run() -> String {
+    let mut gpus: Vec<_> = GPUS.to_vec();
+    gpus.sort_by_key(|g| g.year);
+    let mut t = Table::new([
+        "GPU", "year", "class", "TFLOPs", "HBM GiB", "BW GB/s", "TDP W",
+        "OCE g/h", "embodied kg", "TFLOPs/W",
+    ]);
+    for g in &gpus {
+        t.row([
+            g.name.to_string(),
+            g.year.to_string(),
+            if g.top_tier { "top-tier" } else { "consumer" }.into(),
+            format!("{:.1}", g.tflops),
+            format!("{:.0}", g.mem_gib),
+            format!("{:.0}", g.mem_bw_gbps),
+            format!("{:.0}", g.tdp_w),
+            format!("{:.0}", g.oce_per_hour_g(PAPER_INTENSITY_G_PER_KWH)),
+            format!("{:.0}", g.embodied_kg),
+            format!("{:.3}", g.tflops_per_watt()),
+        ]);
+    }
+    let first = gpus.first().unwrap();
+    let last = gpus.iter().max_by_key(|g| g.year).unwrap();
+    let flops_growth = last.tflops / first.tflops;
+    let mem_growth = last.mem_gib / first.mem_gib;
+    format!(
+        "Figure 1 — GPU carbon / FLOPs / memory by release year\n{}\n\
+         {}->{}: FLOPs x{:.1}, memory x{:.1} — compute outpaces memory \
+         x{:.1} (paper's motivating gap)\n\
+         M40/H100 operational-carbon ratio: {:.2} (paper: ~1/3)\n",
+        t.render(),
+        first.name,
+        last.name,
+        flops_growth,
+        mem_growth,
+        flops_growth / mem_growth,
+        crate::carbon::find_gpu("M40").unwrap().oce_per_hour_g(820.0)
+            / crate::carbon::find_gpu("H100").unwrap().oce_per_hour_g(820.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_gpus() {
+        let out = super::run();
+        for name in ["K40", "M40", "V100", "RTX3090", "A100", "H100"] {
+            assert!(out.contains(name), "{name} missing");
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Figure 11: (a) time to first token, (b) decode GPU-time breakdown
+//! per phase. TTFT rises with model size; the decode share of total
+//! runtime falls (prefill amortizes).
+
+use crate::coordinator::{EngineConfig, SimEngine};
+use crate::experiments::ExpOpts;
+use crate::memsim::HardwareSpec;
+use crate::model::spec::ModelSpec;
+use crate::util::bench::Table;
+
+pub fn run(opts: ExpOpts) -> String {
+    let gpu = crate::carbon::find_gpu("RTX3090").unwrap();
+    let hw = HardwareSpec::rtx3090_testbed();
+    let models = [
+        ModelSpec::llama2_7b(),
+        ModelSpec::llama2_13b(),
+        ModelSpec::falcon_40b(),
+        ModelSpec::llama2_70b(),
+    ];
+    let out_tokens = if opts.quick { 8 } else { 64 };
+    let mut a = Table::new(["model", "TTFT s", "decode share of total"]);
+    let mut b = Table::new([
+        "model", "predict %", "attention %", "ffn %", "transfer-stall %",
+        "cache-mgmt %", "other %",
+    ]);
+    for spec in &models {
+        let mut e = SimEngine::new(spec.clone(), hw.clone(), EngineConfig::full());
+        let r = e.run(64, out_tokens, gpu);
+        a.row([
+            spec.name.clone(),
+            format!("{:.2}", r.ttft_s),
+            format!("{:.0}%", (1.0 - r.ttft_s / r.total_s).max(0.0) * 100.0),
+        ]);
+        let p = &r.telemetry.phases;
+        let tot = p.total_s().max(1e-12);
+        let pct = |x: f64| format!("{:.1}%", 100.0 * x / tot);
+        b.row([
+            spec.name.clone(),
+            pct(p.predict_s),
+            pct(p.attention_s),
+            pct(p.ffn_s),
+            pct(p.transfer_s),
+            pct(p.cache_mgmt_s),
+            pct(p.other_s),
+        ]);
+    }
+    format!(
+        "Figure 11a — time to first token\n{}\nFigure 11b — decode time breakdown\n{}",
+        a.render(),
+        b.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_grows_with_model_size() {
+        let out = run(ExpOpts {
+            quick: true,
+            artifacts: "artifacts",
+        });
+        let ttfts: Vec<f64> = out
+            .lines()
+            .filter(|l| l.starts_with("LLaMA") || l.starts_with("Falcon"))
+            .take(4)
+            .filter_map(|l| l.split_whitespace().nth(1)?.parse().ok())
+            .collect();
+        assert!(ttfts.len() >= 3);
+        assert!(ttfts.last().unwrap() > ttfts.first().unwrap());
+    }
+}

@@ -1,0 +1,90 @@
+//! Experiment drivers — one per figure/table in the paper's evaluation.
+//! Each returns its rendered table(s) so the CLI, the bench harness,
+//! and EXPERIMENTS.md all share one source of truth.
+//!
+//! | id      | paper artifact                                   |
+//! |---------|--------------------------------------------------|
+//! | fig1    | GPU carbon/FLOPs/memory by release year          |
+//! | fig4    | decode latency with weights on HBM/DRAM/SSD      |
+//! | fig5    | transfer time + bandwidth vs tensor size         |
+//! | fig6    | overlapped-neuron ratio between adjacent tokens  |
+//! | fig9    | generation speed vs ZeRO-Inference               |
+//! | fig10   | accuracy across precision-ratio mixes (executed) |
+//! | fig11   | time-to-first-token + GPU time breakdown         |
+//! | fig12   | carbon footprint vs ZeRO-Inference               |
+//! | fig13   | ablation: +MP / +Cache / +SSD                    |
+//! | table14 | task accuracy, dense vs M2Cache (executed)       |
+//! | alg1    | uncertainty-guided ratio search                  |
+
+pub mod accuracy;
+pub mod fig1;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod ratio;
+
+use anyhow::{bail, Result};
+
+/// Scale knob: benches use `quick=true` (fewer tokens) so the full
+/// suite stays minutes, not hours; the CLI default is the full size.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpOpts {
+    pub quick: bool,
+    /// Artifacts directory for executed experiments.
+    pub artifacts: &'static str,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            quick: false,
+            artifacts: "artifacts",
+        }
+    }
+}
+
+/// Run an experiment by id; returns the rendered report.
+pub fn run(id: &str, opts: ExpOpts) -> Result<String> {
+    Ok(match id {
+        "fig1" => fig1::run(),
+        "fig4" => fig4::run(),
+        "fig5" => fig5::run(),
+        "fig6" => fig6::run(opts),
+        "fig9" => fig9::run(opts),
+        "fig10" => accuracy::run_fig10(opts)?,
+        "fig11" => fig11::run(opts),
+        "fig12" => fig12::run(opts),
+        "fig13" => fig13::run(opts),
+        "table14" => accuracy::run_table14(opts)?,
+        "alg1" => ratio::run(opts)?,
+        other => bail!(
+            "unknown experiment {other:?}; available: fig1 fig4 fig5 fig6 \
+             fig9 fig10 fig11 fig12 fig13 table14 alg1"
+        ),
+    })
+}
+
+pub const ALL: [&str; 11] = [
+    "fig1", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "table14", "alg1",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", ExpOpts::default()).is_err());
+    }
+
+    #[test]
+    fn fig1_always_available() {
+        let out = run("fig1", ExpOpts::default()).unwrap();
+        assert!(out.contains("H100"));
+    }
+}

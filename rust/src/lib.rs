@@ -1,0 +1,31 @@
+//! # M2Cache
+//!
+//! A full-system reproduction of *"Harnessing Your DRAM and SSD for
+//! Sustainable and Accessible LLM Inference with Mixed-Precision and
+//! Multi-level Caching"* (cs.LG 2024) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! - **L3 (this crate)** — the M2Cache coordinator: dynamic-sparse
+//!   mixed-precision planning, the neuron-level HBM cache with the ATU
+//!   policy, the two-level DRAM cache with pattern-aware SSD preloading,
+//!   request serving, carbon accounting, and the ZeRO-Infinity-style
+//!   baseline, all over a calibrated memory-hierarchy simulator *and* a
+//!   real PJRT execution path.
+//! - **L2/L1 (build-time Python)** — the JAX/Pallas model and kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, loaded by [`runtime`].
+//!
+//! See `DESIGN.md` for the architecture and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baseline;
+pub mod cache;
+pub mod carbon;
+pub mod coordinator;
+pub mod experiments;
+pub mod memsim;
+pub mod model;
+pub mod precision;
+pub mod runtime;
+pub mod sparsity;
+pub mod telemetry;
+pub mod util;

@@ -1,0 +1,229 @@
+//! m2cache CLI — leader entrypoint for the M2Cache reproduction.
+//!
+//! Subcommands:
+//!   info                         platform + artifact + model summary
+//!   generate  [--prompt ...]     executed tiny-model generation
+//!   serve     [--addr ...]       TCP serving over the executed engine
+//!   simulate  [--model 13B ...]  simulated run on a large geometry
+//!   experiment <id>|all          regenerate a paper figure/table
+//!   ratio-search                 Algorithm 1 (alias: experiment alg1)
+//!   carbon-report                Fig 1 + Fig 12 summary
+//!
+//! Common flags: --artifacts DIR (default: artifacts), --quick
+
+use m2cache::coordinator::{
+    detokenize, tokenize, EngineConfig, ExecEngine, PolicyKind, SimEngine,
+};
+use m2cache::experiments::{self, ExpOpts};
+use m2cache::memsim::HardwareSpec;
+use m2cache::model::spec::ModelSpec;
+use m2cache::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match dispatch(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn opts_of(args: &Args) -> ExpOpts {
+    let artifacts: &'static str =
+        Box::leak(args.get_or("artifacts", "artifacts").to_string().into_boxed_str());
+    ExpOpts {
+        quick: args.flag("quick"),
+        artifacts,
+    }
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    let mut cfg = EngineConfig::full();
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(p).unwrap_or(PolicyKind::Atu);
+    }
+    if let Some(d) = args.get("dram-gib") {
+        cfg.dram_capacity = (d.parse::<f64>().unwrap_or(40.0) * (1u64 << 30) as f64) as u64;
+    }
+    cfg.fixed_layers = args.get_usize("fixed-layers", cfg.fixed_layers);
+    cfg.preload_depth = args.get_usize("preload-depth", cfg.preload_depth);
+    if args.flag("no-ssd") {
+        cfg.use_ssd = false;
+    }
+    if args.flag("no-cache") {
+        cfg.use_hbm_cache = false;
+    }
+    if args.flag("no-mp") {
+        cfg.use_mp = false;
+    }
+    cfg
+}
+
+fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "info" => info(args),
+        "generate" => generate(args),
+        "serve" => serve(args),
+        "simulate" => simulate(args),
+        "experiment" => experiment(args),
+        "ratio-search" => {
+            print!("{}", experiments::run("alg1", opts_of(args))?);
+            Ok(())
+        }
+        "carbon-report" => {
+            print!("{}", experiments::run("fig1", opts_of(args))?);
+            println!();
+            print!("{}", experiments::run("fig12", opts_of(args))?);
+            Ok(())
+        }
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+m2cache — mixed-precision multi-level-cached LLM inference (paper repro)
+
+USAGE: m2cache <command> [flags]
+
+COMMANDS:
+  info            platform, artifacts, model geometries
+  generate        run the executed tiny model: --prompt TEXT --tokens N
+  serve           TCP server: --addr HOST:PORT [--max-requests N]
+  simulate        simulated large-model run: --model {7B,13B,40B,70B}
+                  --in N --out N [--policy atu|lru|window] [--dram-gib G]
+                  [--no-ssd] [--no-cache] [--no-mp]
+  experiment ID   regenerate a paper artifact: fig1 fig4 fig5 fig6 fig9
+                  fig10 fig11 fig12 fig13 table14 alg1, or `all`
+  ratio-search    Algorithm 1 (uncertainty-guided mix search)
+  carbon-report   Fig 1 + Fig 12 summary
+
+FLAGS: --artifacts DIR   artifact directory (default: artifacts)
+       --quick           smaller workloads for smoke runs
+";
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let opts = opts_of(args);
+    println!("m2cache {}", env!("CARGO_PKG_VERSION"));
+    match m2cache::runtime::Runtime::new() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    let art = Path::new(opts.artifacts);
+    println!(
+        "artifacts at {:?}: {}",
+        art,
+        if art.join("layer_step.hlo.txt").exists() {
+            "present"
+        } else {
+            "MISSING (run `make artifacts`)"
+        }
+    );
+    println!("\nmodel geometries:");
+    for m in ["7B", "13B", "40B", "70B", "tiny"] {
+        let s = ModelSpec::by_name(m).unwrap();
+        println!(
+            "  {:<12} layers={:<3} d={:<5} ffn={:<6} params={:.2}e9 fp16={:.1} GiB ffn-share={:.0}%",
+            s.name,
+            s.n_layers,
+            s.d_model,
+            s.ffn_hidden,
+            s.total_params() as f64 / 1e9,
+            s.fp16_bytes() as f64 / (1u64 << 30) as f64,
+            s.ffn_fraction() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> anyhow::Result<()> {
+    let opts = opts_of(args);
+    let prompt_text = args.get_or("prompt", "the quick brown fox ");
+    let n = args.get_usize("tokens", 48);
+    let mut eng = ExecEngine::new(Path::new(opts.artifacts), engine_config(args))?;
+    let start = std::time::Instant::now();
+    let out = eng.generate(&tokenize(prompt_text), n)?;
+    let dt = start.elapsed().as_secs_f64();
+    println!("prompt : {prompt_text:?}");
+    println!("output : {:?}", detokenize(&out));
+    println!(
+        "tokens : {} in {:.2}s = {:.1} tok/s | ttft {:.0} ms | hbm-hit {:.0}% | pcie {}",
+        out.len(),
+        dt,
+        out.len() as f64 / dt,
+        eng.tel.ttft_s * 1e3,
+        eng.tel.hit_ratio() * 100.0,
+        m2cache::util::text::fmt_bytes(eng.tel.traffic.dram_to_hbm)
+    );
+    println!("telemetry: {}", eng.tel.to_json());
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let opts = opts_of(args);
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let max = args.get("max-requests").map(|s| s.parse()).transpose()?;
+    let eng = ExecEngine::new(Path::new(opts.artifacts), engine_config(args))?;
+    println!("serving tiny model (protocol: `GEN <max_new> <prompt>`)");
+    m2cache::coordinator::server::serve(eng, addr, max, |a| {
+        println!("listening on {a}");
+    })
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "13B");
+    let spec = ModelSpec::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let inp = args.get_usize("in", 64);
+    let outp = args.get_usize("out", 64);
+    let gpu = m2cache::carbon::find_gpu(args.get_or("gpu", "RTX3090"))
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu"))?;
+    let mut e = SimEngine::new(spec, HardwareSpec::rtx3090_testbed(), engine_config(args));
+    let r = e.run(inp, outp, gpu);
+    println!(
+        "{}: {:.3} tok/s | ttft {:.2}s | total {:.2}s (simulated)",
+        e.spec.name, r.tokens_per_s, r.ttft_s, r.total_s
+    );
+    println!(
+        "hbm-hit {:.0}% | dram peak {} | pcie {} | ssd {}",
+        r.telemetry.hit_ratio() * 100.0,
+        m2cache::util::text::fmt_bytes(r.telemetry.peak_dram_bytes),
+        m2cache::util::text::fmt_bytes(r.telemetry.traffic.dram_to_hbm),
+        m2cache::util::text::fmt_bytes(r.telemetry.traffic.ssd_to_dram),
+    );
+    println!(
+        "carbon: {:.1} gCO2 total ({:.3} g/token)",
+        r.carbon.total_g(),
+        m2cache::carbon::g_per_token(&r.carbon, r.telemetry.tokens_generated)
+    );
+    Ok(())
+}
+
+fn experiment(args: &Args) -> anyhow::Result<()> {
+    let opts = opts_of(args);
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    if id == "all" {
+        for id in experiments::ALL {
+            println!("==================== {id} ====================");
+            match experiments::run(id, opts) {
+                Ok(out) => println!("{out}"),
+                Err(e) => println!("({id} skipped: {e:#})\n"),
+            }
+        }
+        Ok(())
+    } else {
+        print!("{}", experiments::run(id, opts)?);
+        Ok(())
+    }
+}

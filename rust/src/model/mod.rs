@@ -1,0 +1,8 @@
+//! Model geometry specs and the on-disk weight store ("full model in
+//! SSD", the bottom tier of the paper's hierarchy).
+
+pub mod spec;
+pub mod weights;
+
+pub use spec::{Family, ModelSpec};
+pub use weights::{AttnWeights, PredictorWeights, WeightStore, INT4_GROUP, PREDICTOR_RANK};

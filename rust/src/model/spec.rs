@@ -1,0 +1,257 @@
+//! Model geometry specifications.
+//!
+//! Simulated experiments need only the *geometry* of each model (layer
+//! counts, widths ⇒ bytes per neuron, FLOPs per token); the executed
+//! end-to-end path uses the `tiny` spec with real weights. A "neuron"
+//! follows the paper's definition: one row of the FFN's first projection
+//! and the matching column of the second (for gated ReGLU FFNs, the
+//! gate row + up row + down column ⇒ `3 * d_model` values per neuron).
+
+/// Architecture family; affects FFN shape and attention layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// LLaMA-style: gated ReGLU FFN (gate, up, down).
+    LlamaReglu,
+    /// Falcon-style: plain GELU/ReLU MLP (up, down) with parallel attn.
+    Falcon,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: Family,
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// FFN hidden width = neurons per layer.
+    pub ffn_hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub vocab: usize,
+}
+
+impl ModelSpec {
+    pub fn llama2_7b() -> ModelSpec {
+        ModelSpec {
+            name: "LLaMA-7B".into(),
+            family: Family::LlamaReglu,
+            n_layers: 32,
+            d_model: 4096,
+            ffn_hidden: 11008,
+            n_heads: 32,
+            n_kv_heads: 32,
+            vocab: 32000,
+        }
+    }
+
+    pub fn llama2_13b() -> ModelSpec {
+        ModelSpec {
+            name: "LLaMA-13B".into(),
+            family: Family::LlamaReglu,
+            n_layers: 40,
+            d_model: 5120,
+            ffn_hidden: 13824,
+            n_heads: 40,
+            n_kv_heads: 40,
+            vocab: 32000,
+        }
+    }
+
+    pub fn llama2_70b() -> ModelSpec {
+        ModelSpec {
+            name: "LLaMA-70B".into(),
+            family: Family::LlamaReglu,
+            n_layers: 80,
+            d_model: 8192,
+            ffn_hidden: 28672,
+            n_heads: 64,
+            n_kv_heads: 8,
+            vocab: 32000,
+        }
+    }
+
+    pub fn falcon_40b() -> ModelSpec {
+        ModelSpec {
+            name: "Falcon-40B".into(),
+            family: Family::Falcon,
+            n_layers: 60,
+            d_model: 8192,
+            ffn_hidden: 32768,
+            n_heads: 128,
+            n_kv_heads: 8,
+            vocab: 65024,
+        }
+    }
+
+    /// The executed end-to-end model: 4-layer byte-vocab LLaMA-ReGLU,
+    /// ~1.2 M parameters, generated deterministically at build time.
+    pub fn tiny() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-1M".into(),
+            family: Family::LlamaReglu,
+            n_layers: 4,
+            d_model: 128,
+            ffn_hidden: 512,
+            n_heads: 4,
+            n_kv_heads: 4,
+            vocab: 256,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "llama-7b" | "7b" => Some(Self::llama2_7b()),
+            "llama-13b" | "13b" => Some(Self::llama2_13b()),
+            "llama-70b" | "70b" => Some(Self::llama2_70b()),
+            "falcon-40b" | "40b" => Some(Self::falcon_40b()),
+            "tiny" | "tiny-1m" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Values per neuron: 3·d for gated FFNs, 2·d otherwise.
+    pub fn values_per_neuron(&self) -> usize {
+        match self.family {
+            Family::LlamaReglu => 3 * self.d_model,
+            Family::Falcon => 2 * self.d_model,
+        }
+    }
+
+    /// FFN parameter count per layer.
+    pub fn ffn_params_per_layer(&self) -> u64 {
+        self.ffn_hidden as u64 * self.values_per_neuron() as u64
+    }
+
+    /// Attention parameter count per layer (q,k,v,o with GQA).
+    pub fn attn_params_per_layer(&self) -> u64 {
+        let d = self.d_model as u64;
+        let head_dim = d / self.n_heads as u64;
+        let kv_dim = head_dim * self.n_kv_heads as u64;
+        // Wq: d*d, Wk: d*kv, Wv: d*kv, Wo: d*d
+        2 * d * d + 2 * d * kv_dim
+    }
+
+    /// Total parameters (incl. embeddings + lm head, untied).
+    pub fn total_params(&self) -> u64 {
+        let per_layer = self.ffn_params_per_layer() + self.attn_params_per_layer();
+        per_layer * self.n_layers as u64
+            + 2 * (self.vocab as u64 * self.d_model as u64)
+    }
+
+    /// Fraction of parameters living in FFNs (paper: 63.99 % for 7B,
+    /// 72.41 % for 70B).
+    pub fn ffn_fraction(&self) -> f64 {
+        (self.ffn_params_per_layer() * self.n_layers as u64) as f64
+            / self.total_params() as f64
+    }
+
+    /// FLOPs for one decode token with `active` FFN neurons per layer
+    /// (2 FLOPs per weight element, attention over `kv_len` cached keys).
+    pub fn flops_per_token(&self, active_neurons: usize, kv_len: usize) -> f64 {
+        let d = self.d_model as f64;
+        let head_dim = d / self.n_heads as f64;
+        let kv_dim = head_dim * self.n_kv_heads as f64;
+        let attn_proj = 2.0 * (2.0 * d * d + 2.0 * d * kv_dim);
+        let attn_scores = 2.0 * 2.0 * self.n_heads as f64 * head_dim * kv_len as f64;
+        let ffn = 2.0 * active_neurons as f64 * self.values_per_neuron() as f64;
+        (attn_proj + attn_scores + ffn) * self.n_layers as f64
+            + 2.0 * d * self.vocab as f64
+    }
+
+    /// FP16 bytes of the whole model.
+    pub fn fp16_bytes(&self) -> u64 {
+        2 * self.total_params()
+    }
+
+    /// FP16 bytes of one full FFN layer.
+    pub fn ffn_layer_bytes_fp16(&self) -> u64 {
+        2 * self.ffn_params_per_layer()
+    }
+
+    /// KV-cache bytes per token (FP16).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        let head_dim = self.d_model / self.n_heads;
+        (2 * self.n_layers * self.n_kv_heads * head_dim * 2) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_public_numbers() {
+        // Within 5% of the nominal sizes.
+        let close = |spec: ModelSpec, nominal: f64| {
+            let p = spec.total_params() as f64;
+            let rel = (p - nominal).abs() / nominal;
+            assert!(rel < 0.05, "{}: {p:.3e} vs {nominal:.3e}", spec.name);
+        };
+        close(ModelSpec::llama2_7b(), 6.74e9);
+        close(ModelSpec::llama2_13b(), 13.0e9);
+        close(ModelSpec::llama2_70b(), 69.0e9);
+        close(ModelSpec::falcon_40b(), 41.0e9);
+    }
+
+    #[test]
+    fn ffn_fraction_matches_paper() {
+        // Paper §2.1 cites 63.99 % (7B) — ours matches — and 72.41 %
+        // (70B); counting gate+up+down against GQA attention, 70B's
+        // actual gated-FFN share is ~0.82 (the paper likely counts only
+        // up+down). The claim under test is the *shape*: FFN dominates
+        // and its share grows with model size.
+        let f7 = ModelSpec::llama2_7b().ffn_fraction();
+        let f70 = ModelSpec::llama2_70b().ffn_fraction();
+        assert!((0.60..0.68).contains(&f7), "7B ffn fraction {f7}");
+        assert!((0.70..0.86).contains(&f70), "70B ffn fraction {f70}");
+        assert!(f70 > f7, "fraction grows with model size");
+    }
+
+    #[test]
+    fn seven_b_doesnt_fit_24gb_with_activations_13b_doesnt_fit_at_all() {
+        // Motivation numbers: 13B fp16 > 24 GB HBM.
+        let hbm = 24u64 << 30;
+        assert!(ModelSpec::llama2_13b().fp16_bytes() > hbm);
+        // 70B fp16 (~128-140 GB) exceeds HBM+DRAM (24+64 GB).
+        assert!(ModelSpec::llama2_70b().fp16_bytes() > (24u64 + 64) << 30);
+    }
+
+    #[test]
+    fn flops_per_token_magnitude() {
+        // LLaMA-7B ≈ 2 * params ≈ 13.5 GFLOPs/token dense (paper cites
+        // ~19.6 GFLOPs incl. overheads; same order).
+        let spec = ModelSpec::llama2_7b();
+        let f = spec.flops_per_token(spec.ffn_hidden, 128);
+        assert!(
+            (1.0e10..2.5e10).contains(&f),
+            "7B flops/token {f:.3e}"
+        );
+    }
+
+    #[test]
+    fn sparsity_reduces_flops() {
+        let spec = ModelSpec::llama2_7b();
+        let dense = spec.flops_per_token(spec.ffn_hidden, 64);
+        let sparse = spec.flops_per_token(spec.ffn_hidden / 10, 64);
+        assert!(sparse < 0.6 * dense);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(ModelSpec::by_name("13B").unwrap().n_layers, 40);
+        assert_eq!(ModelSpec::by_name("tiny").unwrap().d_model, 128);
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn values_per_neuron_by_family() {
+        assert_eq!(ModelSpec::tiny().values_per_neuron(), 3 * 128);
+        assert_eq!(ModelSpec::falcon_40b().values_per_neuron(), 2 * 8192);
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let spec = ModelSpec::llama2_7b();
+        // 2 (k,v) * 32 layers * 4096 dim * 2 bytes = 512 KiB/token.
+        assert_eq!(spec.kv_bytes_per_token(), 512 << 10);
+    }
+}

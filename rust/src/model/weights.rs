@@ -1,0 +1,516 @@
+//! On-disk weight store — the "full model in SSD" of the paper's bottom
+//! tier. Layout is neuron-major so a single neuron (gate row + up row +
+//! down column) is one contiguous record per precision, which is what
+//! the DRAM/HBM caches move around.
+//!
+//! The store is written either by `python/compile/gen_weights.py` (the
+//! build-time path: trained tiny model + predictors) or by
+//! [`WeightStore::create`] (rust-side generator used in tests). Both
+//! produce identical *formats*; byte-level equality across languages is
+//! not required because weights flow through the store only.
+//!
+//! File layout under `<dir>/`:
+//! ```text
+//! meta.cfg            key = value (name, dims, seed, int4_group, rank)
+//! embed.f32           vocab*d f32 LE (tied LM head)
+//! final_norm.f32      d f32
+//! layer<i>.attn.f32   wq(d*d) wk(d*kv) wv(d*kv) wo(d*d) ln1(d) ln2(d)
+//! layer<i>.ffn.fp16   per neuron: 3d u16 (gate row, up row, down col)
+//! layer<i>.ffn.int8   per neuron: scale f32 + 3d i8
+//! layer<i>.ffn.int4   per neuron: ceil(3d/G) f32 scales + ceil(3d/2) packed
+//! predictor<i>.f32    A(d*r) f32 then B(r*n_ffn) f32
+//! ```
+
+use crate::model::spec::ModelSpec;
+use crate::precision::{f16, quant, Dtype};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// Default INT4 quantization group.
+pub const INT4_GROUP: usize = 64;
+/// Default predictor rank.
+pub const PREDICTOR_RANK: usize = 16;
+
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub dir: PathBuf,
+    pub spec: ModelSpec,
+    pub int4_group: usize,
+    pub rank: usize,
+}
+
+/// Attention + norm weights of one layer, dequantized.
+#[derive(Debug, Clone)]
+pub struct AttnWeights {
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+}
+
+/// Low-rank predictor factors of one layer.
+#[derive(Debug, Clone)]
+pub struct PredictorWeights {
+    pub a: Vec<f32>, // d x r
+    pub b: Vec<f32>, // r x n_ffn
+    pub rank: usize,
+}
+
+impl WeightStore {
+    // ---------- record geometry ----------
+
+    /// f32 values in one neuron record (gate + up + down).
+    pub fn neuron_values(&self) -> usize {
+        self.spec.values_per_neuron()
+    }
+
+    /// On-disk record size per neuron for a precision.
+    pub fn record_bytes(&self, dtype: Dtype) -> usize {
+        let v = self.neuron_values();
+        match dtype {
+            Dtype::F32 => 4 * v,
+            Dtype::F16 => 2 * v,
+            Dtype::Int8 => 4 + v,
+            Dtype::Int4 => 4 * v.div_ceil(self.int4_group) + v.div_ceil(2),
+        }
+    }
+
+    fn ffn_path(&self, layer: usize, dtype: Dtype) -> PathBuf {
+        let ext = match dtype {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "fp16",
+            Dtype::Int8 => "int8",
+            Dtype::Int4 => "int4",
+        };
+        self.dir.join(format!("layer{layer}.ffn.{ext}"))
+    }
+
+    // ---------- creation (rust-side generator, used by tests) ----------
+
+    /// Generate a complete store with random weights. The FFN master
+    /// weights are N(0, 1/sqrt(d)); quantized variants are derived from
+    /// the same master values so precision comparisons are meaningful.
+    pub fn create(dir: &Path, spec: &ModelSpec, seed: u64) -> Result<WeightStore> {
+        fs::create_dir_all(dir)?;
+        let store = WeightStore {
+            dir: dir.to_path_buf(),
+            spec: spec.clone(),
+            int4_group: INT4_GROUP,
+            rank: PREDICTOR_RANK,
+        };
+        let d = spec.d_model;
+        let scale = 1.0 / (d as f64).sqrt();
+        let mut rng = Rng::new(seed);
+        let gen = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+
+        // Embeddings + final norm.
+        write_f32(&store.dir.join("embed.f32"), &gen(&mut rng, spec.vocab * d))?;
+        write_f32(&store.dir.join("final_norm.f32"), &vec![1.0f32; d])?;
+
+        let head_dim = d / spec.n_heads;
+        let kv_dim = head_dim * spec.n_kv_heads;
+        for l in 0..spec.n_layers {
+            // Attention block.
+            let mut attn = Vec::new();
+            attn.extend(gen(&mut rng, d * d)); // wq
+            attn.extend(gen(&mut rng, d * kv_dim)); // wk
+            attn.extend(gen(&mut rng, d * kv_dim)); // wv
+            attn.extend(gen(&mut rng, d * d)); // wo
+            attn.extend(vec![1.0f32; d]); // ln1
+            attn.extend(vec![1.0f32; d]); // ln2
+            write_f32(&store.dir.join(format!("layer{l}.attn.f32")), &attn)?;
+
+            // FFN: generate master values neuron-major, then derive the
+            // three precision files.
+            let v = store.neuron_values();
+            let mut fp16_bytes = Vec::with_capacity(spec.ffn_hidden * 2 * v);
+            let mut int8_bytes = Vec::new();
+            let mut int4_bytes = Vec::new();
+            for _ in 0..spec.ffn_hidden {
+                let master = gen(&mut rng, v);
+                f16::encode_slice(&master, &mut fp16_bytes);
+                let b8 = quant::quantize_int8(&master);
+                int8_bytes.extend_from_slice(&b8.scale.to_le_bytes());
+                int8_bytes.extend(b8.q.iter().map(|&q| q as u8));
+                let b4 = quant::quantize_int4(&master, store.int4_group);
+                for s in &b4.scales {
+                    int4_bytes.extend_from_slice(&s.to_le_bytes());
+                }
+                int4_bytes.extend_from_slice(&b4.packed);
+            }
+            fs::write(store.ffn_path(l, Dtype::F16), &fp16_bytes)?;
+            fs::write(store.ffn_path(l, Dtype::Int8), &int8_bytes)?;
+            fs::write(store.ffn_path(l, Dtype::Int4), &int4_bytes)?;
+
+            // Random low-rank predictor (tests exercise plumbing only;
+            // the build-time python predictor is trained on activations).
+            let mut pred = Vec::new();
+            pred.extend(gen(&mut rng, d * store.rank));
+            pred.extend(gen(&mut rng, store.rank * spec.ffn_hidden));
+            write_f32(&store.dir.join(format!("predictor{l}.f32")), &pred)?;
+        }
+
+        // Metadata last: its presence marks a complete store.
+        let meta = format!(
+            "name = {}\nfamily = {}\nn_layers = {}\nd_model = {}\nffn_hidden = {}\n\
+             n_heads = {}\nn_kv_heads = {}\nvocab = {}\nint4_group = {}\nrank = {}\nseed = {}\n",
+            spec.name,
+            match spec.family {
+                crate::model::spec::Family::LlamaReglu => "llama_reglu",
+                crate::model::spec::Family::Falcon => "falcon",
+            },
+            spec.n_layers,
+            spec.d_model,
+            spec.ffn_hidden,
+            spec.n_heads,
+            spec.n_kv_heads,
+            spec.vocab,
+            store.int4_group,
+            store.rank,
+            seed
+        );
+        fs::write(store.dir.join("meta.cfg"), meta)?;
+        Ok(store)
+    }
+
+    /// Open an existing store and validate its geometry.
+    pub fn open(dir: &Path) -> Result<WeightStore> {
+        let meta_text = fs::read_to_string(dir.join("meta.cfg"))
+            .with_context(|| format!("no weight store at {}", dir.display()))?;
+        let meta = crate::util::text::parse_config(&meta_text);
+        let get = |k: &str| -> Result<String> {
+            meta.get(k)
+                .cloned()
+                .with_context(|| format!("meta.cfg missing key {k}"))
+        };
+        let parse = |k: &str| -> Result<usize> {
+            Ok(get(k)?.parse::<usize>().with_context(|| format!("bad {k}"))?)
+        };
+        let family = match get("family")?.as_str() {
+            "llama_reglu" => crate::model::spec::Family::LlamaReglu,
+            "falcon" => crate::model::spec::Family::Falcon,
+            other => bail!("unknown family {other}"),
+        };
+        let spec = ModelSpec {
+            name: get("name")?,
+            family,
+            n_layers: parse("n_layers")?,
+            d_model: parse("d_model")?,
+            ffn_hidden: parse("ffn_hidden")?,
+            n_heads: parse("n_heads")?,
+            n_kv_heads: parse("n_kv_heads")?,
+            vocab: parse("vocab")?,
+        };
+        let store = WeightStore {
+            dir: dir.to_path_buf(),
+            spec,
+            int4_group: parse("int4_group")?,
+            rank: parse("rank")?,
+        };
+        store.validate()?;
+        Ok(store)
+    }
+
+    /// Check every expected file exists with the expected size.
+    pub fn validate(&self) -> Result<()> {
+        let d = self.spec.d_model;
+        let expect = |p: PathBuf, bytes: u64| -> Result<()> {
+            let len = fs::metadata(&p)
+                .with_context(|| format!("missing {}", p.display()))?
+                .len();
+            if len != bytes {
+                bail!("{}: {} bytes, expected {}", p.display(), len, bytes);
+            }
+            Ok(())
+        };
+        expect(
+            self.dir.join("embed.f32"),
+            (self.spec.vocab * d * 4) as u64,
+        )?;
+        expect(self.dir.join("final_norm.f32"), (d * 4) as u64)?;
+        let head_dim = d / self.spec.n_heads;
+        let kv_dim = head_dim * self.spec.n_kv_heads;
+        let attn_vals = 2 * d * d + 2 * d * kv_dim + 2 * d;
+        for l in 0..self.spec.n_layers {
+            expect(
+                self.dir.join(format!("layer{l}.attn.f32")),
+                (attn_vals * 4) as u64,
+            )?;
+            for dt in [Dtype::F16, Dtype::Int8, Dtype::Int4] {
+                expect(
+                    self.ffn_path(l, dt),
+                    (self.spec.ffn_hidden * self.record_bytes(dt)) as u64,
+                )?;
+            }
+            expect(
+                self.dir.join(format!("predictor{l}.f32")),
+                ((d * self.rank + self.rank * self.spec.ffn_hidden) * 4) as u64,
+            )?;
+        }
+        Ok(())
+    }
+
+    // ---------- reads (the "SSD" of the executed path) ----------
+
+    /// Read one neuron's raw record bytes at a precision — the unit the
+    /// caches transfer.
+    pub fn read_neuron_raw(
+        &self,
+        layer: usize,
+        neuron: u32,
+        dtype: Dtype,
+    ) -> Result<Vec<u8>> {
+        let rec = self.record_bytes(dtype);
+        let mut f = fs::File::open(self.ffn_path(layer, dtype))?;
+        f.seek(SeekFrom::Start(neuron as u64 * rec as u64))?;
+        let mut buf = vec![0u8; rec];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Read a contiguous *range* of neuron records (layer-wise preload).
+    pub fn read_neuron_range_raw(
+        &self,
+        layer: usize,
+        start: u32,
+        count: usize,
+        dtype: Dtype,
+    ) -> Result<Vec<u8>> {
+        let rec = self.record_bytes(dtype);
+        let mut f = fs::File::open(self.ffn_path(layer, dtype))?;
+        f.seek(SeekFrom::Start(start as u64 * rec as u64))?;
+        let mut buf = vec![0u8; rec * count];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Dequantize a raw neuron record into f32 values.
+    pub fn dequantize_record(&self, raw: &[u8], dtype: Dtype) -> Vec<f32> {
+        let v = self.neuron_values();
+        let mut out = Vec::with_capacity(v);
+        match dtype {
+            Dtype::F32 => {
+                for ch in raw.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+                }
+            }
+            Dtype::F16 => f16::decode_slice(raw, &mut out),
+            Dtype::Int8 => {
+                let scale = f32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
+                out.extend(raw[4..4 + v].iter().map(|&b| b as i8 as f32 * scale));
+            }
+            Dtype::Int4 => {
+                let n_groups = v.div_ceil(self.int4_group);
+                let mut scales = Vec::with_capacity(n_groups);
+                for g in 0..n_groups {
+                    let o = 4 * g;
+                    scales.push(f32::from_le_bytes([
+                        raw[o],
+                        raw[o + 1],
+                        raw[o + 2],
+                        raw[o + 3],
+                    ]));
+                }
+                let packed = &raw[4 * n_groups..];
+                let block = quant::Int4Block {
+                    group: self.int4_group,
+                    scales,
+                    packed: packed.to_vec(),
+                    len: v,
+                };
+                quant::dequantize_int4(&block, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Read + dequantize one neuron.
+    pub fn read_neuron(&self, layer: usize, neuron: u32, dtype: Dtype) -> Result<Vec<f32>> {
+        let raw = self.read_neuron_raw(layer, neuron, dtype)?;
+        Ok(self.dequantize_record(&raw, dtype))
+    }
+
+    pub fn read_attn(&self, layer: usize) -> Result<AttnWeights> {
+        let d = self.spec.d_model;
+        let head_dim = d / self.spec.n_heads;
+        let kv_dim = head_dim * self.spec.n_kv_heads;
+        let all = read_f32(&self.dir.join(format!("layer{layer}.attn.f32")))?;
+        let mut off = 0;
+        let mut take = |n: usize| {
+            let s = all[off..off + n].to_vec();
+            off += n;
+            s
+        };
+        Ok(AttnWeights {
+            wq: take(d * d),
+            wk: take(d * kv_dim),
+            wv: take(d * kv_dim),
+            wo: take(d * d),
+            ln1: take(d),
+            ln2: take(d),
+        })
+    }
+
+    pub fn read_embed(&self) -> Result<Vec<f32>> {
+        read_f32(&self.dir.join("embed.f32"))
+    }
+
+    pub fn read_final_norm(&self) -> Result<Vec<f32>> {
+        read_f32(&self.dir.join("final_norm.f32"))
+    }
+
+    pub fn read_predictor(&self, layer: usize) -> Result<PredictorWeights> {
+        let d = self.spec.d_model;
+        let all = read_f32(&self.dir.join(format!("predictor{layer}.f32")))?;
+        let a_len = d * self.rank;
+        Ok(PredictorWeights {
+            a: all[..a_len].to_vec(),
+            b: all[a_len..].to_vec(),
+            rank: self.rank,
+        })
+    }
+
+    /// Total on-disk bytes of the store (the "SSD footprint").
+    pub fn disk_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in fs::read_dir(&self.dir)? {
+            total += entry?.metadata()?.len();
+        }
+        Ok(total)
+    }
+}
+
+fn write_f32(path: &Path, vals: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "f32 file with odd length");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("m2cache-test-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    fn tiny_store(name: &str) -> WeightStore {
+        let dir = tmpdir(name);
+        WeightStore::create(&dir, &ModelSpec::tiny(), 42).unwrap()
+    }
+
+    #[test]
+    fn create_open_roundtrip() {
+        let s = tiny_store("roundtrip");
+        let reopened = WeightStore::open(&s.dir).unwrap();
+        assert_eq!(reopened.spec.d_model, 128);
+        assert_eq!(reopened.spec.n_layers, 4);
+        assert_eq!(reopened.int4_group, INT4_GROUP);
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn record_sizes() {
+        let s = tiny_store("recsize");
+        let v = 3 * 128;
+        assert_eq!(s.record_bytes(Dtype::F16), 2 * v);
+        assert_eq!(s.record_bytes(Dtype::Int8), 4 + v);
+        assert_eq!(s.record_bytes(Dtype::Int4), 4 * 6 + v / 2);
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn precision_ladder_error_ordering() {
+        // Reading the same neuron at fp16/int8/int4 must give decreasing
+        // fidelity vs fp16 (the master's closest representation).
+        let s = tiny_store("ladder");
+        let hi = s.read_neuron(1, 7, Dtype::F16).unwrap();
+        let med = s.read_neuron(1, 7, Dtype::Int8).unwrap();
+        let lo = s.read_neuron(1, 7, Dtype::Int4).unwrap();
+        let err = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let e8 = err(&hi, &med);
+        let e4 = err(&hi, &lo);
+        assert!(e8 > 0.0 && e4 > e8, "int8 err {e8}, int4 err {e4}");
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn neuron_range_read_matches_single_reads() {
+        let s = tiny_store("range");
+        let range = s.read_neuron_range_raw(0, 5, 3, Dtype::Int8).unwrap();
+        let rec = s.record_bytes(Dtype::Int8);
+        for i in 0..3 {
+            let single = s.read_neuron_raw(0, 5 + i as u32, Dtype::Int8).unwrap();
+            assert_eq!(&range[i * rec..(i + 1) * rec], &single[..]);
+        }
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn attn_weights_shapes() {
+        let s = tiny_store("attn");
+        let a = s.read_attn(2).unwrap();
+        assert_eq!(a.wq.len(), 128 * 128);
+        assert_eq!(a.wk.len(), 128 * 128); // n_kv_heads == n_heads for tiny
+        assert_eq!(a.ln1.len(), 128);
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn predictor_shapes() {
+        let s = tiny_store("pred");
+        let p = s.read_predictor(0).unwrap();
+        assert_eq!(p.a.len(), 128 * PREDICTOR_RANK);
+        assert_eq!(p.b.len(), PREDICTOR_RANK * 512);
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_truncation() {
+        let s = tiny_store("truncate");
+        let path = s.dir.join("layer0.ffn.int8");
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(s.validate().is_err());
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+
+    #[test]
+    fn disk_bytes_positive_and_dominated_by_ffn() {
+        let s = tiny_store("disk");
+        let total = s.disk_bytes().unwrap();
+        let ffn_fp16: u64 = (0..4)
+            .map(|l| fs::metadata(s.ffn_path(l, Dtype::F16)).unwrap().len())
+            .sum();
+        assert!(total > ffn_fp16);
+        assert!(ffn_fp16 > 0);
+        fs::remove_dir_all(&s.dir).unwrap();
+    }
+}

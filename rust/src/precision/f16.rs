@@ -1,0 +1,175 @@
+//! IEEE 754 binary16 codec (the `half` crate is unavailable offline).
+//!
+//! The weight store keeps "FP16" neurons as packed u16 on disk/DRAM and
+//! converts to f32 at gather time (the PJRT CPU path computes in f32, as
+//! the paper's GPU path dequantizes to half/float for the GEMM).
+
+/// Convert f32 -> binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m | ((mant >> 13) as u16 & 0x3FF).min(0x3FF) | m;
+    }
+    // Rebias: f32 exp-127, f16 exp-15
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normalized half.
+        let half_exp = (unbiased + 15) as u32;
+        let mut half_mant = mant >> 13;
+        // Round to nearest even on the 13 dropped bits.
+        let round_bits = mant & 0x1FFF;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        // Mantissa overflow carries into the exponent (still fine: 0x7C00
+        // boundary produces inf correctly).
+        return sign | ((half_exp << 10) as u16).wrapping_add(half_mant as u16);
+    }
+    if unbiased >= -24 {
+        // Subnormal half.
+        let shift = (-14 - unbiased) as u32 + 13;
+        let full = mant | 0x80_0000; // implicit leading 1
+        let mut half_mant = full >> shift;
+        let round_bits = full & ((1 << shift) - 1);
+        let half_point = 1u32 << (shift - 1);
+        if round_bits > half_point || (round_bits == half_point && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert binary16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize. A subnormal half is m × 2⁻²⁴; with
+            // the leading 1 of m at bit position p the value is
+            // 1.f × 2^(p-24), i.e. biased f32 exponent 103 + p. The loop
+            // leaves e = p - 11, so biased = e + 114.
+            let mut e = 10i32; // ends at p, the leading-1 position of m
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((103 + e) as u32) << 23) | (m << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a slice of f32 to packed little-endian f16 bytes.
+pub fn encode_slice(xs: &[f32], out: &mut Vec<u8>) {
+    out.reserve(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+/// Decode packed little-endian f16 bytes into f32s.
+pub fn decode_slice(bytes: &[u8], out: &mut Vec<f32>) {
+    assert_eq!(bytes.len() % 2, 0);
+    out.reserve(bytes.len() / 2);
+    for ch in bytes.chunks_exact(2) {
+        out.push(f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]])));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f16_bits_to_f32(h), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(
+            f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)),
+            f32::NEG_INFINITY
+        );
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        // Tiny underflows to zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-10)), 0.0);
+    }
+
+    #[test]
+    fn subnormal_range() {
+        let tiny = 6.0e-5f32; // near the normal/subnormal boundary 6.1e-5
+        let rt = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((rt - tiny).abs() / tiny < 0.01, "{rt} vs {tiny}");
+        let sub = 3.0e-6f32; // subnormal half territory
+        let rt = f16_bits_to_f32(f32_to_f16_bits(sub));
+        assert!((rt - sub).abs() < 6e-8, "{rt} vs {sub}");
+    }
+
+    #[test]
+    fn roundtrip_error_bound_random() {
+        // Relative error of a single f32->f16->f32 trip is <= 2^-11 for
+        // normal halves.
+        let mut rng = Rng::new(5);
+        for _ in 0..50_000 {
+            let v = (rng.f32() - 0.5) * 100.0;
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            if v.abs() > 1e-3 {
+                assert!(
+                    ((rt - v) / v).abs() <= 1.0 / 2048.0 + 1e-7,
+                    "v={v} rt={rt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slice_codec_roundtrip() {
+        let xs: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) / 7.0).collect();
+        let mut bytes = Vec::new();
+        encode_slice(&xs, &mut bytes);
+        assert_eq!(bytes.len(), xs.len() * 2);
+        let mut back = Vec::new();
+        decode_slice(&bytes, &mut back);
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= a.abs() / 1024.0 + 1e-4);
+        }
+    }
+
+    #[test]
+    fn monotone_on_positives() {
+        // f16 encoding preserves order for positive normal floats.
+        let mut prev = f32_to_f16_bits(0.001);
+        for i in 1..1000 {
+            let v = 0.001 + i as f32 * 0.01;
+            let h = f32_to_f16_bits(v);
+            assert!(h >= prev, "non-monotone at {v}");
+            prev = h;
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Mixed-precision machinery (paper §5.2): numeric formats, quantization
+//! codecs, the per-step precision planner, and the Algorithm-1 offline
+//! ratio search.
+
+pub mod f16;
+pub mod plan;
+pub mod quant;
+pub mod search;
+
+/// Numeric storage formats used for neuron weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dtype {
+    F32,
+    F16,
+    Int8,
+    Int4,
+}
+
+impl Dtype {
+    /// Bits per stored value (excluding scales).
+    pub fn bits(self) -> u32 {
+        match self {
+            Dtype::F32 => 32,
+            Dtype::F16 => 16,
+            Dtype::Int8 => 8,
+            Dtype::Int4 => 4,
+        }
+    }
+
+    /// Bytes per value as a fraction (INT4 = 0.5).
+    pub fn bytes_per_value(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "fp32",
+            Dtype::F16 => "fp16",
+            Dtype::Int8 => "int8",
+            Dtype::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" => Some(Dtype::F32),
+            "fp16" | "f16" => Some(Dtype::F16),
+            "int8" | "i8" => Some(Dtype::Int8),
+            "int4" | "i4" => Some(Dtype::Int4),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_bytes() {
+        assert_eq!(Dtype::F16.bits(), 16);
+        assert_eq!(Dtype::Int4.bytes_per_value(), 0.5);
+        assert_eq!(Dtype::F32.bytes_per_value(), 4.0);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for d in [Dtype::F32, Dtype::F16, Dtype::Int8, Dtype::Int4] {
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::parse("bf16"), None);
+    }
+}

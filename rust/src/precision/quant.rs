@@ -1,0 +1,195 @@
+//! Weight quantization codecs: symmetric per-neuron INT8 and packed
+//! group INT4, matching the paper's mixed-precision classes
+//! {FP16, INT8, INT4} (§5.2). A "neuron" is one row of the FFN up-proj
+//! (and the matching column of the down-proj), so scales are stored per
+//! neuron (per row), like the paper's per-channel quantization.
+//!
+//! The same formats are produced by `python/compile/quant.py` at build
+//! time; these codecs are the runtime (rust) half and are pinned by
+//! cross-language fixture tests.
+
+/// Symmetric per-slice INT8: q = round(x / s), s = max|x| / 127.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int8Block {
+    pub scale: f32,
+    pub q: Vec<i8>,
+}
+
+pub fn quantize_int8(xs: &[f32]) -> Int8Block {
+    let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+    let inv = 1.0 / scale;
+    let q = xs
+        .iter()
+        .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    Int8Block { scale, q }
+}
+
+pub fn dequantize_int8(b: &Int8Block, out: &mut Vec<f32>) {
+    out.extend(b.q.iter().map(|&q| q as f32 * b.scale));
+}
+
+/// Packed INT4 with one scale per group of `group` values.
+/// Layout: two signed nibbles per byte, low nibble first; values are in
+/// [-8, 7] with symmetric scale s = max|x| / 7 per group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int4Block {
+    pub group: usize,
+    pub scales: Vec<f32>,
+    /// ceil(len/2) bytes; trailing nibble of an odd-length slice is zero.
+    pub packed: Vec<u8>,
+    pub len: usize,
+}
+
+pub fn quantize_int4(xs: &[f32], group: usize) -> Int4Block {
+    assert!(group > 0);
+    let n_groups = xs.len().div_ceil(group);
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut nibbles = Vec::with_capacity(xs.len());
+    for g in 0..n_groups {
+        let lo = g * group;
+        let hi = (lo + group).min(xs.len());
+        let amax = xs[lo..hi].iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / 7.0 };
+        scales.push(scale);
+        let inv = 1.0 / scale;
+        for &x in &xs[lo..hi] {
+            let q = (x * inv).round().clamp(-8.0, 7.0) as i8;
+            nibbles.push((q as u8) & 0x0F);
+        }
+    }
+    let mut packed = Vec::with_capacity(nibbles.len().div_ceil(2));
+    for pair in nibbles.chunks(2) {
+        let lo = pair[0];
+        let hi = if pair.len() > 1 { pair[1] } else { 0 };
+        packed.push(lo | (hi << 4));
+    }
+    Int4Block {
+        group,
+        scales,
+        packed,
+        len: xs.len(),
+    }
+}
+
+#[inline]
+fn sext4(n: u8) -> i8 {
+    // Sign-extend a 4-bit two's-complement nibble.
+    ((n << 4) as i8) >> 4
+}
+
+pub fn dequantize_int4(b: &Int4Block, out: &mut Vec<f32>) {
+    out.reserve(b.len);
+    for i in 0..b.len {
+        let byte = b.packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        let scale = b.scales[i / b.group];
+        out.push(sext4(nib) as f32 * scale);
+    }
+}
+
+/// Bytes on the wire (DRAM->HBM transfer size) for each format, per value
+/// count `n`. FP16 = 2n; INT8 = n + 4 (scale); INT4 = n/2 + 4 per group.
+pub fn wire_bytes(format: crate::precision::Dtype, n: usize, group: usize) -> u64 {
+    use crate::precision::Dtype::*;
+    match format {
+        F32 => 4 * n as u64,
+        F16 => 2 * n as u64,
+        Int8 => n as u64 + 4,
+        Int4 => (n as u64).div_ceil(2) + 4 * (n as u64).div_ceil(group as u64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::Dtype;
+    use crate::util::check::Check;
+
+    #[test]
+    fn int8_roundtrip_error_bound() {
+        Check::new(128, 0xA8).run("int8 |err| <= scale/2", |rng| {
+            let n = rng.range(1, 300);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+            let b = quantize_int8(&xs);
+            let mut back = Vec::new();
+            dequantize_int8(&b, &mut back);
+            for (i, (&x, &y)) in xs.iter().zip(back.iter()).enumerate() {
+                if (x - y).abs() > b.scale / 2.0 + 1e-6 {
+                    return Err(format!("idx {i}: {x} vs {y}, scale {}", b.scale));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_zero_slice() {
+        let b = quantize_int8(&[0.0; 16]);
+        assert_eq!(b.scale, 1.0);
+        assert!(b.q.iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn int4_roundtrip_error_bound() {
+        Check::new(128, 0xA4).run("int4 |err| <= scale/2", |rng| {
+            let n = rng.range(1, 300);
+            let group = [8usize, 16, 32, 64][rng.range(0, 4)];
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            let b = quantize_int4(&xs, group);
+            let mut back = Vec::new();
+            dequantize_int4(&b, &mut back);
+            if back.len() != n {
+                return Err(format!("len {} vs {n}", back.len()));
+            }
+            for (i, (&x, &y)) in xs.iter().zip(back.iter()).enumerate() {
+                let scale = b.scales[i / group];
+                if (x - y).abs() > scale / 2.0 + 1e-6 {
+                    return Err(format!("idx {i}: {x} vs {y}, scale {scale}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_odd_length() {
+        let xs = [1.0f32, -2.0, 3.0];
+        let b = quantize_int4(&xs, 16);
+        assert_eq!(b.packed.len(), 2);
+        let mut back = Vec::new();
+        dequantize_int4(&b, &mut back);
+        assert_eq!(back.len(), 3);
+    }
+
+    #[test]
+    fn sext4_cases() {
+        assert_eq!(sext4(0x0), 0);
+        assert_eq!(sext4(0x7), 7);
+        assert_eq!(sext4(0x8), -8);
+        assert_eq!(sext4(0xF), -1);
+    }
+
+    #[test]
+    fn int4_extremes_saturate() {
+        let xs = [7.0f32, -8.0, 100.0, -100.0];
+        let b = quantize_int4(&xs, 4);
+        let mut back = Vec::new();
+        dequantize_int4(&b, &mut back);
+        // max-magnitude element reproduces closely (it defines the scale,
+        // and round(7*|x|max/|x|max)=7 exactly for positives).
+        assert!((back[2] - 100.0).abs() < 1.0, "{back:?}");
+    }
+
+    #[test]
+    fn wire_bytes_ordering() {
+        // For any n, FP16 > INT8 > INT4 on the wire (n large enough).
+        let n = 4096;
+        let f16 = wire_bytes(Dtype::F16, n, 64);
+        let i8b = wire_bytes(Dtype::Int8, n, 64);
+        let i4b = wire_bytes(Dtype::Int4, n, 64);
+        assert!(f16 > i8b && i8b > i4b, "{f16} {i8b} {i4b}");
+        assert_eq!(f16, 8192);
+    }
+}

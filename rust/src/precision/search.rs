@@ -1,0 +1,174 @@
+//! Algorithm 1: uncertainty-guided offline neuron-ratio search.
+//!
+//! Given a fixed HBM byte budget, sweep the (r_low, r_high) trade-off —
+//! each step converts `s` worth of low-precision neurons into `s/n` of
+//! high-precision ones (n = bit(high)/bit(low)) — evaluate decoding
+//! uncertainty UQEst for each candidate, and keep the minimizer.
+//!
+//! UQEst (Eq. 2) is the summed token-level entropy of the generated
+//! continuation: UQEst = -Σ_{i>j} Σ_k p_k^i log p_k^i. The evaluator is a
+//! trait so the search runs either against the *executed* tiny model
+//! (examples/ratio_search) or a calibrated surrogate (unit tests, large
+//! geometries).
+
+use crate::precision::plan::PrecisionRatios;
+
+/// Evaluate decoding uncertainty for a candidate ratio mix. Lower is
+/// better. Implementations: `engine::UqEngineEval` (executed tiny model)
+/// and `SurrogateUq` (analytic model for simulated geometries).
+pub trait UncertaintyEval {
+    fn uqest(&mut self, ratios: &PrecisionRatios) -> f64;
+}
+
+/// One search trajectory entry (kept for the Fig 10 sweep output).
+#[derive(Debug, Clone)]
+pub struct SearchStep {
+    pub ratios: PrecisionRatios,
+    pub uq: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: PrecisionRatios,
+    pub best_uq: f64,
+    pub trajectory: Vec<SearchStep>,
+}
+
+/// Algorithm 1. `r_low0` is the starting low-precision ratio (all-budget
+/// in INT4), `step` is `s`, and `bit_ratio` is n = bit(high)/bit(low)
+/// (FP16/INT4 ⇒ 4). At every step we move `step` of the population into
+/// the high class and retire `step * bit_ratio` from the low class, so
+/// the byte budget stays constant.
+pub fn ratio_search<E: UncertaintyEval>(
+    eval: &mut E,
+    r_low0: f64,
+    step: f64,
+    bit_ratio: f64,
+) -> SearchResult {
+    assert!(step > 0.0 && r_low0 > 0.0 && bit_ratio >= 1.0);
+    let mut r_high = 0.0f64;
+    let mut r_low = r_low0;
+    let mut best = PrecisionRatios::new(0.0, 0.0, r_low.min(1.0));
+    let mut best_uq = f64::INFINITY;
+    let mut trajectory = Vec::new();
+    while r_low >= 0.0 {
+        // Split the "high" class evenly between FP16 and INT8 like the
+        // paper's evaluated mixes (Fig 9/10 use fp16:int8 = 1:1).
+        let ratios = PrecisionRatios::new(
+            (r_high / 2.0).min(1.0),
+            (r_high / 2.0).min(1.0),
+            r_low.clamp(0.0, 1.0),
+        );
+        let uq = eval.uqest(&ratios);
+        trajectory.push(SearchStep { ratios, uq });
+        if uq <= best_uq {
+            best_uq = uq;
+            best = ratios;
+        }
+        r_high += step;
+        r_low -= step * bit_ratio;
+    }
+    SearchResult {
+        best,
+        best_uq,
+        trajectory,
+    }
+}
+
+/// Analytic UQEst surrogate, calibrated to the paper's Fig 10 shape:
+/// uncertainty falls as critical neurons gain precision, but rises again
+/// once the low-precision pool is so small that total active neurons
+/// shrink (parameter-overcorrection on the other side). The minimum sits
+/// at an interior mix, as in the paper.
+pub struct SurrogateUq {
+    /// Weight of precision-loss term (INT4 noise on critical neurons).
+    pub alpha: f64,
+    /// Weight of coverage-loss term (too few active neurons).
+    pub beta: f64,
+    /// Baseline entropy of the model on the eval corpus.
+    pub base: f64,
+}
+
+impl Default for SurrogateUq {
+    fn default() -> Self {
+        SurrogateUq {
+            alpha: 3.0,
+            beta: 5.0,
+            base: 10.0,
+        }
+    }
+}
+
+impl UncertaintyEval for SurrogateUq {
+    fn uqest(&mut self, r: &PrecisionRatios) -> f64 {
+        let high = r.fp16 + r.int8;
+        let coverage = r.active_fraction();
+        // Precision noise decays with the share of high-precision neurons;
+        // coverage loss explodes as coverage -> 0.
+        let precision_term = self.alpha * (-4.0 * high).exp();
+        let coverage_term = self.beta * (1.0 - coverage).max(0.0).powi(2);
+        self.base + precision_term + coverage_term
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_finds_interior_optimum() {
+        let mut s = SurrogateUq::default();
+        let res = ratio_search(&mut s, 1.0, 0.05, 4.0);
+        // The all-INT4 start and the all-high end are both worse than the
+        // interior minimum.
+        let first = res.trajectory.first().unwrap().uq;
+        let last = res.trajectory.last().unwrap().uq;
+        assert!(res.best_uq < first, "best {} vs first {first}", res.best_uq);
+        assert!(res.best_uq <= last, "best {} vs last {last}", res.best_uq);
+        assert!(res.best.fp16 > 0.0, "optimum keeps some high precision");
+        assert!(res.best.int4 > 0.0, "optimum keeps some low precision");
+    }
+
+    #[test]
+    fn budget_is_conserved_along_trajectory() {
+        // bytes/population-unit: fp16=2, int8=1, int4=0.5. At bit_ratio=4
+        // (fp16 vs int4), each step adds s/2*2 + s/2*1 = 1.5s high bytes
+        // and removes 4s*0.5 = 2s low bytes — the byte budget is
+        // non-increasing, so every candidate is feasible under the start
+        // budget.
+        let mut s = SurrogateUq::default();
+        let res = ratio_search(&mut s, 1.0, 0.1, 4.0);
+        let bytes =
+            |r: &PrecisionRatios| r.fp16 * 2.0 + r.int8 * 1.0 + r.int4 * 0.5;
+        let b0 = bytes(&res.trajectory[0].ratios);
+        for st in &res.trajectory {
+            assert!(
+                bytes(&st.ratios) <= b0 + 1e-9,
+                "budget exceeded: {} > {b0}",
+                bytes(&st.ratios)
+            );
+        }
+    }
+
+    #[test]
+    fn trajectory_covers_grid() {
+        let mut s = SurrogateUq::default();
+        let res = ratio_search(&mut s, 1.0, 0.25, 4.0);
+        // r_low: 1.0, 0.0 -> two candidates (then negative stops).
+        assert_eq!(res.trajectory.len(), 2);
+    }
+
+    #[test]
+    fn monotone_eval_picks_last() {
+        struct Down(f64);
+        impl UncertaintyEval for Down {
+            fn uqest(&mut self, _: &PrecisionRatios) -> f64 {
+                self.0 -= 1.0;
+                self.0
+            }
+        }
+        let res = ratio_search(&mut Down(100.0), 1.0, 0.5, 2.0);
+        let last = res.trajectory.last().unwrap();
+        assert_eq!(res.best_uq, last.uq);
+    }
+}

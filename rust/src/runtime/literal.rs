@@ -1,0 +1,60 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+
+use anyhow::Result;
+
+/// Build an f32 literal with the given dims.
+///
+/// §Perf: uses `create_from_shape_and_untyped_data` (one memcpy) rather
+/// than `vec1(..).reshape(..)` (two) — this sits on the per-layer hot
+/// path (cache-unit buffer + KV caches every token).
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(
+        n as usize == data.len(),
+        "lit_f32: {} values for dims {dims:?}",
+        data.len()
+    );
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &dims_usize,
+        bytes,
+    )?)
+}
+
+/// Scalar i32 literal.
+pub fn lit_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_with_shape() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn f32_dim_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn i32_scalar() {
+        let l = lit_i32(42);
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![42]);
+    }
+}

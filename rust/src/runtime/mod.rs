@@ -1,0 +1,158 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` — because jax ≥ 0.5's
+//! serialized protos carry 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+//!
+//! All exported computations return tuples (aot.py lowers with
+//! `return_tuple=True`), so [`Runtime::exec`] decomposes the single
+//! tuple output into a `Vec<Literal>`.
+
+pub mod literal;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub use literal::{lit_f32, lit_i32, to_vec_f32};
+
+/// Artifact names the engine expects after `make artifacts`.
+pub const ARTIFACTS: [&str; 4] = ["embed", "predictor", "layer_step", "logits"];
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every expected artifact from a directory.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<()> {
+        for name in ARTIFACTS {
+            self.load(name, &dir.join(format!("{name}.hlo.txt")))?;
+        }
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute a loaded computation; returns the decomposed tuple parts.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("executable {name:?} not loaded"))?;
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {name}"))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch {name} output"))?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute returning exactly one array.
+    pub fn exec1(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut parts = self.exec(name, inputs)?;
+        anyhow::ensure!(
+            parts.len() == 1,
+            "{name}: expected 1 output, got {}",
+            parts.len()
+        );
+        Ok(parts.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("layer_step.hlo.txt").exists()
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        assert!(!rt.has("nope"));
+    }
+
+    #[test]
+    fn exec_missing_name_errors() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.exec("ghost", &[]).is_err());
+    }
+
+    #[test]
+    fn load_and_execute_logits_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        rt.load("logits", &artifacts_dir().join("logits.hlo.txt"))
+            .unwrap();
+        let d = 128;
+        let v = 256;
+        let x = lit_f32(&vec![0.1f32; d], &[d as i64]).unwrap();
+        let embed = lit_f32(&vec![0.01f32; v * d], &[v as i64, d as i64]).unwrap();
+        let norm = lit_f32(&vec![1.0f32; d], &[d as i64]).unwrap();
+        let out = rt.exec1("logits", &[x, embed, norm]).unwrap();
+        let vals = to_vec_f32(&out).unwrap();
+        assert_eq!(vals.len(), v);
+        // x is constant 0.1: rmsnorm(x) = 1-vector, logits = embed @ 1s
+        // = 0.01 * 128 = 1.28 for every vocab entry.
+        for &val in &vals {
+            assert!((val - 1.28).abs() < 1e-3, "{val}");
+        }
+    }
+
+    #[test]
+    fn load_full_artifact_set() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        rt.load_dir(&artifacts_dir()).unwrap();
+        for name in ARTIFACTS {
+            assert!(rt.has(name));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Dynamic contextual sparsity (Deja Vu-style): predictor scoring +
+//! top-k on the host, synthetic activation traces for simulated
+//! geometries, and the Fig 6 overlap analytics.
+
+pub mod overlap;
+pub mod predictor;
+pub mod trace;
+
+pub use overlap::OverlapTracker;
+pub use predictor::{recall, score, top_k};
+pub use trace::{ActivationTrace, TraceConfig};

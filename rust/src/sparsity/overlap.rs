@@ -1,0 +1,152 @@
+//! Overlap analytics backing Figure 6: "overlapped neuron ratio between
+//! tokens in different layers". Tracks, per layer, the fraction of this
+//! token's active set that was already active for the previous token —
+//! exactly the quantity the ATU cache converts into avoided transfers.
+
+/// Per-layer running overlap statistics.
+#[derive(Debug, Clone, Default)]
+pub struct OverlapTracker {
+    prev: Vec<Option<Vec<u32>>>,
+    sum: Vec<f64>,
+    count: Vec<u64>,
+}
+
+impl OverlapTracker {
+    pub fn new(n_layers: usize) -> OverlapTracker {
+        OverlapTracker {
+            prev: vec![None; n_layers],
+            sum: vec![0.0; n_layers],
+            count: vec![0; n_layers],
+        }
+    }
+
+    /// Record a token's active set for `layer` (ids must be sorted).
+    /// Returns the overlap fraction vs the previous token, if any.
+    pub fn record(&mut self, layer: usize, active: &[u32]) -> Option<f64> {
+        debug_assert!(active.windows(2).all(|w| w[0] < w[1]), "sorted ids");
+        let overlap = self.prev[layer].as_ref().map(|prev| {
+            if active.is_empty() {
+                return 1.0;
+            }
+            sorted_intersection_len(prev, active) as f64 / active.len() as f64
+        });
+        if let Some(o) = overlap {
+            self.sum[layer] += o;
+            self.count[layer] += 1;
+        }
+        self.prev[layer] = Some(active.to_vec());
+        overlap
+    }
+
+    /// Mean overlap per layer (NaN-free; layers with no transitions = 0).
+    pub fn mean_per_layer(&self) -> Vec<f64> {
+        self.sum
+            .iter()
+            .zip(&self.count)
+            .map(|(&s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+
+    /// Grand mean over layers with data (the "average ratio" of Fig 6).
+    pub fn mean(&self) -> f64 {
+        let per = self.mean_per_layer();
+        let with_data: Vec<f64> = per
+            .iter()
+            .zip(&self.count)
+            .filter(|(_, &c)| c > 0)
+            .map(|(&m, _)| m)
+            .collect();
+        if with_data.is_empty() {
+            0.0
+        } else {
+            with_data.iter().sum::<f64>() / with_data.len() as f64
+        }
+    }
+
+    pub fn transitions(&self, layer: usize) -> u64 {
+        self.count[layer]
+    }
+}
+
+/// |a ∩ b| for sorted slices, linear merge.
+pub fn sorted_intersection_len(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Check;
+
+    #[test]
+    fn first_token_has_no_overlap_sample() {
+        let mut t = OverlapTracker::new(2);
+        assert_eq!(t.record(0, &[1, 2, 3]), None);
+        assert_eq!(t.transitions(0), 0);
+    }
+
+    #[test]
+    fn overlap_arithmetic() {
+        let mut t = OverlapTracker::new(1);
+        t.record(0, &[1, 2, 3, 4]);
+        let o = t.record(0, &[3, 4, 5, 6]).unwrap();
+        assert!((o - 0.5).abs() < 1e-12);
+        let o2 = t.record(0, &[3, 4, 5, 6]).unwrap();
+        assert_eq!(o2, 1.0);
+        assert!((t.mean_per_layer()[0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layers_tracked_independently() {
+        let mut t = OverlapTracker::new(2);
+        t.record(0, &[1, 2]);
+        t.record(1, &[10, 20]);
+        t.record(0, &[1, 2]);
+        t.record(1, &[30, 40]);
+        let per = t.mean_per_layer();
+        assert_eq!(per[0], 1.0);
+        assert_eq!(per[1], 0.0);
+        assert_eq!(t.mean(), 0.5);
+    }
+
+    #[test]
+    fn intersection_matches_hashset_oracle() {
+        Check::new(128, 0x0712).run("sorted intersection == hashset", |rng| {
+            let mk = |rng: &mut crate::util::rng::Rng| {
+                let n = rng.range(0, 50);
+                let mut v: Vec<u32> = (0..n).map(|_| rng.below(100) as u32).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let fast = sorted_intersection_len(&a, &b);
+            let sa: std::collections::HashSet<u32> = a.iter().copied().collect();
+            let slow = b.iter().filter(|x| sa.contains(x)).count();
+            if fast != slow {
+                return Err(format!("{fast} vs {slow} for {a:?} {b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_active_set_counts_as_full_overlap() {
+        let mut t = OverlapTracker::new(1);
+        t.record(0, &[1]);
+        assert_eq!(t.record(0, &[]), Some(1.0));
+    }
+}

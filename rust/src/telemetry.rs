@@ -1,0 +1,202 @@
+//! Run telemetry: counters, byte meters, and phase timers shared by the
+//! engine, the baselines, and the bench harness. Everything here is
+//! plain (non-atomic) because the decode loop is single-threaded; the
+//! preloader reports through its own channel.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Byte meters per traffic class — the quantities the paper's bandwidth
+/// analysis (and our carbon model) are built on.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    pub ssd_to_dram: u64,
+    pub dram_to_hbm: u64,
+    pub hbm_to_dram: u64,
+    pub hbm_internal: u64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> u64 {
+        self.ssd_to_dram + self.dram_to_hbm + self.hbm_to_dram + self.hbm_internal
+    }
+}
+
+/// Decode-phase wall/simulated time breakdown (Fig 11b).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimes {
+    pub predict_s: f64,
+    pub cache_mgmt_s: f64,
+    pub transfer_s: f64,
+    pub attention_s: f64,
+    pub ffn_s: f64,
+    pub other_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total_s(&self) -> f64 {
+        self.predict_s
+            + self.cache_mgmt_s
+            + self.transfer_s
+            + self.attention_s
+            + self.ffn_s
+            + self.other_s
+    }
+}
+
+/// Full run telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    pub traffic: Traffic,
+    pub phases: PhaseTimes,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    /// Time to first token, seconds (Fig 11a).
+    pub ttft_s: f64,
+    /// HBM cache hits/misses at neuron granularity.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// DRAM cache hits/misses at neuron granularity (SSD fetches).
+    pub dram_hits: u64,
+    pub dram_misses: u64,
+    /// Peak working sets.
+    pub peak_hbm_bytes: u64,
+    pub peak_dram_bytes: u64,
+    /// Free-form counters for experiment-specific series.
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl Telemetry {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn dram_hit_ratio(&self) -> f64 {
+        let total = self.dram_hits + self.dram_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.dram_hits as f64 / total as f64
+        }
+    }
+
+    pub fn bump(&mut self, key: &str, n: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += n;
+    }
+
+    pub fn tokens_per_s(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / wall_s
+        }
+    }
+
+    /// Compact JSON dump for logs / EXPERIMENTS.md extraction.
+    pub fn to_json(&self) -> String {
+        let mut w = crate::util::text::JsonWriter::new();
+        w.begin_obj()
+            .field_int("tokens", self.tokens_generated as i64)
+            .field_num("ttft_s", self.ttft_s)
+            .field_num("hit_ratio", self.hit_ratio())
+            .field_int("ssd_to_dram", self.traffic.ssd_to_dram as i64)
+            .field_int("dram_to_hbm", self.traffic.dram_to_hbm as i64)
+            .field_int("peak_hbm", self.peak_hbm_bytes as i64)
+            .field_int("peak_dram", self.peak_dram_bytes as i64)
+            .field_num("predict_s", self.phases.predict_s)
+            .field_num("transfer_s", self.phases.transfer_s)
+            .field_num("attention_s", self.phases.attention_s)
+            .field_num("ffn_s", self.phases.ffn_s)
+            .end_obj();
+        w.finish()
+    }
+}
+
+/// RAII-free phase timer for the executed path (wall-clock).
+pub struct PhaseTimer {
+    start: Instant,
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.start = now;
+        d
+    }
+
+    pub fn lap_s(&mut self) -> f64 {
+        self.lap().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_ratio_edge_cases() {
+        let mut t = Telemetry::default();
+        assert_eq!(t.hit_ratio(), 0.0);
+        t.cache_hits = 8;
+        t.cache_misses = 2;
+        assert!((t.hit_ratio() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut t = Telemetry::default();
+        t.bump("evictions", 2);
+        t.bump("evictions", 3);
+        assert_eq!(t.counters["evictions"], 5);
+    }
+
+    #[test]
+    fn json_dump_is_wellformed_shape() {
+        let t = Telemetry {
+            tokens_generated: 10,
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"tokens\":10"));
+    }
+
+    #[test]
+    fn traffic_total() {
+        let tr = Traffic {
+            ssd_to_dram: 1,
+            dram_to_hbm: 2,
+            hbm_to_dram: 3,
+            hbm_internal: 4,
+        };
+        assert_eq!(tr.total(), 10);
+    }
+
+    #[test]
+    fn phase_timer_laps_advance() {
+        let mut t = PhaseTimer::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = t.lap_s();
+        assert!(a >= 0.002);
+        let b = t.lap_s();
+        assert!(b < a, "second lap restarted");
+    }
+}

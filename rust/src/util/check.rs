@@ -1,0 +1,84 @@
+//! From-scratch property-testing harness (proptest is unavailable
+//! offline). `Check` runs a property over N randomized cases generated
+//! from a deterministic RNG; on failure it reports the seed and case
+//! index so the exact case can be replayed.
+
+use crate::util::rng::Rng;
+
+pub struct Check {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Check {
+    fn default() -> Self {
+        Check {
+            cases: 256,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl Check {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Check { cases, seed }
+    }
+
+    /// Run a property. `prop` receives a fresh RNG per case and returns
+    /// `Err(msg)` on violation.
+    pub fn run<F: FnMut(&mut Rng) -> Result<(), String>>(&self, name: &str, mut prop: F) {
+        for i in 0..self.cases {
+            // Derive each case seed so one failing case is reproducible
+            // without re-running earlier cases.
+            let mut rng = Rng::new(self.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property {name:?} failed at case {i}/{} (seed {:#x}): {msg}",
+                    self.cases, self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        Check::new(50, 1).run("trivial", |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_context() {
+        Check::new(10, 2).run("always-fails", |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0], &[1.0001], 1e-3, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational utilities built from scratch (offline environment: no
+//! clap/serde/criterion/proptest/tokio). Each submodule replaces one of
+//! those crates with exactly what this project needs.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod pool;
+pub mod rng;
+pub mod text;

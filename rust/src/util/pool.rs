@@ -1,0 +1,166 @@
+//! From-scratch thread pool + single-consumer work channel (tokio is
+//! unavailable offline). Used by the SSD preloader's I/O threads and the
+//! TCP server's worker pool.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Number of jobs submitted but not yet finished (for `wait_idle`).
+    inflight: Mutex<usize>,
+    idle_cv: Condvar,
+}
+
+/// Fixed-size thread pool with FIFO job queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            inflight: Mutex::new(0),
+            idle_cv: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("m2cache-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Enqueue a job. Panics if the pool is shut down.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        assert!(
+            !self.shared.shutdown.load(Ordering::SeqCst),
+            "submit after shutdown"
+        );
+        {
+            let mut inflight = self.shared.inflight.lock().unwrap();
+            *inflight += 1;
+        }
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let mut inflight = self.shared.inflight.lock().unwrap();
+        while *inflight > 0 {
+            inflight = self.shared.idle_cv.wait(inflight).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        job();
+        let mut inflight = sh.inflight.lock().unwrap();
+        *inflight -= 1;
+        if *inflight == 0 {
+            sh.idle_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle(); // must not block
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // shutdown drains queue? No: shutdown stops at queue-empty.
+        // Jobs already dequeued finish; remaining may be dropped. We only
+        // assert no deadlock/panic here.
+    }
+
+    #[test]
+    fn fifo_single_thread_ordering() {
+        let pool = ThreadPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..10 {
+            let o = Arc::clone(&order);
+            pool.submit(move || o.lock().unwrap().push(i));
+        }
+        pool.wait_idle();
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,217 @@
+//! Tiny text utilities: a JSON writer for metric dumps and a key=value
+//! config-file parser (serde is unavailable offline).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Streaming JSON object/array writer. Values are escaped; layout is
+/// compact. Only what the telemetry dumps need — not a general library.
+#[derive(Default)]
+pub struct JsonWriter {
+    buf: String,
+    needs_comma: Vec<bool>,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn comma(&mut self) {
+        if let Some(top) = self.needs_comma.last_mut() {
+            if *top {
+                self.buf.push(',');
+            }
+            *top = true;
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.comma();
+        self.buf.push('{');
+        self.needs_comma.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.needs_comma.pop();
+        self.buf.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.comma();
+        self.buf.push('[');
+        self.needs_comma.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.needs_comma.pop();
+        self.buf.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.comma();
+        write!(self.buf, "{}:", escape(k)).unwrap();
+        // After a key, suppress the next comma (value follows directly).
+        if let Some(top) = self.needs_comma.last_mut() {
+            *top = false;
+        }
+        self
+    }
+
+    pub fn str_val(&mut self, v: &str) -> &mut Self {
+        self.comma();
+        self.buf.push_str(&escape(v));
+        self
+    }
+
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.comma();
+        if v.is_finite() {
+            write!(self.buf, "{v}").unwrap();
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn int(&mut self, v: i64) -> &mut Self {
+        self.comma();
+        write!(self.buf, "{v}").unwrap();
+        self
+    }
+
+    pub fn boolean(&mut self, v: bool) -> &mut Self {
+        self.comma();
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn field_str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k).str_val(v)
+    }
+
+    pub fn field_num(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k).num(v)
+    }
+
+    pub fn field_int(&mut self, k: &str, v: i64) -> &mut Self {
+        self.key(k).int(v)
+    }
+
+    pub fn finish(self) -> String {
+        assert!(self.needs_comma.is_empty(), "unbalanced JSON writer");
+        self.buf
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                write!(out, "\\u{:04x}", c as u32).unwrap()
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse a simple `key = value` config text. `#` starts a comment;
+/// section headers `[name]` prefix following keys as `name.key`.
+pub fn parse_config(text: &str) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().trim_matches('"').to_string());
+        }
+    }
+    map
+}
+
+/// Format a byte count for humans.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_object_roundtrip_shape() {
+        let mut w = JsonWriter::new();
+        w.begin_obj()
+            .field_str("name", "m2\"cache")
+            .field_num("x", 1.5)
+            .key("arr")
+            .begin_arr()
+            .int(1)
+            .int(2)
+            .end_arr()
+            .field_int("n", -3)
+            .end_obj();
+        let s = w.finish();
+        assert_eq!(s, r#"{"name":"m2\"cache","x":1.5,"arr":[1,2],"n":-3}"#);
+    }
+
+    #[test]
+    fn json_nan_becomes_null() {
+        let mut w = JsonWriter::new();
+        w.begin_obj().field_num("x", f64::NAN).end_obj();
+        assert_eq!(w.finish(), r#"{"x":null}"#);
+    }
+
+    #[test]
+    fn config_sections_and_comments() {
+        let cfg = parse_config(
+            "a = 1 # comment\n[tier]\nbw = 25e9\nname = \"ssd\"\n\n# full-line\n",
+        );
+        assert_eq!(cfg.get("a").map(String::as_str), Some("1"));
+        assert_eq!(cfg.get("tier.bw").map(String::as_str), Some("25e9"));
+        assert_eq!(cfg.get("tier.name").map(String::as_str), Some("ssd"));
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+}

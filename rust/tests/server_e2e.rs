@@ -1,0 +1,82 @@
+//! End-to-end TCP serving test: boots the real server (executed engine
+//! + PJRT) on an ephemeral port, runs concurrent clients, and checks
+//! the protocol + results. Needs `make artifacts`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::mpsc;
+
+fn have_artifacts() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/layer_step.hlo.txt")
+        .exists()
+}
+
+fn request(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+#[test]
+fn serves_concurrent_clients_and_stats() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let n_gen = 4usize; // GEN requests answered before shutdown
+    let server = std::thread::spawn(move || {
+        let engine = m2cache::coordinator::ExecEngine::new(
+            &Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            m2cache::coordinator::EngineConfig::full(),
+        )
+        .unwrap();
+        m2cache::coordinator::server::serve(
+            engine,
+            "127.0.0.1:0",
+            Some(n_gen as u64),
+            move |a| {
+                let _ = addr_tx.send(a);
+            },
+        )
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    // STATS must answer without consuming a GEN slot.
+    let stats = request(addr, "STATS");
+    assert!(stats.starts_with('{') && stats.contains("enqueued"), "{stats}");
+
+    // Bad request → ERR.
+    assert!(request(addr, "NONSENSE").starts_with("ERR"));
+    assert!(request(addr, "GEN notanumber hi").starts_with("ERR"));
+
+    // Concurrent GENs.
+    let mut clients = Vec::new();
+    for i in 0..n_gen {
+        clients.push(std::thread::spawn(move || {
+            request(addr, &format!("GEN 8 the quick brown fox {i}"))
+        }));
+    }
+    let mut oks = 0;
+    for c in clients {
+        let reply = c.join().unwrap();
+        assert!(reply.starts_with("OK "), "{reply}");
+        // OK <id> <queue_ms> <total_ms> <text>
+        let mut parts = reply.split_whitespace();
+        parts.next();
+        let _id: u64 = parts.next().unwrap().parse().unwrap();
+        let queue_ms: f64 = parts.next().unwrap().parse().unwrap();
+        let total_ms: f64 = parts.next().unwrap().parse().unwrap();
+        assert!(total_ms >= queue_ms);
+        oks += 1;
+    }
+    assert_eq!(oks, n_gen);
+    server.join().unwrap();
+}

@@ -1,0 +1,140 @@
+//! Cross-cutting invariants of the simulated stack, run as randomized
+//! property sweeps over configurations (from-scratch `util::check`
+//! harness; proptest is unavailable offline).
+
+use m2cache::baseline::ZeroInfinityEngine;
+use m2cache::coordinator::{EngineConfig, PolicyKind, SimEngine};
+use m2cache::memsim::HardwareSpec;
+use m2cache::model::spec::ModelSpec;
+use m2cache::precision::plan::PrecisionRatios;
+use m2cache::util::check::Check;
+use m2cache::util::rng::Rng;
+
+fn random_config(rng: &mut Rng) -> EngineConfig {
+    let fp16 = 0.02 + 0.08 * rng.f64();
+    let int8 = 0.02 + 0.08 * rng.f64();
+    let int4 = 0.05 + 0.15 * rng.f64();
+    let mut cfg = EngineConfig::full();
+    cfg.ratios = PrecisionRatios::new(fp16, int8, int4);
+    cfg.policy = [PolicyKind::Atu, PolicyKind::Lru, PolicyKind::SlidingWindow(2)]
+        [rng.range(0, 3)];
+    cfg.use_ssd = rng.chance(0.7);
+    cfg.use_hbm_cache = rng.chance(0.8);
+    cfg.dram_capacity = (8 + rng.below(48)) << 30;
+    cfg.fixed_layers = rng.range(0, 4);
+    cfg.preload_depth = rng.range(1, 4);
+    cfg.seed = rng.next_u64();
+    cfg.trace_overlap = 0.5 + 0.45 * rng.f64();
+    cfg
+}
+
+fn spec_of(rng: &mut Rng) -> ModelSpec {
+    match rng.range(0, 3) {
+        0 => ModelSpec::llama2_7b(),
+        1 => ModelSpec::llama2_13b(),
+        _ => ModelSpec::falcon_40b(),
+    }
+}
+
+#[test]
+fn sim_engine_invariants_hold_across_configs() {
+    let gpu = m2cache::carbon::find_gpu("RTX3090").unwrap();
+    Check::new(12, 0x51B).run("sim engine invariants", |rng| {
+        let spec = spec_of(rng);
+        let cfg = random_config(rng);
+        let dram_cap = cfg.dram_capacity;
+        let use_ssd = cfg.use_ssd;
+        let mut e = SimEngine::new(spec, HardwareSpec::rtx3090_testbed(), cfg);
+        let r = e.run(rng.range(2, 16), rng.range(2, 10), gpu);
+
+        if r.tokens_per_s <= 0.0 {
+            return Err("non-positive throughput".into());
+        }
+        if r.ttft_s <= 0.0 || r.ttft_s > r.total_s + 1e-9 {
+            return Err(format!("ttft {} vs total {}", r.ttft_s, r.total_s));
+        }
+        // Telemetry conservation: hits + misses == total plan entries.
+        let t = &r.telemetry;
+        if t.cache_hits + t.cache_misses == 0 {
+            return Err("no cache activity recorded".into());
+        }
+        // SSD traffic only exists with the SSD tier.
+        if !use_ssd && t.traffic.ssd_to_dram != 0 {
+            return Err("ssd traffic without ssd tier".into());
+        }
+        // DRAM stays within (configured or model-pinned) bounds; with
+        // the SSD tier it must respect the user capacity.
+        if use_ssd && t.peak_dram_bytes > dram_cap.max(8 << 30) * 2 {
+            return Err(format!(
+                "dram {} far exceeds cap {}",
+                t.peak_dram_bytes, dram_cap
+            ));
+        }
+        if r.carbon.total_g() <= 0.0 {
+            return Err("zero carbon".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_overlap_never_hurts_throughput() {
+    let gpu = m2cache::carbon::find_gpu("RTX3090").unwrap();
+    let run = |overlap: f64| {
+        let mut cfg = EngineConfig::full();
+        cfg.trace_overlap = overlap;
+        let mut e = SimEngine::new(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::rtx3090_testbed(),
+            cfg,
+        );
+        e.run(8, 16, gpu).tokens_per_s
+    };
+    let lo = run(0.5);
+    let hi = run(0.95);
+    assert!(
+        hi > lo,
+        "higher token overlap must help the ATU cache: {lo} vs {hi}"
+    );
+}
+
+#[test]
+fn zero_infinity_throughput_independent_of_output_phrasing() {
+    // Dense streaming has no cache: per-token rate is flat in sequence
+    // length (modulo KV growth, negligible here).
+    let gpu = m2cache::carbon::find_gpu("RTX3090").unwrap();
+    let hw = HardwareSpec::rtx3090_testbed();
+    let mut a = ZeroInfinityEngine::new(ModelSpec::llama2_7b(), hw.clone(), 64 << 30);
+    let ra = a.run(8, 8, gpu);
+    let mut b = ZeroInfinityEngine::new(ModelSpec::llama2_7b(), hw, 64 << 30);
+    let rb = b.run(8, 32, gpu);
+    let rel = (ra.tokens_per_s - rb.tokens_per_s).abs() / ra.tokens_per_s;
+    assert!(rel < 0.05, "{} vs {}", ra.tokens_per_s, rb.tokens_per_s);
+}
+
+#[test]
+fn bigger_models_are_slower_everywhere() {
+    let gpu = m2cache::carbon::find_gpu("RTX3090").unwrap();
+    let hw = HardwareSpec::rtx3090_testbed();
+    let mut rates = Vec::new();
+    for spec in [
+        ModelSpec::llama2_7b(),
+        ModelSpec::llama2_13b(),
+        ModelSpec::llama2_70b(),
+    ] {
+        let mut e = SimEngine::new(spec, hw.clone(), EngineConfig::full());
+        rates.push(e.run(4, 8, gpu).tokens_per_s);
+    }
+    assert!(rates[0] > rates[1] && rates[1] > rates[2], "{rates:?}");
+}
+
+#[test]
+fn carbon_scales_with_generation_length() {
+    let gpu = m2cache::carbon::find_gpu("RTX3090").unwrap();
+    let hw = HardwareSpec::rtx3090_testbed();
+    let mut short = SimEngine::new(ModelSpec::llama2_13b(), hw.clone(), EngineConfig::full());
+    let rs = short.run(8, 8, gpu);
+    let mut long = SimEngine::new(ModelSpec::llama2_13b(), hw, EngineConfig::full());
+    let rl = long.run(8, 64, gpu);
+    assert!(rl.carbon.total_g() > 2.0 * rs.carbon.total_g());
+}
