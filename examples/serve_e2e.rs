@@ -1,11 +1,16 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §E2E run): starts the
-//! M2Cache TCP server on the executed tiny model, fires a batch of
-//! concurrent client requests at it, and reports per-request latency +
-//! aggregate throughput — proving L3 (rust coordinator + caches +
-//! preloader) ∘ L2 (JAX layer graph) ∘ L1 (Pallas sparse-FFN kernel)
-//! compose on a real serving workload with Python nowhere in sight.
+//! M2Cache TCP server on the executed tiny model with an interleaving
+//! scheduler, fires a batch of concurrent client requests at it, and
+//! reports per-request latency + aggregate throughput — proving L3
+//! (rust coordinator + sessions + caches + preloader) ∘ L2 (JAX layer
+//! graph) ∘ L1 (Pallas sparse-FFN kernel) compose on a real serving
+//! workload with Python nowhere in sight.
 //!
 //!   make artifacts && cargo run --release --example serve_e2e
+//!
+//! The server keeps `SESSIONS` decode sessions in flight, round-robin
+//! interleaving token steps over the shared warm HBM/DRAM caches, so
+//! no client head-of-line-blocks the others.
 
 use m2cache::coordinator::{server, EngineConfig, ExecEngine};
 use std::io::{BufRead, BufReader, Write};
@@ -17,6 +22,7 @@ use std::time::Instant;
 const N_CLIENTS: usize = 4;
 const REQS_PER_CLIENT: usize = 3;
 const GEN_TOKENS: usize = 32;
+const SESSIONS: usize = 4;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = Path::new("artifacts");
@@ -27,17 +33,25 @@ fn main() -> anyhow::Result<()> {
     let total = (N_CLIENTS * REQS_PER_CLIENT) as u64;
 
     // Server thread. The engine is built *inside* the thread: PJRT
-    // handles are not Send, and the decode loop owns them for life —
-    // exactly the paper's single-GPU, batch-1 serving shape.
+    // handles are not Send, and the decode thread owns them for life —
+    // the paper's single-GPU shape, now multiplexed across sessions.
     let (addr_tx, addr_rx) = mpsc::channel();
-    let server = std::thread::spawn(move || {
-        let engine = ExecEngine::new(Path::new("artifacts"), EngineConfig::full())?;
-        server::serve(engine, "127.0.0.1:0", Some(total), move |a| {
+    let server = std::thread::spawn(move || -> anyhow::Result<m2cache::telemetry::Telemetry> {
+        let mut cfg = EngineConfig::full();
+        cfg.max_sessions = SESSIONS;
+        let engine = ExecEngine::new(Path::new("artifacts"), cfg)?;
+        // serve() hands the warm engine back; only its (Send) telemetry
+        // crosses the thread boundary — PJRT handles are not Send.
+        let engine = server::serve(engine, "127.0.0.1:0", Some(total), move |a| {
             let _ = addr_tx.send(a);
-        })
+        })?;
+        Ok(engine.tel)
     });
     let addr = addr_rx.recv()?;
-    println!("server on {addr}; {N_CLIENTS} clients x {REQS_PER_CLIENT} requests x {GEN_TOKENS} tokens");
+    println!(
+        "server on {addr}; {SESSIONS} interleaved sessions; \
+         {N_CLIENTS} clients x {REQS_PER_CLIENT} requests x {GEN_TOKENS} tokens"
+    );
 
     let prompts = [
         "the quick brown fox ",
@@ -63,25 +77,32 @@ fn main() -> anyhow::Result<()> {
     drop(res_tx);
 
     let mut latencies = Vec::new();
+    let mut ttfts = Vec::new();
     let mut failures = 0;
     for (c, r, dt, line) in res_rx {
         if line.starts_with("OK") {
-            let preview: String = line.chars().skip(3).take(48).collect();
-            println!("client {c} req {r}: {dt:.2}s  {preview}...");
+            // OK <id> <queue_ms> <ttft_ms> <total_ms> <text...>
+            let mut parts = line.splitn(6, ' ');
+            let ttft_ms: f64 = parts.nth(3).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+            let _total_ms = parts.next();
+            let preview: String = parts.next().unwrap_or("").chars().take(40).collect();
+            println!("client {c} req {r}: {dt:.2}s (ttft {ttft_ms:.0} ms)  {preview}...");
             latencies.push(dt);
+            ttfts.push(ttft_ms / 1e3);
         } else {
             println!("client {c} req {r}: FAILED: {line}");
             failures += 1;
         }
     }
     let wall = bench_start.elapsed().as_secs_f64();
-    server.join().expect("server thread")?;
+    let tel = server.join().expect("server thread")?;
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
     anyhow::ensure!(failures == 0, "{failures} requests failed");
     let n = latencies.len();
     println!("\n--- e2e serving summary ---");
-    println!("requests  : {n} ok, {failures} failed");
+    println!("requests  : {n} ok, {failures} failed ({SESSIONS} sessions)");
     println!(
         "latency   : p50 {:.2}s  p95 {:.2}s  max {:.2}s",
         latencies[n / 2],
@@ -89,9 +110,21 @@ fn main() -> anyhow::Result<()> {
         latencies[n - 1]
     );
     println!(
+        "ttft      : p50 {:.2}s  max {:.2}s",
+        ttfts[n / 2],
+        ttfts[n - 1]
+    );
+    println!(
         "throughput: {:.2} req/s | {:.1} generated tok/s aggregate",
         n as f64 / wall,
         (n * GEN_TOKENS) as f64 / wall
+    );
+    println!(
+        "engine    : {} tokens over {} sessions (peak {} concurrent) | kv pool {}",
+        tel.tokens_generated,
+        tel.counters.get("sessions_closed").copied().unwrap_or(0),
+        tel.peak_active_sessions,
+        m2cache::util::text::fmt_bytes(tel.kv_pool_bytes),
     );
     Ok(())
 }

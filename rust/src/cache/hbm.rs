@@ -562,6 +562,155 @@ mod tests {
     }
 
     #[test]
+    fn cache_unit_invariants_under_random_ops() {
+        // Property sweep over random insert/evict/touch sequences:
+        //   1. slot conservation: residents + free slots == capacity
+        //   2. mask agrees with residency (per-slot and in total)
+        //   3. no slot is assigned to two neurons
+        //   4. the use clock is monotone and `last_use` never runs ahead
+        //      of it; a just-touched resident holds the newest stamp
+        //   5. lru_victim is exactly the min-(last_use, id) resident
+        Check::new(64, 0x51075).run("cache unit invariants", |rng| {
+            let cap = rng.range(1, 24);
+            let mut u = CacheUnit::meta_only(cap);
+            for op in 0..64 {
+                let neuron = rng.below(32) as u32;
+                let prev_tick = u.tick;
+                match rng.range(0, 4) {
+                    0 => {
+                        if u.free_slots() > 0 && u.dtype_of(neuron).is_none() {
+                            let dt = [Dtype::F16, Dtype::Int8, Dtype::Int4]
+                                [rng.range(0, 3)];
+                            let slot = u.insert(neuron, dt, &[]);
+                            if u.last_use[slot] != u.tick {
+                                return Err(format!(
+                                    "op {op}: insert did not stamp last_use"
+                                ));
+                            }
+                        }
+                    }
+                    1 => {
+                        let was = u.dtype_of(neuron).is_some();
+                        if u.evict(neuron) != was {
+                            return Err(format!("op {op}: evict return mismatch"));
+                        }
+                    }
+                    2 => {
+                        let resident = u.dtype_of(neuron).is_some();
+                        u.touch(neuron);
+                        if resident {
+                            let slot = u.slot_of(neuron).unwrap();
+                            if u.last_use[slot] != u.tick || u.tick != prev_tick + 1 {
+                                return Err(format!(
+                                    "op {op}: touch did not advance the clock"
+                                ));
+                            }
+                        } else if u.tick != prev_tick {
+                            return Err(format!("op {op}: touch of absent advanced clock"));
+                        }
+                    }
+                    _ => {} // no-op round: re-check invariants only
+                }
+                if u.tick < prev_tick {
+                    return Err(format!("op {op}: use clock went backwards"));
+                }
+                // 1. Conservation.
+                if u.len() + u.free_slots() != cap {
+                    return Err(format!(
+                        "op {op}: {} resident + {} free != {cap}",
+                        u.len(),
+                        u.free_slots()
+                    ));
+                }
+                // 2 + 3. Mask/residency agreement, slot uniqueness.
+                let residents = u.resident_neurons();
+                let mut slots: Vec<usize> = Vec::with_capacity(residents.len());
+                for &n in &residents {
+                    let slot = u.slot_of(n).ok_or_else(|| {
+                        format!("op {op}: resident {n} has no slot")
+                    })?;
+                    if u.mask[slot] != 1.0 {
+                        return Err(format!("op {op}: live slot {slot} masked dead"));
+                    }
+                    if u.last_use[slot] > u.tick {
+                        return Err(format!("op {op}: last_use ahead of clock"));
+                    }
+                    slots.push(slot);
+                }
+                slots.sort_unstable();
+                slots.dedup();
+                if slots.len() != residents.len() {
+                    return Err(format!("op {op}: slot double-assignment"));
+                }
+                let live_mask = u.mask.iter().filter(|&&m| m == 1.0).count();
+                if live_mask != residents.len() {
+                    return Err(format!(
+                        "op {op}: {live_mask} live mask slots vs {} residents",
+                        residents.len()
+                    ));
+                }
+                // 5. LRU victim is the stalest resident.
+                let expect = residents
+                    .iter()
+                    .map(|&n| (u.last_use[u.slot_of(n).unwrap()], n))
+                    .min();
+                if u.lru_victim() != expect.map(|(_, n)| n) {
+                    return Err(format!("op {op}: lru_victim not the stalest"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn atu_and_lru_agree_when_capacity_equals_plan() {
+        // With the unit sized exactly to the per-token plan, LRU's slack
+        // disappears: both policies must end each update holding exactly
+        // the plan, with identical hit counts and identical load
+        // multisets for the identical plan sequence. (The policies only
+        // diverge when capacity exceeds the plan — LRU keeps extras.)
+        Check::new(48, 0xA7B1).run("atu == lru at exact capacity", |rng| {
+            let n = 60usize;
+            let ratios = PrecisionRatios::new(0.1, 0.1, 0.2); // plan = 24
+            let mut ua = CacheUnit::meta_only(24);
+            let mut ul = CacheUnit::meta_only(24);
+            let mut pa = AtuPolicy;
+            let mut pl = LruPolicy;
+            for step in 0..12 {
+                let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let plan = plan_from_scores(&scores, &ratios);
+                let ra = pa.update(&mut ua, &plan);
+                for na in &ra.load {
+                    ua.insert(na.neuron, na.dtype, &[]);
+                }
+                let rl = pl.update(&mut ul, &plan);
+                for na in &rl.load {
+                    ul.insert(na.neuron, na.dtype, &[]);
+                }
+                if ra.hits != rl.hits {
+                    return Err(format!(
+                        "step {step}: atu {} hits vs lru {}",
+                        ra.hits, rl.hits
+                    ));
+                }
+                // Loads are returned neuron-sorted by both policies, so
+                // multiset equality is plain equality.
+                if ra.load != rl.load {
+                    return Err(format!(
+                        "step {step}: load sets differ ({} vs {})",
+                        ra.load.len(),
+                        rl.load.len()
+                    ));
+                }
+                if ua.resident_neurons() != ul.resident_neurons() {
+                    return Err(format!("step {step}: residency diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn slot_of_tracks_residency() {
         let mut u = CacheUnit::meta_only(2);
         assert_eq!(u.slot_of(5), None);

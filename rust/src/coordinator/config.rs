@@ -72,6 +72,10 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Token-to-token overlap for synthetic traces (Fig 6: ~0.8).
     pub trace_overlap: f64,
+    /// Concurrent decode sessions the engine reserves KV slots for (the
+    /// scheduler's admission bound; `--sessions N` on the CLI). 1 keeps
+    /// the paper's batch-1 decode shape.
+    pub max_sessions: usize,
 }
 
 impl Default for EngineConfig {
@@ -90,6 +94,7 @@ impl Default for EngineConfig {
             int4_group: crate::model::weights::INT4_GROUP,
             seed: 0,
             trace_overlap: 0.8,
+            max_sessions: 1,
         }
     }
 }

@@ -5,11 +5,19 @@
 //! dequantized into the cache units' contiguous buffers, and the HLO
 //! artifacts execute on the CPU PJRT client. Python is nowhere on this
 //! path.
+//!
+//! Per-request decode state lives in [`DecodeSession`]s drawing KV
+//! slots from a bounded [`KvPool`]; the engine itself holds only the
+//! shared, warm state (runtime, weight store, cache units, DRAM cache,
+//! preloader). See [`crate::coordinator::scheduler`] for how sessions
+//! interleave.
 
 use crate::cache::{
     CacheUnit, DramCache, FileFlash, FlashStore, HbmPolicy, Preloader,
 };
 use crate::coordinator::config::EngineConfig;
+use crate::coordinator::request::Request;
+use crate::coordinator::session::{DecodeSession, KvPool, SessionEngine};
 use crate::model::weights::{PredictorWeights, WeightStore};
 use crate::precision::plan::{plan_from_scores, LayerPlan};
 use crate::precision::quant::wire_bytes;
@@ -19,6 +27,7 @@ use crate::telemetry::{PhaseTimer, Telemetry};
 use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 pub struct ExecEngine {
     rt: Runtime,
@@ -30,14 +39,16 @@ pub struct ExecEngine {
     final_norm: xla::Literal,
     attn: Vec<[xla::Literal; 6]>,
     predictors: Vec<PredictorWeights>,
-    // The multi-level cache.
+    // The multi-level cache — shared across sessions and kept warm.
     units: Vec<CacheUnit>,
     policy: Box<dyn HbmPolicy>,
     dram: DramCache,
     preloader: Preloader,
-    // KV caches, owned host-side ([S*d] per layer).
-    kcache: Vec<Vec<f32>>,
-    vcache: Vec<Vec<f32>>,
+    // Per-session KV cache slots ([S*d] per layer per slot). Slot
+    // `legacy_slot` backs the single-cursor feed()/reset() API; the
+    // remaining `cfg.max_sessions` slots serve concurrent sessions.
+    pool: KvPool,
+    legacy_slot: usize,
     pos: usize,
     pub overlap: OverlapTracker,
     pub tel: Telemetry,
@@ -121,6 +132,13 @@ impl ExecEngine {
 
         let n_layers = spec.n_layers;
         let policy = cfg.policy.build();
+        // One KV slot per concurrent session plus one for the legacy
+        // single-cursor feed() path, so serving and direct scoring never
+        // contend for the same buffers.
+        let mut pool = KvPool::new(cfg.max_sessions.max(1) + 1, n_layers, max_seq * d);
+        let legacy_slot = pool.acquire().expect("fresh pool has a slot");
+        let mut tel = Telemetry::default();
+        tel.kv_pool_bytes = pool.bytes();
         Ok(ExecEngine {
             rt,
             store,
@@ -134,11 +152,11 @@ impl ExecEngine {
             policy,
             dram,
             preloader,
-            kcache: vec![vec![0.0; max_seq * d]; n_layers],
-            vcache: vec![vec![0.0; max_seq * d]; n_layers],
+            pool,
+            legacy_slot,
             pos: 0,
             overlap: OverlapTracker::new(n_layers),
-            tel: Telemetry::default(),
+            tel,
             scores_buf: Vec::new(),
         })
     }
@@ -169,21 +187,31 @@ impl ExecEngine {
         &self.cfg
     }
 
-    /// Reset per-request state (KV cache, position). Cache units and
-    /// DRAM stay warm — exactly like a long-running server.
+    /// Reset the legacy single-cursor state (KV slot, position). Cache
+    /// units and DRAM stay warm — exactly like a long-running server.
+    /// Concurrent sessions are unaffected; they own their own slots.
     pub fn reset(&mut self) {
-        for k in &mut self.kcache {
-            k.fill(0.0);
-        }
-        for v in &mut self.vcache {
-            v.fill(0.0);
-        }
+        self.pool.zero(self.legacy_slot);
         self.pos = 0;
     }
 
-    /// Feed one token; returns the logits for the next position.
+    /// Feed one token on the legacy single-cursor path (teacher-forced
+    /// scoring, uncertainty estimation, microbenches); returns the
+    /// logits for the next position. Serving goes through sessions.
     pub fn feed(&mut self, token: u32) -> Result<Vec<f32>> {
-        anyhow::ensure!(self.pos < self.max_seq, "sequence full ({})", self.max_seq);
+        let logits = self.forward_at(token, self.legacy_slot, self.pos)?;
+        self.pos += 1;
+        Ok(logits)
+    }
+
+    /// Run one token through the model, reading and writing the KV rows
+    /// of `slot` at `pos`. This is the engine's only compute path: both
+    /// the legacy cursor and every [`DecodeSession`] land here, so
+    /// interleaved sessions execute token-for-token the same HLO calls
+    /// a sequential run would (the shared caches below are numerically
+    /// transparent — they change traffic, never math).
+    fn forward_at(&mut self, token: u32, slot: usize, pos: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(pos < self.max_seq, "sequence full ({})", self.max_seq);
         anyhow::ensure!((token as usize) < self.spec().vocab, "token {token} oob");
         let d = self.spec().d_model;
         let mut timer = PhaseTimer::new();
@@ -272,8 +300,8 @@ impl ExecEngine {
                 step_mask[slot] = 1.0;
             }
             let m = lit_f32(&step_mask, &[unit.capacity as i64])?;
-            let kc = lit_f32(&self.kcache[l], &[s, d as i64])?;
-            let vc = lit_f32(&self.vcache[l], &[s, d as i64])?;
+            let kc = lit_f32(self.pool.k_layer(slot, l), &[s, d as i64])?;
+            let vc = lit_f32(self.pool.v_layer(slot, l), &[s, d as i64])?;
             let a = &self.attn[l];
             let out = self.rt.exec(
                 "layer_step",
@@ -287,7 +315,7 @@ impl ExecEngine {
                     a[5].clone(),
                     kc,
                     vc,
-                    lit_i32(self.pos as i32),
+                    lit_i32(pos as i32),
                     w,
                     m,
                 ],
@@ -297,8 +325,7 @@ impl ExecEngine {
                 .map_err(|_| anyhow::anyhow!("layer_step arity"))?;
             let kv = to_vec_f32(&k_new)?;
             let vv = to_vec_f32(&v_new)?;
-            self.kcache[l][self.pos * d..(self.pos + 1) * d].copy_from_slice(&kv);
-            self.vcache[l][self.pos * d..(self.pos + 1) * d].copy_from_slice(&vv);
+            self.pool.write_token(slot, l, pos, d, &kv, &vv);
             x = x_out;
             self.tel.phases.ffn_s += timer.lap_s();
 
@@ -313,7 +340,6 @@ impl ExecEngine {
             &[x, self.embed.clone(), self.final_norm.clone()],
         )?;
         self.tel.phases.other_s += timer.lap_s();
-        self.pos += 1;
         self.tel.traffic.ssd_to_dram = self.preloader.bytes_loaded;
         self.tel.peak_dram_bytes = self.tel.peak_dram_bytes.max(self.dram.used_bytes());
         Ok(to_vec_f32(&logits)?)
@@ -337,29 +363,27 @@ impl ExecEngine {
         self.store.read_neuron_raw(layer, na.neuron, na.dtype)
     }
 
-    /// Greedy-decode `n_gen` tokens after feeding `prompt`.
-    /// Returns generated tokens; telemetry accumulates.
+    /// Greedy-decode `n_gen` tokens after feeding `prompt`, as a
+    /// single-session run through the session machinery (one request,
+    /// stepped to completion). Telemetry accumulates.
     pub fn generate(&mut self, prompt: &[u32], n_gen: usize) -> Result<Vec<u32>> {
-        self.reset();
-        let start = std::time::Instant::now();
-        let mut logits = Vec::new();
-        self.tel.prefill_tokens += prompt.len() as u64;
-        for &t in prompt {
-            logits = self.feed(t)?;
-        }
-        let mut out = Vec::with_capacity(n_gen);
-        for i in 0..n_gen {
-            let next = argmax(&logits);
-            out.push(next);
-            self.tel.tokens_generated += 1;
-            if i == 0 {
-                self.tel.ttft_s = start.elapsed().as_secs_f64();
-            }
-            if i + 1 < n_gen {
-                logits = self.feed(next)?;
+        let req = Request {
+            id: 0,
+            prompt: prompt.to_vec(),
+            max_new: n_gen,
+            arrived: Instant::now(),
+        };
+        let mut s = SessionEngine::open(self, req)?;
+        let mut result = Ok(());
+        while !s.is_done() {
+            if let Err(e) = s.step(self) {
+                result = Err(e);
+                break;
             }
         }
-        Ok(out)
+        SessionEngine::close(self, &mut s);
+        result?;
+        Ok(s.generated)
     }
 
     /// Teacher-forced scoring: feeds `tokens` and returns (mean NLL,
@@ -401,6 +425,50 @@ impl ExecEngine {
             logits = self.feed(next)?;
         }
         Ok(total)
+    }
+}
+
+impl SessionEngine for ExecEngine {
+    fn capacity(&self) -> usize {
+        self.cfg.max_sessions.max(1)
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        for &t in &req.prompt {
+            anyhow::ensure!((t as usize) < self.spec().vocab, "token {t} oob");
+        }
+        let need = req.prompt.len() + req.max_new.saturating_sub(1);
+        anyhow::ensure!(
+            need <= self.max_seq,
+            "request needs {need} positions > max_seq {}",
+            self.max_seq
+        );
+        let slot = self
+            .pool
+            .acquire()
+            .ok_or_else(|| anyhow::anyhow!("session slots exhausted"))?;
+        // The legacy cursor permanently holds one slot; don't count it.
+        let active = (self.pool.in_use() - 1) as u64;
+        self.tel.peak_active_sessions = self.tel.peak_active_sessions.max(active);
+        self.tel.bump("sessions_opened", 1);
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        self.forward_at(token, s.slot(), s.pos())
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        self.pool.release(s.slot());
+        self.tel.prefill_tokens += s.fed() as u64;
+        self.tel.tokens_generated += s.generated.len() as u64;
+        if !s.generated.is_empty() {
+            // Aggregate TTFT tracks the most recently completed session
+            // (matches the single-request semantics of generate()).
+            self.tel.ttft_s = s.stats.ttft_s;
+        }
+        self.tel.bump("sessions_closed", 1);
     }
 }
 

@@ -9,15 +9,21 @@
 //!   costed on the calibrated memory-hierarchy simulator (throughput /
 //!   carbon / ablation experiments).
 //!
-//! Plus the request plumbing: FIFO admission queue and the TCP server.
+//! Plus the serving plumbing: FIFO admission queue, per-request
+//! [`session::DecodeSession`]s over a bounded KV slot pool, the fair
+//! interleaving [`scheduler::Scheduler`], and the TCP server.
 
 pub mod config;
 pub mod engine_exec;
 pub mod engine_sim;
 pub mod request;
+pub mod scheduler;
 pub mod server;
+pub mod session;
 
 pub use config::{EngineConfig, PolicyKind};
 pub use engine_exec::ExecEngine;
-pub use engine_sim::{SimEngine, SimResult};
+pub use engine_sim::{SimEngine, SimResult, TenantResult};
 pub use request::{detokenize, tokenize, Request, RequestQueue, Response};
+pub use scheduler::{Completed, Outcome, Scheduler, TickReport};
+pub use session::{DecodeSession, KvPool, SessionEngine, SessionState, SessionStats, StepOutcome};

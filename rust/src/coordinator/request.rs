@@ -1,7 +1,8 @@
 //! Request types and the FIFO admission queue used by the server and
-//! batcher. The paper serves batch-size-1 decode (§5.5.2: the Deja Vu
+//! scheduler. The paper serves batch-size-1 decode (§5.5.2: the Deja Vu
 //! predictor degrades under large batches), so "batching" here means
-//! admission control + fair queueing across connections, not token
+//! admission control + fair *interleaving* of decode sessions across
+//! connections (see [`crate::coordinator::scheduler`]), not token
 //! batching.
 
 use std::collections::VecDeque;
@@ -23,6 +24,9 @@ pub struct Response {
     pub tokens: Vec<u32>,
     /// Queueing delay before decode started, seconds.
     pub queue_s: f64,
+    /// Enqueue → first generated token, seconds (the server-visible
+    /// time-to-first-token, inclusive of queueing).
+    pub ttft_s: f64,
     /// Total service time including generation, seconds.
     pub total_s: f64,
 }

@@ -1,25 +1,61 @@
 //! Line-protocol TCP server over the executed engine (tokio is
-//! unavailable offline; std::net + a dispatcher thread is all a
-//! batch-1 decode server needs — the GPU loop is the bottleneck, not
-//! connection handling).
+//! unavailable offline; std::net + a dispatcher thread is all we need —
+//! the GPU loop is the bottleneck, not connection handling).
 //!
 //! Protocol (one request per line):
-//!   `GEN <max_new> <prompt text...>`  →  `OK <id> <queue_ms> <total_ms> <text...>`
-//!   `STATS`                           →  one-line JSON telemetry
-//!   anything else                     →  `ERR <reason>`
+//!   `GEN <max_new> <prompt text...>`
+//!       → `OK <id> <queue_ms> <ttft_ms> <total_ms> <text...>`
+//!   `STATS`  → one-line JSON queue/scheduler stats
+//!   anything else → `ERR <reason>`
 //!
-//! The acceptor thread reads lines into the shared [`RequestQueue`];
-//! the single decode thread (owning the [`ExecEngine`]) drains it FIFO
-//! and writes responses back on the request's connection.
+//! The acceptor thread parses lines into the shared [`RequestQueue`];
+//! the decode thread (owning the [`ExecEngine`]) drains it into a
+//! [`Scheduler`] that keeps up to `--sessions N` decode sessions in
+//! flight, interleaving token steps round-robin so a long generation
+//! cannot head-of-line-block the rest, while every session shares the
+//! same warm HBM/DRAM caches. Each reply is written back on its
+//! request's connection the moment its session completes.
 
 use crate::coordinator::engine_exec::ExecEngine;
 use crate::coordinator::request::{detokenize, tokenize, Request, RequestQueue};
+use crate::coordinator::scheduler::{Outcome, Scheduler};
+use crate::coordinator::session::SessionEngine;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+
+/// A parsed client line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Command {
+    Gen { max_new: usize, prompt: String },
+    Stats,
+}
+
+/// Parse one protocol line (already trimmed of the newline). Pure, so
+/// the artifact-free test tier can cover the whole request grammar.
+pub fn parse_request(line: &str) -> Result<Command, &'static str> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Err("empty request");
+    }
+    if line == "STATS" {
+        return Ok(Command::Stats);
+    }
+    let Some(rest) = line.strip_prefix("GEN ") else {
+        return Err("expected GEN or STATS");
+    };
+    let mut parts = rest.splitn(2, ' ');
+    let max_new = parts.next().unwrap_or("");
+    let max_new: usize = max_new.parse().map_err(|_| "bad max_new")?;
+    let prompt = parts.next().unwrap_or("").to_string();
+    if prompt.is_empty() {
+        return Err("empty prompt");
+    }
+    Ok(Command::Gen { max_new, prompt })
+}
 
 struct Pending {
     req: Request,
@@ -31,23 +67,30 @@ struct Shared {
     cv: Condvar,
     stop: AtomicBool,
     next_id: AtomicU64,
+    /// Sessions currently in flight (for STATS).
+    active: AtomicU64,
 }
 
 /// Serve until `max_requests` have been answered (None = forever).
-/// Returns the bound local address via the callback before blocking.
+/// Reports the bound local address via the callback before blocking.
+/// Returns the engine (still warm) so callers can inspect telemetry.
 pub fn serve(
-    mut engine: ExecEngine,
+    engine: ExecEngine,
     addr: &str,
     max_requests: Option<u64>,
     on_bound: impl FnOnce(std::net::SocketAddr),
-) -> Result<()> {
+) -> Result<ExecEngine> {
     let listener = TcpListener::bind(addr)?;
-    on_bound(listener.local_addr()?);
+    // Capture the *bound* address: `addr` may carry port 0 (ephemeral),
+    // and the shutdown nudge below must hit the real port.
+    let bound = listener.local_addr()?;
+    on_bound(bound);
     let shared = Arc::new(Shared {
         queue: Mutex::new((RequestQueue::new(64), Vec::new())),
         cv: Condvar::new(),
         stop: AtomicBool::new(false),
         next_id: AtomicU64::new(1),
+        active: AtomicU64::new(0),
     });
 
     // Acceptor thread: parse lines, enqueue.
@@ -63,52 +106,92 @@ pub fn serve(
         }
     });
 
-    // Decode loop (this thread owns the engine).
+    // Decode loop (this thread owns the engine, inside the scheduler).
+    let sessions = engine.capacity();
+    let mut sched = Scheduler::new(engine, sessions);
+    let mut conns: HashMap<u64, TcpStream> = HashMap::new();
     let mut served = 0u64;
+    let mut submitted = 0u64;
     loop {
         if let Some(max) = max_requests {
             if served >= max {
-                shared.stop.store(true, Ordering::SeqCst);
-                // Nudge the acceptor loop awake.
-                let _ = TcpStream::connect(format!(
-                    "127.0.0.1:{}",
-                    addr.rsplit(':').next().unwrap_or("0")
-                ));
                 break;
             }
         }
-        let pending = {
+        // Drain arrivals into the scheduler; block only when there is
+        // nothing in flight to step. Only enough requests to fill the
+        // session slots leave the bounded RequestQueue — the rest wait
+        // there so admission backpressure ("ERR queue full") still
+        // applies — and never more than `max_requests` in total, so
+        // shutdown can't strand a half-decoded session.
+        {
             let mut guard = shared.queue.lock().unwrap();
             loop {
-                let (ref mut q, ref mut conns) = *guard;
-                if let Some(req) = q.pop() {
-                    let idx = conns
+                let (q, pend) = &mut *guard;
+                loop {
+                    if max_requests.is_some_and(|max| submitted >= max) {
+                        break;
+                    }
+                    if sched.active_len() + sched.backlog_len() >= sched.max_sessions() {
+                        break;
+                    }
+                    let Some(req) = q.pop() else { break };
+                    let idx = pend
                         .iter()
                         .position(|p| p.req.id == req.id)
                         .expect("conn for queued request");
-                    break conns.swap_remove(idx);
+                    let p = pend.swap_remove(idx);
+                    conns.insert(req.id, p.conn);
+                    sched.submit(req);
+                    submitted += 1;
+                }
+                if !sched.is_idle() {
+                    break;
                 }
                 guard = shared.cv.wait(guard).unwrap();
             }
-        };
-        let Pending { req, mut conn } = pending;
-        let queue_s = req.arrived.elapsed().as_secs_f64();
-        let start = Instant::now();
-        let reply = match engine.generate(&req.prompt, req.max_new) {
-            Ok(tokens) => format!(
-                "OK {} {:.1} {:.1} {}\n",
-                req.id,
-                queue_s * 1e3,
-                (queue_s + start.elapsed().as_secs_f64()) * 1e3,
-                detokenize(&tokens).replace('\n', " ")
-            ),
-            Err(e) => format!("ERR {e:#}\n"),
-        };
-        let _ = conn.write_all(reply.as_bytes());
-        served += 1;
+        }
+        let report = sched.tick();
+        shared
+            .active
+            .store(sched.active_len() as u64, Ordering::SeqCst);
+        for outcome in report.outcomes {
+            let id = outcome.id();
+            let reply = match outcome {
+                Outcome::Done(c) => {
+                    let r = &c.response;
+                    format!(
+                        "OK {} {:.1} {:.1} {:.1} {}\n",
+                        r.id,
+                        r.queue_s * 1e3,
+                        r.ttft_s * 1e3,
+                        r.total_s * 1e3,
+                        detokenize(&r.tokens).replace('\n', " ")
+                    )
+                }
+                Outcome::Failed { error, .. } => format!("ERR {error}\n"),
+            };
+            if let Some(mut conn) = conns.remove(&id) {
+                let _ = conn.write_all(reply.as_bytes());
+            }
+            served += 1;
+        }
     }
-    drop(acceptor); // detach; process exit reaps it in CLI usage
-    Ok(())
+    // Shutdown: stop the acceptor, nudge it awake on the *bound*
+    // address (the input addr may have asked for port 0), and join it
+    // rather than leaking the thread. Requests still waiting in the
+    // admission queue get an explicit error instead of a silent EOF.
+    shared.stop.store(true, Ordering::SeqCst);
+    {
+        let mut guard = shared.queue.lock().unwrap();
+        while guard.0.pop().is_some() {}
+        for mut p in guard.1.drain(..) {
+            let _ = p.conn.write_all(b"ERR server shutting down\n");
+        }
+    }
+    let _ = TcpStream::connect(bound);
+    let _ = acceptor.join();
+    Ok(sched.into_engine())
 }
 
 fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
@@ -118,72 +201,136 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
     };
     let mut lines = BufReader::new(reader).lines();
     while let Some(Ok(line)) = lines.next() {
-        let line = line.trim().to_string();
-        if line.is_empty() {
+        if line.trim().is_empty() {
             continue;
         }
         let mut reply_conn = match conn.try_clone() {
             Ok(c) => c,
             Err(_) => return,
         };
-        if line == "STATS" {
-            // Stats come from the queue side; engine telemetry is
-            // reported by the CLI at shutdown.
-            let g = shared.queue.lock().unwrap();
-            let msg = format!(
-                "{{\"depth\":{},\"enqueued\":{},\"rejected\":{}}}\n",
-                g.0.len(),
-                g.0.enqueued,
-                g.0.rejected
-            );
-            drop(g);
-            let _ = reply_conn.write_all(msg.as_bytes());
-            continue;
-        }
-        let Some(rest) = line.strip_prefix("GEN ") else {
-            let _ = reply_conn.write_all(b"ERR expected GEN or STATS\n");
-            continue;
-        };
-        let mut parts = rest.splitn(2, ' ');
-        let max_new: usize = match parts.next().and_then(|s| s.parse().ok()) {
-            Some(n) => n,
-            None => {
-                let _ = reply_conn.write_all(b"ERR bad max_new\n");
+        let cmd = match parse_request(&line) {
+            Ok(cmd) => cmd,
+            Err(reason) => {
+                let _ = reply_conn.write_all(format!("ERR {reason}\n").as_bytes());
                 continue;
             }
         };
-        let prompt_text = parts.next().unwrap_or("");
-        let req = Request {
-            id: shared.next_id.fetch_add(1, Ordering::SeqCst),
-            prompt: tokenize(prompt_text),
-            max_new,
-            arrived: Instant::now(),
-        };
-        let admitted = {
-            let mut g = shared.queue.lock().unwrap();
-            let ok = g.0.push(req.clone());
-            if ok {
-                g.1.push(Pending {
-                    req,
-                    conn: reply_conn,
-                });
+        match cmd {
+            Command::Stats => {
+                // Queue/scheduler stats; engine telemetry is reported by
+                // the CLI at shutdown.
+                let g = shared.queue.lock().unwrap();
+                let msg = format!(
+                    "{{\"depth\":{},\"enqueued\":{},\"rejected\":{},\"active\":{}}}\n",
+                    g.0.len(),
+                    g.0.enqueued,
+                    g.0.rejected,
+                    shared.active.load(Ordering::SeqCst)
+                );
+                drop(g);
+                let _ = reply_conn.write_all(msg.as_bytes());
             }
-            ok
-        };
-        if admitted {
-            shared.cv.notify_one();
-        } else {
-            let mut c = match conn.try_clone() {
-                Ok(c) => c,
-                Err(_) => return,
-            };
-            let _ = c.write_all(b"ERR queue full\n");
+            Command::Gen { max_new, prompt } => {
+                let req = Request {
+                    id: shared.next_id.fetch_add(1, Ordering::SeqCst),
+                    prompt: tokenize(&prompt),
+                    max_new,
+                    arrived: std::time::Instant::now(),
+                };
+                // The stop check happens under the queue lock: the
+                // decode loop sets `stop` *before* taking the lock for
+                // its final drain, so a request admitted while we see
+                // stop == false is guaranteed to be drained (and
+                // answered) by that drain — no client is stranded.
+                let admitted = {
+                    let mut g = shared.queue.lock().unwrap();
+                    if shared.stop.load(Ordering::SeqCst) {
+                        None
+                    } else {
+                        let ok = g.0.push(req.clone());
+                        if ok {
+                            g.1.push(Pending {
+                                req,
+                                conn: reply_conn,
+                            });
+                        }
+                        Some(ok)
+                    }
+                };
+                match admitted {
+                    Some(true) => shared.cv.notify_one(),
+                    Some(false) | None => {
+                        let mut c = match conn.try_clone() {
+                            Ok(c) => c,
+                            Err(_) => return,
+                        };
+                        let msg: &[u8] = if admitted.is_none() {
+                            b"ERR server shutting down\n"
+                        } else {
+                            b"ERR queue full\n"
+                        };
+                        let _ = c.write_all(msg);
+                    }
+                }
+            }
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // The server is exercised end-to-end by rust/tests/server_e2e.rs
-    // (needs artifacts). Protocol parsing is covered there too.
+    use super::*;
+
+    #[test]
+    fn parse_valid_gen() {
+        assert_eq!(
+            parse_request("GEN 32 the quick brown fox"),
+            Ok(Command::Gen {
+                max_new: 32,
+                prompt: "the quick brown fox".into()
+            })
+        );
+    }
+
+    #[test]
+    fn parse_preserves_prompt_spacing_and_trims_line() {
+        assert_eq!(
+            parse_request("  GEN 4 a  b \n"),
+            Ok(Command::Gen {
+                max_new: 4,
+                prompt: "a  b".into()
+            })
+        );
+    }
+
+    #[test]
+    fn parse_stats() {
+        assert_eq!(parse_request("STATS"), Ok(Command::Stats));
+        assert_eq!(parse_request(" STATS "), Ok(Command::Stats));
+    }
+
+    #[test]
+    fn parse_missing_max_new() {
+        assert_eq!(parse_request("GEN hello world"), Err("bad max_new"));
+        // "GEN " trims to bare "GEN", which no longer matches the verb.
+        assert_eq!(parse_request("GEN "), Err("expected GEN or STATS"));
+        assert_eq!(parse_request("GEN -3 x"), Err("bad max_new"));
+    }
+
+    #[test]
+    fn parse_empty_prompt() {
+        assert_eq!(parse_request("GEN 8"), Err("empty prompt"));
+        assert_eq!(parse_request("GEN 8 "), Err("empty prompt"));
+    }
+
+    #[test]
+    fn parse_junk() {
+        assert_eq!(parse_request("NONSENSE"), Err("expected GEN or STATS"));
+        assert_eq!(parse_request("gen 8 lowercase"), Err("expected GEN or STATS"));
+        assert_eq!(parse_request(""), Err("empty request"));
+        assert_eq!(parse_request("   "), Err("empty request"));
+    }
+
+    // The server loop itself is exercised end-to-end by
+    // rust/tests/server_e2e.rs (needs artifacts).
 }

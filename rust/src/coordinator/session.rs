@@ -1,0 +1,430 @@
+//! Per-request decode state as a first-class object. The shared engine
+//! (runtime, weight store, cache units, DRAM cache, preloader) stays
+//! warm across requests "exactly like a long-running server"; everything
+//! that belongs to *one* request — KV cache slot, position, generated
+//! tokens, queue/TTFT/inter-token telemetry — lives in a
+//! [`DecodeSession`], so a [`crate::coordinator::scheduler::Scheduler`]
+//! can interleave token steps across many sessions over one engine.
+//!
+//! The split is deliberately engine-agnostic: [`SessionEngine`] is the
+//! narrow contract (open a session slot, run one token forward, release
+//! the slot) that the executed engine implements for real and test stubs
+//! implement in a few lines, so scheduler fairness and determinism are
+//! testable without artifacts.
+
+use crate::coordinator::engine_exec::argmax;
+use crate::coordinator::request::Request;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Lifecycle of one decode session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Admitted but no step executed yet.
+    Queued,
+    /// Prompt tokens still being fed.
+    Prefill,
+    /// Generating new tokens.
+    Decode,
+    /// All requested tokens produced (or the session was aborted).
+    Done,
+}
+
+/// What one call to [`DecodeSession::step`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The session needs more steps.
+    Working,
+    /// The session finished this step; release it.
+    Finished,
+}
+
+/// Per-request latency/fairness telemetry, in wall-clock seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionStats {
+    /// Admission-queue wait: enqueue → first engine step.
+    pub queue_s: f64,
+    /// Enqueue → first generated token (includes queueing, the
+    /// server-visible TTFT).
+    pub ttft_s: f64,
+    /// Engine steps executed (prompt feeds + decode feeds).
+    pub steps: u64,
+    /// Largest gap between consecutive generated tokens — the quantity
+    /// the scheduler's fairness bound caps.
+    pub max_inter_token_s: f64,
+    /// Sum of inter-token gaps (mean = sum / (tokens - 1)).
+    pub inter_token_sum_s: f64,
+}
+
+/// One in-flight request's decode state. The session owns *which* KV
+/// slot it writes, not the KV memory itself — that stays in the engine's
+/// [`KvPool`] so the bound on concurrent sessions is also the bound on
+/// KV memory.
+#[derive(Debug)]
+pub struct DecodeSession {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub generated: Vec<u32>,
+    pub state: SessionState,
+    pub stats: SessionStats,
+    /// When the request was admitted to the queue.
+    pub arrived: Instant,
+    slot: usize,
+    /// Tokens fed through the model so far (prompt + generated - 1 when
+    /// done; each step feeds exactly one).
+    pos: usize,
+    /// Prompt tokens consumed.
+    fed: usize,
+    logits: Vec<f32>,
+    last_token_at: Option<Instant>,
+}
+
+impl DecodeSession {
+    /// Build a session over an engine-assigned KV slot. Engines validate
+    /// the request *before* calling this (non-empty prompt, sequence
+    /// budget, free slot).
+    pub fn new(req: Request, slot: usize) -> DecodeSession {
+        DecodeSession {
+            id: req.id,
+            prompt: req.prompt,
+            max_new: req.max_new,
+            generated: Vec::with_capacity(req.max_new),
+            state: SessionState::Queued,
+            stats: SessionStats::default(),
+            arrived: req.arrived,
+            slot,
+            pos: 0,
+            fed: 0,
+            logits: Vec::new(),
+            last_token_at: None,
+        }
+    }
+
+    /// KV slot assigned by the engine at open time.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Tokens fed so far — the next forward pass writes KV row `pos`.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Prompt tokens consumed so far.
+    pub fn fed(&self) -> usize {
+        self.fed
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == SessionState::Done
+    }
+
+    /// Total engine steps this session needs: one per prompt token plus
+    /// one per generated token after the first (the first output token
+    /// falls out of the final prompt feed).
+    pub fn total_steps(&self) -> usize {
+        self.prompt.len() + self.max_new.saturating_sub(1)
+    }
+
+    fn note_token(&mut self) {
+        let now = Instant::now();
+        if let Some(prev) = self.last_token_at {
+            let gap = now.duration_since(prev).as_secs_f64();
+            self.stats.inter_token_sum_s += gap;
+            if gap > self.stats.max_inter_token_s {
+                self.stats.max_inter_token_s = gap;
+            }
+        }
+        self.last_token_at = Some(now);
+    }
+
+    /// Advance this session by exactly one token of engine work. The
+    /// state machine is shared by every engine: prefill feeds the next
+    /// prompt token, decode feeds the last generated token; greedy
+    /// argmax picks continuations (matching `ExecEngine::generate`).
+    pub fn step<E: SessionEngine + ?Sized>(&mut self, eng: &mut E) -> Result<StepOutcome> {
+        if self.state == SessionState::Done {
+            return Ok(StepOutcome::Finished);
+        }
+        // Engines are asked to validate at open(); this guard turns a
+        // forgotten check into a failed request instead of an
+        // out-of-bounds panic on the one decode thread.
+        anyhow::ensure!(!self.prompt.is_empty(), "session {} has an empty prompt", self.id);
+        if self.state == SessionState::Queued {
+            self.stats.queue_s = self.arrived.elapsed().as_secs_f64();
+            self.state = SessionState::Prefill;
+        }
+        self.stats.steps += 1;
+        match self.state {
+            SessionState::Prefill => {
+                let tok = self.prompt[self.fed];
+                self.logits = eng.forward(self, tok)?;
+                self.fed += 1;
+                self.pos += 1;
+                if self.fed < self.prompt.len() {
+                    return Ok(StepOutcome::Working);
+                }
+                // Prompt absorbed: the first output token is ready now.
+                if self.max_new == 0 {
+                    // Nothing to generate: "first token" time is the
+                    // prefill completing, keeping queue <= ttft <= total
+                    // for every legal request.
+                    self.stats.ttft_s = self.arrived.elapsed().as_secs_f64();
+                    self.state = SessionState::Done;
+                    return Ok(StepOutcome::Finished);
+                }
+                self.generated.push(argmax(&self.logits));
+                self.stats.ttft_s = self.arrived.elapsed().as_secs_f64();
+                self.note_token();
+                if self.generated.len() == self.max_new {
+                    self.state = SessionState::Done;
+                    return Ok(StepOutcome::Finished);
+                }
+                self.state = SessionState::Decode;
+                Ok(StepOutcome::Working)
+            }
+            SessionState::Decode => {
+                let tok = *self.generated.last().expect("decode state has a token");
+                self.logits = eng.forward(self, tok)?;
+                self.pos += 1;
+                self.generated.push(argmax(&self.logits));
+                self.note_token();
+                if self.generated.len() == self.max_new {
+                    self.state = SessionState::Done;
+                    Ok(StepOutcome::Finished)
+                } else {
+                    Ok(StepOutcome::Working)
+                }
+            }
+            SessionState::Queued | SessionState::Done => unreachable!("handled above"),
+        }
+    }
+}
+
+/// The narrow engine contract a scheduler needs. The executed engine
+/// implements it over the real PJRT stack; tests implement it with a
+/// deterministic stub so the scheduling tier runs without artifacts.
+pub trait SessionEngine {
+    /// Maximum concurrent sessions (the KV slot-pool size).
+    fn capacity(&self) -> usize;
+
+    /// Validate the request and bind a KV slot to it. Errors (bad
+    /// request, pool exhausted) must leave the engine unchanged.
+    fn open(&mut self, req: Request) -> Result<DecodeSession>;
+
+    /// Run one token through the model for this session, reading and
+    /// writing KV at `(s.slot(), s.pos())`. Returns next-token logits.
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>>;
+
+    /// Release the session's engine resources and fold its counters into
+    /// aggregate telemetry. Called exactly once per opened session.
+    fn close(&mut self, s: &mut DecodeSession);
+}
+
+/// Bounded pool of per-session KV buffers: `slots × n_layers × stride`
+/// f32 for K and the same for V, slot-major so one slot is a contiguous
+/// range. Admission control = slot acquisition, which makes decode
+/// memory bounded and accountable ([`crate::telemetry::Telemetry`]'s
+/// `kv_pool_bytes`).
+#[derive(Debug)]
+pub struct KvPool {
+    slots: usize,
+    n_layers: usize,
+    /// f32 values per (slot, layer): max_seq * d_model.
+    stride: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    pub fn new(slots: usize, n_layers: usize, stride: usize) -> KvPool {
+        KvPool {
+            slots,
+            n_layers,
+            stride,
+            k: vec![0.0; slots * n_layers * stride],
+            v: vec![0.0; slots * n_layers * stride],
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    /// Total bytes reserved by the pool (both K and V planes).
+    pub fn bytes(&self) -> u64 {
+        (self.k.len() + self.v.len()) as u64 * 4
+    }
+
+    /// Take a slot, zeroed, or None when the pool is exhausted.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.zero(slot);
+        Some(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(slot < self.slots);
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.free.push(slot);
+    }
+
+    /// Zero one slot's K/V planes (slot-major layout → two memsets).
+    pub fn zero(&mut self, slot: usize) {
+        let base = slot * self.n_layers * self.stride;
+        let end = base + self.n_layers * self.stride;
+        self.k[base..end].fill(0.0);
+        self.v[base..end].fill(0.0);
+    }
+
+    #[inline]
+    fn base(&self, slot: usize, layer: usize) -> usize {
+        debug_assert!(slot < self.slots && layer < self.n_layers);
+        (slot * self.n_layers + layer) * self.stride
+    }
+
+    /// One layer's K plane for a slot (`[max_seq * d]`).
+    pub fn k_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        let b = self.base(slot, layer);
+        &self.k[b..b + self.stride]
+    }
+
+    /// One layer's V plane for a slot (`[max_seq * d]`).
+    pub fn v_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        let b = self.base(slot, layer);
+        &self.v[b..b + self.stride]
+    }
+
+    /// Write the KV rows produced at `pos` (`d` values each).
+    pub fn write_token(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        pos: usize,
+        d: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        assert_eq!(k_row.len(), d, "K row length");
+        assert_eq!(v_row.len(), d, "V row length");
+        let b = self.base(slot, layer) + pos * d;
+        assert!(pos * d + d <= self.stride, "pos {pos} past slot stride");
+        self.k[b..b + d].copy_from_slice(k_row);
+        self.v[b..b + d].copy_from_slice(v_row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new,
+            arrived: Instant::now(),
+        }
+    }
+
+    /// Minimal deterministic engine: next token = f(token, pos).
+    struct Echo;
+    impl SessionEngine for Echo {
+        fn capacity(&self) -> usize {
+            1
+        }
+        fn open(&mut self, r: Request) -> Result<DecodeSession> {
+            Ok(DecodeSession::new(r, 0))
+        }
+        fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+            let mut logits = vec![0.0f32; 16];
+            logits[((token as usize) * 3 + s.pos()) % 16] = 1.0;
+            Ok(logits)
+        }
+        fn close(&mut self, _s: &mut DecodeSession) {}
+    }
+
+    #[test]
+    fn session_counts_steps_and_tokens() {
+        let mut eng = Echo;
+        let mut s = eng.open(req(1, vec![1, 2, 3], 4)).unwrap();
+        assert_eq!(s.total_steps(), 3 + 3);
+        let mut steps = 0;
+        while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {
+            steps += 1;
+            assert!(steps < 100, "runaway session");
+        }
+        assert_eq!(steps + 1, s.total_steps());
+        assert_eq!(s.generated.len(), 4);
+        assert!(s.is_done());
+        assert_eq!(s.stats.steps as usize, s.total_steps());
+        assert!(s.stats.ttft_s >= s.stats.queue_s);
+        // Finished sessions are inert.
+        assert!(matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished));
+        assert_eq!(s.generated.len(), 4);
+    }
+
+    #[test]
+    fn session_is_deterministic() {
+        let mut eng = Echo;
+        let run = |eng: &mut Echo| {
+            let mut s = eng.open(req(1, vec![5, 9], 6)).unwrap();
+            while !matches!(s.step(eng).unwrap(), StepOutcome::Finished) {}
+            s.generated
+        };
+        assert_eq!(run(&mut eng), run(&mut eng));
+    }
+
+    #[test]
+    fn zero_max_new_finishes_after_prefill() {
+        let mut eng = Echo;
+        let mut s = eng.open(req(1, vec![1, 2], 0)).unwrap();
+        assert!(matches!(s.step(&mut eng).unwrap(), StepOutcome::Working));
+        assert!(matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished));
+        assert!(s.generated.is_empty());
+        // Prefill-only requests still report an ordered latency triple.
+        assert!(s.stats.ttft_s >= s.stats.queue_s);
+    }
+
+    #[test]
+    fn kv_pool_bounds_and_isolation() {
+        let mut p = KvPool::new(2, 3, 8);
+        assert_eq!(p.capacity(), 2);
+        assert_eq!(p.bytes(), (2 * 3 * 8 * 2 * 4) as u64);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert_ne!(a, b);
+        assert!(p.acquire().is_none(), "pool bounded");
+        assert_eq!(p.in_use(), 2);
+        p.write_token(a, 1, 2, 2, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(&p.k_layer(a, 1)[4..6], &[1.0, 2.0]);
+        assert_eq!(&p.v_layer(a, 1)[4..6], &[3.0, 4.0]);
+        // Slot b untouched by slot a's writes.
+        assert!(p.k_layer(b, 1).iter().all(|&x| x == 0.0));
+        p.release(b);
+        // Re-acquired slots come back zeroed.
+        p.write_token(a, 0, 0, 2, &[9.0, 9.0], &[9.0, 9.0]);
+        p.release(a);
+        let c = p.acquire().unwrap();
+        assert!(p.k_layer(c, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "past slot stride")]
+    fn kv_pool_rejects_out_of_range_pos() {
+        let mut p = KvPool::new(1, 1, 4);
+        let s = p.acquire().unwrap();
+        p.write_token(s, 0, 2, 2, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+}

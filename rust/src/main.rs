@@ -52,6 +52,7 @@ fn engine_config(args: &Args) -> EngineConfig {
     }
     cfg.fixed_layers = args.get_usize("fixed-layers", cfg.fixed_layers);
     cfg.preload_depth = args.get_usize("preload-depth", cfg.preload_depth);
+    cfg.max_sessions = args.get_usize("sessions", cfg.max_sessions).max(1);
     if args.flag("no-ssd") {
         cfg.use_ssd = false;
     }
@@ -97,6 +98,7 @@ COMMANDS:
   info            platform, artifacts, model geometries
   generate        run the executed tiny model: --prompt TEXT --tokens N
   serve           TCP server: --addr HOST:PORT [--max-requests N]
+                  [--sessions N]  interleave up to N decode sessions
   simulate        simulated large-model run: --model {7B,13B,40B,70B}
                   --in N --out N [--policy atu|lru|window] [--dram-gib G]
                   [--no-ssd] [--no-cache] [--no-mp]
@@ -170,11 +172,18 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let opts = opts_of(args);
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let max = args.get("max-requests").map(|s| s.parse()).transpose()?;
-    let eng = ExecEngine::new(Path::new(opts.artifacts), engine_config(args))?;
-    println!("serving tiny model (protocol: `GEN <max_new> <prompt>`)");
-    m2cache::coordinator::server::serve(eng, addr, max, |a| {
+    let cfg = engine_config(args);
+    let sessions = cfg.max_sessions;
+    let eng = ExecEngine::new(Path::new(opts.artifacts), cfg)?;
+    println!(
+        "serving tiny model, up to {sessions} interleaved session(s) \
+         (protocol: `GEN <max_new> <prompt>`)"
+    );
+    let eng = m2cache::coordinator::server::serve(eng, addr, max, |a| {
         println!("listening on {a}");
-    })
+    })?;
+    println!("telemetry: {}", eng.tel.to_json());
+    Ok(())
 }
 
 fn simulate(args: &Args) -> anyhow::Result<()> {

@@ -1,7 +1,9 @@
 //! Run telemetry: counters, byte meters, and phase timers shared by the
 //! engine, the baselines, and the bench harness. Everything here is
-//! plain (non-atomic) because the decode loop is single-threaded; the
-//! preloader reports through its own channel.
+//! plain (non-atomic) because one decode thread owns the engine even
+//! when it interleaves many sessions (per-request latency lives in
+//! `coordinator::session::SessionStats`); the preloader reports through
+//! its own channel.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -62,6 +64,11 @@ pub struct Telemetry {
     /// Peak working sets.
     pub peak_hbm_bytes: u64,
     pub peak_dram_bytes: u64,
+    /// Bytes reserved by the per-session KV slot pool (fixed at engine
+    /// construction — the memory bound behind session admission).
+    pub kv_pool_bytes: u64,
+    /// Most decode sessions ever concurrently in flight.
+    pub peak_active_sessions: u64,
     /// Free-form counters for experiment-specific series.
     pub counters: BTreeMap<String, u64>,
 }
@@ -108,6 +115,8 @@ impl Telemetry {
             .field_int("dram_to_hbm", self.traffic.dram_to_hbm as i64)
             .field_int("peak_hbm", self.peak_hbm_bytes as i64)
             .field_int("peak_dram", self.peak_dram_bytes as i64)
+            .field_int("kv_pool", self.kv_pool_bytes as i64)
+            .field_int("peak_sessions", self.peak_active_sessions as i64)
             .field_num("predict_s", self.phases.predict_s)
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)

@@ -1,0 +1,279 @@
+//! Scheduler fairness/determinism tier — runs WITHOUT `make artifacts`.
+//! A deterministic stub engine stands in for the PJRT stack, so these
+//! tests pin the scheduling contract itself: interleaved execution
+//! yields exactly the tokens sequential execution would, admission is
+//! FIFO, and no session starves (steps between a session's turns are
+//! bounded by the number of co-active sessions).
+
+use anyhow::Result;
+use m2cache::coordinator::{
+    DecodeSession, Outcome, Request, Scheduler, SessionEngine,
+};
+use m2cache::util::rng::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+const VOCAB: usize = 97;
+
+/// Deterministic stub engine: the next token is a pure function of the
+/// fed token and the session's position, so any correct scheduler must
+/// reproduce the same per-session output regardless of interleaving.
+/// Slots come from a free list like the real KvPool, so a session
+/// handed another session's live slot would trip the close() assert.
+struct StubEngine {
+    slots: usize,
+    free: Vec<usize>,
+    /// Admission order observed by the engine (open() call order).
+    open_order: Vec<u64>,
+    /// Total forward passes (one per scheduler step).
+    forwards: u64,
+}
+
+impl StubEngine {
+    fn new(slots: usize) -> StubEngine {
+        StubEngine {
+            slots,
+            free: (0..slots).rev().collect(),
+            open_order: Vec::new(),
+            forwards: 0,
+        }
+    }
+}
+
+impl SessionEngine for StubEngine {
+    fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        self.open_order.push(req.id);
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        self.forwards += 1;
+        assert!(
+            !self.free.contains(&s.slot()),
+            "session {} stepped on a freed slot {}",
+            s.id,
+            s.slot()
+        );
+        let mut logits = vec![0.0f32; VOCAB];
+        let next = ((token as usize).wrapping_mul(31) + s.pos() * 7 + 1) % VOCAB;
+        logits[next] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        assert!(
+            !self.free.contains(&s.slot()),
+            "double release of slot {}",
+            s.slot()
+        );
+        self.free.push(s.slot());
+    }
+}
+
+fn req(id: u64, prompt: &[u32], max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: prompt.to_vec(),
+        max_new,
+        arrived: Instant::now(),
+    }
+}
+
+fn workload() -> Vec<(u64, Vec<u32>, usize)> {
+    vec![
+        (1, vec![3, 1, 4, 1, 5], 9),
+        (2, vec![2, 7], 18),
+        (3, vec![6, 6, 6, 6, 6, 6, 6, 6], 2),
+        (4, vec![9], 12),
+    ]
+}
+
+/// Run a workload at a given concurrency; returns tokens per request id
+/// plus the order sessions were stepped in.
+fn run_at(
+    concurrency: usize,
+    work: &[(u64, Vec<u32>, usize)],
+) -> (HashMap<u64, Vec<u32>>, Vec<u64>) {
+    let mut sched = Scheduler::new(StubEngine::new(concurrency), concurrency);
+    for (id, prompt, max_new) in work {
+        sched.submit(req(*id, prompt, *max_new));
+    }
+    let mut tokens = HashMap::new();
+    let mut stepped = Vec::new();
+    while !sched.is_idle() {
+        let r = sched.tick();
+        if let Some(id) = r.stepped {
+            stepped.push(id);
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => panic!("req {id} failed: {error}"),
+            }
+        }
+    }
+    (tokens, stepped)
+}
+
+#[test]
+fn interleaved_execution_matches_sequential() {
+    let work = workload();
+    let (seq, _) = run_at(1, &work);
+    for k in [2, 3, 4] {
+        let (inter, _) = run_at(k, &work);
+        assert_eq!(seq, inter, "K={k} interleaving changed outputs");
+    }
+    // And the outputs are what a bare session produces, one at a time.
+    let mut eng = StubEngine::new(1);
+    for (id, prompt, max_new) in &work {
+        let mut s = eng.open(req(*id, prompt, *max_new)).unwrap();
+        while !s.is_done() {
+            s.step(&mut eng).unwrap();
+        }
+        let mut done = s;
+        eng.close(&mut done);
+        assert_eq!(seq[id], done.generated, "req {id} diverged from bare session");
+    }
+}
+
+#[test]
+fn admission_order_is_fifo() {
+    for concurrency in [1, 2, 4] {
+        let mut sched = Scheduler::new(StubEngine::new(concurrency), concurrency);
+        for id in 1..=6u64 {
+            // Varying lengths so completions happen out of submit order.
+            sched.submit(req(id, &[id as u32], 1 + (id as usize * 3) % 7));
+        }
+        sched.run_until_idle();
+        assert_eq!(
+            sched.engine().open_order,
+            vec![1, 2, 3, 4, 5, 6],
+            "concurrency {concurrency} broke FIFO admission"
+        );
+    }
+}
+
+#[test]
+fn no_session_starves() {
+    // Between consecutive turns of any session, at most `active - 1`
+    // other steps may run — the scheduler's fairness bound.
+    let work = workload();
+    let k = work.len();
+    let (_, stepped) = run_at(k, &work);
+    let mut last_seen: HashMap<u64, usize> = HashMap::new();
+    for (i, id) in stepped.iter().enumerate() {
+        if let Some(&prev) = last_seen.get(id) {
+            let gap = i - prev; // 1 == immediate next step
+            assert!(
+                gap <= k,
+                "session {id} waited {gap} steps (> {k} active) at step {i}: {stepped:?}"
+            );
+        }
+        last_seen.insert(*id, i);
+    }
+}
+
+#[test]
+fn scheduling_is_deterministic() {
+    let work = workload();
+    let (t1, s1) = run_at(3, &work);
+    let (t2, s2) = run_at(3, &work);
+    assert_eq!(t1, t2, "token outputs must not vary run to run");
+    assert_eq!(s1, s2, "step order must not vary run to run");
+}
+
+#[test]
+fn aggregate_token_accounting_matches_per_session_sum() {
+    let work = workload();
+    let expected: usize = work.iter().map(|(_, _, n)| *n).sum();
+    let (tokens, _) = run_at(3, &work);
+    let total: usize = tokens.values().map(Vec::len).sum();
+    assert_eq!(total, expected);
+    for (id, prompt, max_new) in &work {
+        assert_eq!(tokens[id].len(), *max_new);
+        assert!(tokens[id].iter().all(|&t| (t as usize) < VOCAB));
+        let _ = prompt;
+    }
+}
+
+#[test]
+fn per_request_latency_stats_are_reported() {
+    let mut sched = Scheduler::new(StubEngine::new(2), 2);
+    for id in 1..=3u64 {
+        sched.submit(req(id, &[1, 2, 3], 4));
+    }
+    let outs = sched.run_until_idle();
+    assert_eq!(outs.len(), 3);
+    for o in outs {
+        let Outcome::Done(c) = o else { panic!("unexpected failure") };
+        assert!(c.response.queue_s >= 0.0);
+        assert!(c.response.ttft_s >= c.response.queue_s);
+        assert!(c.response.total_s >= c.response.ttft_s);
+        assert_eq!(c.stats.steps, 3 + 3); // prompt feeds + decode feeds
+        assert!(c.stats.max_inter_token_s >= 0.0);
+    }
+}
+
+#[test]
+fn rejected_requests_fail_fast_and_leak_nothing() {
+    let mut sched = Scheduler::new(StubEngine::new(2), 2);
+    sched.submit(req(1, &[], 4)); // invalid: empty prompt
+    sched.submit(req(2, &[5], 4));
+    sched.submit(req(3, &[], 4)); // invalid: empty prompt
+    let outs = sched.run_until_idle();
+    let failed: Vec<u64> = outs
+        .iter()
+        .filter(|o| matches!(o, Outcome::Failed { .. }))
+        .map(|o| o.id())
+        .collect();
+    assert_eq!(failed, vec![1, 3]);
+    let done: Vec<u64> = outs
+        .iter()
+        .filter(|o| matches!(o, Outcome::Done(_)))
+        .map(|o| o.id())
+        .collect();
+    assert_eq!(done, vec![2]);
+    assert_eq!(
+        sched.engine().free.len(),
+        2,
+        "failed opens must not hold slots"
+    );
+}
+
+#[test]
+fn randomized_workloads_interleave_transparently() {
+    // Property sweep: any workload, any concurrency — interleaving
+    // never changes tokens and the engine sees one forward per step.
+    let mut rng = Rng::new(0x5C4ED);
+    for case in 0..25 {
+        let n_reqs = rng.range(1, 7);
+        let work: Vec<(u64, Vec<u32>, usize)> = (0..n_reqs)
+            .map(|i| {
+                let plen = rng.range(1, 9);
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.below(VOCAB as u64) as u32).collect();
+                (i as u64 + 1, prompt, rng.range(1, 12))
+            })
+            .collect();
+        let (seq, _) = run_at(1, &work);
+        let k = rng.range(2, 6);
+        let (inter, stepped) = run_at(k, &work);
+        assert_eq!(seq, inter, "case {case} (K={k}) diverged");
+        let total_steps: usize = work
+            .iter()
+            .map(|(_, p, n)| p.len() + n.saturating_sub(1))
+            .sum();
+        assert_eq!(stepped.len(), total_steps, "case {case} step count");
+    }
+}
