@@ -1,18 +1,20 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §E2E run): starts the
 //! M2Cache TCP server on the executed tiny model with an interleaving
-//! scheduler, fires a batch of concurrent client requests at it, and
-//! reports per-request latency + aggregate throughput — proving L3
+//! scheduler, fires a batch of concurrent client requests at it across
+//! the three priority classes, and reports per-request latency +
+//! aggregate throughput + per-class TTFT/deadline counters — proving L3
 //! (rust coordinator + sessions + caches + preloader) ∘ L2 (JAX layer
-//! graph) ∘ L1 (Pallas sparse-FFN kernel) compose on a real serving
-//! workload with Python nowhere in sight.
+//! graph) ∘ L1 (Pallas sparse-FFN kernel) compose on a real
+//! heterogeneous-SLO serving workload with Python nowhere in sight.
 //!
 //!   make artifacts && cargo run --release --example serve_e2e
 //!
-//! The server keeps `SESSIONS` decode sessions in flight, round-robin
-//! interleaving token steps over the shared warm HBM/DRAM caches, so
-//! no client head-of-line-blocks the others.
+//! The server keeps `SESSIONS` decode sessions in flight; the scheduler
+//! admits by (class, deadline, arrival) and interleaves chunked-prefill
+//! and decode turns EDF-within-class over the shared warm HBM/DRAM
+//! caches, so no client head-of-line-blocks the others.
 
-use m2cache::coordinator::{server, EngineConfig, ExecEngine};
+use m2cache::coordinator::{server, EngineConfig, ExecEngine, Priority};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::Path;
@@ -59,15 +61,20 @@ fn main() -> anyhow::Result<()> {
         "large language models ",
         "the cache keeps the ",
     ];
+    // One client per SLO class plus an untagged one: interactive with a
+    // deadline, batch, and two plain GENs — the heterogeneous traffic
+    // the priority scheduler exists for.
+    let verbs = ["GEN@high:60000", "GEN@batch", "GEN", "GEN"];
     let bench_start = Instant::now();
     let (res_tx, res_rx) = mpsc::channel();
     for c in 0..N_CLIENTS {
         let tx = res_tx.clone();
         let prompt = prompts[c % prompts.len()].to_string();
+        let verb = verbs[c % verbs.len()];
         std::thread::spawn(move || {
             for r in 0..REQS_PER_CLIENT {
                 let t0 = Instant::now();
-                let line = request(addr, &format!("GEN {GEN_TOKENS} {prompt}"))
+                let line = request(addr, &format!("{verb} {GEN_TOKENS} {prompt}"))
                     .unwrap_or_else(|e| format!("ERR {e}"));
                 let dt = t0.elapsed().as_secs_f64();
                 tx.send((c, r, dt, line)).unwrap();
@@ -126,6 +133,21 @@ fn main() -> anyhow::Result<()> {
         tel.peak_active_sessions,
         m2cache::util::text::fmt_bytes(tel.kv_pool_bytes),
     );
+    for p in Priority::ALL {
+        let c = &tel.classes[p.index()];
+        if c.completed == 0 && c.failed == 0 {
+            continue;
+        }
+        println!(
+            "  class {:<6}: {} done, {} failed, {} deadline-missed | ttft mean {:.0} ms max {:.0} ms",
+            p.name(),
+            c.completed,
+            c.failed,
+            c.deadline_missed,
+            c.mean_ttft_s() * 1e3,
+            c.ttft_s_max * 1e3,
+        );
+    }
     Ok(())
 }
 

@@ -76,6 +76,17 @@ pub struct EngineConfig {
     /// scheduler's admission bound; `--sessions N` on the CLI). 1 keeps
     /// the paper's batch-1 decode shape.
     pub max_sessions: usize,
+    /// Max prompt tokens one scheduler turn may feed (chunked prefill):
+    /// long prompts yield the engine between chunks instead of
+    /// head-of-line blocking in-flight decodes, short prompts absorb in
+    /// one turn. Applies to the serving scheduler and to
+    /// `SimEngine::run_sessions`' mirror of it (`--prefill-chunk N`).
+    pub prefill_chunk: usize,
+    /// Every `starvation_guard`-th scheduler turn steps the
+    /// longest-waiting session regardless of class (0 disables).
+    /// Shared by the serving scheduler and the sim mirror so simulated
+    /// per-class figures reflect the policy actually serving.
+    pub starvation_guard: u64,
 }
 
 impl Default for EngineConfig {
@@ -95,6 +106,8 @@ impl Default for EngineConfig {
             seed: 0,
             trace_overlap: 0.8,
             max_sessions: 1,
+            prefill_chunk: 16,
+            starvation_guard: crate::coordinator::scheduler::DEFAULT_STARVATION_GUARD,
         }
     }
 }

@@ -27,7 +27,6 @@ use crate::telemetry::{PhaseTimer, Telemetry};
 use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
 
 pub struct ExecEngine {
     rt: Runtime,
@@ -137,8 +136,10 @@ impl ExecEngine {
         // contend for the same buffers.
         let mut pool = KvPool::new(cfg.max_sessions.max(1) + 1, n_layers, max_seq * d);
         let legacy_slot = pool.acquire().expect("fresh pool has a slot");
-        let mut tel = Telemetry::default();
-        tel.kv_pool_bytes = pool.bytes();
+        let tel = Telemetry {
+            kv_pool_bytes: pool.bytes(),
+            ..Telemetry::default()
+        };
         Ok(ExecEngine {
             rt,
             store,
@@ -367,12 +368,7 @@ impl ExecEngine {
     /// single-session run through the session machinery (one request,
     /// stepped to completion). Telemetry accumulates.
     pub fn generate(&mut self, prompt: &[u32], n_gen: usize) -> Result<Vec<u32>> {
-        let req = Request {
-            id: 0,
-            prompt: prompt.to_vec(),
-            max_new: n_gen,
-            arrived: Instant::now(),
-        };
+        let req = Request::new(0, prompt.to_vec(), n_gen);
         let mut s = SessionEngine::open(self, req)?;
         let mut result = Ok(());
         while !s.is_done() {
@@ -431,6 +427,12 @@ impl ExecEngine {
 impl SessionEngine for ExecEngine {
     fn capacity(&self) -> usize {
         self.cfg.max_sessions.max(1)
+    }
+
+    fn max_positions(&self) -> usize {
+        // The per-slot KV stride: the scheduler turns over-length
+        // requests into admission errors instead of mid-decode panics.
+        self.max_seq
     }
 
     fn open(&mut self, req: Request) -> Result<DecodeSession> {

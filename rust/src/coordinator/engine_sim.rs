@@ -7,6 +7,7 @@
 use crate::carbon::{self, CarbonBreakdown, GpuSpec, RunProfile};
 use crate::cache::{CacheUnit, DramCache, FlashStore, HbmPolicy, SimFlash, StorageMix};
 use crate::coordinator::config::EngineConfig;
+use crate::coordinator::request::Priority;
 use crate::memsim::{Channel, Completion, HardwareSpec, Link, SimClock};
 use crate::model::spec::ModelSpec;
 use crate::precision::plan::{plan_from_active, LayerPlan};
@@ -28,20 +29,59 @@ pub struct SimResult {
     pub carbon: CarbonBreakdown,
 }
 
+/// One tenant of a multi-session simulated run: workload shape plus the
+/// scheduling class the serving scheduler would see.
+#[derive(Debug, Clone, Copy)]
+pub struct SimTenant {
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub priority: Priority,
+    /// SLO budget relative to the window start, simulated ms.
+    pub deadline_ms: Option<u64>,
+}
+
+impl SimTenant {
+    /// A `Normal`-class tenant with no deadline (the PR-1 shape).
+    pub fn untagged(prompt_len: usize, max_new: usize) -> SimTenant {
+        SimTenant {
+            prompt_len,
+            max_new,
+            priority: Priority::Normal,
+            deadline_ms: None,
+        }
+    }
+
+    pub fn with_class(mut self, priority: Priority, deadline_ms: Option<u64>) -> SimTenant {
+        self.priority = priority;
+        self.deadline_ms = deadline_ms;
+        self
+    }
+}
+
 /// One tenant's simulated decode state (the [`SimEngine`] mirror of the
 /// executed path's `DecodeSession`): its own prompt/KV-length cursor
-/// over the shared engine.
+/// over the shared engine, plus the scheduling key the serving
+/// scheduler keeps in its `Active` entries.
 #[derive(Debug, Clone)]
 struct SimSession {
     id: u64,
     prompt_len: usize,
     max_new: usize,
+    priority: Priority,
+    /// Absolute deadline in simulated ms from the window start.
+    deadline_ms: Option<u64>,
     kv_len: usize,
+    /// Prompt tokens prefilled so far (chunked prefill cursor).
+    prefilled: usize,
     generated: u64,
     queue_s: f64,
     ttft_s: f64,
     finish_s: f64,
-    prefilled: bool,
+    started: bool,
+    done: bool,
+    missed: bool,
+    /// Recency stamp mirroring the scheduler's ring order.
+    stamp: u64,
 }
 
 /// Per-tenant result of a multi-session simulated run — latency from
@@ -49,6 +89,7 @@ struct SimSession {
 #[derive(Debug, Clone)]
 pub struct TenantResult {
     pub id: u64,
+    pub priority: Priority,
     /// Arrival → first prefill work, seconds (simulated).
     pub queue_s: f64,
     /// Arrival → first generated token, seconds (simulated).
@@ -57,8 +98,28 @@ pub struct TenantResult {
     pub total_s: f64,
     pub tokens: u64,
     pub tokens_per_s: f64,
+    /// The tenant finished past its deadline budget.
+    pub deadline_missed: bool,
     /// Token-share slice of the whole window's footprint, gCO2.
     pub carbon_g: f64,
+}
+
+/// Fold a finished simulated session into the per-class telemetry.
+fn retire(tel: &mut Telemetry, s: &mut SimSession, finish_s: f64) {
+    s.done = true;
+    s.finish_s = finish_s;
+    s.missed = s
+        .deadline_ms
+        .is_some_and(|ms| finish_s * 1e3 > ms as f64);
+    let c = &mut tel.classes[s.priority.index()];
+    c.completed += 1;
+    if s.missed {
+        c.deadline_missed += 1;
+    }
+    c.ttft_s_sum += s.ttft_s;
+    if s.ttft_s > c.ttft_s_max {
+        c.ttft_s_max = s.ttft_s;
+    }
 }
 
 /// Per-layer simulated state.
@@ -471,73 +532,148 @@ impl SimEngine {
         }
     }
 
-    /// Multi-tenant decode (ROADMAP: many users on one fixed box): all
-    /// tenants arrive at once, are admitted FIFO, and interleave decode
-    /// steps round-robin over the *shared* warm caches — mirroring
-    /// [`crate::coordinator::scheduler::Scheduler`] on the simulated
-    /// path so Fig-9-style large geometries can report per-tenant
-    /// latency and carbon. Each tenant's attention is costed at its own
-    /// KV length; the shared layer traces model cross-request neuron
-    /// overlap keeping the HBM cache warm between tenants' turns.
+    /// Multi-tenant decode with the PR-1 shape: every tenant untagged
+    /// (`Normal`, no deadline), which keeps the original FIFO admission
+    /// and round-robin rotation (prefill now proceeds in
+    /// `cfg.prefill_chunk`-token turns, identical for prompts within
+    /// one chunk).
     pub fn run_sessions(
         &mut self,
         tenants: &[(usize, usize)],
+        gpu: &GpuSpec,
+    ) -> Vec<TenantResult> {
+        let tagged: Vec<SimTenant> = tenants
+            .iter()
+            .map(|&(prompt_len, max_new)| SimTenant::untagged(prompt_len, max_new))
+            .collect();
+        self.run_sessions_policy(&tagged, gpu)
+    }
+
+    /// Multi-tenant decode (ROADMAP: many users on one fixed box): all
+    /// tenants arrive at once and interleave over the *shared* warm
+    /// caches under the same policy as the serving
+    /// [`crate::coordinator::scheduler::Scheduler`] — priority classes,
+    /// EDF within class, chunked prefill (`cfg.prefill_chunk` prompt
+    /// tokens per turn, so a long prompt cannot head-of-line block
+    /// in-flight decodes), and the starvation guard every
+    /// `cfg.starvation_guard` turns. Untagged tenants degenerate
+    /// to FIFO round-robin. Each tenant's attention is costed at its
+    /// own KV length; the shared layer traces model cross-request
+    /// neuron overlap keeping the HBM cache warm between turns. This is
+    /// how Fig-9-style large geometries report per-class
+    /// TTFT/deadline-miss/carbon.
+    pub fn run_sessions_policy(
+        &mut self,
+        tenants: &[SimTenant],
         gpu: &GpuSpec,
     ) -> Vec<TenantResult> {
         let t_arrive = self.clock.now_s();
         let mut sessions: Vec<SimSession> = tenants
             .iter()
             .enumerate()
-            .map(|(i, &(prompt_len, max_new))| SimSession {
-                id: i as u64,
-                prompt_len,
-                max_new,
-                kv_len: 0,
-                generated: 0,
-                queue_s: 0.0,
-                ttft_s: 0.0,
-                finish_s: 0.0,
-                prefilled: false,
+            .map(|(i, t)| {
+                self.tel.classes[t.priority.index()].admitted += 1;
+                SimSession {
+                    id: i as u64,
+                    prompt_len: t.prompt_len,
+                    max_new: t.max_new,
+                    priority: t.priority,
+                    deadline_ms: t.deadline_ms,
+                    kv_len: 0,
+                    prefilled: 0,
+                    generated: 0,
+                    queue_s: 0.0,
+                    ttft_s: 0.0,
+                    finish_s: 0.0,
+                    started: false,
+                    done: false,
+                    missed: false,
+                    stamp: i as u64,
+                }
             })
             .collect();
-        let mut ring: std::collections::VecDeque<usize> = (0..sessions.len()).collect();
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let guard_every = self.cfg.starvation_guard;
+        let mut stamp = sessions.len() as u64;
+        let mut turn: u64 = 0;
         // Peak *concurrent* KV tokens across tenants — finished tenants
         // free their KV, in-flight ones hold theirs.
         let mut peak_kv_tokens = 0usize;
-        while let Some(i) = ring.pop_front() {
+        loop {
+            // Turn selection mirrors `Scheduler::pick`: the starvation
+            // guard every `cfg.starvation_guard` turns, otherwise
+            // (class, deadline, recency) — which is plain round-robin
+            // when every tenant is untagged.
+            let pick = {
+                let guard = guard_every > 0 && turn > 0 && turn % guard_every == 0;
+                let live = sessions.iter().enumerate().filter(|(_, s)| !s.done);
+                if guard {
+                    live.min_by_key(|(_, s)| s.stamp).map(|(i, _)| i)
+                } else {
+                    live.min_by_key(|(_, s)| {
+                        (
+                            s.priority.index(),
+                            s.deadline_ms.unwrap_or(u64::MAX),
+                            s.stamp,
+                        )
+                    })
+                    .map(|(i, _)| i)
+                }
+            };
+            let Some(i) = pick else { break };
+            turn += 1;
             let now = self.clock.now_s();
-            if !sessions[i].prefilled {
+            if !sessions[i].started {
+                sessions[i].started = true;
                 sessions[i].queue_s = now - t_arrive;
-                let plen = sessions[i].prompt_len;
-                self.prefill_work(plen);
-                sessions[i].kv_len = plen;
-                sessions[i].prefilled = true;
-                if sessions[i].max_new == 0 {
-                    let done = self.clock.now_s() - t_arrive;
-                    sessions[i].ttft_s = done; // prefill-only request
-                    sessions[i].finish_s = done;
-                    continue;
+            }
+            let mut finished = false;
+            if sessions[i].prefilled < sessions[i].prompt_len {
+                // One prefill chunk.
+                let n = chunk.min(sessions[i].prompt_len - sessions[i].prefilled);
+                self.prefill_work(n);
+                sessions[i].prefilled += n;
+                sessions[i].kv_len += n;
+            }
+            if sessions[i].prefilled == sessions[i].prompt_len {
+                if sessions[i].generated == 0 {
+                    // Prefill boundary: the turn that absorbs the last
+                    // prompt token also yields the first output token
+                    // (mirroring the executed state machine);
+                    // zero-length prompts start here directly.
+                    if sessions[i].max_new == 0 {
+                        // Prefill-only request: "first token" is the
+                        // prefill completing.
+                        sessions[i].ttft_s = self.clock.now_s() - t_arrive;
+                        finished = true;
+                    } else {
+                        let kv = sessions[i].kv_len;
+                        self.step_at(kv);
+                        sessions[i].kv_len += 1;
+                        sessions[i].generated = 1;
+                        sessions[i].ttft_s = self.clock.now_s() - t_arrive;
+                        finished = sessions[i].max_new == 1;
+                    }
+                } else {
+                    let kv = sessions[i].kv_len;
+                    self.step_at(kv);
+                    sessions[i].kv_len += 1;
+                    sessions[i].generated += 1;
+                    finished = sessions[i].generated as usize == sessions[i].max_new;
                 }
             }
-            let kv = sessions[i].kv_len;
-            self.step_at(kv);
-            let after = self.clock.now_s() - t_arrive;
-            sessions[i].kv_len += 1;
-            sessions[i].generated += 1;
-            if sessions[i].generated == 1 {
-                sessions[i].ttft_s = after;
-            }
+            stamp += 1;
+            sessions[i].stamp = stamp;
             // Peak is sampled while tenant i's KV is still live.
             let live_kv: usize = sessions
                 .iter()
-                .filter(|t| t.prefilled && t.finish_s == 0.0)
+                .filter(|t| t.started && !t.done)
                 .map(|t| t.kv_len)
                 .sum();
             peak_kv_tokens = peak_kv_tokens.max(live_kv);
-            if sessions[i].generated as usize == sessions[i].max_new {
-                sessions[i].finish_s = after;
-            } else {
-                ring.push_back(i);
+            if finished {
+                let after = self.clock.now_s() - t_arrive;
+                retire(&mut self.tel, &mut sessions[i], after);
             }
         }
         // Whole-window footprint, attributed to tenants by token share
@@ -574,6 +710,7 @@ impl SimEngine {
             .iter()
             .map(|s| TenantResult {
                 id: s.id,
+                priority: s.priority,
                 queue_s: s.queue_s,
                 ttft_s: s.ttft_s,
                 total_s: s.finish_s,
@@ -583,6 +720,7 @@ impl SimEngine {
                 } else {
                     0.0
                 },
+                deadline_missed: s.missed,
                 carbon_g: total_carbon
                     * (s.prompt_len as u64 + s.generated) as f64
                     / work_total,
@@ -764,6 +902,95 @@ mod tests {
         let shared_res = shared.run_sessions(&[(8, 6), (8, 6)], gpu);
         assert!(shared_res[0].total_s >= solo_res[0].total_s - 1e-12);
         assert!(shared_res[1].total_s > shared_res[0].total_s);
+    }
+
+    #[test]
+    fn high_priority_tenant_beats_batch_flood_ttft() {
+        // A high-priority short request arriving with a flood of
+        // long-prompt batch work: class-EDF serves it first, so its
+        // TTFT undercuts every batch tenant's, its generous deadline
+        // holds, and the per-class telemetry splits accordingly.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let tenants = [
+            SimTenant::untagged(64, 8).with_class(Priority::Batch, None),
+            SimTenant::untagged(64, 8).with_class(Priority::Batch, None),
+            SimTenant::untagged(64, 8).with_class(Priority::Batch, None),
+            SimTenant::untagged(8, 8).with_class(Priority::High, Some(600_000)),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        let high = &res[3];
+        assert_eq!(high.priority, Priority::High);
+        assert!(!high.deadline_missed);
+        for batch in &res[..3] {
+            assert!(
+                high.ttft_s < batch.ttft_s,
+                "high ttft {} not under batch ttft {}",
+                high.ttft_s,
+                batch.ttft_s
+            );
+        }
+        assert_eq!(e.tel.classes[Priority::High.index()].completed, 1);
+        assert_eq!(e.tel.classes[Priority::Batch.index()].completed, 3);
+        assert!(e.tel.classes[Priority::High.index()].ttft_s_sum > 0.0);
+    }
+
+    #[test]
+    fn zero_length_prompts_terminate_and_report_ttft() {
+        // Regression: the chunked-prefill mirror used to spin forever
+        // on a (0, 0) tenant and never set TTFT for (0, n) tenants.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let res = e.run_sessions(&[(0, 0), (0, 3), (4, 2)], gpu);
+        assert_eq!(res[0].tokens, 0);
+        assert_eq!(res[1].tokens, 3);
+        assert!(res[1].ttft_s > 0.0, "zero-prompt tenant lost its TTFT");
+        assert!(res[1].ttft_s <= res[1].total_s);
+        assert_eq!(res[2].tokens, 2);
+        assert_eq!(e.tel.tokens_generated, 5);
+    }
+
+    #[test]
+    fn tight_deadlines_are_reported_missed() {
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let tenants = [
+            // A nanosecond-scale budget no simulated request can make.
+            SimTenant::untagged(8, 4).with_class(Priority::Normal, Some(0)),
+            SimTenant::untagged(8, 4),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        assert!(res[0].deadline_missed);
+        assert!(!res[1].deadline_missed, "no deadline, no miss");
+        assert_eq!(e.tel.classes[Priority::Normal.index()].deadline_missed, 1);
+        assert_eq!(e.tel.classes[Priority::Normal.index()].completed, 2);
+    }
+
+    #[test]
+    fn chunked_prefill_protects_short_prompts_from_long_ones() {
+        // Same class, long prompt admitted first. With chunking the
+        // short tenant interleaves after one chunk; with a chunk big
+        // enough to swallow the long prompt whole, it waits out the
+        // entire monolithic prefill — strictly worse TTFT.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let tenants = [SimTenant::untagged(48, 4), SimTenant::untagged(4, 4)];
+        let mut chunked_cfg = EngineConfig::full();
+        chunked_cfg.prefill_chunk = 16;
+        let mut chunked = engine(ModelSpec::llama2_7b(), chunked_cfg);
+        let res_chunked = chunked.run_sessions_policy(&tenants, gpu);
+        let mut mono_cfg = EngineConfig::full();
+        mono_cfg.prefill_chunk = 64;
+        let mut mono = engine(ModelSpec::llama2_7b(), mono_cfg);
+        let res_mono = mono.run_sessions_policy(&tenants, gpu);
+        assert!(
+            res_chunked[1].ttft_s < res_mono[1].ttft_s,
+            "chunked short-tenant ttft {} must beat monolithic {}",
+            res_chunked[1].ttft_s,
+            res_mono[1].ttft_s
+        );
+        // Token accounting is identical either way.
+        assert_eq!(res_chunked.iter().map(|r| r.tokens).sum::<u64>(), 8);
+        assert_eq!(res_mono.iter().map(|r| r.tokens).sum::<u64>(), 8);
     }
 
     #[test]

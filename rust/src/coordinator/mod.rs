@@ -9,9 +9,11 @@
 //!   costed on the calibrated memory-hierarchy simulator (throughput /
 //!   carbon / ablation experiments).
 //!
-//! Plus the serving plumbing: FIFO admission queue, per-request
-//! [`session::DecodeSession`]s over a bounded KV slot pool, the fair
-//! interleaving [`scheduler::Scheduler`], and the TCP server.
+//! Plus the serving plumbing: bounded admission queue, per-request
+//! [`session::DecodeSession`]s over a bounded KV slot pool, the
+//! priority/deadline-aware chunked-prefill [`scheduler::Scheduler`],
+//! seeded synthetic traces ([`workload`]) for the replay tier, and the
+//! TCP server.
 
 pub mod config;
 pub mod engine_exec;
@@ -20,10 +22,14 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod workload;
 
 pub use config::{EngineConfig, PolicyKind};
 pub use engine_exec::ExecEngine;
-pub use engine_sim::{SimEngine, SimResult, TenantResult};
-pub use request::{detokenize, tokenize, Request, RequestQueue, Response};
-pub use scheduler::{Completed, Outcome, Scheduler, TickReport};
+pub use engine_sim::{SimEngine, SimResult, SimTenant, TenantResult};
+pub use request::{detokenize, tokenize, Priority, Request, RequestQueue, Response};
+pub use scheduler::{
+    ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, TickReport,
+    DEFAULT_STARVATION_GUARD,
+};
 pub use session::{DecodeSession, KvPool, SessionEngine, SessionState, SessionStats, StepOutcome};

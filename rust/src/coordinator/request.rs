@@ -8,6 +8,53 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+/// Serving priority class. Declaration order is scheduling order: the
+/// scheduler serves `High` before `Normal` before `Batch` (subject to
+/// its starvation guard), mirroring the interactive/default/throughput
+/// SLO split production traffic actually has. `index()` is the slot in
+/// the per-class telemetry arrays ([`crate::telemetry::N_CLASSES`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    /// Interactive traffic with tight latency SLOs.
+    High,
+    /// Untagged traffic (the PR-1 behavior).
+    #[default]
+    Normal,
+    /// Throughput jobs that absorb latency.
+    Batch,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Batch];
+
+    /// Rank used both for scheduling order and telemetry indexing.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a protocol class tag (`GEN@high:250 ...`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -16,6 +63,34 @@ pub struct Request {
     /// Number of tokens to generate.
     pub max_new: usize,
     pub arrived: Instant,
+    /// Scheduling class; untagged requests are `Normal`.
+    pub priority: Priority,
+    /// SLO budget relative to arrival, in scheduler-clock milliseconds.
+    /// The scheduler stamps the absolute deadline at submit and orders
+    /// same-class sessions earliest-deadline-first; completions past it
+    /// count as deadline misses.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    /// An untagged (`Normal`, no deadline) request arriving now.
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new,
+            arrived: Instant::now(),
+            priority: Priority::Normal,
+            deadline_ms: None,
+        }
+    }
+
+    /// Tag with a priority class and optional relative deadline.
+    pub fn with_class(mut self, priority: Priority, deadline_ms: Option<u64>) -> Request {
+        self.priority = priority;
+        self.deadline_ms = deadline_ms;
+        self
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -90,12 +165,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request {
-            id,
-            prompt: vec![1, 2],
-            max_new: 4,
-            arrived: Instant::now(),
-        }
+        Request::new(id, vec![1, 2], 4)
     }
 
     #[test]
@@ -115,6 +185,27 @@ mod tests {
         assert!(!q.push(req(2)));
         assert_eq!(q.rejected, 1);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn priority_rank_matches_telemetry_classes() {
+        assert_eq!(Priority::ALL.len(), crate::telemetry::N_CLASSES);
+        for (rank, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), rank, "{p:?} out of rank order");
+        }
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::parse("HIGH"), Some(Priority::High));
+        assert_eq!(Priority::parse("bulk"), None);
+    }
+
+    #[test]
+    fn request_class_tagging() {
+        let r = req(1);
+        assert_eq!(r.priority, Priority::Normal);
+        assert_eq!(r.deadline_ms, None);
+        let r = r.with_class(Priority::High, Some(250));
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline_ms, Some(250));
     }
 
     #[test]

@@ -4,22 +4,31 @@
 //!
 //! Protocol (one request per line):
 //!   `GEN <max_new> <prompt text...>`
+//!   `GEN@<class>[:<deadline_ms>] <max_new> <prompt text...>`
 //!       → `OK <id> <queue_ms> <ttft_ms> <total_ms> <text...>`
-//!   `STATS`  → one-line JSON queue/scheduler stats
+//!   `STATS`  → one-line JSON queue/scheduler stats (incl. per-class
+//!              completion/deadline-miss counters)
 //!   anything else → `ERR <reason>`
+//!
+//! `<class>` is `high`, `normal`, or `batch`; `<deadline_ms>` is an SLO
+//! budget relative to arrival. Untagged `GEN` is `normal` with no
+//! deadline — exactly the PR-1 behavior.
 //!
 //! The acceptor thread parses lines into the shared [`RequestQueue`];
 //! the decode thread (owning the [`ExecEngine`]) drains it into a
 //! [`Scheduler`] that keeps up to `--sessions N` decode sessions in
-//! flight, interleaving token steps round-robin so a long generation
-//! cannot head-of-line-block the rest, while every session shares the
-//! same warm HBM/DRAM caches. Each reply is written back on its
-//! request's connection the moment its session completes.
+//! flight, admitting by (class, deadline, arrival) and interleaving
+//! chunked-prefill/decode turns EDF-within-class so neither a long
+//! generation nor a long *prompt* can head-of-line-block the rest,
+//! while every session shares the same warm HBM/DRAM caches. Each
+//! reply is written back on its request's connection the moment its
+//! session completes.
 
 use crate::coordinator::engine_exec::ExecEngine;
-use crate::coordinator::request::{detokenize, tokenize, Request, RequestQueue};
-use crate::coordinator::scheduler::{Outcome, Scheduler};
+use crate::coordinator::request::{detokenize, tokenize, Priority, Request, RequestQueue};
+use crate::coordinator::scheduler::{Outcome, SchedConfig, Scheduler};
 use crate::coordinator::session::SessionEngine;
+use crate::telemetry::N_CLASSES;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -30,7 +39,12 @@ use std::sync::{Arc, Condvar, Mutex};
 /// A parsed client line.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Command {
-    Gen { max_new: usize, prompt: String },
+    Gen {
+        max_new: usize,
+        prompt: String,
+        priority: Priority,
+        deadline_ms: Option<u64>,
+    },
     Stats,
 }
 
@@ -44,8 +58,37 @@ pub fn parse_request(line: &str) -> Result<Command, &'static str> {
     if line == "STATS" {
         return Ok(Command::Stats);
     }
-    let Some(rest) = line.strip_prefix("GEN ") else {
+    let Some(rest) = line.strip_prefix("GEN") else {
         return Err("expected GEN or STATS");
+    };
+    // Split off an optional `@<class>[:<deadline_ms>]` tag; a bare
+    // "GEN" (no tag, no space) no longer matches the verb, and an
+    // empty tag ("GEN@ ...") is an error rather than silently normal —
+    // it means the client meant to tag and dropped the class.
+    let (tag, rest) = match rest.strip_prefix('@') {
+        Some(tagged) => {
+            let mut parts = tagged.splitn(2, ' ');
+            (Some(parts.next().unwrap_or("")), parts.next().unwrap_or(""))
+        }
+        None => match rest.strip_prefix(' ') {
+            Some(rest) => (None, rest),
+            None => return Err("expected GEN or STATS"),
+        },
+    };
+    let (priority, deadline_ms) = match tag {
+        None => (Priority::Normal, None),
+        Some(tag) => {
+            let (class, deadline) = match tag.split_once(':') {
+                Some((class, ms)) => {
+                    (class, Some(ms.parse::<u64>().map_err(|_| "bad deadline")?))
+                }
+                None => (tag, None),
+            };
+            (
+                Priority::parse(class).ok_or("bad priority class")?,
+                deadline,
+            )
+        }
     };
     let mut parts = rest.splitn(2, ' ');
     let max_new = parts.next().unwrap_or("");
@@ -54,7 +97,12 @@ pub fn parse_request(line: &str) -> Result<Command, &'static str> {
     if prompt.is_empty() {
         return Err("empty prompt");
     }
-    Ok(Command::Gen { max_new, prompt })
+    Ok(Command::Gen {
+        max_new,
+        prompt,
+        priority,
+        deadline_ms,
+    })
 }
 
 struct Pending {
@@ -69,6 +117,10 @@ struct Shared {
     next_id: AtomicU64,
     /// Sessions currently in flight (for STATS).
     active: AtomicU64,
+    /// Per-class completions / deadline misses (for STATS), mirrored
+    /// from the scheduler by the decode loop after every tick.
+    class_done: [AtomicU64; N_CLASSES],
+    class_missed: [AtomicU64; N_CLASSES],
 }
 
 /// Serve until `max_requests` have been answered (None = forever).
@@ -91,6 +143,8 @@ pub fn serve(
         stop: AtomicBool::new(false),
         next_id: AtomicU64::new(1),
         active: AtomicU64::new(0),
+        class_done: std::array::from_fn(|_| AtomicU64::new(0)),
+        class_missed: std::array::from_fn(|_| AtomicU64::new(0)),
     });
 
     // Acceptor thread: parse lines, enqueue.
@@ -108,7 +162,12 @@ pub fn serve(
 
     // Decode loop (this thread owns the engine, inside the scheduler).
     let sessions = engine.capacity();
-    let mut sched = Scheduler::new(engine, sessions);
+    let sched_cfg = SchedConfig {
+        prefill_chunk: engine.config().prefill_chunk,
+        starvation_guard: engine.config().starvation_guard,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::with_config(engine, sessions, sched_cfg);
     let mut conns: HashMap<u64, TcpStream> = HashMap::new();
     let mut served = 0u64;
     let mut submitted = 0u64;
@@ -119,11 +178,14 @@ pub fn serve(
             }
         }
         // Drain arrivals into the scheduler; block only when there is
-        // nothing in flight to step. Only enough requests to fill the
-        // session slots leave the bounded RequestQueue — the rest wait
-        // there so admission backpressure ("ERR queue full") still
-        // applies — and never more than `max_requests` in total, so
-        // shutdown can't strand a half-decoded session.
+        // nothing in flight to step. Beyond the session slots, up to
+        // one extra slot-width of requests leaves the bounded
+        // RequestQueue — the scheduler reorders that window by
+        // (class, deadline), so a tagged request can overtake FIFO
+        // arrivals without unbounding admission ("ERR queue full"
+        // backpressure still applies at the RequestQueue) — and never
+        // more than `max_requests` in total, so shutdown can't strand
+        // a half-decoded session.
         {
             let mut guard = shared.queue.lock().unwrap();
             loop {
@@ -132,7 +194,7 @@ pub fn serve(
                     if max_requests.is_some_and(|max| submitted >= max) {
                         break;
                     }
-                    if sched.active_len() + sched.backlog_len() >= sched.max_sessions() {
+                    if sched.active_len() + sched.backlog_len() >= 2 * sched.max_sessions() {
                         break;
                     }
                     let Some(req) = q.pop() else { break };
@@ -155,6 +217,10 @@ pub fn serve(
         shared
             .active
             .store(sched.active_len() as u64, Ordering::SeqCst);
+        for (i, c) in sched.classes.iter().enumerate() {
+            shared.class_done[i].store(c.completed, Ordering::SeqCst);
+            shared.class_missed[i].store(c.deadline_missed, Ordering::SeqCst);
+        }
         for outcome in report.outcomes {
             let id = outcome.id();
             let reply = match outcome {
@@ -191,7 +257,12 @@ pub fn serve(
     }
     let _ = TcpStream::connect(bound);
     let _ = acceptor.join();
-    Ok(sched.into_engine())
+    // The scheduler owns per-class accounting; fold it into the
+    // engine's telemetry so callers see one report.
+    let classes = sched.classes;
+    let mut engine = sched.into_engine();
+    engine.tel.classes = classes;
+    Ok(engine)
 }
 
 fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
@@ -220,23 +291,40 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                 // Queue/scheduler stats; engine telemetry is reported by
                 // the CLI at shutdown.
                 let g = shared.queue.lock().unwrap();
+                let classes: Vec<String> = Priority::ALL
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            "\"{}\":{{\"done\":{},\"missed\":{}}}",
+                            p.name(),
+                            shared.class_done[p.index()].load(Ordering::SeqCst),
+                            shared.class_missed[p.index()].load(Ordering::SeqCst)
+                        )
+                    })
+                    .collect();
                 let msg = format!(
-                    "{{\"depth\":{},\"enqueued\":{},\"rejected\":{},\"active\":{}}}\n",
+                    "{{\"depth\":{},\"enqueued\":{},\"rejected\":{},\"active\":{},\"classes\":{{{}}}}}\n",
                     g.0.len(),
                     g.0.enqueued,
                     g.0.rejected,
-                    shared.active.load(Ordering::SeqCst)
+                    shared.active.load(Ordering::SeqCst),
+                    classes.join(",")
                 );
                 drop(g);
                 let _ = reply_conn.write_all(msg.as_bytes());
             }
-            Command::Gen { max_new, prompt } => {
-                let req = Request {
-                    id: shared.next_id.fetch_add(1, Ordering::SeqCst),
-                    prompt: tokenize(&prompt),
+            Command::Gen {
+                max_new,
+                prompt,
+                priority,
+                deadline_ms,
+            } => {
+                let req = Request::new(
+                    shared.next_id.fetch_add(1, Ordering::SeqCst),
+                    tokenize(&prompt),
                     max_new,
-                    arrived: std::time::Instant::now(),
-                };
+                )
+                .with_class(priority, deadline_ms);
                 // The stop check happens under the queue lock: the
                 // decode loop sets `stop` *before* taking the lock for
                 // its final drain, so a request admitted while we see
@@ -287,7 +375,9 @@ mod tests {
             parse_request("GEN 32 the quick brown fox"),
             Ok(Command::Gen {
                 max_new: 32,
-                prompt: "the quick brown fox".into()
+                prompt: "the quick brown fox".into(),
+                priority: Priority::Normal,
+                deadline_ms: None,
             })
         );
     }
@@ -298,9 +388,44 @@ mod tests {
             parse_request("  GEN 4 a  b \n"),
             Ok(Command::Gen {
                 max_new: 4,
-                prompt: "a  b".into()
+                prompt: "a  b".into(),
+                priority: Priority::Normal,
+                deadline_ms: None,
             })
         );
+    }
+
+    #[test]
+    fn parse_class_tag_with_deadline() {
+        assert_eq!(
+            parse_request("GEN@high:250 16 tell me now"),
+            Ok(Command::Gen {
+                max_new: 16,
+                prompt: "tell me now".into(),
+                priority: Priority::High,
+                deadline_ms: Some(250),
+            })
+        );
+        assert_eq!(
+            parse_request("GEN@batch 64 crunch this overnight"),
+            Ok(Command::Gen {
+                max_new: 64,
+                prompt: "crunch this overnight".into(),
+                priority: Priority::Batch,
+                deadline_ms: None,
+            })
+        );
+    }
+
+    #[test]
+    fn parse_bad_class_tags() {
+        assert_eq!(parse_request("GEN@vip 8 hello"), Err("bad priority class"));
+        assert_eq!(parse_request("GEN@high:soon 8 hello"), Err("bad deadline"));
+        // An empty tag means the client dropped its class — reject it
+        // rather than silently serving as normal.
+        assert_eq!(parse_request("GEN@ 8 hello"), Err("bad priority class"));
+        // A tag with no arguments falls through to the max_new check.
+        assert_eq!(parse_request("GEN@high"), Err("bad max_new"));
     }
 
     #[test]

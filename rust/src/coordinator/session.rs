@@ -13,7 +13,7 @@
 //! testable without artifacts.
 
 use crate::coordinator::engine_exec::argmax;
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Priority, Request};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -68,6 +68,9 @@ pub struct DecodeSession {
     pub generated: Vec<u32>,
     pub state: SessionState,
     pub stats: SessionStats,
+    /// Scheduling class carried over from the request (the scheduler
+    /// attributes per-class telemetry by it).
+    pub priority: Priority,
     /// When the request was admitted to the queue.
     pub arrived: Instant,
     slot: usize,
@@ -92,6 +95,7 @@ impl DecodeSession {
             generated: Vec::with_capacity(req.max_new),
             state: SessionState::Queued,
             stats: SessionStats::default(),
+            priority: req.priority,
             arrived: req.arrived,
             slot,
             pos: 0,
@@ -118,6 +122,12 @@ impl DecodeSession {
 
     pub fn is_done(&self) -> bool {
         self.state == SessionState::Done
+    }
+
+    /// Still consuming prompt tokens (a chunked-prefill turn may keep
+    /// stepping this session without yielding the engine).
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.state, SessionState::Queued | SessionState::Prefill)
     }
 
     /// Total engine steps this session needs: one per prompt token plus
@@ -208,6 +218,15 @@ impl DecodeSession {
 pub trait SessionEngine {
     /// Maximum concurrent sessions (the KV slot-pool size).
     fn capacity(&self) -> usize;
+
+    /// Longest position budget one session may use (prompt feeds plus
+    /// decode feeds — the per-slot KV stride). The scheduler rejects
+    /// oversized requests at admission with an error instead of letting
+    /// them panic mid-decode on a KV write past the stride. Engines
+    /// with unbounded stubs keep the default.
+    fn max_positions(&self) -> usize {
+        usize::MAX
+    }
 
     /// Validate the request and bind a KV slot to it. Errors (bad
     /// request, pool exhausted) must leave the engine unchanged.
@@ -330,12 +349,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
-        Request {
-            id,
-            prompt,
-            max_new,
-            arrived: Instant::now(),
-        }
+        Request::new(id, prompt, max_new)
     }
 
     /// Minimal deterministic engine: next token = f(token, pos).

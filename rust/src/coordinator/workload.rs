@@ -1,0 +1,206 @@
+//! Seeded synthetic arrival traces for the trace-replay test tier (and
+//! for load drivers): a [`TraceSpec`] deterministically expands into a
+//! time-ordered list of [`TraceEvent`]s — request id, arrival time on
+//! the virtual clock, prompt tokens, decode budget, priority class, and
+//! SLO deadline. Three mixes cover the scheduling regimes the
+//! priority/EDF scheduler has to survive:
+//!
+//! - [`Mix::Steady`] — Poisson-ish trickle of mixed classes; the
+//!   baseline regime where EDF ordering and round-robin coexist.
+//! - [`Mix::Bursty`] — arrival bursts separated by idle gaps; stresses
+//!   admission ordering when the backlog is deep.
+//! - [`Mix::AdversarialLongPrompt`] — a flood of long-prompt batch
+//!   requests with sparse high-priority short requests woven in; the
+//!   head-of-line-blocking scenario where chunked-prefill EDF must beat
+//!   plain round-robin on high-priority TTFT.
+//!
+//! Everything derives from `util::rng` (xoshiro256++), so a (mix, seed)
+//! pair replays bit-identically — the property the harness's
+//! determinism and sequential-equivalence checks rest on.
+
+use crate::coordinator::request::{Priority, Request};
+use crate::util::rng::Rng;
+
+/// Workload regime of a synthetic trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    Steady,
+    Bursty,
+    AdversarialLongPrompt,
+}
+
+/// One request arrival on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Arrival time, virtual ms.
+    pub at_ms: u64,
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub priority: Priority,
+    /// SLO budget relative to arrival, virtual ms.
+    pub deadline_ms: Option<u64>,
+}
+
+impl TraceEvent {
+    pub fn to_request(&self) -> Request {
+        Request::new(self.id, self.prompt.clone(), self.max_new)
+            .with_class(self.priority, self.deadline_ms)
+    }
+}
+
+/// Deterministic trace recipe.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    pub mix: Mix,
+    /// Number of requests.
+    pub n: usize,
+    pub seed: u64,
+    /// Prompt tokens are drawn below this bound (match the consuming
+    /// engine's vocabulary).
+    pub vocab: u32,
+}
+
+fn prompt(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    (0..len).map(|_| rng.below(vocab as u64) as u32).collect()
+}
+
+/// Expand a spec into a time-ordered event list (ids are 1-based).
+pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(spec.seed);
+    let mut events = Vec::with_capacity(spec.n);
+    let mut now_ms = 0u64;
+    for i in 0..spec.n {
+        let id = i as u64 + 1;
+        let ev = match spec.mix {
+            Mix::Steady => {
+                now_ms += rng.range(2, 12) as u64;
+                // 20% high / 60% normal / 20% batch.
+                let roll = rng.below(10);
+                let (priority, deadline_ms) = if roll < 2 {
+                    (Priority::High, Some(rng.range(60, 200) as u64))
+                } else if roll < 8 {
+                    (Priority::Normal, None)
+                } else {
+                    (Priority::Batch, None)
+                };
+                let plen = rng.range(3, 12);
+                TraceEvent {
+                    at_ms: now_ms,
+                    id,
+                    prompt: prompt(&mut rng, plen, spec.vocab),
+                    max_new: rng.range(2, 10),
+                    priority,
+                    deadline_ms,
+                }
+            }
+            Mix::Bursty => {
+                // Bursts of 6 simultaneous arrivals, 40-90 ms apart.
+                if i % 6 == 0 {
+                    now_ms += rng.range(40, 90) as u64;
+                }
+                let high = rng.below(4) == 0;
+                let plen = rng.range(2, 16);
+                TraceEvent {
+                    at_ms: now_ms,
+                    id,
+                    prompt: prompt(&mut rng, plen, spec.vocab),
+                    max_new: rng.range(2, 12),
+                    priority: if high { Priority::High } else { Priority::Normal },
+                    deadline_ms: if high { Some(rng.range(80, 300) as u64) } else { None },
+                }
+            }
+            Mix::AdversarialLongPrompt => {
+                now_ms += rng.range(1, 6) as u64;
+                if i % 5 == 4 {
+                    // Sparse interactive traffic: short prompt, tight
+                    // deadline, drowned in the batch flood below.
+                    let plen = rng.range(2, 6);
+                    TraceEvent {
+                        at_ms: now_ms,
+                        id,
+                        prompt: prompt(&mut rng, plen, spec.vocab),
+                        max_new: rng.range(2, 6),
+                        priority: Priority::High,
+                        deadline_ms: Some(rng.range(50, 150) as u64),
+                    }
+                } else {
+                    // The flood: long prompts that monopolize prefill
+                    // under FIFO round-robin.
+                    let plen = rng.range(48, 96);
+                    TraceEvent {
+                        at_ms: now_ms,
+                        id,
+                        prompt: prompt(&mut rng, plen, spec.vocab),
+                        max_new: rng.range(8, 16),
+                        priority: Priority::Batch,
+                        deadline_ms: None,
+                    }
+                }
+            }
+        };
+        events.push(ev);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(mix: Mix) -> TraceSpec {
+        TraceSpec {
+            mix,
+            n: 60,
+            seed: 0xD15C0,
+            vocab: 97,
+        }
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_time_ordered() {
+        for mix in [Mix::Steady, Mix::Bursty, Mix::AdversarialLongPrompt] {
+            let a = generate(&spec(mix));
+            let b = generate(&spec(mix));
+            assert_eq!(a.len(), 60);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.at_ms, y.at_ms);
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.max_new, y.max_new);
+                assert_eq!(x.priority, y.priority);
+                assert_eq!(x.deadline_ms, y.deadline_ms);
+            }
+            assert!(a.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "{mix:?} unordered");
+            assert!(a.iter().all(|e| !e.prompt.is_empty() && e.max_new >= 1));
+            assert!(a.iter().all(|e| e.prompt.iter().all(|&t| t < 97)));
+        }
+    }
+
+    #[test]
+    fn adversarial_mix_has_both_classes() {
+        let evs = generate(&spec(Mix::AdversarialLongPrompt));
+        let high = evs.iter().filter(|e| e.priority == Priority::High).count();
+        let batch = evs.iter().filter(|e| e.priority == Priority::Batch).count();
+        assert_eq!(high + batch, evs.len());
+        assert!(high >= 10, "only {high} high-priority events");
+        for e in &evs {
+            match e.priority {
+                Priority::High => {
+                    assert!(e.prompt.len() <= 6 && e.deadline_ms.is_some());
+                }
+                _ => assert!(e.prompt.len() >= 48, "flood prompt too short"),
+            }
+        }
+    }
+
+    #[test]
+    fn events_convert_to_tagged_requests() {
+        let evs = generate(&spec(Mix::Steady));
+        let e = &evs[0];
+        let r = e.to_request();
+        assert_eq!(r.id, e.id);
+        assert_eq!(r.prompt, e.prompt);
+        assert_eq!(r.priority, e.priority);
+        assert_eq!(r.deadline_ms, e.deadline_ms);
+    }
+}

@@ -53,6 +53,9 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.fixed_layers = args.get_usize("fixed-layers", cfg.fixed_layers);
     cfg.preload_depth = args.get_usize("preload-depth", cfg.preload_depth);
     cfg.max_sessions = args.get_usize("sessions", cfg.max_sessions).max(1);
+    cfg.prefill_chunk = args.get_usize("prefill-chunk", cfg.prefill_chunk).max(1);
+    cfg.starvation_guard =
+        args.get_usize("starvation-guard", cfg.starvation_guard as usize) as u64;
     if args.flag("no-ssd") {
         cfg.use_ssd = false;
     }
@@ -98,7 +101,11 @@ COMMANDS:
   info            platform, artifacts, model geometries
   generate        run the executed tiny model: --prompt TEXT --tokens N
   serve           TCP server: --addr HOST:PORT [--max-requests N]
-                  [--sessions N]  interleave up to N decode sessions
+                  [--sessions N]       interleave up to N decode sessions
+                  [--prefill-chunk N]  prompt tokens per scheduler turn
+                  protocol: `GEN <max_new> <prompt>` or
+                  `GEN@<class>[:<deadline_ms>] <max_new> <prompt>`
+                  with class in {high, normal, batch}
   simulate        simulated large-model run: --model {7B,13B,40B,70B}
                   --in N --out N [--policy atu|lru|window] [--dram-gib G]
                   [--no-ssd] [--no-cache] [--no-mp]
@@ -177,7 +184,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let eng = ExecEngine::new(Path::new(opts.artifacts), cfg)?;
     println!(
         "serving tiny model, up to {sessions} interleaved session(s) \
-         (protocol: `GEN <max_new> <prompt>`)"
+         (protocol: `GEN[@class[:deadline_ms]] <max_new> <prompt>`)"
     );
     let eng = m2cache::coordinator::server::serve(eng, addr, max, |a| {
         println!("listening on {a}");

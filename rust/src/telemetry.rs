@@ -46,6 +46,40 @@ impl PhaseTimes {
     }
 }
 
+/// Number of serving priority classes (`coordinator::request::Priority`
+/// indexes into per-class arrays with `Priority::index`, which is
+/// pinned to this constant by a unit test there). Kept here so
+/// telemetry stays free of coordinator dependencies.
+pub const N_CLASSES: usize = 3;
+
+/// Per-priority-class serving counters, indexed by priority rank
+/// (0 = high/interactive, 1 = normal, 2 = batch). Filled by the
+/// scheduler on the executed path and by `SimEngine::run_sessions` on
+/// the simulated path — the per-class TTFT/deadline accounting the
+/// heterogeneous-SLO scenario reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassCounters {
+    pub admitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Completions that landed after their absolute deadline.
+    pub deadline_missed: u64,
+    /// Sum of TTFTs over completed requests, seconds (mean = sum /
+    /// completed).
+    pub ttft_s_sum: f64,
+    pub ttft_s_max: f64,
+}
+
+impl ClassCounters {
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.ttft_s_sum / self.completed as f64
+        }
+    }
+}
+
 /// Full run telemetry.
 #[derive(Debug, Clone, Default)]
 pub struct Telemetry {
@@ -69,6 +103,8 @@ pub struct Telemetry {
     pub kv_pool_bytes: u64,
     /// Most decode sessions ever concurrently in flight.
     pub peak_active_sessions: u64,
+    /// Per-priority-class serving counters (see [`ClassCounters`]).
+    pub classes: [ClassCounters; N_CLASSES],
     /// Free-form counters for experiment-specific series.
     pub counters: BTreeMap<String, u64>,
 }
@@ -120,8 +156,17 @@ impl Telemetry {
             .field_num("predict_s", self.phases.predict_s)
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)
-            .field_num("ffn_s", self.phases.ffn_s)
-            .end_obj();
+            .field_num("ffn_s", self.phases.ffn_s);
+        w.key("classes").begin_obj();
+        for (name, c) in ["high", "normal", "batch"].iter().zip(self.classes.iter()) {
+            w.key(name)
+                .begin_obj()
+                .field_int("done", c.completed as i64)
+                .field_int("missed", c.deadline_missed as i64)
+                .field_num("mean_ttft_s", c.mean_ttft_s())
+                .end_obj();
+        }
+        w.end_obj().end_obj();
         w.finish()
     }
 }
@@ -186,6 +231,19 @@ mod tests {
         let j = t.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"tokens\":10"));
+    }
+
+    #[test]
+    fn class_counters_mean_and_json() {
+        let mut t = Telemetry::default();
+        t.classes[0].completed = 4;
+        t.classes[0].ttft_s_sum = 2.0;
+        t.classes[0].deadline_missed = 1;
+        assert!((t.classes[0].mean_ttft_s() - 0.5).abs() < 1e-12);
+        assert_eq!(t.classes[1].mean_ttft_s(), 0.0, "empty class is 0, not NaN");
+        let j = t.to_json();
+        assert!(j.contains("\"classes\":{\"high\":{\"done\":4,\"missed\":1"), "{j}");
+        assert!(j.contains("\"batch\""), "{j}");
     }
 
     #[test]

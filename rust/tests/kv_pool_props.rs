@@ -1,0 +1,166 @@
+//! KvPool property tier — runs WITHOUT `make artifacts`. Random
+//! acquire/release/zero/write sequences against a shadow model, in the
+//! same `util::check` style as the CacheUnit property sweeps: the pool
+//! must never alias two live slots, always satisfy
+//! `in_use + available == capacity`, and hand back zeroed memory on
+//! every (re-)acquire.
+
+use m2cache::coordinator::KvPool;
+use m2cache::util::check::Check;
+use m2cache::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// One random op sequence against a freshly built pool.
+fn pool_invariants(rng: &mut Rng) -> Result<(), String> {
+    let slots = rng.range(1, 6);
+    let layers = rng.range(1, 4);
+    let d = rng.range(1, 5);
+    let max_seq = rng.range(1, 6);
+    let stride = max_seq * d;
+    let mut pool = KvPool::new(slots, layers, stride);
+    if pool.bytes() != (2 * slots * layers * stride * 4) as u64 {
+        return Err(format!("bytes() wrong for {slots}x{layers}x{stride}"));
+    }
+    // Shadow model: the set of live slots, plus a per-slot sentinel we
+    // wrote (slot -> (layer, pos, value)).
+    let mut live: BTreeSet<usize> = BTreeSet::new();
+    let mut wrote: Vec<Option<(usize, usize, f32)>> = vec![None; slots];
+    for step in 0..64 {
+        match rng.below(4) {
+            0 => {
+                // Acquire: unique, zeroed, or None exactly at capacity.
+                match pool.acquire() {
+                    Some(s) => {
+                        if s >= slots {
+                            return Err(format!("slot {s} out of range"));
+                        }
+                        if !live.insert(s) {
+                            return Err(format!("step {step}: slot {s} double-acquired"));
+                        }
+                        for l in 0..layers {
+                            if pool.k_layer(s, l).iter().any(|&x| x != 0.0)
+                                || pool.v_layer(s, l).iter().any(|&x| x != 0.0)
+                            {
+                                return Err(format!("step {step}: slot {s} not zeroed"));
+                            }
+                        }
+                        wrote[s] = None;
+                    }
+                    None => {
+                        if live.len() != slots {
+                            return Err(format!(
+                                "step {step}: pool refused with {} free",
+                                slots - live.len()
+                            ));
+                        }
+                    }
+                }
+            }
+            1 => {
+                // Release a random live slot.
+                if let Some(&s) = live.iter().next() {
+                    live.remove(&s);
+                    pool.release(s);
+                    wrote[s] = None;
+                }
+            }
+            2 => {
+                // Write a sentinel row into a random live slot.
+                if !live.is_empty() {
+                    let pick = rng.range(0, live.len());
+                    let s = *live.iter().nth(pick).expect("picked live slot");
+                    let layer = rng.range(0, layers);
+                    let pos = rng.range(0, max_seq);
+                    let val = (step + 1) as f32;
+                    pool.write_token(s, layer, pos, d, &vec![val; d], &vec![-val; d]);
+                    wrote[s] = Some((layer, pos, val));
+                }
+            }
+            _ => {
+                // Zero a random live slot.
+                if let Some(&s) = live.iter().last() {
+                    pool.zero(s);
+                    wrote[s] = None;
+                }
+            }
+        }
+        // Invariants after every op.
+        if pool.in_use() + pool.available() != pool.capacity() {
+            return Err(format!(
+                "step {step}: in_use {} + available {} != capacity {}",
+                pool.in_use(),
+                pool.available(),
+                pool.capacity()
+            ));
+        }
+        if pool.in_use() != live.len() {
+            return Err(format!(
+                "step {step}: pool thinks {} in use, model says {}",
+                pool.in_use(),
+                live.len()
+            ));
+        }
+        // No aliasing: every live slot still reads back its own
+        // sentinel (another slot's write or zero must never leak in).
+        for &s in &live {
+            if let Some((layer, pos, val)) = wrote[s] {
+                let k = &pool.k_layer(s, layer)[pos * d..pos * d + d];
+                let v = &pool.v_layer(s, layer)[pos * d..pos * d + d];
+                if k.iter().any(|&x| x != val) || v.iter().any(|&x| x != -val) {
+                    return Err(format!(
+                        "step {step}: slot {s} sentinel clobbered (k {k:?} v {v:?})"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn kv_pool_random_ops_never_alias_and_conserve_slots() {
+    Check::new(200, 0x5107).run("kv-pool-invariants", pool_invariants);
+}
+
+#[test]
+fn kv_pool_full_acquire_release_cycle_roundtrips() {
+    Check::new(64, 0xC1C).run("kv-pool-roundtrip", |rng| {
+        let slots = rng.range(1, 8);
+        let mut pool = KvPool::new(slots, 2, 8);
+        // Drain the pool completely: all slots distinct.
+        let mut got = BTreeSet::new();
+        for _ in 0..slots {
+            let s = pool.acquire().ok_or("pool under-delivered")?;
+            if !got.insert(s) {
+                return Err(format!("duplicate slot {s}"));
+            }
+        }
+        if pool.acquire().is_some() {
+            return Err("pool over-delivered past capacity".into());
+        }
+        if pool.available() != 0 || pool.in_use() != slots {
+            return Err("drained pool miscounts".into());
+        }
+        // Dirty every slot, release everything, re-drain: all zeroed.
+        for &s in &got {
+            pool.write_token(s, 1, 3, 2, &[9.0, 9.0], &[9.0, 9.0]);
+        }
+        for &s in &got {
+            pool.release(s);
+        }
+        if pool.available() != slots || pool.in_use() != 0 {
+            return Err("released pool miscounts".into());
+        }
+        for _ in 0..slots {
+            let s = pool.acquire().ok_or("re-acquire failed")?;
+            for l in 0..2 {
+                if pool.k_layer(s, l).iter().any(|&x| x != 0.0)
+                    || pool.v_layer(s, l).iter().any(|&x| x != 0.0)
+                {
+                    return Err(format!("slot {s} came back dirty"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

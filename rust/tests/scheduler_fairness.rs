@@ -1,9 +1,13 @@
 //! Scheduler fairness/determinism tier — runs WITHOUT `make artifacts`.
 //! A deterministic stub engine stands in for the PJRT stack, so these
 //! tests pin the scheduling contract itself: interleaved execution
-//! yields exactly the tokens sequential execution would, admission is
-//! FIFO, and no session starves (steps between a session's turns are
-//! bounded by the number of co-active sessions).
+//! yields exactly the tokens sequential execution would, untagged
+//! admission is FIFO, and no session starves (turns between a session's
+//! steps are bounded by the number of co-active sessions). Under the
+//! default policy a *turn* may feed several prompt tokens (chunked
+//! prefill), so step accounting sums `TickReport::steps_run`. The
+//! priority/deadline side of the policy is pinned by the trace-replay
+//! tier (`rust/tests/trace_replay.rs`).
 
 use anyhow::Result;
 use m2cache::coordinator::{
@@ -11,7 +15,6 @@ use m2cache::coordinator::{
 };
 use m2cache::util::rng::Rng;
 use std::collections::HashMap;
-use std::time::Instant;
 
 const VOCAB: usize = 97;
 
@@ -80,12 +83,7 @@ impl SessionEngine for StubEngine {
 }
 
 fn req(id: u64, prompt: &[u32], max_new: usize) -> Request {
-    Request {
-        id,
-        prompt: prompt.to_vec(),
-        max_new,
-        arrived: Instant::now(),
-    }
+    Request::new(id, prompt.to_vec(), max_new)
 }
 
 fn workload() -> Vec<(u64, Vec<u32>, usize)> {
@@ -97,23 +95,25 @@ fn workload() -> Vec<(u64, Vec<u32>, usize)> {
     ]
 }
 
-/// Run a workload at a given concurrency; returns tokens per request id
-/// plus the order sessions were stepped in.
+/// Run a workload at a given concurrency; returns tokens per request
+/// id, the order sessions got turns in, and total engine steps run.
 fn run_at(
     concurrency: usize,
     work: &[(u64, Vec<u32>, usize)],
-) -> (HashMap<u64, Vec<u32>>, Vec<u64>) {
+) -> (HashMap<u64, Vec<u32>>, Vec<u64>, usize) {
     let mut sched = Scheduler::new(StubEngine::new(concurrency), concurrency);
     for (id, prompt, max_new) in work {
         sched.submit(req(*id, prompt, *max_new));
     }
     let mut tokens = HashMap::new();
     let mut stepped = Vec::new();
+    let mut steps = 0;
     while !sched.is_idle() {
         let r = sched.tick();
         if let Some(id) = r.stepped {
             stepped.push(id);
         }
+        steps += r.steps_run;
         for o in r.outcomes {
             match o {
                 Outcome::Done(c) => {
@@ -123,15 +123,19 @@ fn run_at(
             }
         }
     }
-    (tokens, stepped)
+    assert_eq!(
+        sched.engine().forwards as usize, steps,
+        "TickReport steps must equal engine forwards"
+    );
+    (tokens, stepped, steps)
 }
 
 #[test]
 fn interleaved_execution_matches_sequential() {
     let work = workload();
-    let (seq, _) = run_at(1, &work);
+    let (seq, _, _) = run_at(1, &work);
     for k in [2, 3, 4] {
-        let (inter, _) = run_at(k, &work);
+        let (inter, _, _) = run_at(k, &work);
         assert_eq!(seq, inter, "K={k} interleaving changed outputs");
     }
     // And the outputs are what a bare session produces, one at a time.
@@ -167,10 +171,11 @@ fn admission_order_is_fifo() {
 #[test]
 fn no_session_starves() {
     // Between consecutive turns of any session, at most `active - 1`
-    // other steps may run — the scheduler's fairness bound.
+    // other turns may run — the scheduler's fairness bound for
+    // untagged traffic.
     let work = workload();
     let k = work.len();
-    let (_, stepped) = run_at(k, &work);
+    let (_, stepped, _) = run_at(k, &work);
     let mut last_seen: HashMap<u64, usize> = HashMap::new();
     for (i, id) in stepped.iter().enumerate() {
         if let Some(&prev) = last_seen.get(id) {
@@ -187,17 +192,18 @@ fn no_session_starves() {
 #[test]
 fn scheduling_is_deterministic() {
     let work = workload();
-    let (t1, s1) = run_at(3, &work);
-    let (t2, s2) = run_at(3, &work);
+    let (t1, s1, n1) = run_at(3, &work);
+    let (t2, s2, n2) = run_at(3, &work);
     assert_eq!(t1, t2, "token outputs must not vary run to run");
-    assert_eq!(s1, s2, "step order must not vary run to run");
+    assert_eq!(s1, s2, "turn order must not vary run to run");
+    assert_eq!(n1, n2, "step counts must not vary run to run");
 }
 
 #[test]
 fn aggregate_token_accounting_matches_per_session_sum() {
     let work = workload();
     let expected: usize = work.iter().map(|(_, _, n)| *n).sum();
-    let (tokens, _) = run_at(3, &work);
+    let (tokens, _, _) = run_at(3, &work);
     let total: usize = tokens.values().map(Vec::len).sum();
     assert_eq!(total, expected);
     for (id, prompt, max_new) in &work {
@@ -266,14 +272,16 @@ fn randomized_workloads_interleave_transparently() {
                 (i as u64 + 1, prompt, rng.range(1, 12))
             })
             .collect();
-        let (seq, _) = run_at(1, &work);
+        let (seq, _, _) = run_at(1, &work);
         let k = rng.range(2, 6);
-        let (inter, stepped) = run_at(k, &work);
+        let (inter, _, steps) = run_at(k, &work);
         assert_eq!(seq, inter, "case {case} (K={k}) diverged");
+        // Chunked prefill packs several steps into one turn, but the
+        // engine must still see exactly one forward per session step.
         let total_steps: usize = work
             .iter()
             .map(|(_, p, n)| p.len() + n.saturating_sub(1))
             .sum();
-        assert_eq!(stepped.len(), total_steps, "case {case} step count");
+        assert_eq!(steps, total_steps, "case {case} step count");
     }
 }

@@ -1,0 +1,378 @@
+//! Deterministic trace-replay tier — runs WITHOUT `make artifacts`.
+//!
+//! Seeded synthetic arrival traces (`coordinator::workload`: steady,
+//! bursty, adversarial long-prompt mixes) replay against a stub engine
+//! on a **virtual clock** (1 ms per engine forward), pinning the
+//! priority/deadline scheduling contract end to end:
+//!
+//! - byte-identical outputs vs sequential execution, for every mix and
+//!   both policy modes;
+//! - EDF ordering within a priority class on every non-guard turn;
+//! - no starvation: any in-flight session gets a turn within
+//!   `starvation_guard * slots` turns, even under a saturating
+//!   higher-priority stream;
+//! - deadline-miss accounting agrees exactly with the replay's own
+//!   bookkeeping, per request and per class;
+//! - the acceptance bar: under the adversarial long-prompt trace, p99
+//!   TTFT of high-priority short requests is **strictly lower** with
+//!   chunked-prefill EDF than with PR 1's round-robin, on the same
+//!   trace and the same simulated clock.
+
+use anyhow::Result;
+use m2cache::coordinator::workload::{generate, Mix, TraceEvent, TraceSpec};
+use m2cache::coordinator::{
+    DecodeSession, Outcome, Priority, Request, SchedConfig, SchedMode, Scheduler, SessionEngine,
+};
+use m2cache::telemetry::{ClassCounters, N_CLASSES};
+use std::collections::HashMap;
+
+const VOCAB: usize = 97;
+
+/// Deterministic stub engine: next token is a pure function of the fed
+/// token and the session position, so any correct scheduler reproduces
+/// the same per-request bytes regardless of interleaving.
+struct StubEngine {
+    slots: usize,
+    free: Vec<usize>,
+    forwards: u64,
+}
+
+impl StubEngine {
+    fn new(slots: usize) -> StubEngine {
+        StubEngine {
+            slots,
+            free: (0..slots).rev().collect(),
+            forwards: 0,
+        }
+    }
+}
+
+impl SessionEngine for StubEngine {
+    fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        self.forwards += 1;
+        assert!(!self.free.contains(&s.slot()), "stepped on a freed slot");
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[((token as usize).wrapping_mul(31) + s.pos() * 7 + 1) % VOCAB] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        assert!(!self.free.contains(&s.slot()), "double release");
+        self.free.push(s.slot());
+    }
+}
+
+/// Everything one replay observed, keyed by request id.
+struct Replay {
+    tokens: HashMap<u64, Vec<u32>>,
+    submit_ms: HashMap<u64, u64>,
+    /// End-of-turn virtual time of each request's first token.
+    ttft_ms: HashMap<u64, u64>,
+    finish_ms: HashMap<u64, u64>,
+    missed: HashMap<u64, bool>,
+    classes: [ClassCounters; N_CLASSES],
+    turns: u64,
+    guard_turns: u64,
+}
+
+/// Drive a trace through the scheduler on a virtual clock: each engine
+/// forward costs 1 ms, arrivals land at their trace times. Asserts the
+/// EDF and starvation contracts inline while replaying.
+fn replay(events: &[TraceEvent], cfg: SchedConfig, slots: usize) -> Replay {
+    let mut sched = Scheduler::with_config(StubEngine::new(slots), slots, cfg);
+    let mut out = Replay {
+        tokens: HashMap::new(),
+        submit_ms: HashMap::new(),
+        ttft_ms: HashMap::new(),
+        finish_ms: HashMap::new(),
+        missed: HashMap::new(),
+        classes: [ClassCounters::default(); N_CLASSES],
+        turns: 0,
+        guard_turns: 0,
+    };
+    // Any in-flight session must get a turn within this many turns.
+    let starvation_bound = match cfg.mode {
+        SchedMode::RoundRobin => Some(slots as u64),
+        SchedMode::PriorityEdf if cfg.starvation_guard > 0 => {
+            Some(slots as u64 * cfg.starvation_guard)
+        }
+        SchedMode::PriorityEdf => None,
+    };
+    let mut now: u64 = 0;
+    sched.set_virtual_now_ms(now);
+    let mut next_ev = 0;
+    let mut last_turn: HashMap<u64, u64> = HashMap::new();
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            let ev = &events[next_ev];
+            sched.submit(ev.to_request());
+            out.submit_ms.insert(ev.id, now);
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            // Idle gap: jump to the next arrival.
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        // Admit before observing, so the view matches what this tick
+        // will choose from (tick's own admission pass is then a no-op).
+        for o in sched.admit_pending() {
+            panic!("trace request rejected at admission: {o:?}");
+        }
+        let view = sched.active_view();
+        let now_pre = now;
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        if let Some(id) = r.stepped {
+            out.turns += 1;
+            if r.guard {
+                out.guard_turns += 1;
+            }
+            if let Some(bound) = starvation_bound {
+                if let Some(&prev) = last_turn.get(&id) {
+                    assert!(
+                        out.turns - prev <= bound,
+                        "session {id} waited {} turns (> {bound})",
+                        out.turns - prev
+                    );
+                }
+                last_turn.insert(id, out.turns);
+            }
+            if cfg.mode == SchedMode::PriorityEdf && !r.guard {
+                // EDF within class: nobody in the view may hold a
+                // strictly better (class, deadline) key than the
+                // session that got the turn.
+                let me = view
+                    .iter()
+                    .find(|a| a.id == id)
+                    .expect("stepped session was in the pre-tick view");
+                let mine = (me.priority.index(), me.deadline_ms.unwrap_or(u64::MAX));
+                for other in &view {
+                    let key = (other.priority.index(), other.deadline_ms.unwrap_or(u64::MAX));
+                    assert!(
+                        key >= mine,
+                        "turn gave {id} {mine:?} while {} held {key:?}",
+                        other.id
+                    );
+                }
+            }
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    let id = c.response.id;
+                    if !c.response.tokens.is_empty() {
+                        out.ttft_ms.entry(id).or_insert(now);
+                    }
+                    // The scheduler judged the deadline with the
+                    // pre-tick clock; mirror that here and require the
+                    // per-completion flag to agree.
+                    let expect = events[id as usize - 1]
+                        .deadline_ms
+                        .is_some_and(|d| now_pre > out.submit_ms[&id] + d);
+                    assert_eq!(
+                        c.deadline_missed, expect,
+                        "request {id} miss flag disagrees with the replay clock"
+                    );
+                    out.missed.insert(id, c.deadline_missed);
+                    out.finish_ms.insert(id, now);
+                    out.tokens.insert(id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+        // First token of a still-running session: visible as generated
+        // flipping positive in the post-tick view.
+        if let Some(id) = r.stepped {
+            if !out.ttft_ms.contains_key(&id) {
+                if let Some(a) = sched.active_view().iter().find(|a| a.id == id) {
+                    if a.generated > 0 {
+                        out.ttft_ms.insert(id, now);
+                    }
+                }
+            }
+        }
+    }
+    out.classes = sched.classes;
+    out
+}
+
+/// Reference: every request alone, stepped to completion sequentially.
+fn sequential_reference(events: &[TraceEvent]) -> HashMap<u64, Vec<u32>> {
+    let mut eng = StubEngine::new(1);
+    let mut tokens = HashMap::new();
+    for ev in events {
+        let mut s = eng.open(ev.to_request()).unwrap();
+        while !s.is_done() {
+            s.step(&mut eng).unwrap();
+        }
+        eng.close(&mut s);
+        tokens.insert(ev.id, s.generated);
+    }
+    tokens
+}
+
+fn spec(mix: Mix, n: usize) -> TraceSpec {
+    TraceSpec {
+        mix,
+        n,
+        seed: 0x7ACE,
+        vocab: VOCAB as u32,
+    }
+}
+
+fn edf_cfg() -> SchedConfig {
+    SchedConfig::default()
+}
+
+fn rr_cfg() -> SchedConfig {
+    SchedConfig {
+        mode: SchedMode::RoundRobin,
+        prefill_chunk: 1,
+        starvation_guard: 0,
+    }
+}
+
+fn p99(mut xs: Vec<u64>) -> u64 {
+    assert!(!xs.is_empty());
+    xs.sort_unstable();
+    let idx = ((xs.len() as f64) * 0.99).ceil() as usize - 1;
+    xs[idx.min(xs.len() - 1)]
+}
+
+#[test]
+fn outputs_are_byte_identical_to_sequential_for_all_mixes() {
+    for mix in [Mix::Steady, Mix::Bursty, Mix::AdversarialLongPrompt] {
+        let events = generate(&spec(mix, 40));
+        let reference = sequential_reference(&events);
+        for (name, cfg) in [("edf", edf_cfg()), ("rr", rr_cfg())] {
+            let rep = replay(&events, cfg, 3);
+            assert_eq!(
+                rep.tokens, reference,
+                "{mix:?}/{name}: interleaved replay changed generated bytes"
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_is_deterministic() {
+    let events = generate(&spec(Mix::Bursty, 48));
+    let a = replay(&events, edf_cfg(), 3);
+    let b = replay(&events, edf_cfg(), 3);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.ttft_ms, b.ttft_ms);
+    assert_eq!(a.finish_ms, b.finish_ms);
+    assert_eq!(a.turns, b.turns);
+    assert_eq!(a.classes, b.classes);
+}
+
+#[test]
+fn every_request_completes_with_exact_token_budget() {
+    for mix in [Mix::Steady, Mix::Bursty, Mix::AdversarialLongPrompt] {
+        let events = generate(&spec(mix, 40));
+        let rep = replay(&events, edf_cfg(), 2);
+        assert_eq!(rep.tokens.len(), events.len(), "{mix:?} lost requests");
+        for ev in &events {
+            assert_eq!(
+                rep.tokens[&ev.id].len(),
+                ev.max_new,
+                "{mix:?} request {} token budget",
+                ev.id
+            );
+        }
+        let done: u64 = rep.classes.iter().map(|c| c.completed).sum();
+        assert_eq!(done as usize, events.len());
+    }
+}
+
+#[test]
+fn no_starvation_and_edf_hold_under_adversarial_trace() {
+    // The EDF-within-class and starvation-bound assertions run inline
+    // in replay(); this pins that the adversarial trace actually
+    // exercises them (guard turns fired, both classes completed).
+    let events = generate(&spec(Mix::AdversarialLongPrompt, 60));
+    let rep = replay(&events, edf_cfg(), 2);
+    assert!(rep.guard_turns > 0, "guard never fired under saturation");
+    assert!(rep.classes[Priority::High.index()].completed >= 10);
+    assert!(rep.classes[Priority::Batch.index()].completed >= 40);
+}
+
+#[test]
+fn deadline_miss_accounting_matches_replay_bookkeeping() {
+    for mix in [Mix::Steady, Mix::AdversarialLongPrompt] {
+        let events = generate(&spec(mix, 60));
+        let rep = replay(&events, edf_cfg(), 2);
+        // Per-request flags were checked inline; the per-class counters
+        // must be exactly their sums.
+        let mut expect = [0u64; N_CLASSES];
+        for ev in &events {
+            if rep.missed[&ev.id] {
+                expect[ev.priority.index()] += 1;
+            }
+        }
+        for (i, c) in rep.classes.iter().enumerate() {
+            assert_eq!(
+                c.deadline_missed, expect[i],
+                "{mix:?} class {i} miss counter"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_edf_beats_round_robin_p99_ttft_for_high_priority() {
+    // The acceptance bar: same adversarial long-prompt trace, same
+    // virtual clock, two policies. High-priority short requests must
+    // see strictly lower p99 TTFT under chunked-prefill EDF than under
+    // PR 1's FIFO round-robin.
+    let events = generate(&spec(Mix::AdversarialLongPrompt, 100));
+    let high_ids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.priority == Priority::High)
+        .map(|e| e.id)
+        .collect();
+    assert!(high_ids.len() >= 20, "trace too thin: {}", high_ids.len());
+    let edf = replay(&events, edf_cfg(), 2);
+    let rr = replay(&events, rr_cfg(), 2);
+    let ttfts = |rep: &Replay| -> Vec<u64> {
+        high_ids
+            .iter()
+            .map(|id| rep.ttft_ms[id] - rep.submit_ms[id])
+            .collect()
+    };
+    let (edf_p99, rr_p99) = (p99(ttfts(&edf)), p99(ttfts(&rr)));
+    assert!(
+        edf_p99 < rr_p99,
+        "chunked-prefill EDF p99 TTFT {edf_p99} ms must undercut round-robin {rr_p99} ms"
+    );
+    // The win should be structural, not marginal: the flood's long
+    // prompts are what round-robin makes the high class wait behind.
+    assert!(
+        edf_p99 * 2 <= rr_p99,
+        "expected a structural gap, got EDF {edf_p99} vs RR {rr_p99}"
+    );
+    // And batch work still finishes under EDF (no starvation-collapse).
+    assert_eq!(
+        edf.classes[Priority::Batch.index()].completed,
+        rr.classes[Priority::Batch.index()].completed
+    );
+}
