@@ -41,6 +41,11 @@ fn main() -> anyhow::Result<()> {
     let server = std::thread::spawn(move || -> anyhow::Result<m2cache::telemetry::Telemetry> {
         let mut cfg = EngineConfig::full();
         cfg.max_sessions = SESSIONS;
+        // Batched forward: every scheduler turn advances all co-resident
+        // sessions through one shared per-layer pass (union precision
+        // plan, one cache reconciliation, one weight upload) — outputs
+        // stay byte-identical to single-turn serving.
+        cfg.batch = true;
         let engine = ExecEngine::new(Path::new("artifacts"), cfg)?;
         // serve() hands the warm engine back; only its (Send) telemetry
         // crosses the thread boundary — PJRT handles are not Send.
@@ -132,6 +137,12 @@ fn main() -> anyhow::Result<()> {
         tel.counters.get("sessions_closed").copied().unwrap_or(0),
         tel.peak_active_sessions,
         m2cache::util::text::fmt_bytes(tel.kv_pool_bytes),
+    );
+    println!(
+        "batching  : {} shared passes, occupancy {:.2} lanes/pass | union-plan hits {}",
+        tel.batch_turns,
+        tel.batch_occupancy(),
+        tel.union_plan_hits,
     );
     for p in Priority::ALL {
         let c = &tel.classes[p.index()];

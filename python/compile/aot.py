@@ -67,6 +67,18 @@ def lower_artifacts(params, cfg: M.TinyConfig, out_dir: str):
         sd((K, 3 * d), f32),            # ffn cache-unit buffer
         sd((K,), f32),                  # mask
     )
+    B = M.BATCH_LANES
+    emit(
+        "layer_step_batch",
+        lambda *a: M.layer_step_batch(*a, n_heads=cfg.n_heads),
+        sd((B, d), f32),                # x, one row per lane
+        sd((d, d), f32), sd((d, d), f32), sd((d, d), f32), sd((d, d), f32),
+        sd((d,), f32), sd((d,), f32),   # ln1, ln2 (shared)
+        sd((B, S, d), f32), sd((B, S, d), f32),  # per-lane k/v caches
+        sd((B,), jnp.int32),            # per-lane pos
+        sd((K, 3 * d), f32),            # ffn cache-unit buffer (shared)
+        sd((B, K), f32),                # per-lane masks
+    )
     emit("logits", M.logits_step, sd((d,), f32), sd((V, d), f32), sd((d,), f32))
 
 
@@ -177,6 +189,7 @@ def main():
             f"n_heads = {cfg.n_heads}\nffn_hidden = {cfg.ffn_hidden}\n"
             f"vocab = {cfg.vocab}\nmax_seq = {cfg.max_seq}\n"
             f"rank = {cfg.rank}\nkernel_k = {cfg.ffn_hidden}\n"
+            f"batch_lanes = {M.BATCH_LANES}\n"
             f"predictor_recall = {np.mean(recalls):.4f}\n"
             f"train_steps = {len(curve)}\n"
             f"train_loss_final = {curve[-1] if curve else float('nan'):.4f}\n"

@@ -218,6 +218,35 @@ def logits_step(x, embed, final_norm):
     return (embed @ ref_rmsnorm(x, final_norm),)
 
 
+# Lane width of the stacked batch kernel lowered by aot.py (published
+# as `batch_lanes` in the artifacts' meta.cfg; the rust engine pads
+# short groups with dead lanes and chunks longer ones).
+BATCH_LANES = 8
+
+
+def layer_step_batch(x, wq, wk, wv, wo, ln1, ln2, k_cache, v_cache, pos,
+                     ffn_w, ffn_mask, n_heads):
+    """Batched mirror of `layer_step`: per-lane x/KV/pos/mask operands
+    over ONE shared weight set, so a whole turn's co-resident sessions
+    are a single dispatch and the FFN cache-unit buffer is uploaded once
+    per layer per turn instead of once per session.
+
+    x: [B, d]; caches: [B, S, d]; pos: [B] i32; ffn_w: [K, 3d] (shared);
+    ffn_mask: [B, K]. Returns (x_out [B, d], k_new [B, d], v_new [B, d]).
+
+    Lanes are unrolled rather than vmapped: each lane traces the exact
+    `layer_step` graph (same kernels, same reduction order), which keeps
+    per-lane arithmetic identical to the single-token path — dead
+    (zero-padded) lanes are safe because every op tolerates zeros.
+    """
+    outs = [
+        layer_step(x[b], wq, wk, wv, wo, ln1, ln2, k_cache[b], v_cache[b],
+                   pos[b], ffn_w, ffn_mask[b], n_heads)
+        for b in range(x.shape[0])
+    ]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(3))
+
+
 # ---------------------------------------------------------------------
 # decode-path reference (pure python over the step functions; used by
 # tests and by aot.py's self-check against forward_seq)

@@ -100,6 +100,46 @@ def test_masked_decode_changes_little_when_mask_covers_top(params):
     assert err_top < err_rand, (err_top, err_rand)
 
 
+def test_layer_step_batch_matches_per_lane_layer_step(params):
+    """Every lane of the stacked batch kernel must reproduce the
+    single-token kernel bit-for-lane: distinct x/KV/pos/mask per lane,
+    one shared weight set; zero-padded dead lanes must not perturb the
+    live ones."""
+    lp = params["layers"][0]
+    d, S, K = CFG.d_model, CFG.max_seq, CFG.ffn_hidden
+    rng = np.random.default_rng(7)
+    B = 4
+    x = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+    pos = jnp.asarray([0, 3, 7, 1], jnp.int32)
+    mask = jnp.asarray((rng.random((B, K)) < 0.5).astype(np.float32))
+    # Lane 3 is a dead pad lane: zero x, zero KV, zero mask, pos 0.
+    x = x.at[3].set(0.0)
+    kc = kc.at[3].set(0.0)
+    vc = vc.at[3].set(0.0)
+    pos = pos.at[3].set(0)
+    mask = mask.at[3].set(0.0)
+    args = (lp["wq"], lp["wk"], lp["wv"], lp["wo"], lp["ln1"], lp["ln2"])
+    xb, kb, vb = M.layer_step_batch(
+        x, *args, kc, vc, pos, lp["ffn"], mask, CFG.n_heads
+    )
+    for b in range(B):
+        xs, ks, vs = M.layer_step(
+            x[b], *args, kc[b], vc[b], pos[b], lp["ffn"], mask[b],
+            CFG.n_heads,
+        )
+        assert_allclose(np.asarray(xb[b]), np.asarray(xs), atol=0, rtol=0)
+        assert_allclose(np.asarray(kb[b]), np.asarray(ks), atol=0, rtol=0)
+        assert_allclose(np.asarray(vb[b]), np.asarray(vs), atol=0, rtol=0)
+    # Dead lane produced finite junk only (no NaN/Inf to poison stacks).
+    assert np.isfinite(np.asarray(xb[3])).all()
+
+
+def test_batch_lanes_constant_sane():
+    assert M.BATCH_LANES >= 2
+
+
 def test_training_reduces_loss():
     cfg = M.TinyConfig(n_layers=1, max_seq=32)
     corpus = M.synthetic_corpus(repeat=4)

@@ -38,6 +38,14 @@ pub struct UpdateResult {
 }
 
 /// One layer's isolated cache unit.
+///
+/// Residency is keyed by `(neuron, dtype)`: a batched step's *union
+/// plan* may legitimately want the same neuron at two precisions (one
+/// per co-resident session), and each precision is a distinct cache
+/// entry with its own slot — the per-session kernel masks then select
+/// each token's own copies, which is what keeps batched outputs
+/// byte-identical to sequential ones. Single-token plans never produce
+/// duplicate neurons, so the pre-batching behavior is unchanged.
 #[derive(Debug)]
 pub struct CacheUnit {
     /// Slot count (= activated-neuron budget of the layer).
@@ -48,7 +56,7 @@ pub struct CacheUnit {
     pub storage: Vec<f32>,
     /// Per-slot activity mask (kernel operand; 0.0 = dead slot).
     pub mask: Vec<f32>,
-    resident: HashMap<u32, (usize, Dtype)>,
+    resident: HashMap<NeuronAt, usize>,
     free: Vec<usize>,
     /// Monotone use counter for LRU bookkeeping.
     tick: u64,
@@ -83,19 +91,39 @@ impl CacheUnit {
     }
 
     pub fn contains(&self, neuron: u32, dtype: Dtype) -> bool {
-        matches!(self.resident.get(&neuron), Some((_, d)) if *d == dtype)
+        self.resident.contains_key(&NeuronAt { neuron, dtype })
     }
 
+    /// The precision a neuron is resident at, or `None`. When a batched
+    /// union left several precision copies resident, the highest
+    /// precision is reported (`Dtype` declaration order). O(1): probes
+    /// the four possible `(neuron, dtype)` keys instead of scanning
+    /// residents — this sits in every policy's per-entry miss path.
     pub fn dtype_of(&self, neuron: u32) -> Option<Dtype> {
-        self.resident.get(&neuron).map(|(_, d)| *d)
+        Dtype::ALL
+            .iter()
+            .copied()
+            .find(|&dtype| self.resident.contains_key(&NeuronAt { neuron, dtype }))
+    }
+
+    /// Every precision copy of `neuron` currently resident (sorted by
+    /// precision, highest first). O(1) via the same key probes as
+    /// [`dtype_of`].
+    pub fn copies_of(&self, neuron: u32) -> Vec<NeuronAt> {
+        Dtype::ALL
+            .iter()
+            .map(|&dtype| NeuronAt { neuron, dtype })
+            .filter(|na| self.resident.contains_key(na))
+            .collect()
     }
 
     /// Insert a neuron's dequantized values (len must equal `values`).
     /// Returns the slot. Panics if full — policies must evict first.
     pub fn insert(&mut self, neuron: u32, dtype: Dtype, data: &[f32]) -> usize {
+        let na = NeuronAt { neuron, dtype };
         assert!(
-            !self.resident.contains_key(&neuron),
-            "neuron {neuron} already resident; evict before re-insert"
+            !self.resident.contains_key(&na),
+            "neuron {neuron} already resident at {dtype:?}; evict before re-insert"
         );
         let slot = self.free.pop().expect("cache unit full");
         if self.values > 0 {
@@ -106,15 +134,24 @@ impl CacheUnit {
         self.mask[slot] = 1.0;
         self.tick += 1;
         self.last_use[slot] = self.tick;
-        self.resident.insert(neuron, (slot, dtype));
+        self.resident.insert(na, slot);
         slot
     }
 
-    /// Remove a neuron; its slot is masked dead (no memset needed — the
-    /// kernel's mask kills the contribution, the paper's "management
-    /// overhead is nearly zero" property).
+    /// Remove every precision copy of a neuron; slots are masked dead
+    /// (no memset needed — the kernel's mask kills the contribution,
+    /// the paper's "management overhead is nearly zero" property).
     pub fn evict(&mut self, neuron: u32) -> bool {
-        if let Some((slot, _)) = self.resident.remove(&neuron) {
+        let copies = self.copies_of(neuron);
+        for na in &copies {
+            self.evict_at(*na);
+        }
+        !copies.is_empty()
+    }
+
+    /// Remove one `(neuron, dtype)` entry.
+    pub fn evict_at(&mut self, na: NeuronAt) -> bool {
+        if let Some(slot) = self.resident.remove(&na) {
             self.mask[slot] = 0.0;
             self.free.push(slot);
             true
@@ -123,14 +160,36 @@ impl CacheUnit {
         }
     }
 
-    /// Slot index of a resident neuron.
+    /// Slot index of a resident neuron (highest-precision copy when a
+    /// union left several).
     pub fn slot_of(&self, neuron: u32) -> Option<usize> {
-        self.resident.get(&neuron).map(|(slot, _)| *slot)
+        self.dtype_of(neuron)
+            .and_then(|dtype| self.resident.get(&NeuronAt { neuron, dtype }).copied())
     }
 
-    /// Mark a resident neuron as used now (for LRU).
+    /// Slot index of one exact `(neuron, dtype)` entry — the mask-build
+    /// lookup of the batched forward path.
+    pub fn slot_at(&self, na: NeuronAt) -> Option<usize> {
+        self.resident.get(&na).copied()
+    }
+
+    /// Mark a resident neuron as used now (for LRU): every precision
+    /// copy is stamped with the advanced clock.
     pub fn touch(&mut self, neuron: u32) {
-        if let Some(&(slot, _)) = self.resident.get(&neuron) {
+        let copies = self.copies_of(neuron);
+        if copies.is_empty() {
+            return;
+        }
+        self.tick += 1;
+        for na in copies {
+            let slot = self.resident[&na];
+            self.last_use[slot] = self.tick;
+        }
+    }
+
+    /// Mark one exact `(neuron, dtype)` entry as used now.
+    pub fn touch_at(&mut self, na: NeuronAt) {
+        if let Some(&slot) = self.resident.get(&na) {
             self.tick += 1;
             self.last_use[slot] = self.tick;
         }
@@ -140,13 +199,21 @@ impl CacheUnit {
     pub fn lru_victim(&self) -> Option<u32> {
         self.resident
             .iter()
-            .min_by_key(|(n, (slot, _))| (self.last_use[*slot], **n))
-            .map(|(n, _)| *n)
+            .min_by_key(|(na, slot)| (self.last_use[**slot], na.neuron, na.dtype))
+            .map(|(na, _)| na.neuron)
     }
 
     pub fn resident_neurons(&self) -> Vec<u32> {
-        let mut v: Vec<u32> = self.resident.keys().copied().collect();
+        let mut v: Vec<u32> = self.resident.keys().map(|na| na.neuron).collect();
         v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Every resident `(neuron, dtype)` entry, sorted.
+    pub fn resident_entries(&self) -> Vec<NeuronAt> {
+        let mut v: Vec<NeuronAt> = self.resident.keys().copied().collect();
+        v.sort_by_key(|na| (na.neuron, na.dtype));
         v
     }
 
@@ -185,34 +252,38 @@ pub struct AtuPolicy;
 
 impl HbmPolicy for AtuPolicy {
     fn update(&mut self, unit: &mut CacheUnit, plan: &LayerPlan) -> UpdateResult {
-        let mut wanted: HashMap<u32, Dtype> =
-            HashMap::with_capacity(plan.total_active());
-        for (n, dt) in plan.iter() {
-            wanted.insert(n, dt);
-        }
-        // Evict residents that are unplanned or precision-stale.
-        let stale: Vec<u32> = unit
-            .resident
+        // Wanted entries are exact (neuron, dtype) pairs: a batched
+        // union plan may want the same neuron at two precisions, and
+        // both are kept. Single-token plans degenerate to the original
+        // one-dtype-per-neuron diff.
+        let wanted: std::collections::HashSet<NeuronAt> = plan
             .iter()
-            .filter(|(n, (_, d))| wanted.get(n) != Some(d))
-            .map(|(n, _)| *n)
+            .map(|(neuron, dtype)| NeuronAt { neuron, dtype })
+            .collect();
+        // Evict residents that are unplanned or precision-stale.
+        let stale: Vec<NeuronAt> = unit
+            .resident
+            .keys()
+            .filter(|na| !wanted.contains(na))
+            .copied()
             .collect();
         let evicted = stale.len();
-        for n in stale {
-            unit.evict(n);
+        for na in stale {
+            unit.evict_at(na);
         }
-        // Remaining residents are hits; the rest must load.
+        // Remaining residents are hits (each union entry counted once);
+        // the rest must load.
         let mut load = Vec::new();
         let mut hits = 0;
-        for (n, dt) in wanted {
-            if unit.contains(n, dt) {
-                unit.touch(n);
+        for &na in &wanted {
+            if unit.slot_at(na).is_some() {
+                unit.touch_at(na);
                 hits += 1;
             } else {
-                load.push(NeuronAt { neuron: n, dtype: dt });
+                load.push(na);
             }
         }
-        load.sort_by_key(|na| na.neuron);
+        load.sort_by_key(|na| (na.neuron, na.dtype));
         UpdateResult { load, evicted, hits }
     }
 
@@ -233,40 +304,49 @@ impl HbmPolicy for LruPolicy {
         let mut load: Vec<NeuronAt> = Vec::new();
         let mut hits = 0;
         let mut evicted = 0;
-        let planned: std::collections::HashSet<u32> =
-            plan.iter().map(|(n, _)| n).collect();
+        let wanted: std::collections::HashSet<NeuronAt> = plan
+            .iter()
+            .map(|(neuron, dtype)| NeuronAt { neuron, dtype })
+            .collect();
         for (n, dt) in plan.iter() {
-            if unit.contains(n, dt) {
-                unit.touch(n);
+            let na = NeuronAt { neuron: n, dtype: dt };
+            if unit.slot_at(na).is_some() {
+                unit.touch_at(na);
                 hits += 1;
                 continue;
             }
-            if unit.dtype_of(n).is_some() {
-                // Precision-stale: must reload.
-                unit.evict(n);
-                evicted += 1;
+            // Precision-stale copies must reload — but only copies this
+            // plan does not *also* want (a union plan keeps both).
+            for copy in unit.copies_of(n) {
+                if !wanted.contains(&copy) {
+                    unit.evict_at(copy);
+                    evicted += 1;
+                }
             }
             // The engine inserts `load` only after this update returns,
             // so slots already promised to earlier loads count as used.
             if unit.free_slots() <= load.len() {
-                // Evict LRU victims that are NOT in this plan.
+                // Evict LRU victims that are NOT wanted entries — the
+                // exact (neuron, dtype) set, so a leftover extra
+                // precision copy of a planned neuron (a prior batched
+                // union wanted it) is still a legal victim.
                 let victim = unit
                     .resident
                     .iter()
-                    .filter(|(n, _)| !planned.contains(n))
-                    .min_by_key(|(n, (slot, _))| (unit.last_use[*slot], **n))
-                    .map(|(n, _)| *n);
+                    .filter(|(na, _)| !wanted.contains(na))
+                    .min_by_key(|(na, slot)| (unit.last_use[**slot], na.neuron, na.dtype))
+                    .map(|(na, _)| *na);
                 match victim {
                     Some(v) => {
-                        unit.evict(v);
+                        unit.evict_at(v);
                         evicted += 1;
                     }
                     None => panic!("LRU cache smaller than plan"),
                 }
             }
-            load.push(NeuronAt { neuron: n, dtype: dt });
+            load.push(na);
         }
-        load.sort_by_key(|na| na.neuron);
+        load.sort_by_key(|na| (na.neuron, na.dtype));
         UpdateResult { load, evicted, hits }
     }
 
@@ -280,7 +360,7 @@ impl HbmPolicy for LruPolicy {
 #[derive(Debug, Clone)]
 pub struct SlidingWindowPolicy {
     pub window: usize,
-    history: std::collections::VecDeque<Vec<u32>>,
+    history: std::collections::VecDeque<Vec<NeuronAt>>,
 }
 
 impl SlidingWindowPolicy {
@@ -295,59 +375,133 @@ impl SlidingWindowPolicy {
 
 impl HbmPolicy for SlidingWindowPolicy {
     fn update(&mut self, unit: &mut CacheUnit, plan: &LayerPlan) -> UpdateResult {
-        let ids: Vec<u32> = plan.iter().map(|(n, _)| n).collect();
-        self.history.push_back(ids);
+        let entries: Vec<NeuronAt> = plan
+            .iter()
+            .map(|(neuron, dtype)| NeuronAt { neuron, dtype })
+            .collect();
+        self.history.push_back(entries);
         if self.history.len() > self.window {
             self.history.pop_front();
         }
-        let keep: std::collections::HashSet<u32> =
+        let keep: std::collections::HashSet<NeuronAt> =
             self.history.iter().flatten().copied().collect();
-        let aged: Vec<u32> = unit
+        let aged: Vec<NeuronAt> = unit
             .resident
             .keys()
-            .filter(|n| !keep.contains(n))
+            .filter(|na| !keep.contains(na))
             .copied()
             .collect();
         let mut evicted = aged.len();
-        for n in aged {
-            unit.evict(n);
+        for na in aged {
+            unit.evict_at(na);
         }
         let mut load: Vec<NeuronAt> = Vec::new();
         let mut hits = 0;
-        let planned: std::collections::HashSet<u32> =
-            plan.iter().map(|(n, _)| n).collect();
+        let wanted: std::collections::HashSet<NeuronAt> = plan
+            .iter()
+            .map(|(neuron, dtype)| NeuronAt { neuron, dtype })
+            .collect();
         for (n, dt) in plan.iter() {
-            if unit.contains(n, dt) {
-                unit.touch(n);
+            let na = NeuronAt { neuron: n, dtype: dt };
+            if unit.slot_at(na).is_some() {
+                unit.touch_at(na);
                 hits += 1;
             } else {
-                if unit.dtype_of(n).is_some() {
-                    unit.evict(n);
-                    evicted += 1;
+                // Precision-stale copies reload unless the (union) plan
+                // also wants them at their current precision.
+                for copy in unit.copies_of(n) {
+                    if !wanted.contains(&copy) {
+                        unit.evict_at(copy);
+                        evicted += 1;
+                    }
                 }
                 // Deferred inserts: slots promised to earlier loads
                 // count as used (see LruPolicy).
                 if unit.free_slots() <= load.len() {
-                    // Window too wide for the unit: drop oldest extras.
+                    // Window too wide for the unit: drop non-wanted
+                    // extras (exact (neuron, dtype) entries, so leftover
+                    // union precision copies of planned neurons stay
+                    // legal victims), lowest key first.
                     let victim = unit
                         .resident
                         .keys()
-                        .find(|n| !planned.contains(n))
+                        .filter(|na| !wanted.contains(na))
+                        .min_by_key(|na| (na.neuron, na.dtype))
                         .copied()
                         .expect("sliding window smaller than plan");
-                    unit.evict(victim);
+                    unit.evict_at(victim);
                     evicted += 1;
                 }
-                load.push(NeuronAt { neuron: n, dtype: dt });
+                load.push(na);
             }
         }
-        load.sort_by_key(|na| na.neuron);
+        load.sort_by_key(|na| (na.neuron, na.dtype));
         UpdateResult { load, evicted, hits }
     }
 
     fn name(&self) -> &'static str {
         "sliding_window"
     }
+}
+
+/// Merge per-session plans into their `(neuron, dtype)` union — the
+/// single reconciliation target of one batched step. A neuron wanted at
+/// two precisions appears once per precision (each is a distinct cache
+/// entry the per-session kernel masks select independently). Class
+/// lists come out sorted and deduped, so equal unions compare equal and
+/// the derived load lists are deterministic. Takes any iterator of plan
+/// refs so per-layer hot loops feed lane subsets without cloning.
+pub fn union_plans<'a, I>(plans: I) -> LayerPlan
+where
+    I: IntoIterator<Item = &'a LayerPlan>,
+{
+    let mut union = LayerPlan::default();
+    for p in plans {
+        union.fp16.extend_from_slice(&p.fp16);
+        union.int8.extend_from_slice(&p.int8);
+        union.int4.extend_from_slice(&p.int4);
+    }
+    for class in [&mut union.fp16, &mut union.int8, &mut union.int4] {
+        class.sort_unstable();
+        class.dedup();
+    }
+    union
+}
+
+/// Greedily partition batch lanes into groups whose combined
+/// `(neuron, dtype)` union fits a cache unit of `capacity` slots.
+/// Returns lane-index groups in order; a single lane always forms a
+/// legal group (per-token plans never exceed the unit, which is sized
+/// for at least one plan). Only low-overlap batches ever split — at the
+/// paper's ~80 % token-to-token overlap the union of a whole batch
+/// stays far below `sessions × plan`.
+pub fn partition_by_union(plans: &[LayerPlan], capacity: usize) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = Vec::new();
+    let mut current_union: std::collections::HashSet<NeuronAt> =
+        std::collections::HashSet::new();
+    for (i, plan) in plans.iter().enumerate() {
+        let fresh: Vec<NeuronAt> = plan
+            .iter()
+            .map(|(neuron, dtype)| NeuronAt { neuron, dtype })
+            .filter(|na| !current_union.contains(na))
+            .collect();
+        if !current.is_empty() && current_union.len() + fresh.len() > capacity {
+            groups.push(std::mem::take(&mut current));
+            current_union.clear();
+            current_union.extend(
+                plan.iter()
+                    .map(|(neuron, dtype)| NeuronAt { neuron, dtype }),
+            );
+        } else {
+            current_union.extend(fresh);
+        }
+        current.push(i);
+    }
+    if !current.is_empty() {
+        groups.push(current);
+    }
+    groups
 }
 
 #[cfg(test)]
@@ -724,5 +878,182 @@ mod tests {
     fn reserved_bytes_accounting() {
         let u = CacheUnit::new(10, 384);
         assert_eq!(u.reserved_bytes(), (10 * 384 * 4 + 40) as u64);
+    }
+
+    #[test]
+    fn union_merges_and_keeps_dtype_conflicts() {
+        let a = plan_of(&[1, 2], &[3], &[]);
+        let b = plan_of(&[2, 5], &[1], &[7]);
+        let u = union_plans(&[a, b]);
+        assert_eq!(u.fp16, vec![1, 2, 5]);
+        // Neuron 1 is wanted at fp16 (session a) AND int8 (session b):
+        // both survive as distinct entries.
+        assert_eq!(u.int8, vec![1, 3]);
+        assert_eq!(u.int4, vec![7]);
+        assert_eq!(u.total_active(), 6);
+    }
+
+    #[test]
+    fn unit_holds_two_precision_copies_of_one_neuron() {
+        let mut u = CacheUnit::new(4, 2);
+        let s16 = u.insert(9, Dtype::F16, &[1.0, 2.0]);
+        let s8 = u.insert(9, Dtype::Int8, &[3.0, 4.0]);
+        assert_ne!(s16, s8);
+        assert_eq!(u.slot_at(NeuronAt { neuron: 9, dtype: Dtype::F16 }), Some(s16));
+        assert_eq!(u.slot_at(NeuronAt { neuron: 9, dtype: Dtype::Int8 }), Some(s8));
+        // dtype_of/slot_of report the highest-precision copy.
+        assert_eq!(u.dtype_of(9), Some(Dtype::F16));
+        assert_eq!(u.slot_of(9), Some(s16));
+        assert_eq!(u.len(), 2);
+        assert_eq!(u.resident_neurons(), vec![9]);
+        // evict removes both copies.
+        assert!(u.evict(9));
+        assert_eq!(u.len(), 0);
+        assert_eq!(u.free_slots(), 4);
+    }
+
+    #[test]
+    fn lru_evicts_union_leftover_copies_under_pressure() {
+        // Regression: after a batched union left {1, 2} resident at TWO
+        // precisions each, a full unit plus a plan wanting a fresh
+        // neuron used to panic ("LRU cache smaller than plan") because
+        // victim selection spared every copy of a planned *neuron*,
+        // including the extra-precision leftovers the plan does not
+        // want. Those exact entries must be legal victims.
+        let mut u = CacheUnit::meta_only(4);
+        let union = plan_of(&[1, 2], &[1, 2], &[]);
+        let mut pol = LruPolicy;
+        for na in pol.update(&mut u, &union).load {
+            u.insert(na.neuron, na.dtype, &[]);
+        }
+        assert_eq!(u.len(), 4);
+        assert_eq!(u.free_slots(), 0);
+        let plan = plan_of(&[1, 2, 3], &[], &[]);
+        let r = pol.update(&mut u, &plan);
+        assert_eq!(r.hits, 2, "1@fp16 and 2@fp16 stay hits");
+        assert_eq!(
+            r.load,
+            vec![NeuronAt { neuron: 3, dtype: Dtype::F16 }],
+            "only the fresh neuron loads"
+        );
+        assert!(r.evicted >= 1, "an int8 leftover must have made room");
+        u.insert(3, Dtype::F16, &[]);
+        for (n, dt) in plan.iter() {
+            assert!(u.contains(n, dt), "plan entry {n}@{dt:?} serviceable");
+        }
+    }
+
+    #[test]
+    fn union_reconciliation_loads_once_and_serves_every_session() {
+        // The batched-step contract: reconciling ONCE against the union
+        // must (a) cost no more loads than reconciling per session on
+        // an identically warmed unit, (b) count each union entry at
+        // most once (hits + loads == union size), and (c) leave every
+        // per-session plan fully serviceable at its own precision.
+        Check::new(48, 0xBA7C4).run("union reconciliation", |rng| {
+            let n = 48usize;
+            let ratios = PrecisionRatios::new(0.1, 0.1, 0.2);
+            let warm = plan_from_scores(
+                &(0..n).map(|_| rng.f32()).collect::<Vec<f32>>(),
+                &ratios,
+            );
+            let mut seq_unit = CacheUnit::meta_only(n * 3);
+            let mut uni_unit = CacheUnit::meta_only(n * 3);
+            for unit in [&mut seq_unit, &mut uni_unit] {
+                for na in AtuPolicy.update(unit, &warm).load {
+                    unit.insert(na.neuron, na.dtype, &[]);
+                }
+            }
+            // A batch of per-session plans for the next step.
+            let b = rng.range(2, 6);
+            let plans: Vec<LayerPlan> = (0..b)
+                .map(|_| {
+                    plan_from_scores(
+                        &(0..n).map(|_| rng.f32()).collect::<Vec<f32>>(),
+                        &ratios,
+                    )
+                })
+                .collect();
+            // Sequential: one ATU reconcile per session (what N separate
+            // forwards would do); each session's loads accumulate.
+            let mut seq_loads = 0usize;
+            for p in &plans {
+                let r = AtuPolicy.update(&mut seq_unit, p);
+                seq_loads += r.load.len();
+                for na in r.load {
+                    seq_unit.insert(na.neuron, na.dtype, &[]);
+                }
+            }
+            // Batched: one reconcile against the union.
+            let union = union_plans(&plans);
+            let r = AtuPolicy.update(&mut uni_unit, &union);
+            if r.load.len() > seq_loads {
+                return Err(format!(
+                    "union loaded {} entries, sequential only {}",
+                    r.load.len(),
+                    seq_loads
+                ));
+            }
+            if r.hits + r.load.len() != union.total_active() {
+                return Err(format!(
+                    "hits {} + loads {} != union {} (entries double-counted)",
+                    r.hits,
+                    r.load.len(),
+                    union.total_active()
+                ));
+            }
+            for na in r.load {
+                uni_unit.insert(na.neuron, na.dtype, &[]);
+            }
+            for p in &plans {
+                for (neuron, dt) in p.iter() {
+                    if uni_unit.slot_at(NeuronAt { neuron, dtype: dt }).is_none() {
+                        return Err(format!(
+                            "session plan entry {neuron}@{dt:?} not serviceable after union update"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partition_respects_capacity_and_covers_all_lanes() {
+        Check::new(32, 0x9A27).run("partition by union", |rng| {
+            let n = 40usize;
+            let ratios = PrecisionRatios::new(0.1, 0.1, 0.2);
+            let b = rng.range(1, 9);
+            let plans: Vec<LayerPlan> = (0..b)
+                .map(|_| {
+                    plan_from_scores(
+                        &(0..n).map(|_| rng.f32()).collect::<Vec<f32>>(),
+                        &ratios,
+                    )
+                })
+                .collect();
+            let plan_sz = plans.iter().map(|p| p.total_active()).max().unwrap();
+            let capacity = plan_sz + rng.range(0, n);
+            let groups = partition_by_union(&plans, capacity);
+            let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+            let in_order = seen.windows(2).all(|w| w[0] < w[1]);
+            if !in_order {
+                return Err("lanes reordered".into());
+            }
+            seen.sort_unstable();
+            if seen != (0..b).collect::<Vec<usize>>() {
+                return Err(format!("lanes lost: {seen:?} != 0..{b}"));
+            }
+            for g in &groups {
+                let u = union_plans(g.iter().map(|&i| &plans[i]));
+                if g.len() > 1 && u.total_active() > capacity {
+                    return Err(format!(
+                        "group union {} exceeds capacity {capacity}",
+                        u.total_active()
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

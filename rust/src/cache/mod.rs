@@ -9,6 +9,9 @@ pub mod preloader;
 pub mod ssd;
 
 pub use dram::{DramCache, LayerData};
-pub use hbm::{AtuPolicy, CacheUnit, HbmPolicy, LruPolicy, NeuronAt, SlidingWindowPolicy, UpdateResult};
+pub use hbm::{
+    partition_by_union, union_plans, AtuPolicy, CacheUnit, HbmPolicy, LruPolicy, NeuronAt,
+    SlidingWindowPolicy, UpdateResult,
+};
 pub use preloader::Preloader;
 pub use ssd::{FaultyFlash, FileFlash, FlashStore, SimFlash, StorageMix, FRAME_DTYPES};

@@ -87,6 +87,22 @@ pub struct EngineConfig {
     /// Shared by the serving scheduler and the sim mirror so simulated
     /// per-class figures reflect the policy actually serving.
     pub starvation_guard: u64,
+    /// Batched forward: co-resident sessions advance through ONE shared
+    /// per-layer pass per scheduler turn (union precision plan, one
+    /// cache reconciliation, one DRAM load per missing neuron, one
+    /// weight upload) instead of a full pass per session — the lever
+    /// that makes N-session serving cost sublinear in N (`--batch`).
+    /// Off by default: the paper's batch-1 decode shape and the PR-1/2
+    /// turn semantics stay bit-exact unless asked for. Outputs are
+    /// byte-identical either way; only traffic and latency change.
+    pub batch: bool,
+    /// With `batch`, dispatch lane groups through the stacked
+    /// `layer_step_batch` HLO when the artifact set provides one
+    /// (`--batch-kernel`). Off by default: the masked per-lane kernel
+    /// against the shared weight literal is byte-identical to
+    /// sequential *by construction*; the stacked kernel computes the
+    /// same per-lane arithmetic in one dispatch.
+    pub batch_kernel: bool,
 }
 
 impl Default for EngineConfig {
@@ -108,6 +124,8 @@ impl Default for EngineConfig {
             max_sessions: 1,
             prefill_chunk: 16,
             starvation_guard: crate::coordinator::scheduler::DEFAULT_STARVATION_GUARD,
+            batch: false,
+            batch_kernel: false,
         }
     }
 }
@@ -145,6 +163,24 @@ impl EngineConfig {
     pub fn unit_capacity(&self, n: usize) -> usize {
         (self.plan_size(n) * self.policy.capacity_factor()).min(n).max(1)
     }
+
+    /// Cache-unit slot count when up to `max_sessions` co-resident
+    /// plans reconcile as a union (batched serving): the expected batch
+    /// union at the configured token-to-token overlap plus 50 % slack,
+    /// capped at every `(neuron, dtype)` entry a layer can produce
+    /// (3 precisions per neuron). Batches whose union still exceeds the
+    /// unit split into groups (`cache::partition_by_union`) rather than
+    /// overflowing, so this is a sizing heuristic, not a correctness
+    /// bound.
+    pub fn unit_capacity_batched(&self, n: usize) -> usize {
+        let single = self.unit_capacity(n);
+        if !self.batch || self.max_sessions <= 1 {
+            return single;
+        }
+        let b = self.max_sessions as f64;
+        let expected = single as f64 * (1.0 + (b - 1.0) * (1.0 - self.trace_overlap));
+        ((expected * 1.5).ceil() as usize).clamp(single, 3 * n)
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +216,26 @@ mod tests {
         lru.policy = PolicyKind::Lru;
         assert_eq!(lru.unit_capacity(11008), 4404);
         assert_eq!(lru.unit_capacity(100), 40); // clamped to n? 20*2=40
+    }
+
+    #[test]
+    fn batched_unit_capacity_scales_with_sessions_and_caps() {
+        let mut c = EngineConfig::default();
+        let single = c.unit_capacity(11008);
+        // Batching off: unchanged.
+        c.max_sessions = 8;
+        assert_eq!(c.unit_capacity_batched(11008), single);
+        c.batch = true;
+        let b8 = c.unit_capacity_batched(11008);
+        // At 0.8 overlap the expected 8-lane union is ~2.4x one plan;
+        // sized with 50% slack it stays well below 8x (the whole point:
+        // overlapping plans share residency) and above one plan.
+        assert!(b8 > single && b8 < single * 4, "b8 = {b8}");
+        c.max_sessions = 16;
+        assert!(c.unit_capacity_batched(11008) >= b8, "monotone in sessions");
+        // Tiny layer: capped at 3 entries per neuron.
+        c.max_sessions = 100;
+        assert_eq!(c.unit_capacity_batched(10), 30);
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //! interleave.
 
 use crate::cache::{
-    CacheUnit, DramCache, FileFlash, FlashStore, HbmPolicy, Preloader,
+    partition_by_union, union_plans, CacheUnit, DramCache, FileFlash, FlashStore, HbmPolicy,
+    NeuronAt, Preloader,
 };
 use crate::coordinator::config::EngineConfig;
 use crate::coordinator::request::Request;
@@ -21,7 +22,7 @@ use crate::coordinator::session::{DecodeSession, KvPool, SessionEngine};
 use crate::model::weights::{PredictorWeights, WeightStore};
 use crate::precision::plan::{plan_from_scores, LayerPlan};
 use crate::precision::quant::wire_bytes;
-use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::runtime::{lit_f32, lit_i32, lit_i32_vec, to_vec_f32, Runtime};
 use crate::sparsity::{self, OverlapTracker};
 use crate::telemetry::{PhaseTimer, Telemetry};
 use anyhow::{Context, Result};
@@ -51,7 +52,22 @@ pub struct ExecEngine {
     pos: usize,
     pub overlap: OverlapTracker,
     pub tel: Telemetry,
+    // Hot-loop staging buffers, reused across layers and tokens so the
+    // per-layer inner loop allocates nothing (scores, plan ids, kernel
+    // mask — previously reallocated per layer per token; the stacked
+    // kernel's per-lane operand stages likewise).
     scores_buf: Vec<f32>,
+    ids_buf: Vec<u32>,
+    mask_buf: Vec<f32>,
+    stage_x: Vec<f32>,
+    stage_mask: Vec<f32>,
+    stage_k: Vec<f32>,
+    stage_v: Vec<f32>,
+    stage_pos: Vec<i32>,
+    /// Lane width of the stacked `layer_step_batch` artifact (0 = not
+    /// built; the batched path then runs the per-session kernel against
+    /// the shared per-layer weight literal).
+    batch_lanes: usize,
 }
 
 impl ExecEngine {
@@ -69,6 +85,13 @@ impl ExecEngine {
             .get("max_seq")
             .context("meta.cfg missing max_seq")?
             .parse()?;
+        // Optional: lane width of the stacked batch kernel (absent in
+        // artifact sets built before batched serving existed).
+        let batch_lanes: usize = meta
+            .get("batch_lanes")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(0);
         let kernel_k: usize = meta
             .get("kernel_k")
             .context("meta.cfg missing kernel_k")?
@@ -159,6 +182,14 @@ impl ExecEngine {
             overlap: OverlapTracker::new(n_layers),
             tel,
             scores_buf: Vec::new(),
+            ids_buf: Vec::new(),
+            mask_buf: Vec::new(),
+            stage_x: Vec::new(),
+            stage_mask: Vec::new(),
+            stage_k: Vec::new(),
+            stage_v: Vec::new(),
+            stage_pos: Vec::new(),
+            batch_lanes,
         })
     }
 
@@ -205,6 +236,46 @@ impl ExecEngine {
         Ok(logits)
     }
 
+    /// Score one layer input and build its precision plan, recording
+    /// activation overlap — the per-token planning block shared by the
+    /// sequential and batched paths. Keeping it in ONE place is part of
+    /// the byte-equivalence contract: both paths must run exactly this
+    /// math per token per layer.
+    fn plan_layer(&mut self, l: usize, x: &xla::Literal) -> Result<LayerPlan> {
+        let xv = to_vec_f32(x)?;
+        let mut scores = std::mem::take(&mut self.scores_buf);
+        sparsity::score(&self.predictors[l], &xv, &mut scores);
+        let plan = if self.cfg.use_mp {
+            plan_from_scores(&scores, &self.cfg.ratios)
+        } else {
+            LayerPlan {
+                fp16: sparsity::top_k(&scores, self.cfg.plan_size(scores.len())),
+                int8: vec![],
+                int4: vec![],
+            }
+        };
+        let mut ids = std::mem::take(&mut self.ids_buf);
+        ids.clear();
+        ids.extend(plan.iter().map(|(n, _)| n));
+        ids.sort_unstable();
+        self.overlap.record(l, &ids);
+        self.ids_buf = ids;
+        self.scores_buf = scores;
+        Ok(plan)
+    }
+
+    /// The no-HBM-cache fallback (Fig 13 ablation): drop residency and
+    /// reload the entire plan every step. Shared by both forward paths.
+    fn reload_all(unit: &mut CacheUnit, plan: &LayerPlan) -> crate::cache::UpdateResult {
+        let mut all = crate::cache::UpdateResult::default();
+        unit.clear();
+        all.load = plan
+            .iter()
+            .map(|(neuron, dtype)| NeuronAt { neuron, dtype })
+            .collect();
+        all
+    }
+
     /// Run one token through the model, reading and writing the KV rows
     /// of `slot` at `pos`. This is the engine's only compute path: both
     /// the legacy cursor and every [`DecodeSession`] land here, so
@@ -226,27 +297,11 @@ impl ExecEngine {
 
         let n_layers = self.spec().n_layers;
         for l in 0..n_layers {
-            // 1. Predict active neurons from the layer input (native
-            // low-rank scoring; the predictor HLO exists for parity).
-            let xv = to_vec_f32(&x)?;
-            let mut scores = std::mem::take(&mut self.scores_buf);
-            sparsity::score(&self.predictors[l], &xv, &mut scores);
+            // 1+2. Predict active neurons from the layer input (native
+            // low-rank scoring; the predictor HLO exists for parity)
+            // and plan precision classes.
+            let plan = self.plan_layer(l, &x)?;
             self.tel.phases.predict_s += timer.lap_s();
-
-            // 2. Plan precision classes.
-            let plan = if self.cfg.use_mp {
-                plan_from_scores(&scores, &self.cfg.ratios)
-            } else {
-                LayerPlan {
-                    fp16: sparsity::top_k(&scores, self.cfg.plan_size(scores.len())),
-                    int8: vec![],
-                    int4: vec![],
-                }
-            };
-            let mut ids: Vec<u32> = plan.iter().map(|(n, _)| n).collect();
-            ids.sort_unstable();
-            self.overlap.record(l, &ids);
-            self.scores_buf = scores;
 
             // 3. DRAM/SSD tier.
             if self.cfg.use_ssd {
@@ -259,13 +314,7 @@ impl ExecEngine {
             let upd = if self.cfg.use_hbm_cache {
                 self.policy.update(&mut self.units[l], &plan)
             } else {
-                let mut all = crate::cache::UpdateResult::default();
-                self.units[l].clear();
-                all.load = plan
-                    .iter()
-                    .map(|(neuron, dtype)| crate::cache::NeuronAt { neuron, dtype })
-                    .collect();
-                all
+                Self::reload_all(&mut self.units[l], &plan)
             };
             self.tel.cache_hits += upd.hits as u64;
             self.tel.cache_misses += upd.load.len() as u64;
@@ -293,14 +342,23 @@ impl ExecEngine {
                 &unit.storage,
                 &[unit.capacity as i64, (3 * d) as i64],
             )?;
-            let mut step_mask = vec![0.0f32; unit.capacity];
-            for (neuron, _) in plan.iter() {
-                let slot = unit
-                    .slot_of(neuron)
-                    .expect("planned neuron resident after update+loads");
+            let mut step_mask = std::mem::take(&mut self.mask_buf);
+            step_mask.clear();
+            step_mask.resize(unit.capacity, 0.0);
+            for (neuron, dtype) in plan.iter() {
+                // A policy that lost a planned neuron is a cache bug;
+                // surface it as this request's failure, not a panic on
+                // the one decode thread the whole server shares.
+                let slot = unit.slot_at(NeuronAt { neuron, dtype }).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "cache policy left planned neuron {neuron}@{dtype:?} \
+                         non-resident in layer {l} after update+loads"
+                    )
+                })?;
                 step_mask[slot] = 1.0;
             }
             let m = lit_f32(&step_mask, &[unit.capacity as i64])?;
+            self.mask_buf = step_mask;
             let kc = lit_f32(self.pool.k_layer(slot, l), &[s, d as i64])?;
             let vc = lit_f32(self.pool.v_layer(slot, l), &[s, d as i64])?;
             let a = &self.attn[l];
@@ -344,6 +402,291 @@ impl ExecEngine {
         self.tel.traffic.ssd_to_dram = self.preloader.bytes_loaded;
         self.tel.peak_dram_bytes = self.tel.peak_dram_bytes.max(self.dram.used_bytes());
         Ok(to_vec_f32(&logits)?)
+    }
+
+    /// Run one token for every lane `(token, kv_slot, pos)` through the
+    /// model as ONE pass per layer: score all batch inputs, reconcile
+    /// each layer's cache unit once against the *union* of the lanes'
+    /// precision plans, load every missing neuron from DRAM once, and
+    /// upload the layer's weight literal once — the three costs that
+    /// sequential serving repeats per session. Per-lane masks select
+    /// each token's own plan out of the shared unit, so outputs are
+    /// byte-identical to running the lanes one at a time.
+    fn forward_batch_at(&mut self, lanes: &[(u32, usize, usize)]) -> Result<Vec<Vec<f32>>> {
+        let d = self.spec().d_model;
+        let n_layers = self.spec().n_layers;
+        for &(token, _slot, pos) in lanes {
+            anyhow::ensure!(pos < self.max_seq, "sequence full ({})", self.max_seq);
+            anyhow::ensure!((token as usize) < self.spec().vocab, "token {token} oob");
+        }
+        let mut timer = PhaseTimer::new();
+
+        // Embed each lane.
+        let mut xs: Vec<xla::Literal> = Vec::with_capacity(lanes.len());
+        for &(token, ..) in lanes {
+            xs.push(
+                self.rt
+                    .exec1("embed", &[self.embed.clone(), lit_i32(token as i32)])?,
+            );
+        }
+        self.tel.phases.other_s += timer.lap_s();
+
+        for l in 0..n_layers {
+            // 1+2. Predict active neurons + plan precision per lane —
+            // the same `plan_layer` math the sequential path runs, so
+            // the per-token plans (and therefore outputs) cannot drift.
+            let mut plans: Vec<LayerPlan> = Vec::with_capacity(lanes.len());
+            for x in &xs {
+                plans.push(self.plan_layer(l, x)?);
+            }
+            self.tel.phases.predict_s += timer.lap_s();
+
+            // 2. DRAM/SSD tier — once per layer for the whole batch.
+            if self.cfg.use_ssd {
+                self.preloader.drain(&mut self.dram);
+                self.preloader.ensure(l, &mut self.dram)?;
+            }
+            let _ = self.dram.probe(l);
+
+            // 3. Union reconciliation + execution, per capacity-sized
+            // lane group (one group in the common high-overlap case; a
+            // low-overlap batch whose union of (neuron, dtype) entries
+            // exceeds the unit splits and amortizes within each group).
+            let groups = partition_by_union(&plans, self.units[l].capacity);
+            for group in &groups {
+                let union = union_plans(group.iter().map(|&i| &plans[i]));
+                let upd = if self.cfg.use_hbm_cache {
+                    self.policy.update(&mut self.units[l], &union)
+                } else {
+                    Self::reload_all(&mut self.units[l], &union)
+                };
+                self.tel.cache_hits += upd.hits as u64;
+                self.tel.union_plan_hits += upd.hits as u64;
+                self.tel.cache_misses += upd.load.len() as u64;
+                self.tel.bump("evictions", upd.evicted as u64);
+                self.tel.phases.cache_mgmt_s += timer.lap_s();
+
+                // Load each missing neuron from DRAM once for the whole
+                // group instead of once per session.
+                let v = self.store.neuron_values();
+                for na in &upd.load {
+                    let rec = self.record_from_dram(l, na)?;
+                    let vals = self.store.dequantize_record(&rec, na.dtype);
+                    self.units[l].insert(na.neuron, na.dtype, &vals);
+                    self.tel.traffic.dram_to_hbm +=
+                        wire_bytes(na.dtype, v, self.store.int4_group);
+                }
+                self.tel.phases.transfer_s += timer.lap_s();
+
+                // One weight literal per layer per group — the upload
+                // sequential serving repeats once per session.
+                let w = {
+                    let unit = &self.units[l];
+                    lit_f32(&unit.storage, &[unit.capacity as i64, (3 * d) as i64])?
+                };
+                if self.cfg.batch_kernel
+                    && self.batch_lanes >= 2
+                    && self.rt.has("layer_step_batch")
+                {
+                    self.exec_layer_group_stacked(l, lanes, group, &plans, &mut xs, &w)?;
+                } else {
+                    self.exec_layer_group_masked(l, lanes, group, &plans, &mut xs, &w)?;
+                }
+                self.tel.phases.ffn_s += timer.lap_s();
+            }
+            if groups.len() > 1 {
+                self.tel.bump("batch_union_splits", (groups.len() - 1) as u64);
+            }
+
+            // 4. Preload ahead.
+            if self.cfg.use_ssd {
+                self.preloader.kick(l, &self.dram);
+            }
+        }
+
+        let mut outs = Vec::with_capacity(lanes.len());
+        for x in xs {
+            let logits = self
+                .rt
+                .exec1("logits", &[x, self.embed.clone(), self.final_norm.clone()])?;
+            outs.push(to_vec_f32(&logits)?);
+        }
+        self.tel.phases.other_s += timer.lap_s();
+        self.tel.traffic.ssd_to_dram = self.preloader.bytes_loaded;
+        self.tel.peak_dram_bytes = self.tel.peak_dram_bytes.max(self.dram.used_bytes());
+        Ok(outs)
+    }
+
+    /// Execute one layer for a lane group with the *single-token*
+    /// kernel, one call per lane against the shared weight literal.
+    /// Byte-identical to sequential serving by construction: same
+    /// executable, same per-lane operands — only the weight upload and
+    /// cache reconciliation were shared.
+    fn exec_layer_group_masked(
+        &mut self,
+        l: usize,
+        lanes: &[(u32, usize, usize)],
+        group: &[usize],
+        plans: &[LayerPlan],
+        xs: &mut [xla::Literal],
+        w: &xla::Literal,
+    ) -> Result<()> {
+        let d = self.spec().d_model;
+        let s = self.max_seq as i64;
+        for &li in group {
+            let (_token, slot, pos) = lanes[li];
+            let capacity = self.units[l].capacity;
+            let mut step_mask = std::mem::take(&mut self.mask_buf);
+            step_mask.clear();
+            step_mask.resize(capacity, 0.0);
+            for (neuron, dtype) in plans[li].iter() {
+                let sl = self.units[l]
+                    .slot_at(NeuronAt { neuron, dtype })
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "cache policy left planned neuron {neuron}@{dtype:?} \
+                             non-resident in layer {l} after batched update"
+                        )
+                    })?;
+                step_mask[sl] = 1.0;
+            }
+            let m = lit_f32(&step_mask, &[capacity as i64])?;
+            self.mask_buf = step_mask;
+            let kc = lit_f32(self.pool.k_layer(slot, l), &[s, d as i64])?;
+            let vc = lit_f32(self.pool.v_layer(slot, l), &[s, d as i64])?;
+            let a = &self.attn[l];
+            let out = self.rt.exec(
+                "layer_step",
+                &[
+                    xs[li].clone(),
+                    a[0].clone(),
+                    a[1].clone(),
+                    a[2].clone(),
+                    a[3].clone(),
+                    a[4].clone(),
+                    a[5].clone(),
+                    kc,
+                    vc,
+                    lit_i32(pos as i32),
+                    w.clone(),
+                    m,
+                ],
+            )?;
+            let [x_out, k_new, v_new]: [xla::Literal; 3] = out
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("layer_step arity"))?;
+            let kv = to_vec_f32(&k_new)?;
+            let vv = to_vec_f32(&v_new)?;
+            self.pool.write_token(slot, l, pos, d, &kv, &vv);
+            xs[li] = x_out;
+        }
+        Ok(())
+    }
+
+    /// Execute one layer for a lane group with the stacked
+    /// `layer_step_batch` kernel: per-lane x/mask/KV/pos operands over
+    /// ONE shared weight buffer, so the whole group is a single PJRT
+    /// dispatch. Short chunks pad with dead lanes (zero x/mask/KV; the
+    /// lanes are mathematically independent and padded outputs are
+    /// discarded). Opt-in (`EngineConfig::batch_kernel`): the kernel
+    /// computes each lane with the same arithmetic as `layer_step`, but
+    /// only the masked per-lane path is byte-identical *by
+    /// construction*.
+    fn exec_layer_group_stacked(
+        &mut self,
+        l: usize,
+        lanes: &[(u32, usize, usize)],
+        group: &[usize],
+        plans: &[LayerPlan],
+        xs: &mut [xla::Literal],
+        w: &xla::Literal,
+    ) -> Result<()> {
+        let d = self.spec().d_model;
+        let s = self.max_seq;
+        let width = self.batch_lanes;
+        let capacity = self.units[l].capacity;
+        // Reused staging buffers (the KV stages alone are width x S x d
+        // floats — per-chunk allocation would undo the hot-loop work).
+        let mut x_stage = std::mem::take(&mut self.stage_x);
+        let mut mask_stage = std::mem::take(&mut self.stage_mask);
+        let mut k_stage = std::mem::take(&mut self.stage_k);
+        let mut v_stage = std::mem::take(&mut self.stage_v);
+        let mut pos_stage = std::mem::take(&mut self.stage_pos);
+        for chunk in group.chunks(width) {
+            x_stage.clear();
+            x_stage.resize(width * d, 0.0);
+            mask_stage.clear();
+            mask_stage.resize(width * capacity, 0.0);
+            k_stage.clear();
+            k_stage.resize(width * s * d, 0.0);
+            v_stage.clear();
+            v_stage.resize(width * s * d, 0.0);
+            pos_stage.clear();
+            pos_stage.resize(width, 0);
+            for (lane, &li) in chunk.iter().enumerate() {
+                let (_token, slot, pos) = lanes[li];
+                let xv = to_vec_f32(&xs[li])?;
+                x_stage[lane * d..(lane + 1) * d].copy_from_slice(&xv);
+                for (neuron, dtype) in plans[li].iter() {
+                    let sl = self.units[l]
+                        .slot_at(NeuronAt { neuron, dtype })
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "cache policy left planned neuron {neuron}@{dtype:?} \
+                                 non-resident in layer {l} after batched update"
+                            )
+                        })?;
+                    mask_stage[lane * capacity + sl] = 1.0;
+                }
+                k_stage[lane * s * d..(lane + 1) * s * d]
+                    .copy_from_slice(self.pool.k_layer(slot, l));
+                v_stage[lane * s * d..(lane + 1) * s * d]
+                    .copy_from_slice(self.pool.v_layer(slot, l));
+                pos_stage[lane] = pos as i32;
+            }
+            let a = &self.attn[l];
+            let out = self.rt.exec(
+                "layer_step_batch",
+                &[
+                    lit_f32(&x_stage, &[width as i64, d as i64])?,
+                    a[0].clone(),
+                    a[1].clone(),
+                    a[2].clone(),
+                    a[3].clone(),
+                    a[4].clone(),
+                    a[5].clone(),
+                    lit_f32(&k_stage, &[width as i64, s as i64, d as i64])?,
+                    lit_f32(&v_stage, &[width as i64, s as i64, d as i64])?,
+                    lit_i32_vec(&pos_stage, &[width as i64])?,
+                    w.clone(),
+                    lit_f32(&mask_stage, &[width as i64, capacity as i64])?,
+                ],
+            )?;
+            let [x_out, k_new, v_new]: [xla::Literal; 3] = out
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("layer_step_batch arity"))?;
+            let xo = to_vec_f32(&x_out)?;
+            let ko = to_vec_f32(&k_new)?;
+            let vo = to_vec_f32(&v_new)?;
+            for (lane, &li) in chunk.iter().enumerate() {
+                let (_token, slot, pos) = lanes[li];
+                self.pool.write_token(
+                    slot,
+                    l,
+                    pos,
+                    d,
+                    &ko[lane * d..(lane + 1) * d],
+                    &vo[lane * d..(lane + 1) * d],
+                );
+                xs[li] = lit_f32(&xo[lane * d..(lane + 1) * d], &[d as i64])?;
+            }
+        }
+        self.stage_x = x_stage;
+        self.stage_mask = mask_stage;
+        self.stage_k = k_stage;
+        self.stage_v = v_stage;
+        self.stage_pos = pos_stage;
+        Ok(())
     }
 
     fn record_from_dram(
@@ -459,6 +802,76 @@ impl SessionEngine for ExecEngine {
 
     fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
         self.forward_at(token, s.slot(), s.pos())
+    }
+
+    fn forward_batch(&mut self, steps: &[(&DecodeSession, u32)]) -> Vec<Result<Vec<f32>>> {
+        // A 1-lane batch is exactly a sequential step — keep it on the
+        // sequential path so batch telemetry only counts shared passes.
+        if steps.len() <= 1 {
+            return steps
+                .iter()
+                .map(|(s, t)| self.forward_at(*t, s.slot(), s.pos()))
+                .collect();
+        }
+        // Per-lane validation failures (position budget spent, token
+        // out of vocabulary) degrade only their own session — exactly
+        // what sequential serving would do — and the shared pass runs
+        // with the remaining lanes.
+        let mut results: Vec<Option<Result<Vec<f32>>>> = steps
+            .iter()
+            .map(|(s, t)| {
+                if s.pos() >= self.max_seq {
+                    Some(Err(anyhow::anyhow!("sequence full ({})", self.max_seq)))
+                } else if (*t as usize) >= self.spec().vocab {
+                    Some(Err(anyhow::anyhow!("token {t} oob")))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let lanes: Vec<(usize, (u32, usize, usize))> = steps
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| results[*i].is_none())
+            .map(|(i, (s, t))| (i, (*t, s.slot(), s.pos())))
+            .collect();
+        match lanes.len() {
+            0 => {}
+            1 => {
+                let (i, (token, slot, pos)) = lanes[0];
+                results[i] = Some(self.forward_at(token, slot, pos));
+            }
+            _ => {
+                let pack: Vec<(u32, usize, usize)> =
+                    lanes.iter().map(|&(_, lane)| lane).collect();
+                match self.forward_batch_at(&pack) {
+                    Ok(outs) => {
+                        // Counted only on success, so occupancy never
+                        // credits a pass that advanced zero tokens.
+                        self.tel.batch_turns += 1;
+                        self.tel.batch_tokens += outs.len() as u64;
+                        for ((i, _), out) in lanes.iter().zip(outs) {
+                            results[*i] = Some(Ok(out));
+                        }
+                    }
+                    Err(e) => {
+                        // An engine-level failure mid-pass degrades this
+                        // batch's requests, not the server: every lane
+                        // reports the error and its session retires; the
+                        // engine stays serviceable.
+                        let msg = format!("{e:#}");
+                        for (i, _) in &lanes {
+                            results[*i] =
+                                Some(Err(anyhow::anyhow!("batched step failed: {msg}")));
+                        }
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every lane answered"))
+            .collect()
     }
 
     fn close(&mut self, s: &mut DecodeSession) {

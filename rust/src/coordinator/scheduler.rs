@@ -30,13 +30,22 @@
 //! trace-replay tier (`rust/tests/trace_replay.rs`) replays identical
 //! seeded traces through both modes on a virtual clock and pins the
 //! TTFT win plus the determinism/fairness contract.
+//!
+//! With [`SchedConfig::batch`] set, turn *selection* becomes turn-set
+//! *assembly*: every tick orders the whole active set by the same key
+//! and advances each session one token through a single
+//! [`SessionEngine::forward_batch`] pass per round, so the engine can
+//! run one shared per-layer pass (union precision plan, one cache
+//! reconciliation, one weight upload) for all co-resident sessions.
+//! Admission order, EDF semantics, and per-session outputs are
+//! unchanged — only the per-turn engine granularity is.
 
 use crate::coordinator::request::{Priority, Request, Response};
 use crate::coordinator::session::{
     DecodeSession, SessionEngine, SessionState, SessionStats, StepOutcome,
 };
 use crate::telemetry::{ClassCounters, N_CLASSES};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 /// Default turn period at which the starvation guard overrides class
@@ -63,6 +72,17 @@ pub struct SchedConfig {
     /// Every `starvation_guard`-th turn steps the longest-waiting
     /// session regardless of class (0 disables the guard).
     pub starvation_guard: u64,
+    /// Batched turns: instead of giving ONE session a turn, each tick
+    /// assembles the whole active set (ordered by the same
+    /// (class, deadline, recency) key single turns use) and advances
+    /// every session one token through a single
+    /// [`SessionEngine::forward_batch`] pass per round — the shared
+    /// per-layer pass that makes N-session serving cost sublinear in N.
+    /// Admission, EDF ordering, and outputs are unchanged; only the
+    /// turn *granularity* is (nobody waits, so the starvation guard
+    /// only reorders within the batch). Off by default — single-turn
+    /// PR-1/2 semantics are preserved exactly.
+    pub batch: bool,
 }
 
 impl Default for SchedConfig {
@@ -71,6 +91,7 @@ impl Default for SchedConfig {
             mode: SchedMode::PriorityEdf,
             prefill_chunk: 16,
             starvation_guard: DEFAULT_STARVATION_GUARD,
+            batch: false,
         }
     }
 }
@@ -112,6 +133,10 @@ pub struct TickReport {
     pub steps_run: usize,
     /// The starvation guard picked this turn (class order suspended).
     pub guard: bool,
+    /// Batched turns only: every session id in this turn's set, in the
+    /// scheduling-key order the batch was assembled (`stepped` is the
+    /// front). Empty on single-session turns.
+    pub batch: Vec<u64>,
     pub outcomes: Vec<Outcome>,
 }
 
@@ -382,11 +407,21 @@ impl<E: SessionEngine> Scheduler<E> {
         }
     }
 
-    /// Admit what fits, then give the selected session one turn: up to
-    /// `prefill_chunk` prompt feeds while it stays in prefill, otherwise
-    /// a single decode feed. Finished/failed sessions retire and their
-    /// freed slot backfills immediately.
+    /// Admit what fits, then run one turn. In single mode (default)
+    /// the selected session gets the turn: up to `prefill_chunk` prompt
+    /// feeds while it stays in prefill, otherwise a single decode feed.
+    /// In batched mode ([`SchedConfig::batch`]) the whole active set
+    /// advances together through `forward_batch`. Finished/failed
+    /// sessions retire and their freed slot backfills immediately.
     pub fn tick(&mut self) -> TickReport {
+        if self.cfg.batch {
+            self.tick_batch()
+        } else {
+            self.tick_single()
+        }
+    }
+
+    fn tick_single(&mut self) -> TickReport {
         let mut report = TickReport::default();
         self.admit(&mut report.outcomes);
         let Some((idx, guard)) = self.pick() else {
@@ -443,6 +478,140 @@ impl<E: SessionEngine> Scheduler<E> {
                 cls.ttft_s_max = entry.s.stats.ttft_s;
             }
             report.outcomes.push(Outcome::Done(finish(entry.s, missed)));
+            self.admit(&mut report.outcomes);
+        }
+        report
+    }
+
+    /// Batched turn: assemble the turn *set* — every active session,
+    /// ordered by the same key [`Self::pick`] uses — and advance each
+    /// one token per round through [`SessionEngine::forward_batch`].
+    /// Round 0 includes the whole set; while sessions stay in prefill,
+    /// subsequent rounds (up to `prefill_chunk`) keep feeding just
+    /// them, preserving the chunked-prefill quantum. Outputs stay
+    /// byte-identical to single-turn serving: each session sees its own
+    /// (token, position) sequence, and engines keep the shared caches
+    /// numerically transparent.
+    fn tick_batch(&mut self) -> TickReport {
+        let mut report = TickReport::default();
+        self.admit(&mut report.outcomes);
+        if self.active.is_empty() {
+            return report;
+        }
+        // Turn-set assembly. The guard is vacuous here (every session
+        // steps every turn) but kept on the single-turn cadence so its
+        // recency ordering still surfaces periodically.
+        let guard = self.cfg.mode == SchedMode::PriorityEdf
+            && self.cfg.starvation_guard > 0
+            && self.turn > 0
+            && self.turn % self.cfg.starvation_guard == 0;
+        self.turn += 1;
+        report.guard = guard;
+        let mut order: Vec<usize> = (0..self.active.len()).collect();
+        if self.cfg.mode == SchedMode::RoundRobin || guard {
+            order.sort_by_key(|&i| self.active[i].stamp);
+        } else {
+            order.sort_by_key(|&i| {
+                let a = &self.active[i];
+                (
+                    a.s.priority.index(),
+                    a.deadline_abs.unwrap_or(u64::MAX),
+                    a.stamp,
+                )
+            });
+        }
+        report.stepped = Some(self.active[order[0]].s.id);
+        report.batch = order.iter().map(|&i| self.active[i].s.id).collect();
+        let chunk = match self.cfg.mode {
+            SchedMode::RoundRobin => 1,
+            SchedMode::PriorityEdf => self.cfg.prefill_chunk.max(1),
+        };
+        let mut errors: HashMap<u64, String> = HashMap::new();
+        for round in 0..chunk {
+            // Round 0 steps everyone; later rounds keep feeding only
+            // the sessions still in prefill (their chunk), skipping
+            // anything that finished or failed mid-turn.
+            let lanes: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    let s = &self.active[i].s;
+                    !s.is_done()
+                        && !errors.contains_key(&s.id)
+                        && (round == 0 || s.is_prefilling())
+                })
+                .collect();
+            if lanes.is_empty() {
+                break;
+            }
+            let mut staged: Vec<(usize, u32)> = Vec::with_capacity(lanes.len());
+            for &i in &lanes {
+                match self.active[i].s.begin_step() {
+                    Ok(Some(tok)) => staged.push((i, tok)),
+                    Ok(None) => {}
+                    Err(e) => {
+                        errors.insert(self.active[i].s.id, format!("{e:#}"));
+                    }
+                }
+            }
+            if staged.is_empty() {
+                break;
+            }
+            let results = {
+                let Scheduler { engine, active, .. } = self;
+                let refs: Vec<(&DecodeSession, u32)> = staged
+                    .iter()
+                    .map(|&(i, tok)| (&active[i].s, tok))
+                    .collect();
+                engine.forward_batch(&refs)
+            };
+            debug_assert_eq!(results.len(), staged.len(), "forward_batch arity");
+            for ((i, _), res) in staged.iter().zip(results) {
+                match res {
+                    Ok(logits) => {
+                        report.steps_run += 1;
+                        self.active[*i].s.complete_step(logits);
+                    }
+                    Err(e) => {
+                        errors.insert(self.active[*i].s.id, format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        // Refresh recency stamps in batch order so round-robin rotation
+        // and the EDF tie-break stay deterministic across turns.
+        for &i in &order {
+            self.stamp += 1;
+            self.active[i].stamp = self.stamp;
+        }
+        // Retire finished and failed sessions (deterministic active-
+        // list order), backfilling each freed slot immediately.
+        let mut i = 0;
+        while i < self.active.len() {
+            let id = self.active[i].s.id;
+            if !self.active[i].s.is_done() && !errors.contains_key(&id) {
+                i += 1;
+                continue;
+            }
+            let mut entry = self.active.swap_remove(i);
+            self.engine.close(&mut entry.s);
+            self.completed += 1;
+            if let Some(error) = errors.remove(&id) {
+                self.classes[entry.s.priority.index()].failed += 1;
+                report.outcomes.push(Outcome::Failed { id, error });
+            } else {
+                let missed = entry.deadline_abs.is_some_and(|d| self.now_ms() > d);
+                let cls = &mut self.classes[entry.s.priority.index()];
+                cls.completed += 1;
+                if missed {
+                    cls.deadline_missed += 1;
+                }
+                cls.ttft_s_sum += entry.s.stats.ttft_s;
+                if entry.s.stats.ttft_s > cls.ttft_s_max {
+                    cls.ttft_s_max = entry.s.stats.ttft_s;
+                }
+                report.outcomes.push(Outcome::Done(finish(entry.s, missed)));
+            }
             self.admit(&mut report.outcomes);
         }
         report
@@ -720,6 +889,111 @@ mod tests {
         // 4 batch tokens need 4 turns; guard fires every 4th turn.
         assert_eq!(batch_turns, 4, "guard failed to schedule the batch session");
         assert!(sched.classes[Priority::Batch.index()].completed == 1);
+    }
+
+    #[test]
+    fn batched_tick_steps_every_active_session() {
+        let cfg = SchedConfig {
+            batch: true,
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::with_config(Stub::new(3), 3, cfg);
+        for id in 1..=3 {
+            sched.submit(req(id, &[1, 2], 4));
+        }
+        let r = sched.tick();
+        // One batched turn absorbs every 2-token prompt (chunked
+        // prefill rounds) and yields each session's first token.
+        assert_eq!(r.batch.len(), 3);
+        assert_eq!(r.stepped, Some(1));
+        assert_eq!(r.steps_run, 6, "3 sessions x 2 prompt feeds");
+        let r = sched.tick();
+        assert_eq!(r.steps_run, 3, "decode turns step each session once");
+        let outs = sched.run_until_idle();
+        assert_eq!(sched.completed, 3);
+        for o in &outs {
+            assert!(matches!(o, Outcome::Done(c) if c.response.tokens.len() == 4));
+        }
+    }
+
+    #[test]
+    fn batched_outputs_match_single_turn_outputs() {
+        // The tentpole contract at the scheduler level: batching changes
+        // engine granularity, never bytes. Same requests, same stub
+        // engine; compare per-request tokens across the two modes.
+        let run = |batch: bool| -> Vec<(u64, Vec<u32>)> {
+            let cfg = SchedConfig {
+                batch,
+                ..SchedConfig::default()
+            };
+            let mut sched = Scheduler::with_config(Stub::new(3), 3, cfg);
+            sched.submit(req(1, &[7, 3, 9, 2], 5));
+            sched.submit(req(2, &[4], 3).with_class(Priority::High, Some(500)));
+            sched.submit(req(3, &[8, 8, 1], 6).with_class(Priority::Batch, None));
+            sched.submit(req(4, &[2, 2], 2));
+            let mut done: Vec<(u64, Vec<u32>)> = sched
+                .run_until_idle()
+                .into_iter()
+                .map(|o| match o {
+                    Outcome::Done(c) => (c.response.id, c.response.tokens),
+                    Outcome::Failed { id, error } => panic!("req {id}: {error}"),
+                })
+                .collect();
+            done.sort_by_key(|(id, _)| *id);
+            done
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn batched_failed_session_degrades_alone() {
+        // An engine failure mid-batch fails that request; co-resident
+        // sessions keep decoding (the satellite contract: a cache-policy
+        // bug degrades one request, not the server).
+        struct Flaky {
+            inner: Stub,
+        }
+        impl SessionEngine for Flaky {
+            fn capacity(&self) -> usize {
+                self.inner.capacity()
+            }
+            fn open(&mut self, r: Request) -> Result<DecodeSession> {
+                self.inner.open(r)
+            }
+            fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+                anyhow::ensure!(s.id != 2 || s.pos() < 2, "injected fault");
+                self.inner.forward(s, token)
+            }
+            fn close(&mut self, s: &mut DecodeSession) {
+                self.inner.close(s)
+            }
+        }
+        let cfg = SchedConfig {
+            batch: true,
+            ..SchedConfig::default()
+        };
+        let eng = Flaky { inner: Stub::new(2) };
+        let mut sched = Scheduler::with_config(eng, 2, cfg);
+        sched.submit(req(1, &[1, 2], 4));
+        sched.submit(req(2, &[3, 4], 4));
+        let outs = sched.run_until_idle();
+        assert_eq!(outs.len(), 2);
+        let mut ok = 0;
+        for o in outs {
+            match o {
+                Outcome::Done(c) => {
+                    assert_eq!(c.response.id, 1);
+                    assert_eq!(c.response.tokens.len(), 4);
+                    ok += 1;
+                }
+                Outcome::Failed { id, error } => {
+                    assert_eq!(id, 2);
+                    assert!(error.contains("injected fault"), "{error}");
+                }
+            }
+        }
+        assert_eq!(ok, 1);
+        assert_eq!(sched.engine().inner.free.len(), 2, "no leaked slots");
     }
 
     #[test]

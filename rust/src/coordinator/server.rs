@@ -121,6 +121,12 @@ struct Shared {
     /// from the scheduler by the decode loop after every tick.
     class_done: [AtomicU64; N_CLASSES],
     class_missed: [AtomicU64; N_CLASSES],
+    /// Batched-forward counters (for STATS), mirrored from the engine's
+    /// telemetry: shared passes, tokens they advanced, and cache hits
+    /// scored against union plans.
+    batch_turns: AtomicU64,
+    batch_tokens: AtomicU64,
+    union_hits: AtomicU64,
 }
 
 /// Serve until `max_requests` have been answered (None = forever).
@@ -145,6 +151,9 @@ pub fn serve(
         active: AtomicU64::new(0),
         class_done: std::array::from_fn(|_| AtomicU64::new(0)),
         class_missed: std::array::from_fn(|_| AtomicU64::new(0)),
+        batch_turns: AtomicU64::new(0),
+        batch_tokens: AtomicU64::new(0),
+        union_hits: AtomicU64::new(0),
     });
 
     // Acceptor thread: parse lines, enqueue.
@@ -165,6 +174,7 @@ pub fn serve(
     let sched_cfg = SchedConfig {
         prefill_chunk: engine.config().prefill_chunk,
         starvation_guard: engine.config().starvation_guard,
+        batch: engine.config().batch,
         ..SchedConfig::default()
     };
     let mut sched = Scheduler::with_config(engine, sessions, sched_cfg);
@@ -221,6 +231,10 @@ pub fn serve(
             shared.class_done[i].store(c.completed, Ordering::SeqCst);
             shared.class_missed[i].store(c.deadline_missed, Ordering::SeqCst);
         }
+        let tel = &sched.engine().tel;
+        shared.batch_turns.store(tel.batch_turns, Ordering::SeqCst);
+        shared.batch_tokens.store(tel.batch_tokens, Ordering::SeqCst);
+        shared.union_hits.store(tel.union_plan_hits, Ordering::SeqCst);
         for outcome in report.outcomes {
             let id = outcome.id();
             let reply = match outcome {
@@ -302,12 +316,25 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                         )
                     })
                     .collect();
+                let turns = shared.batch_turns.load(Ordering::SeqCst);
+                let toks = shared.batch_tokens.load(Ordering::SeqCst);
+                let occupancy = if turns == 0 {
+                    0.0
+                } else {
+                    toks as f64 / turns as f64
+                };
                 let msg = format!(
-                    "{{\"depth\":{},\"enqueued\":{},\"rejected\":{},\"active\":{},\"classes\":{{{}}}}}\n",
+                    "{{\"depth\":{},\"enqueued\":{},\"rejected\":{},\"active\":{},\
+                     \"batch\":{{\"turns\":{},\"tokens\":{},\"occupancy\":{:.2},\"union_hits\":{}}},\
+                     \"classes\":{{{}}}}}\n",
                     g.0.len(),
                     g.0.enqueued,
                     g.0.rejected,
                     shared.active.load(Ordering::SeqCst),
+                    turns,
+                    toks,
+                    occupancy,
+                    shared.union_hits.load(Ordering::SeqCst),
                     classes.join(",")
                 );
                 drop(g);

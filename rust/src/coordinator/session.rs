@@ -149,13 +149,16 @@ impl DecodeSession {
         self.last_token_at = Some(now);
     }
 
-    /// Advance this session by exactly one token of engine work. The
-    /// state machine is shared by every engine: prefill feeds the next
-    /// prompt token, decode feeds the last generated token; greedy
-    /// argmax picks continuations (matching `ExecEngine::generate`).
-    pub fn step<E: SessionEngine + ?Sized>(&mut self, eng: &mut E) -> Result<StepOutcome> {
+    /// Stage one token of engine work: validates, flips Queued→Prefill
+    /// (stamping the queue wait), counts the step, and returns the
+    /// token this step must feed — the next prompt token in prefill,
+    /// the last generated token in decode. `None` means the session is
+    /// already done. The caller runs the forward (alone or inside a
+    /// batched pass) and hands the logits to [`complete_step`]; `step`
+    /// is exactly `begin_step` → `forward` → `complete_step`.
+    pub fn begin_step(&mut self) -> Result<Option<u32>> {
         if self.state == SessionState::Done {
-            return Ok(StepOutcome::Finished);
+            return Ok(None);
         }
         // Engines are asked to validate at open(); this guard turns a
         // forgotten check into a failed request instead of an
@@ -166,14 +169,29 @@ impl DecodeSession {
             self.state = SessionState::Prefill;
         }
         self.stats.steps += 1;
+        Ok(Some(match self.state {
+            SessionState::Prefill => self.prompt[self.fed],
+            SessionState::Decode => {
+                *self.generated.last().expect("decode state has a token")
+            }
+            SessionState::Queued | SessionState::Done => unreachable!("handled above"),
+        }))
+    }
+
+    /// Fold in the logits produced by feeding [`begin_step`]'s token:
+    /// advances the prefill/decode cursors, greedy-argmaxes the next
+    /// token at phase boundaries, and reports whether the session needs
+    /// more steps. Must be called exactly once per successful
+    /// `begin_step` (on a forward error the step simply never
+    /// completes, matching the sequential error path).
+    pub fn complete_step(&mut self, logits: Vec<f32>) -> StepOutcome {
         match self.state {
             SessionState::Prefill => {
-                let tok = self.prompt[self.fed];
-                self.logits = eng.forward(self, tok)?;
+                self.logits = logits;
                 self.fed += 1;
                 self.pos += 1;
                 if self.fed < self.prompt.len() {
-                    return Ok(StepOutcome::Working);
+                    return StepOutcome::Working;
                 }
                 // Prompt absorbed: the first output token is ready now.
                 if self.max_new == 0 {
@@ -182,33 +200,46 @@ impl DecodeSession {
                     // for every legal request.
                     self.stats.ttft_s = self.arrived.elapsed().as_secs_f64();
                     self.state = SessionState::Done;
-                    return Ok(StepOutcome::Finished);
+                    return StepOutcome::Finished;
                 }
                 self.generated.push(argmax(&self.logits));
                 self.stats.ttft_s = self.arrived.elapsed().as_secs_f64();
                 self.note_token();
                 if self.generated.len() == self.max_new {
                     self.state = SessionState::Done;
-                    return Ok(StepOutcome::Finished);
+                    return StepOutcome::Finished;
                 }
                 self.state = SessionState::Decode;
-                Ok(StepOutcome::Working)
+                StepOutcome::Working
             }
             SessionState::Decode => {
-                let tok = *self.generated.last().expect("decode state has a token");
-                self.logits = eng.forward(self, tok)?;
+                self.logits = logits;
                 self.pos += 1;
                 self.generated.push(argmax(&self.logits));
                 self.note_token();
                 if self.generated.len() == self.max_new {
                     self.state = SessionState::Done;
-                    Ok(StepOutcome::Finished)
+                    StepOutcome::Finished
                 } else {
-                    Ok(StepOutcome::Working)
+                    StepOutcome::Working
                 }
             }
-            SessionState::Queued | SessionState::Done => unreachable!("handled above"),
+            SessionState::Queued | SessionState::Done => {
+                unreachable!("complete_step without begin_step")
+            }
         }
+    }
+
+    /// Advance this session by exactly one token of engine work. The
+    /// state machine is shared by every engine: prefill feeds the next
+    /// prompt token, decode feeds the last generated token; greedy
+    /// argmax picks continuations (matching `ExecEngine::generate`).
+    pub fn step<E: SessionEngine + ?Sized>(&mut self, eng: &mut E) -> Result<StepOutcome> {
+        let Some(tok) = self.begin_step()? else {
+            return Ok(StepOutcome::Finished);
+        };
+        let logits = eng.forward(self, tok)?;
+        Ok(self.complete_step(logits))
     }
 }
 
@@ -235,6 +266,17 @@ pub trait SessionEngine {
     /// Run one token through the model for this session, reading and
     /// writing KV at `(s.slot(), s.pos())`. Returns next-token logits.
     fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>>;
+
+    /// Run one token for *each* of `steps`' sessions, sharing whatever
+    /// per-step work the engine can amortize (the executed engine runs
+    /// one pass per layer for the whole batch over a union precision
+    /// plan). Slot `i` of the result belongs to `steps[i]`; entries
+    /// fail independently. The default implementation degrades to
+    /// per-session [`forward`] calls in order, so stub engines stay
+    /// correct — and byte-identical to sequential stepping — for free.
+    fn forward_batch(&mut self, steps: &[(&DecodeSession, u32)]) -> Vec<Result<Vec<f32>>> {
+        steps.iter().map(|(s, t)| self.forward(s, *t)).collect()
+    }
 
     /// Release the session's engine resources and fold its counters into
     /// aggregate telemetry. Called exactly once per opened session.
@@ -440,5 +482,42 @@ mod tests {
         let mut p = KvPool::new(1, 1, 4);
         let s = p.acquire().unwrap();
         p.write_token(s, 0, 2, 2, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn begin_and_complete_mirror_step_exactly() {
+        // Driving a session via begin_step/complete_step (the batched
+        // decomposition) must reproduce step()'s outputs and stats.
+        let mut eng = Echo;
+        let mut a = eng.open(req(1, vec![3, 1, 4], 5)).unwrap();
+        let mut b = eng.open(req(1, vec![3, 1, 4], 5)).unwrap();
+        loop {
+            let oa = a.step(&mut eng).unwrap();
+            let tok = b.begin_step().unwrap().expect("b not done before a");
+            let logits = eng.forward(&b, tok).unwrap();
+            let ob = b.complete_step(logits);
+            assert_eq!(oa, ob);
+            if oa == StepOutcome::Finished {
+                break;
+            }
+        }
+        assert_eq!(a.generated, b.generated);
+        assert_eq!(a.stats.steps, b.stats.steps);
+        assert_eq!(a.pos(), b.pos());
+        // Done sessions report None from begin_step.
+        assert_eq!(b.begin_step().unwrap(), None);
+    }
+
+    #[test]
+    fn default_forward_batch_matches_per_session_forwards() {
+        let mut eng = Echo;
+        let s1 = eng.open(req(1, vec![2, 7], 3)).unwrap();
+        let s2 = eng.open(req(2, vec![5], 2)).unwrap();
+        let batched = eng.forward_batch(&[(&s1, 2), (&s2, 5)]);
+        assert_eq!(batched.len(), 2);
+        let a = batched[0].as_ref().unwrap().clone();
+        let b = batched[1].as_ref().unwrap().clone();
+        assert_eq!(a, eng.forward(&s1, 2).unwrap());
+        assert_eq!(b, eng.forward(&s2, 5).unwrap());
     }
 }

@@ -56,6 +56,11 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.prefill_chunk = args.get_usize("prefill-chunk", cfg.prefill_chunk).max(1);
     cfg.starvation_guard =
         args.get_usize("starvation-guard", cfg.starvation_guard as usize) as u64;
+    // Batched forward: one shared per-layer pass for all co-resident
+    // sessions (--batch-kernel additionally dispatches lane groups
+    // through the stacked HLO when the artifacts provide one).
+    cfg.batch_kernel = args.flag("batch-kernel");
+    cfg.batch = args.flag("batch") || cfg.batch_kernel;
     if args.flag("no-ssd") {
         cfg.use_ssd = false;
     }
@@ -103,6 +108,10 @@ COMMANDS:
   serve           TCP server: --addr HOST:PORT [--max-requests N]
                   [--sessions N]       interleave up to N decode sessions
                   [--prefill-chunk N]  prompt tokens per scheduler turn
+                  [--batch]            one shared per-layer pass for all
+                                       co-resident sessions (union-plan
+                                       cache reconciliation)
+                  [--batch-kernel]     + stacked layer_step_batch HLO
                   protocol: `GEN <max_new> <prompt>` or
                   `GEN@<class>[:<deadline_ms>] <max_new> <prompt>`
                   with class in {high, normal, batch}

@@ -17,6 +17,13 @@ pub enum Dtype {
 }
 
 impl Dtype {
+    /// Every storage format, highest precision first (declaration
+    /// order). The cache keys residency by `(neuron, dtype)` and probes
+    /// exactly these variants — extend this list when adding a variant
+    /// (the exhaustive matches below will already force the edit to
+    /// this file).
+    pub const ALL: [Dtype; 4] = [Dtype::F32, Dtype::F16, Dtype::Int8, Dtype::Int4];
+
     /// Bits per stored value (excluding scales).
     pub fn bits(self) -> u32 {
         match self {

@@ -30,6 +30,26 @@ pub fn lit_i32(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// Build an i32 literal with the given dims (the stacked `pos` operand
+/// of the batched layer kernel).
+pub fn lit_i32_vec(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(
+        n as usize == data.len(),
+        "lit_i32_vec: {} values for dims {dims:?}",
+        data.len()
+    );
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &dims_usize,
+        bytes,
+    )?)
+}
+
 /// Extract an f32 vector from a literal.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
@@ -56,5 +76,13 @@ mod tests {
         let l = lit_i32(42);
         assert_eq!(l.element_count(), 1);
         assert_eq!(l.to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn i32_vector_roundtrip() {
+        let l = lit_i32_vec(&[3, 1, 4], &[3]).unwrap();
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![3, 1, 4]);
+        assert!(lit_i32_vec(&[1, 2], &[3]).is_err());
     }
 }

@@ -16,10 +16,17 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
-pub use literal::{lit_f32, lit_i32, to_vec_f32};
+pub use literal::{lit_f32, lit_i32, lit_i32_vec, to_vec_f32};
 
 /// Artifact names the engine expects after `make artifacts`.
 pub const ARTIFACTS: [&str; 4] = ["embed", "predictor", "layer_step", "logits"];
+
+/// Optional artifacts: compiled when present, skipped otherwise so
+/// artifact directories from before they existed keep working. The
+/// batched layer kernel (stacked per-lane x/mask/KV/pos operands over
+/// ONE shared weight buffer) is the only entry today; its lane count
+/// is published as `batch_lanes` in the artifacts' `meta.cfg`.
+pub const OPTIONAL_ARTIFACTS: [&str; 1] = ["layer_step_batch"];
 
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -55,10 +62,17 @@ impl Runtime {
         Ok(())
     }
 
-    /// Load every expected artifact from a directory.
+    /// Load every expected artifact from a directory; optional
+    /// artifacts compile only when their file exists.
     pub fn load_dir(&mut self, dir: &Path) -> Result<()> {
         for name in ARTIFACTS {
             self.load(name, &dir.join(format!("{name}.hlo.txt")))?;
+        }
+        for name in OPTIONAL_ARTIFACTS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if path.exists() {
+                self.load(name, &path)?;
+            }
         }
         Ok(())
     }

@@ -103,6 +103,16 @@ pub struct Telemetry {
     pub kv_pool_bytes: u64,
     /// Most decode sessions ever concurrently in flight.
     pub peak_active_sessions: u64,
+    /// Shared (≥ 2-lane) batched forward passes executed.
+    pub batch_turns: u64,
+    /// Tokens advanced by those passes — `batch_occupancy()` is their
+    /// mean lanes per pass, the utilization figure of batched serving.
+    pub batch_tokens: u64,
+    /// Cache hits scored against batched *union* plans, each union
+    /// entry counted once no matter how many co-resident sessions
+    /// wanted it — the reuse that makes batched serving sublinear in
+    /// DRAM→HBM traffic (subset of `cache_hits`).
+    pub union_plan_hits: u64,
     /// Per-priority-class serving counters (see [`ClassCounters`]).
     pub classes: [ClassCounters; N_CLASSES],
     /// Free-form counters for experiment-specific series.
@@ -125,6 +135,17 @@ impl Telemetry {
             0.0
         } else {
             self.dram_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean lanes per shared batched pass (0 when none ran). 1.0 would
+    /// mean batching never found co-resident work; `--sessions N` under
+    /// load should approach N.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batch_turns == 0 {
+            0.0
+        } else {
+            self.batch_tokens as f64 / self.batch_turns as f64
         }
     }
 
@@ -153,6 +174,8 @@ impl Telemetry {
             .field_int("peak_dram", self.peak_dram_bytes as i64)
             .field_int("kv_pool", self.kv_pool_bytes as i64)
             .field_int("peak_sessions", self.peak_active_sessions as i64)
+            .field_num("batch_occupancy", self.batch_occupancy())
+            .field_int("union_plan_hits", self.union_plan_hits as i64)
             .field_num("predict_s", self.phases.predict_s)
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)
@@ -244,6 +267,19 @@ mod tests {
         let j = t.to_json();
         assert!(j.contains("\"classes\":{\"high\":{\"done\":4,\"missed\":1"), "{j}");
         assert!(j.contains("\"batch\""), "{j}");
+    }
+
+    #[test]
+    fn batch_occupancy_and_json() {
+        let mut t = Telemetry::default();
+        assert_eq!(t.batch_occupancy(), 0.0, "no batched passes yet");
+        t.batch_turns = 4;
+        t.batch_tokens = 14;
+        t.union_plan_hits = 9;
+        assert!((t.batch_occupancy() - 3.5).abs() < 1e-12);
+        let j = t.to_json();
+        assert!(j.contains("\"batch_occupancy\":3.5"), "{j}");
+        assert!(j.contains("\"union_plan_hits\":9"), "{j}");
     }
 
     #[test]

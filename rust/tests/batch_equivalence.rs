@@ -1,0 +1,215 @@
+//! Batched-vs-sequential byte-equality tier — runs WITHOUT artifacts.
+//!
+//! The tentpole contract: [`SchedConfig::batch`] changes engine
+//! *granularity* (one shared pass per turn instead of one pass per
+//! session), never bytes. This tier proves it property-style over
+//! random session mixes — mixed prefill/decode lengths, mixed priority
+//! classes, more sessions than slots — against the three engine shapes
+//! the trait admits:
+//!
+//! 1. a stub on the **default** `forward_batch` (per-session loop), the
+//!    shape every pre-existing engine gets for free;
+//! 2. a stub that **overrides** `forward_batch` and services lanes in
+//!    reverse order, proving the scheduler depends only on the
+//!    slot-`i`-answers-`steps[i]` contract, not on call order;
+//! 3. the executed PJRT engine — covered artifact-gated in
+//!    `exec_integration.rs` (`batched_serving_matches_sequential`).
+//!
+//! The reference is each request decoded alone to completion on a
+//! fresh stub — the strongest form of "interleaving changed nothing".
+
+use anyhow::Result;
+use m2cache::coordinator::{
+    DecodeSession, Outcome, Priority, Request, SchedConfig, Scheduler, SessionEngine,
+};
+use m2cache::util::check::Check;
+use m2cache::util::rng::Rng;
+use std::collections::HashMap;
+
+const VOCAB: usize = 89;
+
+/// Deterministic stub: logits are a pure function of (token, pos), so
+/// any correct schedule reproduces identical per-request bytes. Slots
+/// come from a real free list so aliasing bugs would surface.
+struct Stub {
+    slots: usize,
+    free: Vec<usize>,
+    /// Lane counts of every forward_batch call (occupancy evidence).
+    batch_sizes: Vec<usize>,
+    /// Service lanes in reverse order when set (override shape #2).
+    reverse: bool,
+}
+
+impl Stub {
+    fn new(slots: usize, reverse: bool) -> Stub {
+        Stub {
+            slots,
+            free: (0..slots).rev().collect(),
+            batch_sizes: Vec::new(),
+            reverse,
+        }
+    }
+
+    fn logits(token: u32, pos: usize) -> Vec<f32> {
+        let mut l = vec![0.0f32; VOCAB];
+        l[((token as usize).wrapping_mul(13) + pos * 5 + 2) % VOCAB] = 1.0;
+        l
+    }
+}
+
+impl SessionEngine for Stub {
+    fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        assert!(!self.free.contains(&s.slot()), "stepped on a freed slot");
+        Ok(Stub::logits(token, s.pos()))
+    }
+
+    fn forward_batch(&mut self, steps: &[(&DecodeSession, u32)]) -> Vec<Result<Vec<f32>>> {
+        self.batch_sizes.push(steps.len());
+        if !self.reverse {
+            return steps.iter().map(|(s, t)| self.forward(s, *t)).collect();
+        }
+        // Service lanes back-to-front, answer front-to-back: result
+        // slot i must still belong to steps[i].
+        let mut out: Vec<Result<Vec<f32>>> = Vec::with_capacity(steps.len());
+        for (s, t) in steps.iter().rev() {
+            out.push(self.forward(s, *t));
+        }
+        out.reverse();
+        out
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        assert!(!self.free.contains(&s.slot()), "double release");
+        self.free.push(s.slot());
+    }
+}
+
+/// Random request mix: prompts 1..12 tokens, 0..8 decode tokens, all
+/// three priority classes, some deadlines.
+fn random_requests(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (1..=n)
+        .map(|id| {
+            let plen = rng.range(1, 12);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(VOCAB as u64) as u32).collect();
+            let max_new = rng.range(0, 8);
+            let (priority, deadline) = match rng.range(0, 4) {
+                0 => (Priority::High, Some(rng.range(50, 500) as u64)),
+                1 => (Priority::Batch, None),
+                _ => (Priority::Normal, None),
+            };
+            Request::new(id as u64, prompt, max_new).with_class(priority, deadline)
+        })
+        .collect()
+}
+
+/// Every request decoded alone to completion — the bytes nothing may
+/// change.
+fn sequential_reference(requests: &[Request]) -> HashMap<u64, Vec<u32>> {
+    let mut eng = Stub::new(1, false);
+    let mut out = HashMap::new();
+    for r in requests {
+        let mut s = eng.open(r.clone()).unwrap();
+        while !s.is_done() {
+            s.step(&mut eng).unwrap();
+        }
+        eng.close(&mut s);
+        out.insert(r.id, s.generated);
+    }
+    out
+}
+
+fn run_scheduler(
+    requests: &[Request],
+    slots: usize,
+    batch: bool,
+    reverse: bool,
+) -> (HashMap<u64, Vec<u32>>, Stub) {
+    let cfg = SchedConfig {
+        batch,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::with_config(Stub::new(slots, reverse), slots, cfg);
+    for r in requests {
+        sched.submit(r.clone());
+    }
+    let mut out = HashMap::new();
+    for o in sched.run_until_idle() {
+        match o {
+            Outcome::Done(c) => {
+                out.insert(c.response.id, c.response.tokens);
+            }
+            Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+        }
+    }
+    (out, sched.into_engine())
+}
+
+#[test]
+fn batched_outputs_are_byte_identical_across_random_mixes() {
+    Check::new(32, 0xBA7C).run("batched == sequential", |rng| {
+        let n = rng.range(2, 10);
+        let slots = rng.range(1, 5);
+        let requests = random_requests(rng, n);
+        let reference = sequential_reference(&requests);
+        for (name, batch, reverse) in [
+            ("single-turn", false, false),
+            ("batched/default", true, false),
+            ("batched/override", true, true),
+        ] {
+            let (got, _) = run_scheduler(&requests, slots, batch, reverse);
+            if got != reference {
+                return Err(format!("{name}: scheduler changed generated bytes"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_mode_actually_batches() {
+    // With 4 equal co-resident decode sessions, every shared pass must
+    // carry all 4 lanes — occupancy is the whole point.
+    let requests: Vec<Request> = (1..=4)
+        .map(|id| Request::new(id, vec![5, 6], 6))
+        .collect();
+    let (out, eng) = run_scheduler(&requests, 4, true, false);
+    assert_eq!(out.len(), 4);
+    assert!(
+        !eng.batch_sizes.is_empty(),
+        "batched scheduler never called forward_batch with >= 2 lanes"
+    );
+    assert!(
+        eng.batch_sizes.iter().any(|&b| b == 4),
+        "no full-occupancy pass in {:?}",
+        eng.batch_sizes
+    );
+    // Total forwards conserved: 4 sessions x (2 prompt + 5 decode).
+    let batched_tokens: usize = eng.batch_sizes.iter().sum();
+    assert_eq!(batched_tokens, 4 * 7);
+}
+
+#[test]
+fn batched_mode_interleaves_overcommitted_backlog() {
+    // More requests than slots: the batch is capped at the slot count,
+    // retired sessions backfill, and everything still matches the
+    // sequential reference.
+    let mut rng = Rng::new(0x5EED);
+    let requests = random_requests(&mut rng, 12);
+    let reference = sequential_reference(&requests);
+    let (got, eng) = run_scheduler(&requests, 3, true, false);
+    assert_eq!(got, reference);
+    assert!(eng.batch_sizes.iter().all(|&b| b <= 3), "{:?}", eng.batch_sizes);
+}

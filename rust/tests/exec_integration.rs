@@ -1,7 +1,9 @@
 //! Integration tests over the executed engine (full rust→PJRT stack).
 //! These need `make artifacts`; every test no-ops politely otherwise.
 
-use m2cache::coordinator::{tokenize, EngineConfig, ExecEngine, PolicyKind};
+use m2cache::coordinator::{
+    tokenize, EngineConfig, ExecEngine, Outcome, PolicyKind, Request, SchedConfig, Scheduler,
+};
 use m2cache::precision::plan::PrecisionRatios;
 use std::path::{Path, PathBuf};
 
@@ -130,6 +132,102 @@ fn policies_do_not_change_outputs() {
     }
     assert_eq!(outs[0], outs[1], "LRU diverged from ATU");
     assert_eq!(outs[0], outs[2], "sliding window diverged from ATU");
+}
+
+#[test]
+fn batched_serving_matches_sequential() {
+    // The tentpole's executed-path acceptance: serving the same
+    // requests through batched turn-set assembly (shared per-layer
+    // pass, union-plan reconciliation, one weight upload per layer per
+    // turn) must produce byte-identical tokens to each request decoded
+    // alone on a fresh engine. The masked per-lane path runs the same
+    // HLO with the same operands as sequential serving, so equality is
+    // exact, not approximate.
+    let art = need_artifacts!();
+    let prompts = [
+        "the quick brown fox ",
+        "a journey of a thousand ",
+        "large language models ",
+    ];
+    let n_gen = 12;
+    // Reference: each request alone, warm-start engine per request.
+    let mut reference = Vec::new();
+    for p in &prompts {
+        let mut e = ExecEngine::new(&art, EngineConfig::full()).unwrap();
+        reference.push(e.generate(&tokenize(p), n_gen).unwrap());
+    }
+    // Batched serving: all three co-resident over one shared engine.
+    let mut cfg = EngineConfig::full();
+    cfg.max_sessions = 3;
+    cfg.batch = true;
+    let engine = ExecEngine::new(&art, cfg).unwrap();
+    let sched_cfg = SchedConfig {
+        batch: true,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::with_config(engine, 3, sched_cfg);
+    for (i, p) in prompts.iter().enumerate() {
+        sched.submit(Request::new(i as u64 + 1, tokenize(p), n_gen));
+    }
+    let mut got = vec![Vec::new(); prompts.len()];
+    for o in sched.run_until_idle() {
+        match o {
+            Outcome::Done(c) => got[c.response.id as usize - 1] = c.response.tokens,
+            Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+        }
+    }
+    assert_eq!(got, reference, "batched serving changed generated bytes");
+    let eng = sched.into_engine();
+    assert!(eng.tel.batch_turns > 0, "no shared passes ran");
+    assert!(
+        eng.tel.batch_occupancy() > 1.5,
+        "occupancy {} too low for 3 co-resident sessions",
+        eng.tel.batch_occupancy()
+    );
+    assert!(eng.tel.union_plan_hits > 0, "unions never hit the cache");
+}
+
+#[test]
+fn batched_kernel_path_matches_when_artifact_present() {
+    // Optional stacked-HLO dispatch (--batch-kernel): exercised only
+    // when the artifact set ships `layer_step_batch`. The kernel
+    // computes each lane with the same per-lane graph the single-token
+    // kernel traces (unrolled lanes, shared weights), so greedy tokens
+    // must match the masked per-lane path.
+    let art = need_artifacts!();
+    if !art.join("layer_step_batch.hlo.txt").exists() {
+        eprintln!("skipping: artifacts predate layer_step_batch (re-run `make artifacts`)");
+        return;
+    }
+    let prompts = ["the cache keeps the ", "mixed precision trades "];
+    let run = |batch_kernel: bool| -> Vec<Vec<u32>> {
+        let mut cfg = EngineConfig::full();
+        cfg.max_sessions = 2;
+        cfg.batch = true;
+        cfg.batch_kernel = batch_kernel;
+        let engine = ExecEngine::new(&art, cfg).unwrap();
+        let sched_cfg = SchedConfig {
+            batch: true,
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::with_config(engine, 2, sched_cfg);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.submit(Request::new(i as u64 + 1, tokenize(p), 10));
+        }
+        let mut got = vec![Vec::new(); prompts.len()];
+        for o in sched.run_until_idle() {
+            match o {
+                Outcome::Done(c) => got[c.response.id as usize - 1] = c.response.tokens,
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+        got
+    };
+    assert_eq!(
+        run(false),
+        run(true),
+        "stacked layer_step_batch diverged from the masked per-lane path"
+    );
 }
 
 #[test]
