@@ -25,6 +25,9 @@ const N_CLIENTS: usize = 4;
 const REQS_PER_CLIENT: usize = 3;
 const GEN_TOKENS: usize = 32;
 const SESSIONS: usize = 4;
+/// One extra protocol-v2 client that streams its reply (TOK frames) —
+/// the client-observed TTFT the one-shot protocol could never show.
+const STREAM_CLIENTS: usize = 1;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = Path::new("artifacts");
@@ -32,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         artifacts.join("layer_step.hlo.txt").exists(),
         "artifacts missing — run `make artifacts` first"
     );
-    let total = (N_CLIENTS * REQS_PER_CLIENT) as u64;
+    let total = (N_CLIENTS * REQS_PER_CLIENT + STREAM_CLIENTS) as u64;
 
     // Server thread. The engine is built *inside* the thread: PJRT
     // handles are not Send, and the decode thread owns them for life —
@@ -88,6 +91,42 @@ fn main() -> anyhow::Result<()> {
     }
     drop(res_tx);
 
+    // The v2 streaming client: HELLO v2, one GEN, frames as they come.
+    let stream_handle = std::thread::spawn(move || -> anyhow::Result<(f64, usize)> {
+        let mut conn = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let send = |conn: &mut TcpStream, line: &str| -> anyhow::Result<()> {
+            conn.write_all(line.as_bytes())?;
+            conn.write_all(b"\n")?;
+            Ok(())
+        };
+        send(&mut conn, "HELLO v2")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        anyhow::ensure!(line.trim() == "HELLO v2", "negotiation failed: {line:?}");
+        let t0 = Instant::now();
+        send(&mut conn, &format!("GEN {GEN_TOKENS} the cache keeps the "))?;
+        let mut first_tok_s = None;
+        let mut n_toks = 0usize;
+        loop {
+            let mut frame = String::new();
+            anyhow::ensure!(reader.read_line(&mut frame)? > 0, "stream closed");
+            let frame = frame.trim_end();
+            if frame.starts_with("TOK ") {
+                first_tok_s.get_or_insert_with(|| t0.elapsed().as_secs_f64());
+                n_toks += 1;
+            } else if frame.starts_with("END ") {
+                break;
+            } else if frame.starts_with("ACK ") {
+                continue;
+            } else {
+                anyhow::bail!("unexpected frame {frame:?}");
+            }
+        }
+        anyhow::ensure!(n_toks > 0, "END with no TOK frames");
+        Ok((first_tok_s.unwrap_or(0.0), n_toks))
+    });
+
     let mut latencies = Vec::new();
     let mut ttfts = Vec::new();
     let mut failures = 0;
@@ -106,6 +145,7 @@ fn main() -> anyhow::Result<()> {
             failures += 1;
         }
     }
+    let (stream_ttft_s, stream_toks) = stream_handle.join().expect("stream client")?;
     let wall = bench_start.elapsed().as_secs_f64();
     let tel = server.join().expect("server thread")?;
 
@@ -144,16 +184,21 @@ fn main() -> anyhow::Result<()> {
         tel.batch_occupancy(),
         tel.union_plan_hits,
     );
+    println!(
+        "streaming : v2 client saw its first TOK after {:.2}s ({} frames before END)",
+        stream_ttft_s, stream_toks,
+    );
     for p in Priority::ALL {
         let c = &tel.classes[p.index()];
-        if c.completed == 0 && c.failed == 0 {
+        if c.completed == 0 && c.failed == 0 && c.cancelled == 0 {
             continue;
         }
         println!(
-            "  class {:<6}: {} done, {} failed, {} deadline-missed | ttft mean {:.0} ms max {:.0} ms",
+            "  class {:<6}: {} done, {} failed, {} cancelled, {} deadline-missed | ttft mean {:.0} ms max {:.0} ms",
             p.name(),
             c.completed,
             c.failed,
+            c.cancelled,
             c.deadline_missed,
             c.mean_ttft_s() * 1e3,
             c.ttft_s_max * 1e3,

@@ -1,0 +1,141 @@
+//! Protocol-v2 streaming client — the CI streaming smoke and a usage
+//! reference for the `HELLO v2` frame grammar.
+//!
+//!   cargo run --release --example stream_client
+//!       self-hosts a server over the deterministic stub engine (no
+//!       artifacts needed), streams one generation, then demonstrates
+//!       a mid-decode CANCEL — asserting the streaming contract:
+//!       `ACK` first, at least one `TOK` strictly before `END`, and
+//!       `CANCELLED` freeing the request early. Exits non-zero if any
+//!       of it fails, so CI can gate on it.
+//!
+//!   cargo run --release --example stream_client -- --addr HOST:PORT
+//!       talks v2 to a running `m2cache serve` (any engine) instead;
+//!       the cancel demo is skipped unless `--cancel` is passed.
+//!
+//! Flags: --tokens N (default 24), --prompt TEXT, --cancel
+
+use m2cache::coordinator::{server, StubSessionEngine};
+use m2cache::util::cli::Args;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+fn send(conn: &mut TcpStream, line: &str) -> anyhow::Result<()> {
+    conn.write_all(line.as_bytes())?;
+    conn.write_all(b"\n")?;
+    Ok(())
+}
+
+fn recv(reader: &mut BufReader<TcpStream>) -> anyhow::Result<String> {
+    let mut line = String::new();
+    anyhow::ensure!(reader.read_line(&mut line)? > 0, "server closed the stream");
+    Ok(line.trim_end_matches('\n').to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let tokens = args.get_usize("tokens", 24);
+    let prompt = args.get_or("prompt", "the quick brown fox ");
+
+    // Self-host a stub-engine server unless an address was given. The
+    // small step delay paces decode so streaming is visible and the
+    // cancel demo deterministically lands mid-decode.
+    let (addr, server_handle) = match args.get("addr") {
+        Some(a) => (a.parse()?, None),
+        None => {
+            let engine =
+                StubSessionEngine::new(2).with_step_delay(Duration::from_millis(2));
+            let max = 2; // the streamed GEN + the cancelled GEN
+            let (tx, rx) = mpsc::channel();
+            let handle = std::thread::spawn(move || {
+                server::serve(engine, "127.0.0.1:0", Some(max), move |a| {
+                    let _ = tx.send(a);
+                })
+                .map(|_| ())
+            });
+            let addr = rx.recv()?;
+            println!("self-hosted stub server on {addr}");
+            (addr, Some(handle))
+        }
+    };
+    let run_cancel_demo = server_handle.is_some() || args.flag("cancel");
+
+    let mut conn = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    send(&mut conn, "HELLO v2")?;
+    let hello = recv(&mut reader)?;
+    anyhow::ensure!(hello == "HELLO v2", "bad negotiation reply: {hello:?}");
+
+    // --- streamed generation -------------------------------------
+    let t0 = Instant::now();
+    send(&mut conn, &format!("GEN {tokens} {prompt}"))?;
+    let ack = recv(&mut reader)?;
+    let id: u64 = ack
+        .strip_prefix("ACK ")
+        .ok_or_else(|| anyhow::anyhow!("expected ACK, got {ack:?}"))?
+        .parse()?;
+    println!("request {id} acknowledged after {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let mut first_tok_ms = None;
+    let mut text = String::new();
+    let mut n_toks = 0usize;
+    let end_line;
+    loop {
+        let frame = recv(&mut reader)?;
+        if let Some(rest) = frame.strip_prefix(&format!("TOK {id} ")) {
+            first_tok_ms.get_or_insert_with(|| t0.elapsed().as_secs_f64() * 1e3);
+            n_toks += 1;
+            text.push_str(rest);
+        } else if let Some(rest) = frame.strip_prefix(&format!("END {id} ")) {
+            end_line = rest.to_string();
+            break;
+        } else {
+            anyhow::bail!("unexpected frame {frame:?}");
+        }
+    }
+    // The streaming contract CI gates on: a TOK strictly before END.
+    anyhow::ensure!(n_toks > 0, "END arrived with no TOK frames");
+    let first = first_tok_ms.unwrap_or(0.0);
+    let total = t0.elapsed().as_secs_f64() * 1e3;
+    println!("streamed : {text:?}");
+    println!(
+        "stream OK: {n_toks} TOK frames before END (first TOK {first:.1} ms, \
+         END {total:.1} ms, server timings: {end_line})"
+    );
+
+    // --- mid-decode cancel demo ----------------------------------
+    if run_cancel_demo {
+        send(&mut conn, &format!("GEN 200 {prompt}"))?;
+        let ack = recv(&mut reader)?;
+        let cid: u64 = ack
+            .strip_prefix("ACK ")
+            .ok_or_else(|| anyhow::anyhow!("expected ACK, got {ack:?}"))?
+            .parse()?;
+        // Read two streamed tokens, then hang up.
+        for _ in 0..2 {
+            let frame = recv(&mut reader)?;
+            anyhow::ensure!(frame.starts_with(&format!("TOK {cid} ")), "{frame:?}");
+        }
+        send(&mut conn, &format!("CANCEL {cid}"))?;
+        let cancelled_at;
+        loop {
+            let frame = recv(&mut reader)?;
+            if let Some(rest) = frame.strip_prefix(&format!("CANCELLED {cid} ")) {
+                cancelled_at = rest.parse::<usize>()?;
+                break;
+            }
+            anyhow::ensure!(frame.starts_with("TOK "), "unexpected frame {frame:?}");
+        }
+        anyhow::ensure!(
+            cancelled_at < 200,
+            "cancel failed to stop the 200-token request"
+        );
+        println!("cancel OK: request {cid} stopped after {cancelled_at}/200 tokens");
+    }
+
+    if let Some(handle) = server_handle {
+        handle.join().expect("server thread")?;
+    }
+    Ok(())
+}

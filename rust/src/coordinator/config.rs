@@ -87,6 +87,11 @@ pub struct EngineConfig {
     /// Shared by the serving scheduler and the sim mirror so simulated
     /// per-class figures reflect the policy actually serving.
     pub starvation_guard: u64,
+    /// Continuous admission: the serving scheduler polls its arrival
+    /// source between prefill chunks/batched rounds too, so a request
+    /// landing mid-turn joins the in-flight turn instead of waiting it
+    /// out (`--no-continuous` restores assembly-only admission).
+    pub continuous: bool,
     /// Batched forward: co-resident sessions advance through ONE shared
     /// per-layer pass per scheduler turn (union precision plan, one
     /// cache reconciliation, one DRAM load per missing neuron, one
@@ -124,6 +129,7 @@ impl Default for EngineConfig {
             max_sessions: 1,
             prefill_chunk: 16,
             starvation_guard: crate::coordinator::scheduler::DEFAULT_STARVATION_GUARD,
+            continuous: true,
             batch: false,
             batch_kernel: false,
         }

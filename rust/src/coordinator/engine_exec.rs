@@ -878,12 +878,37 @@ impl SessionEngine for ExecEngine {
         self.pool.release(s.slot());
         self.tel.prefill_tokens += s.fed() as u64;
         self.tel.tokens_generated += s.generated.len() as u64;
-        if !s.generated.is_empty() {
+        if !s.generated.is_empty() && !s.is_cancelled() {
             // Aggregate TTFT tracks the most recently completed session
             // (matches the single-request semantics of generate()).
             self.tel.ttft_s = s.stats.ttft_s;
         }
+        if s.is_cancelled() {
+            // Mid-flight cancels release the slot early; mirror them so
+            // the shutdown telemetry distinguishes abandonment from
+            // completion (partial tokens stay in the totals above —
+            // that work really ran).
+            self.tel.bump("sessions_cancelled", 1);
+        }
         self.tel.bump("sessions_closed", 1);
+    }
+
+    fn sched_config(&self) -> crate::coordinator::scheduler::SchedConfig {
+        crate::coordinator::scheduler::SchedConfig {
+            prefill_chunk: self.cfg.prefill_chunk,
+            starvation_guard: self.cfg.starvation_guard,
+            continuous: self.cfg.continuous,
+            batch: self.cfg.batch,
+            ..crate::coordinator::scheduler::SchedConfig::default()
+        }
+    }
+
+    fn telemetry(&self) -> Option<&crate::telemetry::Telemetry> {
+        Some(&self.tel)
+    }
+
+    fn telemetry_mut(&mut self) -> Option<&mut crate::telemetry::Telemetry> {
+        Some(&mut self.tel)
     }
 }
 

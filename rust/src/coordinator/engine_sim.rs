@@ -39,8 +39,17 @@ pub struct SimTenant {
     pub prompt_len: usize,
     pub max_new: usize,
     pub priority: Priority,
-    /// SLO budget relative to the window start, simulated ms.
+    /// SLO budget relative to the tenant's own arrival, simulated ms.
     pub deadline_ms: Option<u64>,
+    /// Arrival offset from the window start, simulated ms (continuous
+    /// admission: the tenant joins in-flight turns once the simulated
+    /// clock reaches it; 0 = present at the start, the pre-v2 shape).
+    pub arrive_ms: u64,
+    /// Abandon after this many generated tokens (the sim mirror of a
+    /// mid-decode `CANCEL`): the session retires early, its KV frees,
+    /// and the remaining turns go to the survivors. None = run to
+    /// completion.
+    pub cancel_after: Option<u64>,
 }
 
 impl SimTenant {
@@ -51,12 +60,27 @@ impl SimTenant {
             max_new,
             priority: Priority::Normal,
             deadline_ms: None,
+            arrive_ms: 0,
+            cancel_after: None,
         }
     }
 
     pub fn with_class(mut self, priority: Priority, deadline_ms: Option<u64>) -> SimTenant {
         self.priority = priority;
         self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Stagger this tenant's arrival into the serving window.
+    pub fn arriving_at(mut self, arrive_ms: u64) -> SimTenant {
+        self.arrive_ms = arrive_ms;
+        self
+    }
+
+    /// Cancel after the `tokens`-th generated token (clamped to ≥ 1 so
+    /// the cancel is observable mid-decode).
+    pub fn cancelling_after(mut self, tokens: u64) -> SimTenant {
+        self.cancel_after = Some(tokens.max(1));
         self
     }
 }
@@ -71,8 +95,12 @@ struct SimSession {
     prompt_len: usize,
     max_new: usize,
     priority: Priority,
-    /// Absolute deadline in simulated ms from the window start.
+    /// Deadline budget in simulated ms from the tenant's own arrival.
     deadline_ms: Option<u64>,
+    /// Arrival offset from the window start, simulated seconds.
+    arrive_rel_s: f64,
+    /// Cancel after this many generated tokens (None = never).
+    cancel_after: Option<u64>,
     kv_len: usize,
     /// Prompt tokens prefilled so far (chunked prefill cursor).
     prefilled: usize,
@@ -83,6 +111,7 @@ struct SimSession {
     started: bool,
     done: bool,
     missed: bool,
+    cancelled: bool,
     /// Recency stamp mirroring the scheduler's ring order.
     stamp: u64,
 }
@@ -103,18 +132,29 @@ pub struct TenantResult {
     pub tokens_per_s: f64,
     /// The tenant finished past its deadline budget.
     pub deadline_missed: bool,
+    /// The tenant abandoned mid-decode (`SimTenant::cancelling_after`);
+    /// `tokens` holds what it generated before the cancel.
+    pub cancelled: bool,
     /// Token-share slice of the whole window's footprint, gCO2.
     pub carbon_g: f64,
 }
 
 /// Fold a finished simulated session into the per-class telemetry.
+/// `finish_s` is relative to the session's own arrival. Cancelled
+/// sessions count in the class `cancelled` counter only — no
+/// completion, miss, or TTFT accounting (matching the serving
+/// scheduler's `cancel`).
 fn retire(tel: &mut Telemetry, s: &mut SimSession, finish_s: f64) {
     s.done = true;
     s.finish_s = finish_s;
+    let c = &mut tel.classes[s.priority.index()];
+    if s.cancelled {
+        c.cancelled += 1;
+        return;
+    }
     s.missed = s
         .deadline_ms
         .is_some_and(|ms| finish_s * 1e3 > ms as f64);
-    let c = &mut tel.classes[s.priority.index()];
     c.completed += 1;
     if s.missed {
         c.deadline_missed += 1;
@@ -689,8 +729,14 @@ impl SimEngine {
         self.run_sessions_policy(&tagged, gpu)
     }
 
-    /// Multi-tenant decode (ROADMAP: many users on one fixed box): all
-    /// tenants arrive at once and interleave over the *shared* warm
+    /// Multi-tenant decode (ROADMAP: many users on one fixed box):
+    /// tenants arrive on their own schedule ([`SimTenant::arrive_ms`],
+    /// the continuous-admission mirror — latecomers join in-flight
+    /// turns when the simulated clock reaches them, and queue/TTFT/
+    /// deadline are all charged from each tenant's *own* arrival), may
+    /// abandon mid-decode ([`SimTenant::cancelling_after`], the CANCEL
+    /// mirror — the lane frees and survivors absorb its turns), and
+    /// interleave over the *shared* warm
     /// caches under the same policy as the serving
     /// [`crate::coordinator::scheduler::Scheduler`] — priority classes,
     /// EDF within class, chunked prefill (`cfg.prefill_chunk` prompt
@@ -719,6 +765,8 @@ impl SimEngine {
                     max_new: t.max_new,
                     priority: t.priority,
                     deadline_ms: t.deadline_ms,
+                    arrive_rel_s: t.arrive_ms as f64 / 1e3,
+                    cancel_after: t.cancel_after,
                     kv_len: 0,
                     prefilled: 0,
                     generated: 0,
@@ -728,6 +776,7 @@ impl SimEngine {
                     started: false,
                     done: false,
                     missed: false,
+                    cancelled: false,
                     stamp: i as u64,
                 }
             })
@@ -749,10 +798,28 @@ impl SimEngine {
             // sublinear. The turn that absorbs the last prompt token
             // yields the first output token, like the executed engine.
             loop {
-                let mut live: Vec<usize> =
-                    (0..sessions.len()).filter(|&i| !sessions[i].done).collect();
+                // Continuous admission mirror: only tenants whose
+                // arrival the clock has reached are live; when all
+                // remaining work is still in the future, idle the clock
+                // forward to the next arrival.
+                let now_rel = self.clock.now_s() - t_arrive;
+                let mut live: Vec<usize> = (0..sessions.len())
+                    .filter(|&i| {
+                        !sessions[i].done && sessions[i].arrive_rel_s <= now_rel + 1e-9
+                    })
+                    .collect();
                 if live.is_empty() {
-                    break;
+                    let next = sessions
+                        .iter()
+                        .filter(|s| !s.done)
+                        .map(|s| s.arrive_rel_s)
+                        .fold(f64::INFINITY, f64::min);
+                    if !next.is_finite() {
+                        break;
+                    }
+                    self.clock
+                        .sleep((t_arrive + next - self.clock.now_s()).max(1e-9));
+                    continue;
                 }
                 let guard = guard_every > 0 && turn > 0 && turn % guard_every == 0;
                 if guard {
@@ -771,7 +838,10 @@ impl SimEngine {
                 for &i in &live {
                     if !sessions[i].started {
                         sessions[i].started = true;
-                        sessions[i].queue_s = now - t_arrive;
+                        // Clamp: the arrival tolerance can put "now" an
+                        // ns shy of the arrival it just admitted.
+                        sessions[i].queue_s =
+                            ((now - t_arrive) - sessions[i].arrive_rel_s).max(0.0);
                     }
                 }
                 // Phase A: chunked prefill per still-prefilling lane.
@@ -794,7 +864,8 @@ impl SimEngine {
                     if sessions[i].max_new == 0 {
                         // Prefill-only: "first token" is the prefill
                         // completing.
-                        sessions[i].ttft_s = self.clock.now_s() - t_arrive;
+                        sessions[i].ttft_s =
+                            self.clock.now_s() - t_arrive - sessions[i].arrive_rel_s;
                         finished.push(i);
                     } else if (sessions[i].generated as usize) < sessions[i].max_new {
                         decoders.push(i);
@@ -809,9 +880,17 @@ impl SimEngine {
                         sessions[i].kv_len += 1;
                         sessions[i].generated += 1;
                         if sessions[i].generated == 1 {
-                            sessions[i].ttft_s = after;
+                            sessions[i].ttft_s = after - sessions[i].arrive_rel_s;
                         }
                         if sessions[i].generated as usize == sessions[i].max_new {
+                            finished.push(i);
+                        } else if sessions[i]
+                            .cancel_after
+                            .is_some_and(|k| sessions[i].generated >= k)
+                        {
+                            // Mid-decode cancel: retire now, free the
+                            // lane; survivors keep the shared turns.
+                            sessions[i].cancelled = true;
                             finished.push(i);
                         }
                     }
@@ -830,7 +909,8 @@ impl SimEngine {
                 peak_kv_tokens = peak_kv_tokens.max(live_kv);
                 let after = self.clock.now_s() - t_arrive;
                 for i in finished {
-                    retire(&mut self.tel, &mut sessions[i], after);
+                    let rel = after - sessions[i].arrive_rel_s;
+                    retire(&mut self.tel, &mut sessions[i], rel);
                 }
             }
         }
@@ -841,9 +921,13 @@ impl SimEngine {
             // guard every `cfg.starvation_guard` turns, otherwise
             // (class, deadline, recency) — which is plain round-robin
             // when every tenant is untagged.
+            let now_rel = self.clock.now_s() - t_arrive;
             let pick = {
                 let guard = guard_every > 0 && turn > 0 && turn % guard_every == 0;
-                let live = sessions.iter().enumerate().filter(|(_, s)| !s.done);
+                let live = sessions
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| !s.done && s.arrive_rel_s <= now_rel + 1e-9);
                 if guard {
                     live.min_by_key(|(_, s)| s.stamp).map(|(i, _)| i)
                 } else {
@@ -857,12 +941,29 @@ impl SimEngine {
                     .map(|(i, _)| i)
                 }
             };
-            let Some(i) = pick else { break };
+            let Some(i) = pick else {
+                // Nobody runnable now; idle forward to the earliest
+                // future arrival, or finish when everything is done.
+                let next = sessions
+                    .iter()
+                    .filter(|s| !s.done)
+                    .map(|s| s.arrive_rel_s)
+                    .fold(f64::INFINITY, f64::min);
+                if !next.is_finite() {
+                    break;
+                }
+                self.clock
+                    .sleep((t_arrive + next - self.clock.now_s()).max(1e-9));
+                continue;
+            };
             turn += 1;
             let now = self.clock.now_s();
             if !sessions[i].started {
                 sessions[i].started = true;
-                sessions[i].queue_s = now - t_arrive;
+                // Clamp: the arrival tolerance can put "now" an ns shy
+                // of the arrival it just admitted.
+                sessions[i].queue_s =
+                    ((now - t_arrive) - sessions[i].arrive_rel_s).max(0.0);
             }
             let mut finished = false;
             if sessions[i].prefilled < sessions[i].prompt_len {
@@ -881,14 +982,16 @@ impl SimEngine {
                     if sessions[i].max_new == 0 {
                         // Prefill-only request: "first token" is the
                         // prefill completing.
-                        sessions[i].ttft_s = self.clock.now_s() - t_arrive;
+                        sessions[i].ttft_s =
+                            self.clock.now_s() - t_arrive - sessions[i].arrive_rel_s;
                         finished = true;
                     } else {
                         let kv = sessions[i].kv_len;
                         self.step_at(kv);
                         sessions[i].kv_len += 1;
                         sessions[i].generated = 1;
-                        sessions[i].ttft_s = self.clock.now_s() - t_arrive;
+                        sessions[i].ttft_s =
+                            self.clock.now_s() - t_arrive - sessions[i].arrive_rel_s;
                         finished = sessions[i].max_new == 1;
                     }
                 } else {
@@ -897,6 +1000,18 @@ impl SimEngine {
                     sessions[i].kv_len += 1;
                     sessions[i].generated += 1;
                     finished = sessions[i].generated as usize == sessions[i].max_new;
+                }
+                // Mid-decode cancel mirror: the tenant abandons after
+                // its k-th token; the slot's remaining turns go to the
+                // survivors.
+                if !finished
+                    && sessions[i].generated > 0
+                    && sessions[i]
+                        .cancel_after
+                        .is_some_and(|k| sessions[i].generated >= k)
+                {
+                    sessions[i].cancelled = true;
+                    finished = true;
                 }
             }
             stamp += 1;
@@ -909,7 +1024,7 @@ impl SimEngine {
                 .sum();
             peak_kv_tokens = peak_kv_tokens.max(live_kv);
             if finished {
-                let after = self.clock.now_s() - t_arrive;
+                let after = self.clock.now_s() - t_arrive - sessions[i].arrive_rel_s;
                 retire(&mut self.tel, &mut sessions[i], after);
             }
         }
@@ -958,6 +1073,7 @@ impl SimEngine {
                     0.0
                 },
                 deadline_missed: s.missed,
+                cancelled: s.cancelled,
                 carbon_g: total_carbon
                     * (s.prompt_len as u64 + s.generated) as f64
                     / work_total,
@@ -1170,6 +1286,91 @@ mod tests {
         assert_eq!(e.tel.classes[Priority::High.index()].completed, 1);
         assert_eq!(e.tel.classes[Priority::Batch.index()].completed, 3);
         assert!(e.tel.classes[Priority::High.index()].ttft_s_sum > 0.0);
+    }
+
+    #[test]
+    fn cancelled_tenant_frees_turns_for_the_survivor() {
+        // The sim mirror of a mid-decode CANCEL: the abandoning tenant
+        // stops at its k-th token, and the survivor — no longer
+        // interleaving with it — finishes strictly sooner than in the
+        // uncancelled run. Carbon attribution shrinks with the freed
+        // work.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let tenants_base = [SimTenant::untagged(8, 24), SimTenant::untagged(8, 24)];
+        let mut base = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let res_base = base.run_sessions_policy(&tenants_base, gpu);
+        let tenants_cancel = [
+            SimTenant::untagged(8, 24).cancelling_after(4),
+            SimTenant::untagged(8, 24),
+        ];
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let res = e.run_sessions_policy(&tenants_cancel, gpu);
+        assert!(res[0].cancelled);
+        assert_eq!(res[0].tokens, 4, "cancel lands right after token k");
+        assert!(!res[1].cancelled);
+        assert_eq!(res[1].tokens, 24);
+        assert!(
+            res[1].total_s < res_base[1].total_s,
+            "survivor total {} must undercut uncancelled {}",
+            res[1].total_s,
+            res_base[1].total_s
+        );
+        assert!(
+            res[0].carbon_g < res[1].carbon_g,
+            "partial work must attribute less carbon"
+        );
+        let cls = &e.tel.classes[Priority::Normal.index()];
+        assert_eq!(cls.admitted, 2);
+        assert_eq!(cls.completed, 1);
+        assert_eq!(cls.cancelled, 1);
+    }
+
+    #[test]
+    fn staggered_arrival_charges_latency_from_the_tenants_own_clock() {
+        // Continuous-admission mirror: a tenant arriving long after the
+        // window start must see queue/TTFT/deadline measured from ITS
+        // arrival, not the window's. The 600 s deadline would be
+        // hopeless measured from t=0 (the arrival offset alone is
+        // 10^4 s) — it must hold measured from arrival.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let tenants = [
+            SimTenant::untagged(8, 6),
+            SimTenant::untagged(8, 6)
+                .with_class(Priority::High, Some(600_000))
+                .arriving_at(10_000_000),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        assert_eq!(res[0].tokens, 6);
+        assert_eq!(res[1].tokens, 6);
+        // The late tenant found an idle engine: essentially no queueing
+        // against its own arrival, and its SLO holds.
+        assert!(res[1].queue_s < 1.0, "queue_s {} charged the offset", res[1].queue_s);
+        assert!(!res[1].deadline_missed);
+        assert!(res[1].ttft_s >= res[1].queue_s);
+        assert!(res[1].total_s >= res[1].ttft_s);
+        assert_eq!(e.tel.classes[Priority::High.index()].completed, 1);
+    }
+
+    #[test]
+    fn batched_window_supports_cancel_and_late_arrival_together() {
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut cfg = EngineConfig::full();
+        cfg.batch = true;
+        cfg.max_sessions = 3;
+        let mut e = engine(ModelSpec::llama2_7b(), cfg);
+        let tenants = [
+            SimTenant::untagged(6, 12),
+            SimTenant::untagged(6, 12).cancelling_after(3),
+            SimTenant::untagged(6, 12).arriving_at(50),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        assert!(!res[0].cancelled && res[0].tokens == 12);
+        assert!(res[1].cancelled && res[1].tokens == 3);
+        assert!(!res[2].cancelled && res[2].tokens == 12);
+        assert!(res[2].queue_s >= 0.0 && res[2].ttft_s >= res[2].queue_s);
+        let cls = &e.tel.classes[Priority::Normal.index()];
+        assert_eq!((cls.completed, cls.cancelled), (2, 1));
     }
 
     #[test]

@@ -11,9 +11,13 @@
 //!
 //! Plus the serving plumbing: bounded admission queue, per-request
 //! [`session::DecodeSession`]s over a bounded KV slot pool, the
-//! priority/deadline-aware chunked-prefill [`scheduler::Scheduler`],
-//! seeded synthetic traces ([`workload`]) for the replay tier, and the
-//! TCP server.
+//! priority/deadline-aware chunked-prefill [`scheduler::Scheduler`]
+//! with its per-token [`scheduler::SessionEvent`] stream, the
+//! transport-agnostic event-driven [`serving::ServingCore`] (token
+//! streaming, mid-decode cancel, continuous admission), a deterministic
+//! artifact-free [`stub::StubSessionEngine`], seeded synthetic traces
+//! ([`workload`]) for the replay tier, and the TCP server speaking
+//! protocol v1 (one-shot) and v2 (streamed frames).
 
 pub mod config;
 pub mod engine_exec;
@@ -21,7 +25,9 @@ pub mod engine_sim;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod serving;
 pub mod session;
+pub mod stub;
 pub mod workload;
 
 pub use config::{EngineConfig, PolicyKind};
@@ -29,7 +35,10 @@ pub use engine_exec::ExecEngine;
 pub use engine_sim::{SimEngine, SimResult, SimTenant, TenantResult};
 pub use request::{detokenize, tokenize, Priority, Request, RequestQueue, Response};
 pub use scheduler::{
-    ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, TickReport,
-    DEFAULT_STARVATION_GUARD,
+    ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, SessionEvent,
+    TickReport, DEFAULT_STARVATION_GUARD,
 };
+pub use server::ParseError;
+pub use serving::{ServingCore, StatsSnapshot};
 pub use session::{DecodeSession, KvPool, SessionEngine, SessionState, SessionStats, StepOutcome};
+pub use stub::StubSessionEngine;

@@ -140,6 +140,13 @@ impl RequestQueue {
         self.queue.pop_front()
     }
 
+    /// Remove a queued request by id (a CANCEL catching it before it
+    /// ever reached the scheduler), preserving the order of the rest.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let i = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(i)
+    }
+
     pub fn len(&self) -> usize {
         self.queue.len()
     }
@@ -176,6 +183,19 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 1);
         assert_eq!(q.pop().unwrap().id, 2);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn remove_by_id_preserves_order() {
+        let mut q = RequestQueue::new(10);
+        for id in 1..=4 {
+            q.push(req(id));
+        }
+        assert_eq!(q.remove(3).unwrap().id, 3);
+        assert!(q.remove(3).is_none());
+        assert!(q.remove(99).is_none());
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![1, 2, 4]);
     }
 
     #[test]

@@ -39,6 +39,14 @@
 //! reconciliation, one weight upload) for all co-resident sessions.
 //! Admission order, EDF semantics, and per-session outputs are
 //! unchanged — only the per-turn engine granularity is.
+//!
+//! Serving is *event-driven*: every tick reports a [`SessionEvent`]
+//! stream (admissions, each generated token, completions/failures) so
+//! transports can forward tokens as they are produced;
+//! [`Scheduler::cancel`] tears a request down wherever it is (backlog
+//! or mid-decode, returning its KV slot immediately); and
+//! [`Scheduler::tick_with_intake`] admits arrivals into turns already
+//! in flight (continuous admission, [`SchedConfig::continuous`]).
 
 use crate::coordinator::request::{Priority, Request, Response};
 use crate::coordinator::session::{
@@ -72,6 +80,14 @@ pub struct SchedConfig {
     /// Every `starvation_guard`-th turn steps the longest-waiting
     /// session regardless of class (0 disables the guard).
     pub starvation_guard: u64,
+    /// Continuous admission: [`Scheduler::tick_with_intake`] polls its
+    /// intake source *between prefill chunks/rounds* too, so a request
+    /// arriving while a long turn is in flight joins mid-turn (batched
+    /// turns literally add it to the current turn set) instead of
+    /// waiting for the next turn-set assembly. Off = intake is polled
+    /// only at turn start. Irrelevant to plain [`Scheduler::tick`],
+    /// which has no intake source.
+    pub continuous: bool,
     /// Batched turns: instead of giving ONE session a turn, each tick
     /// assembles the whole active set (ordered by the same
     /// (class, deadline, recency) key single turns use) and advances
@@ -91,6 +107,7 @@ impl Default for SchedConfig {
             mode: SchedMode::PriorityEdf,
             prefill_chunk: 16,
             starvation_guard: DEFAULT_STARVATION_GUARD,
+            continuous: true,
             batch: false,
         }
     }
@@ -123,6 +140,58 @@ impl Outcome {
     }
 }
 
+/// One step of a session's serving lifecycle, emitted by
+/// [`Scheduler::tick`] in the order it happened. This is the stream the
+/// event-driven serving core ([`crate::coordinator::serving`]) consumes
+/// and the v2 wire protocol forwards: transports see every generated
+/// token the tick it is produced instead of one blocking reply.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// The request left the backlog and bound a KV slot.
+    Admitted { id: u64 },
+    /// One generated token; `index` is its 0-based position in the
+    /// session's output. Tokens for a given id are emitted in order,
+    /// strictly before that id's terminal event.
+    Token { id: u64, token: u32, index: usize },
+    /// The session finished; carries the full reply + latency stats.
+    Done(Completed),
+    /// Admission rejected the request or its session failed mid-run.
+    Failed { id: u64, error: String },
+    /// The caller cancelled the request ([`Scheduler::cancel`]);
+    /// `tokens` is how many it had generated when it was torn down
+    /// (0 when it was still backlogged or prefilling).
+    Cancelled { id: u64, tokens: usize },
+}
+
+impl SessionEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            SessionEvent::Admitted { id }
+            | SessionEvent::Token { id, .. }
+            | SessionEvent::Failed { id, .. }
+            | SessionEvent::Cancelled { id, .. } => *id,
+            SessionEvent::Done(c) => c.response.id,
+        }
+    }
+
+    /// Done / Failed / Cancelled — the events that settle a request.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, SessionEvent::Admitted { .. } | SessionEvent::Token { .. })
+    }
+}
+
+/// Push a completion into a report as both an event (the stream) and an
+/// outcome (the terminal summary) — one bookkeeping site, no drift.
+fn report_done(report: &mut TickReport, c: Completed) {
+    report.events.push(SessionEvent::Done(c.clone()));
+    report.outcomes.push(Outcome::Done(c));
+}
+
+fn report_failed(report: &mut TickReport, id: u64, error: String) {
+    report.events.push(SessionEvent::Failed { id, error: error.clone() });
+    report.outcomes.push(Outcome::Failed { id, error });
+}
+
 /// What one tick did — `stepped` names the session that got the turn
 /// (None when the tick only admitted/failed requests or was idle).
 #[derive(Debug, Default)]
@@ -135,9 +204,14 @@ pub struct TickReport {
     pub guard: bool,
     /// Batched turns only: every session id in this turn's set, in the
     /// scheduling-key order the batch was assembled (`stepped` is the
-    /// front). Empty on single-session turns.
+    /// front); continuous-admission joiners are appended in join order.
+    /// Empty on single-session turns.
     pub batch: Vec<u64>,
     pub outcomes: Vec<Outcome>,
+    /// Everything that happened this tick, in order: admissions, every
+    /// generated token, completions/failures. `outcomes` is the
+    /// terminal subset, kept for drive-to-idle callers.
+    pub events: Vec<SessionEvent>,
 }
 
 /// Minimal in-flight snapshot for harnesses and diagnostics.
@@ -184,6 +258,13 @@ pub struct Scheduler<E: SessionEngine> {
     virtual_now_ms: Option<u64>,
     pub admitted: u64,
     pub completed: u64,
+    /// Requests refused at admission (over budget, engine rejection) —
+    /// they never held a slot, so they are in neither `completed` nor
+    /// `cancelled`. `completed + cancelled + rejected` is every request
+    /// that ever received a terminal event.
+    pub rejected: u64,
+    /// Requests torn down by [`Scheduler::cancel`] (not in `completed`).
+    pub cancelled: u64,
     /// Per-priority-class serving counters.
     pub classes: [ClassCounters; N_CLASSES],
 }
@@ -209,6 +290,8 @@ impl<E: SessionEngine> Scheduler<E> {
             virtual_now_ms: None,
             admitted: 0,
             completed: 0,
+            rejected: 0,
+            cancelled: 0,
             classes: [ClassCounters::default(); N_CLASSES],
         }
     }
@@ -307,7 +390,7 @@ impl<E: SessionEngine> Scheduler<E> {
     /// engine validates in `open()` too, but stub/test engines that
     /// skip it would otherwise panic mid-decode on a KV write past the
     /// stride.
-    fn admit(&mut self, outcomes: &mut Vec<Outcome>) {
+    fn admit(&mut self, report: &mut TickReport) {
         while self.active.len() < self.max_sessions && !self.backlog.is_empty() {
             let qi = match self.cfg.mode {
                 SchedMode::RoundRobin => 0,
@@ -331,11 +414,13 @@ impl<E: SessionEngine> Scheduler<E> {
             let need = q.req.prompt.len() + q.req.max_new.saturating_sub(1);
             let budget = self.engine.max_positions();
             if need > budget {
+                self.rejected += 1;
                 self.classes[class].failed += 1;
-                outcomes.push(Outcome::Failed {
+                report_failed(
+                    report,
                     id,
-                    error: format!("request needs {need} positions > engine budget {budget}"),
-                });
+                    format!("request needs {need} positions > engine budget {budget}"),
+                );
                 continue;
             }
             match self.engine.open(q.req) {
@@ -348,15 +433,50 @@ impl<E: SessionEngine> Scheduler<E> {
                         deadline_abs: q.deadline_abs,
                         stamp: self.stamp,
                     });
+                    report.events.push(SessionEvent::Admitted { id });
                 }
                 Err(e) => {
+                    self.rejected += 1;
                     self.classes[class].failed += 1;
-                    outcomes.push(Outcome::Failed {
-                        id,
-                        error: format!("{e:#}"),
-                    });
+                    report_failed(report, id, format!("{e:#}"));
                 }
             }
+        }
+    }
+
+    /// Abort a request wherever it currently is. A backlogged request
+    /// is dropped before it ever touches the engine; an in-flight
+    /// session is closed so its KV slot returns to the pool *now* and
+    /// the next turn set no longer contains it. Returns the
+    /// [`SessionEvent::Cancelled`] event, or None when the id is
+    /// unknown (already finished, or never submitted) — cancelling is
+    /// idempotent and never disturbs other sessions.
+    pub fn cancel(&mut self, id: u64) -> Option<SessionEvent> {
+        if let Some(i) = self.backlog.iter().position(|q| q.req.id == id) {
+            let q = self.backlog.remove(i).expect("index from position");
+            self.cancelled += 1;
+            self.classes[q.req.priority.index()].cancelled += 1;
+            return Some(SessionEvent::Cancelled { id, tokens: 0 });
+        }
+        if let Some(i) = self.active.iter().position(|a| a.s.id == id) {
+            let mut entry = self.active.swap_remove(i);
+            entry.s.abort();
+            self.engine.close(&mut entry.s);
+            self.cancelled += 1;
+            self.classes[entry.s.priority.index()].cancelled += 1;
+            return Some(SessionEvent::Cancelled { id, tokens: entry.s.generated.len() });
+        }
+        None
+    }
+
+    /// Pull arrivals from an intake source into the backlog, bounded at
+    /// one extra slot-width beyond the active set so admission ordering
+    /// has a reorder window without becoming unbounded (the bound the
+    /// server loop used to enforce itself).
+    fn drain_intake(&mut self, intake: &mut dyn FnMut() -> Option<Request>) {
+        while self.active.len() + self.backlog.len() < 2 * self.max_sessions {
+            let Some(req) = intake() else { break };
+            self.submit(req);
         }
     }
 
@@ -364,9 +484,9 @@ impl<E: SessionEngine> Scheduler<E> {
     /// the active set a tick will choose from. `tick` calls this too,
     /// so using it first is a no-op for scheduling order.
     pub fn admit_pending(&mut self) -> Vec<Outcome> {
-        let mut outcomes = Vec::new();
-        self.admit(&mut outcomes);
-        outcomes
+        let mut report = TickReport::default();
+        self.admit(&mut report);
+        report.outcomes
     }
 
     /// Choose the next session to step; `true` = starvation-guard pick.
@@ -414,16 +534,36 @@ impl<E: SessionEngine> Scheduler<E> {
     /// advances together through `forward_batch`. Finished/failed
     /// sessions retire and their freed slot backfills immediately.
     pub fn tick(&mut self) -> TickReport {
+        self.tick_with_intake(&mut || None)
+    }
+
+    /// [`tick`](Self::tick) with a live arrival source: the scheduler
+    /// polls `intake` for new requests at turn start and — with
+    /// [`SchedConfig::continuous`] — again between prefill chunks and
+    /// batched rounds, so arrivals join *in-flight* turns (batched
+    /// turns literally extend the current turn set) instead of waiting
+    /// out a long chunked prefill. The server passes a closure that
+    /// pops its bounded admission queue; harnesses pass scripted
+    /// arrivals; `&mut || None` degenerates to plain `tick`.
+    pub fn tick_with_intake(&mut self, intake: &mut dyn FnMut() -> Option<Request>) -> TickReport {
         if self.cfg.batch {
-            self.tick_batch()
+            self.tick_batch(intake)
         } else {
-            self.tick_single()
+            self.tick_single(intake)
         }
     }
 
-    fn tick_single(&mut self) -> TickReport {
+    /// Emit Token events for everything `s` generated past `from`.
+    fn emit_tokens(events: &mut Vec<SessionEvent>, s: &DecodeSession, from: usize) {
+        for i in from..s.generated.len() {
+            events.push(SessionEvent::Token { id: s.id, token: s.generated[i], index: i });
+        }
+    }
+
+    fn tick_single(&mut self, intake: &mut dyn FnMut() -> Option<Request>) -> TickReport {
         let mut report = TickReport::default();
-        self.admit(&mut report.outcomes);
+        self.drain_intake(intake);
+        self.admit(&mut report);
         let Some((idx, guard)) = self.pick() else {
             return report;
         };
@@ -436,10 +576,20 @@ impl<E: SessionEngine> Scheduler<E> {
         };
         let mut outcome = StepOutcome::Working;
         let mut error: Option<anyhow::Error> = None;
-        for _ in 0..chunk {
+        for step in 0..chunk {
+            // Continuous admission: between chunk steps, pull arrivals
+            // into any free slots so they start decoding next turn
+            // rather than after this whole prefill chunk drains.
+            // (Admission appends to `active`, so `idx` stays valid.)
+            if step > 0 && self.cfg.continuous {
+                self.drain_intake(intake);
+                self.admit(&mut report);
+            }
+            let before = self.active[idx].s.generated.len();
             match self.active[idx].s.step(&mut self.engine) {
                 Ok(o) => {
                     report.steps_run += 1;
+                    Self::emit_tokens(&mut report.events, &self.active[idx].s, before);
                     outcome = o;
                     if o == StepOutcome::Finished || !self.active[idx].s.is_prefilling() {
                         break;
@@ -459,10 +609,10 @@ impl<E: SessionEngine> Scheduler<E> {
             self.engine.close(&mut entry.s);
             self.completed += 1;
             self.classes[entry.s.priority.index()].failed += 1;
-            report.outcomes.push(Outcome::Failed { id, error: msg });
+            report_failed(&mut report, id, msg);
             // Backfill the freed slot immediately so capacity never
             // idles while the backlog is non-empty.
-            self.admit(&mut report.outcomes);
+            self.admit(&mut report);
         } else if outcome == StepOutcome::Finished {
             let mut entry = self.active.swap_remove(idx);
             self.engine.close(&mut entry.s);
@@ -477,8 +627,8 @@ impl<E: SessionEngine> Scheduler<E> {
             if entry.s.stats.ttft_s > cls.ttft_s_max {
                 cls.ttft_s_max = entry.s.stats.ttft_s;
             }
-            report.outcomes.push(Outcome::Done(finish(entry.s, missed)));
-            self.admit(&mut report.outcomes);
+            report_done(&mut report, finish(entry.s, missed));
+            self.admit(&mut report);
         }
         report
     }
@@ -492,9 +642,10 @@ impl<E: SessionEngine> Scheduler<E> {
     /// byte-identical to single-turn serving: each session sees its own
     /// (token, position) sequence, and engines keep the shared caches
     /// numerically transparent.
-    fn tick_batch(&mut self) -> TickReport {
+    fn tick_batch(&mut self, intake: &mut dyn FnMut() -> Option<Request>) -> TickReport {
         let mut report = TickReport::default();
-        self.admit(&mut report.outcomes);
+        self.drain_intake(intake);
+        self.admit(&mut report);
         if self.active.is_empty() {
             return report;
         }
@@ -528,6 +679,21 @@ impl<E: SessionEngine> Scheduler<E> {
         };
         let mut errors: HashMap<u64, String> = HashMap::new();
         for round in 0..chunk {
+            // Continuous admission: between rounds, arrivals join THIS
+            // turn set — a freshly admitted session starts prefilling in
+            // the very turn that was already in flight when it arrived,
+            // instead of waiting out the survivors' chunk. (Admission
+            // appends to `active`; retirement below runs after the
+            // round loop, so indices in `order` stay valid.)
+            if round > 0 && self.cfg.continuous {
+                let before = self.active.len();
+                self.drain_intake(intake);
+                self.admit(&mut report);
+                for i in before..self.active.len() {
+                    order.push(i);
+                    report.batch.push(self.active[i].s.id);
+                }
+            }
             // Round 0 steps everyone; later rounds keep feeding only
             // the sessions still in prefill (their chunk), skipping
             // anything that finished or failed mid-turn.
@@ -570,7 +736,9 @@ impl<E: SessionEngine> Scheduler<E> {
                 match res {
                     Ok(logits) => {
                         report.steps_run += 1;
+                        let before = self.active[*i].s.generated.len();
                         self.active[*i].s.complete_step(logits);
+                        Self::emit_tokens(&mut report.events, &self.active[*i].s, before);
                     }
                     Err(e) => {
                         errors.insert(self.active[*i].s.id, format!("{e:#}"));
@@ -598,7 +766,7 @@ impl<E: SessionEngine> Scheduler<E> {
             self.completed += 1;
             if let Some(error) = errors.remove(&id) {
                 self.classes[entry.s.priority.index()].failed += 1;
-                report.outcomes.push(Outcome::Failed { id, error });
+                report_failed(&mut report, id, error);
             } else {
                 let missed = entry.deadline_abs.is_some_and(|d| self.now_ms() > d);
                 let cls = &mut self.classes[entry.s.priority.index()];
@@ -610,9 +778,9 @@ impl<E: SessionEngine> Scheduler<E> {
                 if entry.s.stats.ttft_s > cls.ttft_s_max {
                     cls.ttft_s_max = entry.s.stats.ttft_s;
                 }
-                report.outcomes.push(Outcome::Done(finish(entry.s, missed)));
+                report_done(&mut report, finish(entry.s, missed));
             }
-            self.admit(&mut report.outcomes);
+            self.admit(&mut report);
         }
         report
     }
@@ -994,6 +1162,140 @@ mod tests {
         }
         assert_eq!(ok, 1);
         assert_eq!(sched.engine().inner.free.len(), 2, "no leaked slots");
+    }
+
+    #[test]
+    fn events_stream_tokens_in_order_before_done() {
+        let mut sched = Scheduler::new(Stub::new(1), 1);
+        sched.submit(req(1, &[1, 2], 3));
+        let (mut tokens, mut first_token_tick, mut done_tick) = (Vec::new(), None, None);
+        let mut tick_no = 0u64;
+        while !sched.is_idle() {
+            for ev in sched.tick().events {
+                match ev {
+                    SessionEvent::Admitted { id } => assert_eq!(id, 1),
+                    SessionEvent::Token { id, token, index } => {
+                        assert_eq!(id, 1);
+                        assert_eq!(index, tokens.len(), "token indices must be dense");
+                        tokens.push(token);
+                        first_token_tick.get_or_insert(tick_no);
+                    }
+                    SessionEvent::Done(c) => {
+                        done_tick = Some(tick_no);
+                        assert_eq!(c.response.tokens, tokens, "stream != final reply");
+                    }
+                    ev => panic!("unexpected event {ev:?}"),
+                }
+            }
+            tick_no += 1;
+        }
+        assert_eq!(tokens.len(), 3);
+        // The streaming claim: the first token is observable strictly
+        // before the session completes.
+        assert!(first_token_tick.unwrap() < done_tick.unwrap());
+    }
+
+    #[test]
+    fn cancel_frees_slot_and_evicts_from_turn_rotation() {
+        let mut sched = Scheduler::new(Stub::new(2), 2);
+        sched.submit(req(1, &[1, 2], 50));
+        sched.submit(req(2, &[3, 4], 50));
+        for _ in 0..6 {
+            sched.tick();
+        }
+        assert_eq!(sched.engine().free.len(), 0);
+        let ev = sched.cancel(1).expect("session 1 is in flight");
+        match ev {
+            SessionEvent::Cancelled { id: 1, tokens } => assert!(tokens > 0),
+            ev => panic!("expected Cancelled, got {ev:?}"),
+        }
+        assert_eq!(sched.engine().free.len(), 1, "KV slot must free immediately");
+        assert_eq!(sched.cancelled, 1);
+        assert_eq!(sched.classes[Priority::Normal.index()].cancelled, 1);
+        // Idempotent: a second cancel (or a bogus id) is a no-op.
+        assert!(sched.cancel(1).is_none());
+        assert!(sched.cancel(99).is_none());
+        // The survivor keeps decoding and the cancelled id never steps
+        // again.
+        while !sched.is_idle() {
+            let r = sched.tick();
+            assert_ne!(r.stepped, Some(1), "cancelled session got a turn");
+        }
+        assert_eq!(sched.completed, 1);
+        assert_eq!(sched.engine().free.len(), 2);
+    }
+
+    #[test]
+    fn cancel_backlogged_request_never_touches_engine() {
+        let mut sched = Scheduler::new(Stub::new(1), 1);
+        sched.submit(req(1, &[1, 2], 4));
+        sched.submit(req(2, &[3, 4], 4));
+        sched.tick(); // admits 1 (slot full), 2 stays backlogged
+        assert!(matches!(
+            sched.cancel(2),
+            Some(SessionEvent::Cancelled { id: 2, tokens: 0 })
+        ));
+        sched.run_until_idle();
+        assert_eq!(sched.engine().open_order, vec![1], "2 must never open");
+        assert_eq!(sched.classes[Priority::Normal.index()].cancelled, 1);
+    }
+
+    #[test]
+    fn continuous_admission_joins_an_inflight_batched_turn() {
+        let cfg = SchedConfig {
+            batch: true,
+            prefill_chunk: 8,
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::with_config(Stub::new(2), 2, cfg);
+        sched.submit(req(1, &[1, 2, 3, 4, 5, 6], 4));
+        // Session 2 "arrives" only after the turn-start intake poll —
+        // i.e. while the turn is already in flight. With continuous
+        // admission it must join the same turn set and start prefilling
+        // immediately.
+        let mut arrivals = vec![req(2, &[7, 8, 9], 4)];
+        let mut polls = 0;
+        let r = sched.tick_with_intake(&mut || {
+            polls += 1;
+            if polls >= 2 {
+                arrivals.pop()
+            } else {
+                None
+            }
+        });
+        assert_eq!(r.batch, vec![1, 2], "joiner missing from the in-flight turn set");
+        let joined_tokens: usize = r
+            .events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::Token { id: 2, .. }))
+            .count();
+        assert!(
+            joined_tokens > 0,
+            "joiner should reach its first token inside the joined turn: {:?}",
+            r.events
+        );
+        // And with continuous admission off, the same arrival waits for
+        // the next turn-set assembly.
+        let cfg_off = SchedConfig {
+            continuous: false,
+            ..cfg
+        };
+        let mut sched = Scheduler::with_config(Stub::new(2), 2, cfg_off);
+        sched.submit(req(1, &[1, 2, 3, 4, 5, 6], 4));
+        let mut arrivals = vec![req(2, &[7, 8, 9], 4)];
+        let mut polls = 0;
+        let mut intake = || {
+            polls += 1;
+            if polls >= 2 {
+                arrivals.pop()
+            } else {
+                None
+            }
+        };
+        let r = sched.tick_with_intake(&mut intake);
+        assert_eq!(r.batch, vec![1], "non-continuous turn set must not grow");
+        let r = sched.tick_with_intake(&mut intake);
+        assert!(r.batch.contains(&2), "arrival admitted at the next assembly");
     }
 
     #[test]

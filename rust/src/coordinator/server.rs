@@ -1,32 +1,55 @@
-//! Line-protocol TCP server over the executed engine (tokio is
-//! unavailable offline; std::net + a dispatcher thread is all we need —
-//! the GPU loop is the bottleneck, not connection handling).
+//! Line-protocol TCP server over the event-driven serving core (tokio
+//! is unavailable offline; std::net + a dispatcher thread is all we
+//! need — the GPU loop is the bottleneck, not connection handling).
 //!
-//! Protocol (one request per line):
+//! Two protocol versions share one socket. Every connection starts in
+//! **v1** — the original blocking one-shot protocol; GEN replies and
+//! error lines are preserved byte-for-byte (STATS keeps its shape but
+//! gains additive fields):
+//!
 //!   `GEN <max_new> <prompt text...>`
 //!   `GEN@<class>[:<deadline_ms>] <max_new> <prompt text...>`
 //!       → `OK <id> <queue_ms> <ttft_ms> <total_ms> <text...>`
-//!   `STATS`  → one-line JSON queue/scheduler stats (incl. per-class
-//!              completion/deadline-miss counters)
+//!   `STATS`  → one-line JSON queue/scheduler stats
 //!   anything else → `ERR <reason>`
+//!
+//! Sending `HELLO v2` upgrades the connection to **v2**, where replies
+//! stream as typed frames (one per line) and requests can be cancelled
+//! mid-decode:
+//!
+//!   `HELLO v2`           → `HELLO v2`
+//!   `GEN...` (v1 grammar) → `ACK <id>`, then per token
+//!                           `TOK <id> <text>`, then
+//!                           `END <id> <queue_ms> <ttft_ms> <total_ms>`
+//!   `CANCEL <id>`        → `CANCELLED <id> <tokens_generated>` on the
+//!                          request's connection (the KV slot frees
+//!                          immediately; the next turn set excludes it)
+//!   errors               → `ERR <code> <id> <msg...>` with the stable
+//!                          codes of [`ParseError::code`] and the
+//!                          `ERR_*` constants; `<id>` is 0 for
+//!                          connection-scoped (parse) errors, while GEN
+//!                          rejections carry the id the request would
+//!                          have had (ERRs and ACKs arrive in
+//!                          submission order, so pipelining clients can
+//!                          correlate)
 //!
 //! `<class>` is `high`, `normal`, or `batch`; `<deadline_ms>` is an SLO
 //! budget relative to arrival. Untagged `GEN` is `normal` with no
-//! deadline — exactly the PR-1 behavior.
+//! deadline.
 //!
 //! The acceptor thread parses lines into the shared [`RequestQueue`];
-//! the decode thread (owning the [`ExecEngine`]) drains it into a
-//! [`Scheduler`] that keeps up to `--sessions N` decode sessions in
-//! flight, admitting by (class, deadline, arrival) and interleaving
-//! chunked-prefill/decode turns EDF-within-class so neither a long
-//! generation nor a long *prompt* can head-of-line-block the rest,
-//! while every session shares the same warm HBM/DRAM caches. Each
-//! reply is written back on its request's connection the moment its
-//! session completes.
+//! the decode thread owns a [`ServingCore`] over the engine and pumps
+//! it: arrivals flow in through the core's intake hook (continuous
+//! admission — a request landing mid-turn joins the in-flight batched
+//! turn), CANCEL frames tear sessions down between turns, and every
+//! [`SessionEvent`] maps to wire frames the moment the tick that
+//! produced it returns. STATS is answered from one [`StatsSnapshot`]
+//! refreshed under the queue lock after every pump — a single source of
+//! truth instead of per-counter atomic mirrors.
 
-use crate::coordinator::engine_exec::ExecEngine;
 use crate::coordinator::request::{detokenize, tokenize, Priority, Request, RequestQueue};
-use crate::coordinator::scheduler::{Outcome, SchedConfig, Scheduler};
+use crate::coordinator::scheduler::SessionEvent;
+use crate::coordinator::serving::{ServingCore, StatsSnapshot};
 use crate::coordinator::session::SessionEngine;
 use crate::telemetry::N_CLASSES;
 use anyhow::Result;
@@ -35,6 +58,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Wire protocol of one connection (`HELLO v2` upgrades it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    V1,
+    V2,
+}
 
 /// A parsed client line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -46,20 +76,106 @@ pub enum Command {
         deadline_ms: Option<u64>,
     },
     Stats,
+    /// `HELLO v<n>` version negotiation (only 1 and 2 exist).
+    Hello { version: u8 },
+    /// `CANCEL <id>` — tear down an in-flight or queued request.
+    Cancel { id: u64 },
 }
+
+/// Typed request-grammar errors with stable v2 wire codes. The
+/// [`Self::message`] strings are byte-identical to the pre-v2
+/// `&'static str` errors for every variant that existed then, so v1
+/// replies do not change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParseError {
+    EmptyRequest,
+    UnknownCommand,
+    BadClass,
+    BadDeadline,
+    BadMaxNew,
+    EmptyPrompt,
+    BadId,
+    BadVersion,
+}
+
+impl ParseError {
+    /// Stable wire code (`ERR <code> <id> <msg>` in v2). Parse errors
+    /// occupy 10–19; serve-level errors are the `ERR_*` constants.
+    pub fn code(self) -> u16 {
+        match self {
+            ParseError::EmptyRequest => 10,
+            ParseError::UnknownCommand => 11,
+            ParseError::BadClass => 12,
+            ParseError::BadDeadline => 13,
+            ParseError::BadMaxNew => 14,
+            ParseError::EmptyPrompt => 15,
+            ParseError::BadId => 16,
+            ParseError::BadVersion => 17,
+        }
+    }
+
+    pub fn message(self) -> &'static str {
+        match self {
+            ParseError::EmptyRequest => "empty request",
+            ParseError::UnknownCommand => "expected GEN or STATS",
+            ParseError::BadClass => "bad priority class",
+            ParseError::BadDeadline => "bad deadline",
+            ParseError::BadMaxNew => "bad max_new",
+            ParseError::EmptyPrompt => "empty prompt",
+            ParseError::BadId => "bad id",
+            ParseError::BadVersion => "unsupported protocol version",
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.message())
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Serve-level v2 wire codes (20–29): errors that originate past the
+/// grammar — admission backpressure, shutdown, cancellation targets,
+/// engine-side session failures.
+pub const ERR_QUEUE_FULL: u16 = 20;
+pub const ERR_SHUTDOWN: u16 = 21;
+pub const ERR_UNKNOWN_ID: u16 = 22;
+pub const ERR_SESSION: u16 = 23;
 
 /// Parse one protocol line (already trimmed of the newline). Pure, so
 /// the artifact-free test tier can cover the whole request grammar.
-pub fn parse_request(line: &str) -> Result<Command, &'static str> {
+pub fn parse_request(line: &str) -> Result<Command, ParseError> {
     let line = line.trim();
     if line.is_empty() {
-        return Err("empty request");
+        return Err(ParseError::EmptyRequest);
     }
     if line == "STATS" {
         return Ok(Command::Stats);
     }
+    // Like GEN below, the verbs demand a real word boundary: a glued
+    // form ("HELLOv2", "CANCEL42") is an unknown command, not a lucky
+    // parse.
+    if let Some(rest) = line.strip_prefix("HELLO") {
+        if !rest.is_empty() && !rest.starts_with(' ') {
+            return Err(ParseError::UnknownCommand);
+        }
+        return match rest.trim() {
+            "v1" => Ok(Command::Hello { version: 1 }),
+            "v2" => Ok(Command::Hello { version: 2 }),
+            _ => Err(ParseError::BadVersion),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("CANCEL") {
+        if !rest.is_empty() && !rest.starts_with(' ') {
+            return Err(ParseError::UnknownCommand);
+        }
+        let id = rest.trim().parse::<u64>().map_err(|_| ParseError::BadId)?;
+        return Ok(Command::Cancel { id });
+    }
     let Some(rest) = line.strip_prefix("GEN") else {
-        return Err("expected GEN or STATS");
+        return Err(ParseError::UnknownCommand);
     };
     // Split off an optional `@<class>[:<deadline_ms>]` tag; a bare
     // "GEN" (no tag, no space) no longer matches the verb, and an
@@ -72,30 +188,31 @@ pub fn parse_request(line: &str) -> Result<Command, &'static str> {
         }
         None => match rest.strip_prefix(' ') {
             Some(rest) => (None, rest),
-            None => return Err("expected GEN or STATS"),
+            None => return Err(ParseError::UnknownCommand),
         },
     };
     let (priority, deadline_ms) = match tag {
         None => (Priority::Normal, None),
         Some(tag) => {
             let (class, deadline) = match tag.split_once(':') {
-                Some((class, ms)) => {
-                    (class, Some(ms.parse::<u64>().map_err(|_| "bad deadline")?))
-                }
+                Some((class, ms)) => (
+                    class,
+                    Some(ms.parse::<u64>().map_err(|_| ParseError::BadDeadline)?),
+                ),
                 None => (tag, None),
             };
             (
-                Priority::parse(class).ok_or("bad priority class")?,
+                Priority::parse(class).ok_or(ParseError::BadClass)?,
                 deadline,
             )
         }
     };
     let mut parts = rest.splitn(2, ' ');
     let max_new = parts.next().unwrap_or("");
-    let max_new: usize = max_new.parse().map_err(|_| "bad max_new")?;
+    let max_new: usize = max_new.parse().map_err(|_| ParseError::BadMaxNew)?;
     let prompt = parts.next().unwrap_or("").to_string();
     if prompt.is_empty() {
-        return Err("empty prompt");
+        return Err(ParseError::EmptyPrompt);
     }
     Ok(Command::Gen {
         max_new,
@@ -105,55 +222,118 @@ pub fn parse_request(line: &str) -> Result<Command, &'static str> {
     })
 }
 
+/// One connection's write half, shared by its acceptor-side handler
+/// (STATS, parse errors, HELLO) and the decode thread (ACK/TOK/END/
+/// CANCELLED frames). v2 makes concurrent producers the normal case;
+/// the mutex keeps every line atomic on the wire so frames can never
+/// interleave mid-line.
+type ConnWriter = Arc<Mutex<TcpStream>>;
+
+fn write_line(writer: &ConnWriter, line: &str) {
+    let _ = writer.lock().unwrap().write_all(line.as_bytes());
+}
+
+/// A request parked between the acceptor and the decode loop, with the
+/// connection its frames go back on.
 struct Pending {
     req: Request,
-    conn: TcpStream,
+    conn: ConnWriter,
+    proto: Proto,
+}
+
+/// A submitted request's reply channel, held by the decode loop.
+struct Client {
+    conn: ConnWriter,
+    proto: Proto,
+}
+
+/// Everything the acceptor and decode threads share under one lock.
+struct ServerState {
+    queue: RequestQueue,
+    pending: Vec<Pending>,
+    /// CANCEL frames awaiting the decode loop: target id plus the
+    /// connection that asked (unknown ids are answered there).
+    cancels: Vec<(u64, ConnWriter)>,
+    /// Decode-loop-refreshed serving stats — the single source of truth
+    /// STATS reads (replaces the per-counter atomic mirrors).
+    stats: StatsSnapshot,
 }
 
 struct Shared {
-    queue: Mutex<(RequestQueue, Vec<Pending>)>,
+    state: Mutex<ServerState>,
     cv: Condvar,
     stop: AtomicBool,
     next_id: AtomicU64,
-    /// Sessions currently in flight (for STATS).
-    active: AtomicU64,
-    /// Per-class completions / deadline misses (for STATS), mirrored
-    /// from the scheduler by the decode loop after every tick.
-    class_done: [AtomicU64; N_CLASSES],
-    class_missed: [AtomicU64; N_CLASSES],
-    /// Batched-forward counters (for STATS), mirrored from the engine's
-    /// telemetry: shared passes, tokens they advanced, and cache hits
-    /// scored against union plans.
-    batch_turns: AtomicU64,
-    batch_tokens: AtomicU64,
-    union_hits: AtomicU64,
 }
 
-/// Serve until `max_requests` have been answered (None = forever).
-/// Reports the bound local address via the callback before blocking.
-/// Returns the engine (still warm) so callers can inspect telemetry.
-pub fn serve(
-    engine: ExecEngine,
+/// Format a v1 or v2 error line for a request-grammar failure.
+fn parse_err_line(proto: Proto, e: ParseError) -> String {
+    match proto {
+        Proto::V1 => format!("ERR {}\n", e.message()),
+        Proto::V2 => format!("ERR {} 0 {}\n", e.code(), e.message()),
+    }
+}
+
+/// One-line STATS JSON from the queue counters and the last snapshot.
+fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> String {
+    let classes: Vec<String> = Priority::ALL
+        .iter()
+        .map(|p| {
+            let c = &s.classes[p.index()];
+            format!(
+                "\"{}\":{{\"done\":{},\"missed\":{},\"cancelled\":{}}}",
+                p.name(),
+                c.completed,
+                c.deadline_missed,
+                c.cancelled
+            )
+        })
+        .collect();
+    format!(
+        "{{\"depth\":{depth},\"enqueued\":{enqueued},\"rejected\":{rejected},\
+         \"active\":{},\"backlog\":{},\"served\":{},\"cancelled\":{},\
+         \"batch\":{{\"turns\":{},\"tokens\":{},\"occupancy\":{:.2},\"union_hits\":{}}},\
+         \"classes\":{{{}}}}}\n",
+        s.active,
+        s.backlog,
+        s.served,
+        s.cancelled,
+        s.batch_turns,
+        s.batch_tokens,
+        s.batch_occupancy(),
+        s.union_plan_hits,
+        classes.join(",")
+    )
+}
+
+/// Serve until `max_requests` have been answered (None = forever); a
+/// reply is an `OK`/`END`, an `ERR` for a failed session, or a
+/// `CANCELLED`. Reports the bound local address via the callback before
+/// blocking. Generic over the engine: the executed engine serves for
+/// real, [`crate::coordinator::stub::StubSessionEngine`] serves the
+/// artifact-free protocol tests and the CI streaming smoke. Returns the
+/// engine (still warm) so callers can inspect telemetry.
+pub fn serve<E: SessionEngine>(
+    engine: E,
     addr: &str,
     max_requests: Option<u64>,
     on_bound: impl FnOnce(std::net::SocketAddr),
-) -> Result<ExecEngine> {
+) -> Result<E> {
     let listener = TcpListener::bind(addr)?;
     // Capture the *bound* address: `addr` may carry port 0 (ephemeral),
     // and the shutdown nudge below must hit the real port.
     let bound = listener.local_addr()?;
     on_bound(bound);
     let shared = Arc::new(Shared {
-        queue: Mutex::new((RequestQueue::new(64), Vec::new())),
+        state: Mutex::new(ServerState {
+            queue: RequestQueue::new(64),
+            pending: Vec::new(),
+            cancels: Vec::new(),
+            stats: StatsSnapshot::default(),
+        }),
         cv: Condvar::new(),
         stop: AtomicBool::new(false),
         next_id: AtomicU64::new(1),
-        active: AtomicU64::new(0),
-        class_done: std::array::from_fn(|_| AtomicU64::new(0)),
-        class_missed: std::array::from_fn(|_| AtomicU64::new(0)),
-        batch_turns: AtomicU64::new(0),
-        batch_tokens: AtomicU64::new(0),
-        union_hits: AtomicU64::new(0),
     });
 
     // Acceptor thread: parse lines, enqueue.
@@ -169,92 +349,211 @@ pub fn serve(
         }
     });
 
-    // Decode loop (this thread owns the engine, inside the scheduler).
-    let sessions = engine.capacity();
-    let sched_cfg = SchedConfig {
-        prefill_chunk: engine.config().prefill_chunk,
-        starvation_guard: engine.config().starvation_guard,
-        batch: engine.config().batch,
-        ..SchedConfig::default()
-    };
-    let mut sched = Scheduler::with_config(engine, sessions, sched_cfg);
-    let mut conns: HashMap<u64, TcpStream> = HashMap::new();
-    let mut served = 0u64;
+    // Decode loop (this thread owns the engine, inside the serving
+    // core; sizing and policy come from the engine itself).
+    let mut core = ServingCore::from_engine(engine);
+    let mut conns: HashMap<u64, Client> = HashMap::new();
     let mut submitted = 0u64;
+    // Requests cancelled while still in the admission queue (they never
+    // reach the core, so its counters cannot see them), total and per
+    // class.
+    let mut queue_cancelled = 0u64;
+    let mut queue_cancelled_class = [0u64; N_CLASSES];
     loop {
+        // `max_requests` bounds *consumed* requests (submissions plus
+        // queue-level cancels, each of which eats one budget slot);
+        // serving ends once the budget is consumed AND every consumed
+        // request has been answered — a mid-decode session can never be
+        // stranded by the bound, and a cancelled budget slot can never
+        // leave the loop waiting for an answer that will not come.
         if let Some(max) = max_requests {
-            if served >= max {
+            if submitted >= max && core.is_idle() {
                 break;
             }
         }
-        // Drain arrivals into the scheduler; block only when there is
-        // nothing in flight to step. Beyond the session slots, up to
-        // one extra slot-width of requests leaves the bounded
-        // RequestQueue — the scheduler reorders that window by
-        // (class, deadline), so a tagged request can overtake FIFO
-        // arrivals without unbounding admission ("ERR queue full"
-        // backpressure still applies at the RequestQueue) — and never
-        // more than `max_requests` in total, so shutdown can't strand
-        // a half-decoded session.
+        // Block until there is something to do; collect CANCELs under
+        // the lock. A cancel target still in the admission queue never
+        // reaches the engine — answer it right here.
+        let mut sched_cancels: Vec<(u64, ConnWriter)> = Vec::new();
+        let mut writes: Vec<(ConnWriter, String)> = Vec::new();
         {
-            let mut guard = shared.queue.lock().unwrap();
+            let mut guard = shared.state.lock().unwrap();
             loop {
-                let (q, pend) = &mut *guard;
-                loop {
-                    if max_requests.is_some_and(|max| submitted >= max) {
-                        break;
+                let taken: Vec<(u64, ConnWriter)> = guard.cancels.drain(..).collect();
+                for (id, requester) in taken {
+                    if let Some(req) = guard.queue.remove(id) {
+                        // Still queued: drop it pre-admission. The
+                        // CANCELLED reply below is its answer, so it
+                        // consumes one budget slot (see the loop-top
+                        // comment). The pending entry owns the reply
+                        // channel.
+                        submitted += 1;
+                        queue_cancelled += 1;
+                        queue_cancelled_class[req.priority.index()] += 1;
+                        // Visible to STATS before the CANCELLED frame
+                        // lands (the full snapshot after the next pump
+                        // recomputes the same totals).
+                        guard.stats.served += 1;
+                        guard.stats.cancelled += 1;
+                        guard.stats.classes[req.priority.index()].cancelled += 1;
+                        if let Some(i) = guard.pending.iter().position(|p| p.req.id == id) {
+                            let p = guard.pending.swap_remove(i);
+                            // The owner hears about it in its own
+                            // protocol's shape.
+                            let line = match p.proto {
+                                Proto::V1 => "ERR cancelled\n".to_string(),
+                                Proto::V2 => format!("CANCELLED {id} 0\n"),
+                            };
+                            writes.push((p.conn, line));
+                        }
+                    } else {
+                        sched_cancels.push((id, requester));
                     }
-                    if sched.active_len() + sched.backlog_len() >= 2 * sched.max_sessions() {
-                        break;
-                    }
-                    let Some(req) = q.pop() else { break };
-                    let idx = pend
-                        .iter()
-                        .position(|p| p.req.id == req.id)
-                        .expect("conn for queued request");
-                    let p = pend.swap_remove(idx);
-                    conns.insert(req.id, p.conn);
-                    sched.submit(req);
-                    submitted += 1;
                 }
-                if !sched.is_idle() {
+                // `writes` holds replies already owed to clients (a
+                // queue-level CANCELLED) — flushing them is work too;
+                // waiting here would strand them until the next nudge.
+                if !core.is_idle()
+                    || !guard.queue.is_empty()
+                    || !sched_cancels.is_empty()
+                    || !writes.is_empty()
+                {
                     break;
                 }
                 guard = shared.cv.wait(guard).unwrap();
             }
         }
-        let report = sched.tick();
-        shared
-            .active
-            .store(sched.active_len() as u64, Ordering::SeqCst);
-        for (i, c) in sched.classes.iter().enumerate() {
-            shared.class_done[i].store(c.completed, Ordering::SeqCst);
-            shared.class_missed[i].store(c.deadline_missed, Ordering::SeqCst);
+        for (conn, line) in writes {
+            write_line(&conn, &line);
         }
-        let tel = &sched.engine().tel;
-        shared.batch_turns.store(tel.batch_turns, Ordering::SeqCst);
-        shared.batch_tokens.store(tel.batch_tokens, Ordering::SeqCst);
-        shared.union_hits.store(tel.union_plan_hits, Ordering::SeqCst);
-        for outcome in report.outcomes {
-            let id = outcome.id();
-            let reply = match outcome {
-                Outcome::Done(c) => {
-                    let r = &c.response;
-                    format!(
-                        "OK {} {:.1} {:.1} {:.1} {}\n",
-                        r.id,
-                        r.queue_s * 1e3,
-                        r.ttft_s * 1e3,
-                        r.total_s * 1e3,
-                        detokenize(&r.tokens).replace('\n', " ")
-                    )
+        // Cancels for submitted requests go through the core: the KV
+        // slot frees immediately and the next turn set excludes the
+        // session. Unknown ids (finished, never existed) answer the
+        // canceller instead of a session owner.
+        let mut events: Vec<SessionEvent> = Vec::new();
+        for (id, requester) in sched_cancels {
+            match core.cancel(id) {
+                Some(ev) => events.push(ev),
+                None => {
+                    write_line(&requester, &format!("ERR {ERR_UNKNOWN_ID} {id} unknown id\n"));
                 }
-                Outcome::Failed { error, .. } => format!("ERR {error}\n"),
-            };
-            if let Some(mut conn) = conns.remove(&id) {
-                let _ = conn.write_all(reply.as_bytes());
             }
-            served += 1;
+        }
+        // One scheduler turn. Arrivals flow in through the intake hook:
+        // the core polls it at turn start and between chunks/rounds
+        // (continuous admission), popping the bounded queue and moving
+        // each request's reply channel into the decode loop's map. A
+        // queued request whose pending connection vanished (e.g. a
+        // cancel won the race for it) is dropped here — it must not
+        // kill the decode thread.
+        {
+            let intake_shared = Arc::clone(&shared);
+            let mut intake = || -> Option<Request> {
+                if max_requests.is_some_and(|max| submitted >= max) {
+                    return None;
+                }
+                let (req, client) = {
+                    let mut g = intake_shared.state.lock().unwrap();
+                    loop {
+                        let req = g.queue.pop()?;
+                        let Some(i) = g.pending.iter().position(|p| p.req.id == req.id) else {
+                            continue;
+                        };
+                        let p = g.pending.swap_remove(i);
+                        break (req, Client { conn: p.conn, proto: p.proto });
+                    }
+                };
+                // The decode thread owns every frame of a submitted
+                // request, so this ACK trivially precedes its first
+                // TOK — and no client socket write ever happens while
+                // the state lock is held, so a non-reading client never
+                // blocks the acceptor-side handlers (STATS, parsing).
+                // Frame delivery itself still shares the decode thread
+                // — the same single-writer model v1 replies always had;
+                // per-connection writer queues are the ROADMAP step if
+                // hostile clients become a serving concern.
+                if client.proto == Proto::V2 {
+                    write_line(&client.conn, &format!("ACK {}\n", req.id));
+                }
+                conns.insert(req.id, client);
+                submitted += 1;
+                Some(req)
+            };
+            events.extend(core.pump(&mut intake));
+        }
+        // Refresh the STATS snapshot under the lock BEFORE any frame
+        // reaches a client — one coherent view per tick with no
+        // per-counter mirrors to drift, and a client reacting to a
+        // frame (e.g. STATS right after CANCELLED) always sees the
+        // state that produced it. Queue-level cancels are the only
+        // accounting the core cannot see.
+        {
+            let mut snap = core.snapshot();
+            snap.served += queue_cancelled;
+            snap.cancelled += queue_cancelled;
+            for (c, &n) in snap.classes.iter_mut().zip(queue_cancelled_class.iter()) {
+                c.cancelled += n;
+            }
+            shared.state.lock().unwrap().stats = snap;
+        }
+        // Map the event stream to wire frames. v1 connections get the
+        // original one-shot replies (byte-identical); v2 connections
+        // see every token the tick it was generated.
+        for ev in events {
+            match ev {
+                SessionEvent::Admitted { .. } => {}
+                SessionEvent::Token { id, token, .. } => {
+                    if let Some(c) = conns.get(&id) {
+                        if c.proto == Proto::V2 {
+                            let text = detokenize(&[token]).replace('\n', " ");
+                            write_line(&c.conn, &format!("TOK {id} {text}\n"));
+                        }
+                    }
+                }
+                SessionEvent::Done(done) => {
+                    let r = &done.response;
+                    if let Some(c) = conns.remove(&r.id) {
+                        let line = match c.proto {
+                            Proto::V1 => format!(
+                                "OK {} {:.1} {:.1} {:.1} {}\n",
+                                r.id,
+                                r.queue_s * 1e3,
+                                r.ttft_s * 1e3,
+                                r.total_s * 1e3,
+                                detokenize(&r.tokens).replace('\n', " ")
+                            ),
+                            Proto::V2 => format!(
+                                "END {} {:.1} {:.1} {:.1}\n",
+                                r.id,
+                                r.queue_s * 1e3,
+                                r.ttft_s * 1e3,
+                                r.total_s * 1e3
+                            ),
+                        };
+                        write_line(&c.conn, &line);
+                    }
+                }
+                SessionEvent::Failed { id, error } => {
+                    if let Some(c) = conns.remove(&id) {
+                        let line = match c.proto {
+                            Proto::V1 => format!("ERR {error}\n"),
+                            Proto::V2 => format!("ERR {ERR_SESSION} {id} {error}\n"),
+                        };
+                        write_line(&c.conn, &line);
+                    }
+                }
+                SessionEvent::Cancelled { id, tokens } => {
+                    if let Some(c) = conns.remove(&id) {
+                        // A v1 owner never learns v2 frames: its
+                        // one-shot reply becomes a legal v1 ERR line.
+                        let line = match c.proto {
+                            Proto::V1 => "ERR cancelled\n".to_string(),
+                            Proto::V2 => format!("CANCELLED {id} {tokens}\n"),
+                        };
+                        write_line(&c.conn, &line);
+                    }
+                }
+            }
         }
     }
     // Shutdown: stop the acceptor, nudge it awake on the *bound*
@@ -263,20 +562,27 @@ pub fn serve(
     // admission queue get an explicit error instead of a silent EOF.
     shared.stop.store(true, Ordering::SeqCst);
     {
-        let mut guard = shared.queue.lock().unwrap();
-        while guard.0.pop().is_some() {}
-        for mut p in guard.1.drain(..) {
-            let _ = p.conn.write_all(b"ERR server shutting down\n");
+        let mut guard = shared.state.lock().unwrap();
+        while guard.queue.pop().is_some() {}
+        for p in guard.pending.drain(..) {
+            let line = match p.proto {
+                Proto::V1 => "ERR server shutting down\n".to_string(),
+                Proto::V2 => format!("ERR {ERR_SHUTDOWN} {} server shutting down\n", p.req.id),
+            };
+            write_line(&p.conn, &line);
+        }
+        for (id, conn) in guard.cancels.drain(..) {
+            // The target may well have been a real queued request (its
+            // owner is being told the same thing above) — this is a
+            // shutdown, not an unknown id.
+            write_line(&conn, &format!("ERR {ERR_SHUTDOWN} {id} server shutting down\n"));
         }
     }
     let _ = TcpStream::connect(bound);
     let _ = acceptor.join();
-    // The scheduler owns per-class accounting; fold it into the
-    // engine's telemetry so callers see one report.
-    let classes = sched.classes;
-    let mut engine = sched.into_engine();
-    engine.tel.classes = classes;
-    Ok(engine)
+    // The core folds per-class accounting into the engine's telemetry
+    // (when it keeps one) so callers see one report.
+    Ok(core.into_engine())
 }
 
 fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
@@ -284,61 +590,77 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
         Ok(c) => c,
         Err(_) => return,
     };
+    // The single shared write half for this connection: the decode
+    // thread gets clones of it (via Pending/cancels), so its frames and
+    // this handler's replies serialize per line instead of interleaving
+    // mid-frame on the wire.
+    let writer: ConnWriter = Arc::new(Mutex::new(conn));
     let mut lines = BufReader::new(reader).lines();
+    let mut proto = Proto::V1;
     while let Some(Ok(line)) = lines.next() {
         if line.trim().is_empty() {
             continue;
         }
-        let mut reply_conn = match conn.try_clone() {
-            Ok(c) => c,
-            Err(_) => return,
-        };
         let cmd = match parse_request(&line) {
             Ok(cmd) => cmd,
-            Err(reason) => {
-                let _ = reply_conn.write_all(format!("ERR {reason}\n").as_bytes());
+            Err(e) => {
+                // v1 has no CANCEL and no versions: any malformed form
+                // of those verbs is just an unknown command there, so
+                // the legacy error bytes stay exact.
+                let e = if proto == Proto::V1
+                    && matches!(e, ParseError::BadId | ParseError::BadVersion)
+                {
+                    ParseError::UnknownCommand
+                } else {
+                    e
+                };
+                write_line(&writer, &parse_err_line(proto, e));
                 continue;
             }
         };
         match cmd {
-            Command::Stats => {
-                // Queue/scheduler stats; engine telemetry is reported by
-                // the CLI at shutdown.
-                let g = shared.queue.lock().unwrap();
-                let classes: Vec<String> = Priority::ALL
-                    .iter()
-                    .map(|p| {
-                        format!(
-                            "\"{}\":{{\"done\":{},\"missed\":{}}}",
-                            p.name(),
-                            shared.class_done[p.index()].load(Ordering::SeqCst),
-                            shared.class_missed[p.index()].load(Ordering::SeqCst)
-                        )
-                    })
-                    .collect();
-                let turns = shared.batch_turns.load(Ordering::SeqCst);
-                let toks = shared.batch_tokens.load(Ordering::SeqCst);
-                let occupancy = if turns == 0 {
-                    0.0
-                } else {
-                    toks as f64 / turns as f64
+            Command::Hello { version } => {
+                proto = if version >= 2 { Proto::V2 } else { Proto::V1 };
+                write_line(&writer, &format!("HELLO v{version}\n"));
+            }
+            Command::Cancel { id } => {
+                if proto == Proto::V1 {
+                    // CANCEL is a v2 verb; the v1 byte contract only
+                    // knows GEN and STATS.
+                    write_line(&writer, &parse_err_line(proto, ParseError::UnknownCommand));
+                    continue;
+                }
+                let stopped = {
+                    let mut g = shared.state.lock().unwrap();
+                    if shared.stop.load(Ordering::SeqCst) {
+                        true
+                    } else {
+                        g.cancels.push((id, Arc::clone(&writer)));
+                        false
+                    }
                 };
-                let msg = format!(
-                    "{{\"depth\":{},\"enqueued\":{},\"rejected\":{},\"active\":{},\
-                     \"batch\":{{\"turns\":{},\"tokens\":{},\"occupancy\":{:.2},\"union_hits\":{}}},\
-                     \"classes\":{{{}}}}}\n",
-                    g.0.len(),
-                    g.0.enqueued,
-                    g.0.rejected,
-                    shared.active.load(Ordering::SeqCst),
-                    turns,
-                    toks,
-                    occupancy,
-                    shared.union_hits.load(Ordering::SeqCst),
-                    classes.join(",")
+                if stopped {
+                    write_line(
+                        &writer,
+                        &format!("ERR {ERR_SHUTDOWN} {id} server shutting down\n"),
+                    );
+                } else {
+                    shared.cv.notify_one();
+                }
+            }
+            Command::Stats => {
+                // Queue counters live with the queue; everything else
+                // comes from the decode loop's last snapshot — all read
+                // under one lock, so the reply is one coherent view.
+                let g = shared.state.lock().unwrap();
+                let msg = stats_json(
+                    g.queue.len(),
+                    g.queue.enqueued,
+                    g.queue.rejected,
+                    &g.stats,
                 );
                 drop(g);
-                let _ = reply_conn.write_all(msg.as_bytes());
+                write_line(&writer, &msg);
             }
             Command::Gen {
                 max_new,
@@ -352,21 +674,26 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                     max_new,
                 )
                 .with_class(priority, deadline_ms);
+                let id = req.id;
                 // The stop check happens under the queue lock: the
                 // decode loop sets `stop` *before* taking the lock for
                 // its final drain, so a request admitted while we see
                 // stop == false is guaranteed to be drained (and
-                // answered) by that drain — no client is stranded.
+                // answered) by that drain — no client is stranded. The
+                // v2 ACK is written by the decode thread when it picks
+                // the request up, keeping all frames for an id on one
+                // writer (and no socket writes under this lock).
                 let admitted = {
-                    let mut g = shared.queue.lock().unwrap();
+                    let mut g = shared.state.lock().unwrap();
                     if shared.stop.load(Ordering::SeqCst) {
                         None
                     } else {
-                        let ok = g.0.push(req.clone());
+                        let ok = g.queue.push(req.clone());
                         if ok {
-                            g.1.push(Pending {
+                            g.pending.push(Pending {
                                 req,
-                                conn: reply_conn,
+                                conn: Arc::clone(&writer),
+                                proto,
                             });
                         }
                         Some(ok)
@@ -375,16 +702,22 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                 match admitted {
                     Some(true) => shared.cv.notify_one(),
                     Some(false) | None => {
-                        let mut c = match conn.try_clone() {
-                            Ok(c) => c,
-                            Err(_) => return,
+                        // v2 rejections carry the id the request WOULD
+                        // have had: the client never saw it ACKed, but a
+                        // pipelining client can still tell which of its
+                        // un-ACKed GENs died (ERRs and ACKs both arrive
+                        // in submission order per connection).
+                        let line = match (proto, admitted) {
+                            (Proto::V1, None) => "ERR server shutting down\n".to_string(),
+                            (Proto::V1, _) => "ERR queue full\n".to_string(),
+                            (Proto::V2, None) => {
+                                format!("ERR {ERR_SHUTDOWN} {id} server shutting down\n")
+                            }
+                            (Proto::V2, _) => {
+                                format!("ERR {ERR_QUEUE_FULL} {id} queue full\n")
+                            }
                         };
-                        let msg: &[u8] = if admitted.is_none() {
-                            b"ERR server shutting down\n"
-                        } else {
-                            b"ERR queue full\n"
-                        };
-                        let _ = c.write_all(msg);
+                        write_line(&writer, &line);
                     }
                 }
             }
@@ -446,13 +779,16 @@ mod tests {
 
     #[test]
     fn parse_bad_class_tags() {
-        assert_eq!(parse_request("GEN@vip 8 hello"), Err("bad priority class"));
-        assert_eq!(parse_request("GEN@high:soon 8 hello"), Err("bad deadline"));
+        assert_eq!(parse_request("GEN@vip 8 hello"), Err(ParseError::BadClass));
+        assert_eq!(
+            parse_request("GEN@high:soon 8 hello"),
+            Err(ParseError::BadDeadline)
+        );
         // An empty tag means the client dropped its class — reject it
         // rather than silently serving as normal.
-        assert_eq!(parse_request("GEN@ 8 hello"), Err("bad priority class"));
+        assert_eq!(parse_request("GEN@ 8 hello"), Err(ParseError::BadClass));
         // A tag with no arguments falls through to the max_new check.
-        assert_eq!(parse_request("GEN@high"), Err("bad max_new"));
+        assert_eq!(parse_request("GEN@high"), Err(ParseError::BadMaxNew));
     }
 
     #[test]
@@ -462,27 +798,93 @@ mod tests {
     }
 
     #[test]
+    fn parse_hello_versions() {
+        assert_eq!(parse_request("HELLO v2"), Ok(Command::Hello { version: 2 }));
+        assert_eq!(parse_request("HELLO v1"), Ok(Command::Hello { version: 1 }));
+        assert_eq!(parse_request("HELLO v3"), Err(ParseError::BadVersion));
+        assert_eq!(parse_request("HELLO"), Err(ParseError::BadVersion));
+        assert_eq!(parse_request("HELLO 2"), Err(ParseError::BadVersion));
+        // Glued verbs are unknown commands, not lucky parses.
+        assert_eq!(parse_request("HELLOv2"), Err(ParseError::UnknownCommand));
+    }
+
+    #[test]
+    fn parse_cancel() {
+        assert_eq!(parse_request("CANCEL 42"), Ok(Command::Cancel { id: 42 }));
+        assert_eq!(parse_request("CANCEL  7 "), Ok(Command::Cancel { id: 7 }));
+        assert_eq!(parse_request("CANCEL"), Err(ParseError::BadId));
+        assert_eq!(parse_request("CANCEL x"), Err(ParseError::BadId));
+        assert_eq!(parse_request("CANCEL -3"), Err(ParseError::BadId));
+        assert_eq!(parse_request("CANCEL42"), Err(ParseError::UnknownCommand));
+    }
+
+    #[test]
     fn parse_missing_max_new() {
-        assert_eq!(parse_request("GEN hello world"), Err("bad max_new"));
+        assert_eq!(parse_request("GEN hello world"), Err(ParseError::BadMaxNew));
         // "GEN " trims to bare "GEN", which no longer matches the verb.
-        assert_eq!(parse_request("GEN "), Err("expected GEN or STATS"));
-        assert_eq!(parse_request("GEN -3 x"), Err("bad max_new"));
+        assert_eq!(parse_request("GEN "), Err(ParseError::UnknownCommand));
+        assert_eq!(parse_request("GEN -3 x"), Err(ParseError::BadMaxNew));
     }
 
     #[test]
     fn parse_empty_prompt() {
-        assert_eq!(parse_request("GEN 8"), Err("empty prompt"));
-        assert_eq!(parse_request("GEN 8 "), Err("empty prompt"));
+        assert_eq!(parse_request("GEN 8"), Err(ParseError::EmptyPrompt));
+        assert_eq!(parse_request("GEN 8 "), Err(ParseError::EmptyPrompt));
     }
 
     #[test]
     fn parse_junk() {
-        assert_eq!(parse_request("NONSENSE"), Err("expected GEN or STATS"));
-        assert_eq!(parse_request("gen 8 lowercase"), Err("expected GEN or STATS"));
-        assert_eq!(parse_request(""), Err("empty request"));
-        assert_eq!(parse_request("   "), Err("empty request"));
+        assert_eq!(parse_request("NONSENSE"), Err(ParseError::UnknownCommand));
+        assert_eq!(
+            parse_request("gen 8 lowercase"),
+            Err(ParseError::UnknownCommand)
+        );
+        assert_eq!(parse_request(""), Err(ParseError::EmptyRequest));
+        assert_eq!(parse_request("   "), Err(ParseError::EmptyRequest));
     }
 
-    // The server loop itself is exercised end-to-end by
-    // rust/tests/server_e2e.rs (needs artifacts).
+    #[test]
+    fn wire_codes_are_stable_and_distinct() {
+        // The v2 contract: codes are part of the protocol. Renumbering
+        // is a wire break — this test is the tripwire.
+        let all = [
+            ParseError::EmptyRequest,
+            ParseError::UnknownCommand,
+            ParseError::BadClass,
+            ParseError::BadDeadline,
+            ParseError::BadMaxNew,
+            ParseError::EmptyPrompt,
+            ParseError::BadId,
+            ParseError::BadVersion,
+        ];
+        let codes: Vec<u16> = all.iter().map(|e| e.code()).collect();
+        assert_eq!(codes, vec![10, 11, 12, 13, 14, 15, 16, 17]);
+        assert_eq!(
+            (ERR_QUEUE_FULL, ERR_SHUTDOWN, ERR_UNKNOWN_ID, ERR_SESSION),
+            (20, 21, 22, 23)
+        );
+    }
+
+    #[test]
+    fn v1_error_lines_are_byte_identical_to_legacy() {
+        // v1 clients parsed these exact strings before the typed enum
+        // existed; the enum must render them unchanged.
+        assert_eq!(
+            parse_err_line(Proto::V1, ParseError::EmptyPrompt),
+            "ERR empty prompt\n"
+        );
+        assert_eq!(
+            parse_err_line(Proto::V1, ParseError::UnknownCommand),
+            "ERR expected GEN or STATS\n"
+        );
+        assert_eq!(
+            parse_err_line(Proto::V2, ParseError::BadDeadline),
+            "ERR 13 0 bad deadline\n"
+        );
+    }
+
+    // The server loop itself is exercised end-to-end — without
+    // artifacts over the stub engine (rust/tests/streaming_core.rs:
+    // v1 byte-compat, v2 TOK-before-END, wire-level CANCEL) and with
+    // artifacts over the executed engine (rust/tests/server_e2e.rs).
 }

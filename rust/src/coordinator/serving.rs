@@ -1,0 +1,202 @@
+//! Transport-agnostic event-driven serving core — the v2 redesign of
+//! the serving surface. Where the old server owned a monolithic decode
+//! loop that mapped one request to one blocking reply, [`ServingCore`]
+//! exposes serving as a *stream of [`SessionEvent`]s*: callers submit
+//! requests, pump the core, and consume admissions, per-token events,
+//! completions, failures, and cancellations in the order they happen.
+//!
+//! Transports map the stream onto their wire format (the TCP server's
+//! protocol v2 frames, `generate --stream`'s stdout, test harnesses'
+//! assertion logs); the core itself never sees a socket. Cancellation
+//! ([`ServingCore::cancel`]) and continuous admission (the intake hook
+//! of [`ServingCore::pump`]) are core capabilities, not server
+//! special-cases, so every engine — executed, stub, simulated mirror —
+//! serves with the same semantics.
+
+use crate::coordinator::request::Request;
+use crate::coordinator::scheduler::{SchedConfig, Scheduler, SessionEvent};
+use crate::coordinator::session::SessionEngine;
+use crate::telemetry::{ClassCounters, N_CLASSES};
+
+/// One coherent view of the serving state, taken from the scheduler and
+/// the engine's telemetry in a single call — the replacement for the
+/// per-counter atomic mirrors the server used to keep (which could
+/// drift between mirrors mid-tick). The server refreshes one snapshot
+/// under its existing lock after every pump; STATS readers see either
+/// the whole previous tick or the whole current one, never a mix.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsSnapshot {
+    /// Sessions currently holding a KV slot.
+    pub active: usize,
+    /// Requests admitted to the scheduler but not yet in a slot.
+    pub backlog: usize,
+    /// Terminal events delivered (done + failed + cancelled).
+    pub served: u64,
+    /// Requests torn down by cancel.
+    pub cancelled: u64,
+    /// Per-priority-class serving counters.
+    pub classes: [ClassCounters; N_CLASSES],
+    /// Shared (≥ 2-lane) batched forward passes, from engine telemetry.
+    pub batch_turns: u64,
+    /// Tokens advanced by those passes.
+    pub batch_tokens: u64,
+    /// Cache hits scored against batched union plans.
+    pub union_plan_hits: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean lanes per shared batched pass (0 when none ran).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batch_turns == 0 {
+            0.0
+        } else {
+            self.batch_tokens as f64 / self.batch_turns as f64
+        }
+    }
+}
+
+/// The event-driven serving core: a [`Scheduler`] plus terminal-event
+/// accounting, generic over the engine. See the module docs for the
+/// contract; `rust/tests/streaming_core.rs` pins it without artifacts.
+pub struct ServingCore<E: SessionEngine> {
+    sched: Scheduler<E>,
+}
+
+impl<E: SessionEngine> ServingCore<E> {
+    pub fn new(engine: E, max_sessions: usize, cfg: SchedConfig) -> ServingCore<E> {
+        ServingCore {
+            sched: Scheduler::with_config(engine, max_sessions, cfg),
+        }
+    }
+
+    /// Build a core sized and configured by the engine itself
+    /// ([`SessionEngine::capacity`] slots, [`SessionEngine::sched_config`]
+    /// policy) — how the server boots over any engine.
+    pub fn from_engine(engine: E) -> ServingCore<E> {
+        let sessions = engine.capacity();
+        let cfg = engine.sched_config();
+        ServingCore::new(engine, sessions, cfg)
+    }
+
+    /// Enqueue a request; events for it flow from subsequent pumps.
+    pub fn submit(&mut self, req: Request) {
+        self.sched.submit(req);
+    }
+
+    /// Cancel a request wherever it is (backlog or mid-decode — the KV
+    /// slot frees immediately). Returns the Cancelled event, or None
+    /// for unknown ids.
+    pub fn cancel(&mut self, id: u64) -> Option<SessionEvent> {
+        self.sched.cancel(id)
+    }
+
+    /// Terminal events emitted so far (done + failed + cancelled).
+    /// Derived from the scheduler's own counters, so it stays correct
+    /// even for callers that mix [`Self::pump`] with direct
+    /// [`Scheduler::tick`]s through [`Self::scheduler_mut`].
+    pub fn served(&self) -> u64 {
+        self.sched.completed + self.sched.cancelled + self.sched.rejected
+    }
+
+    /// Run one scheduler turn, pulling arrivals from `intake` (turn
+    /// start, and mid-turn under continuous admission), and return
+    /// everything that happened. Pass `&mut || None` when there is no
+    /// live arrival source.
+    pub fn pump(&mut self, intake: &mut dyn FnMut() -> Option<Request>) -> Vec<SessionEvent> {
+        self.sched.tick_with_intake(intake).events
+    }
+
+    /// Drive to idle, collecting the full event stream (harness/CLI
+    /// convenience; transports should pump incrementally).
+    pub fn run_until_idle(&mut self) -> Vec<SessionEvent> {
+        let mut all = Vec::new();
+        while !self.is_idle() {
+            all.extend(self.pump(&mut || None));
+        }
+        all
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    pub fn scheduler(&self) -> &Scheduler<E> {
+        &self.sched
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut Scheduler<E> {
+        &mut self.sched
+    }
+
+    /// One coherent stats view (see [`StatsSnapshot`]). Batch counters
+    /// are zero for engines without telemetry.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let tel = self.sched.engine().telemetry();
+        StatsSnapshot {
+            active: self.sched.active_len(),
+            backlog: self.sched.backlog_len(),
+            served: self.served(),
+            cancelled: self.sched.cancelled,
+            classes: self.sched.classes,
+            batch_turns: tel.map_or(0, |t| t.batch_turns),
+            batch_tokens: tel.map_or(0, |t| t.batch_tokens),
+            union_plan_hits: tel.map_or(0, |t| t.union_plan_hits),
+        }
+    }
+
+    /// Tear down, handing the (still warm) engine back with the
+    /// per-class serving counters folded into its telemetry when it
+    /// keeps one.
+    pub fn into_engine(self) -> E {
+        let classes = self.sched.classes;
+        let mut engine = self.sched.into_engine();
+        if let Some(tel) = engine.telemetry_mut() {
+            tel.classes = classes;
+        }
+        engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stub::StubSessionEngine;
+
+    fn req(id: u64, prompt: &str, max_new: usize) -> Request {
+        Request::new(id, crate::coordinator::request::tokenize(prompt), max_new)
+    }
+
+    #[test]
+    fn core_streams_and_counts_terminals() {
+        let mut core = ServingCore::from_engine(StubSessionEngine::new(2));
+        core.submit(req(1, "ab", 3));
+        core.submit(req(2, "cd", 2));
+        let events = core.run_until_idle();
+        assert_eq!(core.served(), 2);
+        let tokens_1 = events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::Token { id: 1, .. }))
+            .count();
+        assert_eq!(tokens_1, 3);
+        assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 2, "{events:?}");
+        let snap = core.snapshot();
+        assert_eq!(snap.served, 2);
+        assert_eq!(snap.active, 0);
+        assert_eq!(snap.cancelled, 0);
+    }
+
+    #[test]
+    fn cancel_is_a_terminal_event_and_frees_capacity() {
+        let mut core = ServingCore::from_engine(StubSessionEngine::new(1));
+        core.submit(req(1, "abcd", 100));
+        for _ in 0..3 {
+            core.pump(&mut || None);
+        }
+        assert_eq!(core.scheduler().engine().available(), 0);
+        assert!(core.cancel(1).is_some());
+        assert_eq!(core.scheduler().engine().available(), 1);
+        assert_eq!(core.served(), 1);
+        assert!(core.is_idle());
+        assert_eq!(core.snapshot().cancelled, 1);
+    }
+}

@@ -81,6 +81,8 @@ pub struct DecodeSession {
     fed: usize,
     logits: Vec<f32>,
     last_token_at: Option<Instant>,
+    /// The session was aborted mid-flight ([`Self::abort`]).
+    cancelled: bool,
 }
 
 impl DecodeSession {
@@ -102,6 +104,7 @@ impl DecodeSession {
             fed: 0,
             logits: Vec::new(),
             last_token_at: None,
+            cancelled: false,
         }
     }
 
@@ -122,6 +125,21 @@ impl DecodeSession {
 
     pub fn is_done(&self) -> bool {
         self.state == SessionState::Done
+    }
+
+    /// Abandon the session mid-flight: no further steps will run
+    /// ([`Self::begin_step`] returns `None` from here on) and the
+    /// tokens generated so far stand as-is. The owner must still
+    /// [`SessionEngine::close`] it — that is what returns the KV slot
+    /// to the pool; `abort` only makes the session inert.
+    pub fn abort(&mut self) {
+        self.state = SessionState::Done;
+        self.cancelled = true;
+    }
+
+    /// The session ended via [`Self::abort`], not by finishing.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled
     }
 
     /// Still consuming prompt tokens (a chunked-prefill turn may keep
@@ -279,8 +297,32 @@ pub trait SessionEngine {
     }
 
     /// Release the session's engine resources and fold its counters into
-    /// aggregate telemetry. Called exactly once per opened session.
+    /// aggregate telemetry. Called exactly once per opened session —
+    /// including sessions torn down early via [`DecodeSession::abort`].
     fn close(&mut self, s: &mut DecodeSession);
+
+    /// The scheduling policy this engine wants to be served with. The
+    /// generic server ([`crate::coordinator::server::serve`]) and
+    /// [`crate::coordinator::serving::ServingCore::from_engine`] use it
+    /// so any engine — executed, simulated, or stub — can sit behind
+    /// the same serving core without the transport knowing its
+    /// concrete config type.
+    fn sched_config(&self) -> crate::coordinator::scheduler::SchedConfig {
+        crate::coordinator::scheduler::SchedConfig::default()
+    }
+
+    /// Aggregate run telemetry, when the engine keeps one (the serving
+    /// stats snapshot reads batch/union counters through this instead
+    /// of knowing the concrete engine). Stubs keep the default.
+    fn telemetry(&self) -> Option<&crate::telemetry::Telemetry> {
+        None
+    }
+
+    /// Mutable access to the same telemetry (the serving core folds
+    /// per-class counters into it at teardown).
+    fn telemetry_mut(&mut self) -> Option<&mut crate::telemetry::Telemetry> {
+        None
+    }
 }
 
 /// Bounded pool of per-session KV buffers: `slots × n_layers × stride`
@@ -440,6 +482,23 @@ mod tests {
             s.generated
         };
         assert_eq!(run(&mut eng), run(&mut eng));
+    }
+
+    #[test]
+    fn aborted_session_is_inert() {
+        let mut eng = Echo;
+        let mut s = eng.open(req(1, vec![1, 2, 3], 8)).unwrap();
+        s.step(&mut eng).unwrap();
+        s.step(&mut eng).unwrap();
+        let had = s.generated.len();
+        assert!(!s.is_cancelled());
+        s.abort();
+        assert!(s.is_done() && s.is_cancelled());
+        // No further engine work, no new tokens — the mid-decode cancel
+        // contract at the session level.
+        assert_eq!(s.begin_step().unwrap(), None);
+        assert!(matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished));
+        assert_eq!(s.generated.len(), had);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! A deterministic, artifact-free [`SessionEngine`] for the serving
+//! stack: the streaming client example self-hosts a server over it (the
+//! CI streaming smoke), and the artifact-free server/e2e tests drive
+//! the real TCP loop with it. Token choice is a pure function of
+//! `(fed token, position)` landing in the printable-ASCII byte range,
+//! so generated text is stable across runs, byte-comparable on the
+//! wire, and independent of interleaving — exactly the properties the
+//! protocol tests pin.
+
+use crate::coordinator::request::Request;
+use crate::coordinator::session::{DecodeSession, SessionEngine};
+use anyhow::Result;
+use std::time::Duration;
+
+/// Smallest printable ASCII byte the stub emits.
+const PRINTABLE_BASE: usize = 32; // ' '
+/// Printable range width (' ' ..= '~').
+const PRINTABLE_SPAN: usize = 95;
+
+pub struct StubSessionEngine {
+    slots: usize,
+    max_pos: usize,
+    free: Vec<usize>,
+    /// Artificial per-forward latency — lets wire-level tests pace the
+    /// decode loop so a CANCEL deterministically lands mid-decode.
+    step_delay: Duration,
+    /// Total forwards run (test observability).
+    pub forwards: u64,
+}
+
+impl StubSessionEngine {
+    pub fn new(slots: usize) -> StubSessionEngine {
+        StubSessionEngine {
+            slots,
+            max_pos: usize::MAX,
+            free: (0..slots).rev().collect(),
+            step_delay: Duration::ZERO,
+            forwards: 0,
+        }
+    }
+
+    /// Bound the per-slot KV stride (admission rejects oversize).
+    pub fn with_max_positions(mut self, max_pos: usize) -> StubSessionEngine {
+        self.max_pos = max_pos;
+        self
+    }
+
+    /// Sleep this long inside every forward.
+    pub fn with_step_delay(mut self, delay: Duration) -> StubSessionEngine {
+        self.step_delay = delay;
+        self
+    }
+
+    /// Free KV slots right now (capacity minus in-flight sessions).
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// The token the stub will emit after feeding `token` at `pos` —
+    /// always a printable ASCII byte, so `detokenize` round-trips it.
+    pub fn next_token(token: u32, pos: usize) -> u32 {
+        (PRINTABLE_BASE + ((token as usize).wrapping_mul(31) + pos * 7 + 1) % PRINTABLE_SPAN)
+            as u32
+    }
+
+    /// Reference run: the exact bytes a request generates when served
+    /// alone — what any correct interleaving must reproduce.
+    pub fn reference_tokens(prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(max_new);
+        if prompt.is_empty() || max_new == 0 {
+            return out;
+        }
+        let mut pos = 0usize;
+        let mut last = 0u32;
+        for &t in prompt {
+            last = Self::next_token(t, pos);
+            pos += 1;
+        }
+        out.push(last);
+        while out.len() < max_new {
+            last = Self::next_token(last, pos);
+            pos += 1;
+            out.push(last);
+        }
+        out
+    }
+}
+
+impl SessionEngine for StubSessionEngine {
+    fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    fn max_positions(&self) -> usize {
+        self.max_pos
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(s.pos() < self.max_pos, "KV write past stride");
+        debug_assert!(!self.free.contains(&s.slot()), "stepped on a freed slot");
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        self.forwards += 1;
+        // One-hot logits whose argmax is `next_token`; sized to cover
+        // the whole byte vocabulary.
+        let mut logits = vec![0.0f32; 256];
+        logits[Self::next_token(token, s.pos()) as usize] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        debug_assert!(!self.free.contains(&s.slot()), "double release");
+        self.free.push(s.slot());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::tokenize;
+
+    #[test]
+    fn reference_matches_session_stepping() {
+        let mut eng = StubSessionEngine::new(1);
+        let prompt = tokenize("the quick brown fox");
+        let mut s = eng.open(Request::new(1, prompt.clone(), 9)).unwrap();
+        while !s.is_done() {
+            s.step(&mut eng).unwrap();
+        }
+        eng.close(&mut s);
+        assert_eq!(s.generated, StubSessionEngine::reference_tokens(&prompt, 9));
+        assert_eq!(eng.available(), 1);
+    }
+
+    #[test]
+    fn tokens_are_printable_ascii() {
+        let toks = StubSessionEngine::reference_tokens(&tokenize("hello"), 64);
+        assert!(toks.iter().all(|&t| (32..127).contains(&t)), "{toks:?}");
+        // Printable means the wire text round-trips byte-for-byte.
+        let text = crate::coordinator::request::detokenize(&toks);
+        assert_eq!(crate::coordinator::request::tokenize(&text), toks);
+    }
+}

@@ -40,6 +40,10 @@ pub struct TraceEvent {
     pub priority: Priority,
     /// SLO budget relative to arrival, virtual ms.
     pub deadline_ms: Option<u64>,
+    /// The client abandons the request this many virtual ms after
+    /// arrival (a `CANCEL` lands then). None = runs to completion; the
+    /// built-in mixes emit None — see [`inject_cancellations`].
+    pub cancel_after_ms: Option<u64>,
 }
 
 impl TraceEvent {
@@ -92,6 +96,7 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
                     max_new: rng.range(2, 10),
                     priority,
                     deadline_ms,
+                    cancel_after_ms: None,
                 }
             }
             Mix::Bursty => {
@@ -108,6 +113,7 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
                     max_new: rng.range(2, 12),
                     priority: if high { Priority::High } else { Priority::Normal },
                     deadline_ms: if high { Some(rng.range(80, 300) as u64) } else { None },
+                    cancel_after_ms: None,
                 }
             }
             Mix::AdversarialLongPrompt => {
@@ -123,6 +129,7 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
                         max_new: rng.range(2, 6),
                         priority: Priority::High,
                         deadline_ms: Some(rng.range(50, 150) as u64),
+                        cancel_after_ms: None,
                     }
                 } else {
                     // The flood: long prompts that monopolize prefill
@@ -135,6 +142,7 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
                         max_new: rng.range(8, 16),
                         priority: Priority::Batch,
                         deadline_ms: None,
+                        cancel_after_ms: None,
                     }
                 }
             }
@@ -142,6 +150,30 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
         events.push(ev);
     }
     events
+}
+
+/// Deterministically sprinkle client abandonment over a generated
+/// trace: every `every`-th batch-class request is tagged to CANCEL
+/// `delay_ms` after its arrival (batch only — the long flood requests
+/// are the realistic abandonment candidates, and keeping the
+/// tight-deadline interactive traffic intact preserves the trace's EDF
+/// pressure). Pure function of the inputs, so a tagged trace replays
+/// bit-identically. Returns how many events were tagged.
+pub fn inject_cancellations(events: &mut [TraceEvent], every: usize, delay_ms: u64) -> usize {
+    let every = every.max(1);
+    let mut tagged = 0usize;
+    let mut batch_seen = 0usize;
+    for ev in events.iter_mut() {
+        if ev.priority != Priority::Batch {
+            continue;
+        }
+        batch_seen += 1;
+        if batch_seen % every == 0 {
+            ev.cancel_after_ms = Some(delay_ms);
+            tagged += 1;
+        }
+    }
+    tagged
 }
 
 #[cfg(test)]
@@ -174,6 +206,29 @@ mod tests {
             assert!(a.iter().all(|e| !e.prompt.is_empty() && e.max_new >= 1));
             assert!(a.iter().all(|e| e.prompt.iter().all(|&t| t < 97)));
         }
+    }
+
+    #[test]
+    fn cancellation_injection_is_deterministic_and_batch_only() {
+        let mut a = generate(&spec(Mix::AdversarialLongPrompt));
+        let mut b = generate(&spec(Mix::AdversarialLongPrompt));
+        let na = inject_cancellations(&mut a, 3, 25);
+        let nb = inject_cancellations(&mut b, 3, 25);
+        assert_eq!(na, nb);
+        assert!(na >= 10, "only {na} cancellations tagged");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.cancel_after_ms, y.cancel_after_ms);
+        }
+        for ev in &a {
+            if let Some(ms) = ev.cancel_after_ms {
+                assert_eq!(ev.priority, Priority::Batch, "tagged non-batch event");
+                assert_eq!(ms, 25);
+            }
+        }
+        // Untagged traces stay untouched by generate() itself.
+        assert!(generate(&spec(Mix::Steady))
+            .iter()
+            .all(|e| e.cancel_after_ms.is_none()));
     }
 
     #[test]

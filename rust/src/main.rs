@@ -12,7 +12,8 @@
 //! Common flags: --artifacts DIR (default: artifacts), --quick
 
 use m2cache::coordinator::{
-    detokenize, tokenize, EngineConfig, ExecEngine, PolicyKind, SimEngine,
+    detokenize, tokenize, EngineConfig, ExecEngine, PolicyKind, Request, ServingCore,
+    SessionEvent, SimEngine,
 };
 use m2cache::experiments::{self, ExpOpts};
 use m2cache::memsim::HardwareSpec;
@@ -61,6 +62,11 @@ fn engine_config(args: &Args) -> EngineConfig {
     // through the stacked HLO when the artifacts provide one).
     cfg.batch_kernel = args.flag("batch-kernel");
     cfg.batch = args.flag("batch") || cfg.batch_kernel;
+    // Continuous admission is the v2 default; --no-continuous restores
+    // assembly-only admission (arrivals wait out in-flight turns).
+    if args.flag("no-continuous") {
+        cfg.continuous = false;
+    }
     if args.flag("no-ssd") {
         cfg.use_ssd = false;
     }
@@ -105,6 +111,8 @@ USAGE: m2cache <command> [flags]
 COMMANDS:
   info            platform, artifacts, model geometries
   generate        run the executed tiny model: --prompt TEXT --tokens N
+                  [--stream]           print tokens as they decode (the
+                                       event-driven serving core)
   serve           TCP server: --addr HOST:PORT [--max-requests N]
                   [--sessions N]       interleave up to N decode sessions
                   [--prefill-chunk N]  prompt tokens per scheduler turn
@@ -112,9 +120,15 @@ COMMANDS:
                                        co-resident sessions (union-plan
                                        cache reconciliation)
                   [--batch-kernel]     + stacked layer_step_batch HLO
-                  protocol: `GEN <max_new> <prompt>` or
+                  [--no-continuous]    admit only at turn assembly (v2
+                                       default admits into in-flight
+                                       turns)
+                  protocol v1: `GEN <max_new> <prompt>` or
                   `GEN@<class>[:<deadline_ms>] <max_new> <prompt>`
                   with class in {high, normal, batch}
+                  protocol v2 (`HELLO v2` first): streamed
+                  `ACK/TOK/END` frames, `CANCEL <id>` mid-decode,
+                  typed `ERR <code> <id> <msg>`
   simulate        simulated large-model run: --model {7B,13B,40B,70B}
                   --in N --out N [--policy atu|lru|window] [--dram-gib G]
                   [--no-ssd] [--no-cache] [--no-mp]
@@ -161,7 +175,54 @@ fn info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `generate --stream`: run the one request through the event-driven
+/// serving core and print each token the tick it is produced — the CLI
+/// face of the same `SessionEvent` stream protocol v2 serves.
+fn generate_stream(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    let opts = opts_of(args);
+    let prompt_text = args.get_or("prompt", "the quick brown fox ");
+    let n = args.get_usize("tokens", 48);
+    let eng = ExecEngine::new(Path::new(opts.artifacts), engine_config(args))?;
+    let mut core = ServingCore::from_engine(eng);
+    core.submit(Request::new(1, tokenize(prompt_text), n));
+    let start = std::time::Instant::now();
+    let mut first_tok_s = None;
+    let mut n_tokens = 0usize;
+    print!("{prompt_text}");
+    std::io::stdout().flush()?;
+    while !core.is_idle() {
+        for ev in core.pump(&mut || None) {
+            match ev {
+                SessionEvent::Token { token, .. } => {
+                    first_tok_s.get_or_insert_with(|| start.elapsed().as_secs_f64());
+                    n_tokens += 1;
+                    print!("{}", detokenize(&[token]));
+                    std::io::stdout().flush()?;
+                }
+                SessionEvent::Failed { error, .. } => anyhow::bail!(error),
+                _ => {}
+            }
+        }
+    }
+    let dt = start.elapsed().as_secs_f64();
+    let eng = core.into_engine();
+    println!();
+    println!(
+        "tokens : {} in {:.2}s = {:.1} tok/s | first token {:.0} ms (streamed)",
+        n_tokens,
+        dt,
+        n_tokens as f64 / dt.max(1e-9),
+        first_tok_s.unwrap_or(0.0) * 1e3,
+    );
+    println!("telemetry: {}", eng.tel.to_json());
+    Ok(())
+}
+
 fn generate(args: &Args) -> anyhow::Result<()> {
+    if args.flag("stream") {
+        return generate_stream(args);
+    }
     let opts = opts_of(args);
     let prompt_text = args.get_or("prompt", "the quick brown fox ");
     let n = args.get_usize("tokens", 48);
@@ -193,7 +254,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let eng = ExecEngine::new(Path::new(opts.artifacts), cfg)?;
     println!(
         "serving tiny model, up to {sessions} interleaved session(s) \
-         (protocol: `GEN[@class[:deadline_ms]] <max_new> <prompt>`)"
+         (v1: `GEN[@class[:deadline_ms]] <max_new> <prompt>`; \
+         v2 after `HELLO v2`: streamed TOK/END frames + `CANCEL <id>`)"
     );
     let eng = m2cache::coordinator::server::serve(eng, addr, max, |a| {
         println!("listening on {a}");

@@ -62,6 +62,9 @@ pub struct ClassCounters {
     pub admitted: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Requests the caller cancelled mid-flight (counted here, not in
+    /// `completed`; their partial tokens still show in token totals).
+    pub cancelled: u64,
     /// Completions that landed after their absolute deadline.
     pub deadline_missed: u64,
     /// Sum of TTFTs over completed requests, seconds (mean = sum /
@@ -186,6 +189,7 @@ impl Telemetry {
                 .begin_obj()
                 .field_int("done", c.completed as i64)
                 .field_int("missed", c.deadline_missed as i64)
+                .field_int("cancelled", c.cancelled as i64)
                 .field_num("mean_ttft_s", c.mean_ttft_s())
                 .end_obj();
         }

@@ -1,0 +1,416 @@
+//! Streaming serving tier — runs WITHOUT `make artifacts`.
+//!
+//! Pins the v2 serving contract at two levels over the deterministic
+//! [`StubSessionEngine`]:
+//!
+//! - **Core** (no sockets): token-event ordering, first token strictly
+//!   before completion, mid-decode cancel returning the KV slot to the
+//!   pool and evicting the session from the next turn set, continuous
+//!   admission joining an in-flight batched turn.
+//! - **Wire** (real TCP server, stub engine — `serve()` is generic):
+//!   v1 replies byte-identical to the pre-v2 protocol, v2 `ACK`/`TOK`/
+//!   `END` framing with a `TOK` observed strictly before `END`, a
+//!   `CANCEL` landing mid-decode over the wire, and the
+//!   snapshot-backed STATS reply.
+
+use m2cache::coordinator::{
+    server, tokenize, Request, SchedConfig, ServingCore, SessionEvent, StubSessionEngine,
+};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn req(id: u64, prompt: &str, max_new: usize) -> Request {
+    Request::new(id, tokenize(prompt), max_new)
+}
+
+// ---------------------------------------------------------------- core
+
+#[test]
+fn token_events_stream_in_order_and_strictly_before_done() {
+    let mut core = ServingCore::from_engine(StubSessionEngine::new(2));
+    core.submit(req(1, "the quick brown fox", 6));
+    core.submit(req(2, "jumps over", 4));
+    let mut streamed: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut first_token_tick: HashMap<u64, u64> = HashMap::new();
+    let mut done_tick: HashMap<u64, u64> = HashMap::new();
+    let mut finals: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut tick = 0u64;
+    while !core.is_idle() {
+        for ev in core.pump(&mut || None) {
+            match ev {
+                SessionEvent::Admitted { .. } => {}
+                SessionEvent::Token { id, token, index } => {
+                    let s = streamed.entry(id).or_default();
+                    assert_eq!(index, s.len(), "req {id}: token indices must be dense");
+                    s.push(token);
+                    first_token_tick.entry(id).or_insert(tick);
+                }
+                SessionEvent::Done(c) => {
+                    done_tick.insert(c.response.id, tick);
+                    finals.insert(c.response.id, c.response.tokens);
+                }
+                ev => panic!("unexpected event {ev:?}"),
+            }
+        }
+        tick += 1;
+    }
+    for id in [1u64, 2] {
+        // The tentpole's acceptance bar: a token is observable strictly
+        // before decode completion.
+        assert!(
+            first_token_tick[&id] < done_tick[&id],
+            "req {id}: first token not before completion"
+        );
+        // The stream and the final reply are the same bytes, and both
+        // equal the solo reference (interleaving is invisible).
+        assert_eq!(streamed[&id], finals[&id]);
+    }
+    assert_eq!(
+        finals[&1],
+        StubSessionEngine::reference_tokens(&tokenize("the quick brown fox"), 6)
+    );
+    assert_eq!(
+        finals[&2],
+        StubSessionEngine::reference_tokens(&tokenize("jumps over"), 4)
+    );
+}
+
+#[test]
+fn cancel_mid_decode_returns_slot_and_leaves_next_turn_set() {
+    let cfg = SchedConfig {
+        batch: true,
+        ..SchedConfig::default()
+    };
+    let mut core = ServingCore::new(StubSessionEngine::new(2), 2, cfg);
+    let pre_admit = core.scheduler().engine().available();
+    assert_eq!(pre_admit, 2);
+    core.submit(req(1, "abc", 64));
+    core.submit(req(2, "defg", 64));
+    // Run until both sessions are decoding (tokens observed from each).
+    let mut seen = [0usize; 2];
+    while seen[0] == 0 || seen[1] == 0 {
+        for ev in core.pump(&mut || None) {
+            if let SessionEvent::Token { id, .. } = ev {
+                seen[id as usize - 1] += 1;
+            }
+        }
+    }
+    assert_eq!(core.scheduler().engine().available(), 0);
+    // Mid-decode cancel: the slot must return to the pool immediately —
+    // `available()` back up before any further tick — and the next
+    // turn set must not contain the session.
+    let ev = core.cancel(1).expect("session 1 is mid-decode");
+    let cancelled_at = match ev {
+        SessionEvent::Cancelled { id: 1, tokens } => tokens,
+        ev => panic!("expected Cancelled, got {ev:?}"),
+    };
+    assert!(cancelled_at > 0, "cancel was supposed to land mid-decode");
+    assert_eq!(
+        core.scheduler().engine().available(),
+        pre_admit - 1,
+        "KV slot not returned on cancel"
+    );
+    let r = core.scheduler_mut().tick();
+    assert!(
+        !r.batch.contains(&1),
+        "cancelled session still in the turn set: {:?}",
+        r.batch
+    );
+    assert!(r.batch.contains(&2), "survivor missing from the turn set");
+    // The survivor runs to its full budget with reference bytes.
+    let events = core.run_until_idle();
+    let done = events
+        .iter()
+        .chain(r.events.iter())
+        .find_map(|e| match e {
+            SessionEvent::Done(c) => Some(c.response.clone()),
+            _ => None,
+        })
+        .expect("survivor completed");
+    assert_eq!(done.id, 2);
+    assert_eq!(
+        done.tokens,
+        StubSessionEngine::reference_tokens(&tokenize("defg"), 64)
+    );
+    assert_eq!(core.scheduler().engine().available(), pre_admit);
+    assert_eq!(core.snapshot().cancelled, 1);
+}
+
+#[test]
+fn continuous_admission_joins_inflight_turn_and_streams_same_bytes() {
+    let cfg = SchedConfig {
+        batch: true,
+        prefill_chunk: 12,
+        ..SchedConfig::default()
+    };
+    let mut core = ServingCore::new(StubSessionEngine::new(2), 2, cfg);
+    core.submit(req(1, "a long prompt", 4)); // 13 feeds: fills most of the chunk
+    // Request 2 arrives only at the second intake poll — i.e. while
+    // request 1's prefill turn is already in flight.
+    let mut arrivals = vec![req(2, "hi", 3)];
+    let mut polls = 0;
+    let events = core.pump(&mut || {
+        polls += 1;
+        if polls >= 2 {
+            arrivals.pop()
+        } else {
+            None
+        }
+    });
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, SessionEvent::Admitted { id: 2 })),
+        "joiner not admitted into the in-flight turn: {events:?}"
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, SessionEvent::Token { id: 2, .. })),
+        "joiner produced no token inside the joined turn: {events:?}"
+    );
+    // Joining mid-turn never changes anyone's bytes.
+    let mut finals: HashMap<u64, Vec<u32>> = HashMap::new();
+    for ev in events.into_iter().chain(core.run_until_idle()) {
+        if let SessionEvent::Done(c) = ev {
+            finals.insert(c.response.id, c.response.tokens);
+        }
+    }
+    assert_eq!(
+        finals[&1],
+        StubSessionEngine::reference_tokens(&tokenize("a long prompt"), 4)
+    );
+    assert_eq!(
+        finals[&2],
+        StubSessionEngine::reference_tokens(&tokenize("hi"), 3)
+    );
+}
+
+// ---------------------------------------------------------------- wire
+
+/// Boot the generic server over a stub engine; returns the address and
+/// the join handle (the warm engine comes back at shutdown).
+fn spawn_stub_server(
+    engine: StubSessionEngine,
+    max: u64,
+) -> (
+    std::net::SocketAddr,
+    std::thread::JoinHandle<StubSessionEngine>,
+) {
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server::serve(engine, "127.0.0.1:0", Some(max), move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap()
+    });
+    (addr_rx.recv().unwrap(), handle)
+}
+
+fn send_line(conn: &mut TcpStream, line: &str) {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim_end_matches('\n').to_string()
+}
+
+#[test]
+fn v1_replies_are_byte_identical_to_the_legacy_protocol() {
+    let (addr, handle) = spawn_stub_server(StubSessionEngine::new(2), 2);
+    // Error lines: exact legacy bytes.
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        send_line(&mut conn, "NONSENSE");
+        assert_eq!(read_line(&mut reader), "ERR expected GEN or STATS");
+        send_line(&mut conn, "GEN 8");
+        assert_eq!(read_line(&mut reader), "ERR empty prompt");
+        send_line(&mut conn, "GEN@vip 8 hello");
+        assert_eq!(read_line(&mut reader), "ERR bad priority class");
+        send_line(&mut conn, "GEN notanumber hi");
+        assert_eq!(read_line(&mut reader), "ERR bad max_new");
+        // CANCEL/HELLO are v2 verbs — a v1 connection keeps the legacy
+        // error bytes, well-formed or not.
+        send_line(&mut conn, "CANCEL 1");
+        assert_eq!(read_line(&mut reader), "ERR expected GEN or STATS");
+        send_line(&mut conn, "CANCEL x");
+        assert_eq!(read_line(&mut reader), "ERR expected GEN or STATS");
+        send_line(&mut conn, "HELLO v9");
+        assert_eq!(read_line(&mut reader), "ERR expected GEN or STATS");
+    }
+    // GEN replies: `OK <id> <3 timings> <text>` with the stub's exact
+    // reference bytes — an untouched v1 client sees the old protocol.
+    for prompt in ["the quick brown fox", "hello world"] {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        send_line(&mut conn, &format!("GEN 8 {prompt}"));
+        let reply = read_line(&mut reader);
+        let mut parts = reply.splitn(6, ' ');
+        assert_eq!(parts.next(), Some("OK"));
+        let _id: u64 = parts.next().unwrap().parse().unwrap();
+        for _ in 0..3 {
+            let _ms: f64 = parts.next().unwrap().parse().unwrap();
+        }
+        let text = parts.next().unwrap_or("");
+        let expect = m2cache::coordinator::detokenize(
+            &StubSessionEngine::reference_tokens(&tokenize(prompt), 8),
+        );
+        assert_eq!(text, expect, "v1 text changed for {prompt:?}");
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn v2_streams_tok_frames_strictly_before_end() {
+    let (addr, handle) = spawn_stub_server(StubSessionEngine::new(2), 1);
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "HELLO v2");
+    assert_eq!(read_line(&mut reader), "HELLO v2");
+    let prompt = "a journey of a thousand";
+    send_line(&mut conn, &format!("GEN 10 {prompt}"));
+    let ack = read_line(&mut reader);
+    let id: u64 = ack
+        .strip_prefix("ACK ")
+        .unwrap_or_else(|| panic!("expected ACK, got {ack:?}"))
+        .parse()
+        .unwrap();
+    let mut toks = Vec::new();
+    let end;
+    loop {
+        let frame = read_line(&mut reader);
+        if let Some(rest) = frame.strip_prefix("TOK ") {
+            let (fid, text) = rest.split_once(' ').unwrap_or((rest, ""));
+            assert_eq!(fid.parse::<u64>().unwrap(), id);
+            toks.push(text.to_string());
+        } else if let Some(rest) = frame.strip_prefix("END ") {
+            end = rest.to_string();
+            break;
+        } else {
+            panic!("unexpected frame {frame:?}");
+        }
+    }
+    // The acceptance bar on the wire: at least one TOK arrived before
+    // END, and the concatenated stream equals the v1 one-shot text.
+    assert!(!toks.is_empty(), "END with no TOK frames");
+    assert_eq!(toks.len(), 10);
+    let streamed: String = toks.concat();
+    let expect = m2cache::coordinator::detokenize(&StubSessionEngine::reference_tokens(
+        &tokenize(prompt),
+        10,
+    ));
+    assert_eq!(streamed, expect);
+    // END carries id + the three latency figures.
+    let mut parts = end.split(' ');
+    assert_eq!(parts.next().unwrap().parse::<u64>().unwrap(), id);
+    assert_eq!(parts.clone().count(), 3, "END {end:?}");
+    for ms in parts {
+        assert!(ms.parse::<f64>().unwrap() >= 0.0);
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn v2_cancel_lands_mid_decode_over_the_wire() {
+    // 2 ms per engine forward paces the decode loop, so the CANCEL sent
+    // after reading two TOK frames deterministically beats the 200-token
+    // budget (~400 ms of remaining decode).
+    let engine = StubSessionEngine::new(2).with_step_delay(Duration::from_millis(2));
+    // max = 2 terminal replies: the CANCELLED and the follow-up END.
+    let (addr, handle) = spawn_stub_server(engine, 2);
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "HELLO v2");
+    assert_eq!(read_line(&mut reader), "HELLO v2");
+    send_line(&mut conn, "GEN 200 abcdefgh");
+    let id: u64 = read_line(&mut reader)
+        .strip_prefix("ACK ")
+        .expect("ACK first")
+        .parse()
+        .unwrap();
+    // Read two streamed tokens, then hang up this request.
+    for _ in 0..2 {
+        let frame = read_line(&mut reader);
+        assert!(frame.starts_with(&format!("TOK {id} ")), "{frame:?}");
+    }
+    send_line(&mut conn, &format!("CANCEL {id}"));
+    // Drain TOK frames already in flight until the CANCELLED ack.
+    let tokens_at_cancel;
+    loop {
+        let frame = read_line(&mut reader);
+        if let Some(rest) = frame.strip_prefix("CANCELLED ") {
+            let (fid, toks) = rest.split_once(' ').expect("CANCELLED <id> <tokens>");
+            assert_eq!(fid.parse::<u64>().unwrap(), id);
+            tokens_at_cancel = toks.parse::<usize>().unwrap();
+            break;
+        }
+        assert!(frame.starts_with("TOK "), "unexpected frame {frame:?}");
+    }
+    assert!(
+        (2..200).contains(&tokens_at_cancel),
+        "cancel was not mid-decode: {tokens_at_cancel} tokens"
+    );
+    // The server keeps serving this connection: STATS shows the cancel
+    // in the snapshot, an unknown-id CANCEL answers the canceller with
+    // a typed ERR (not a terminal reply), and a fresh GEN streams to
+    // completion.
+    send_line(&mut conn, "STATS");
+    let stats = read_line(&mut reader);
+    assert!(stats.contains("\"cancelled\":1"), "{stats}");
+    send_line(&mut conn, "CANCEL 9999");
+    assert_eq!(read_line(&mut reader), "ERR 22 9999 unknown id");
+    send_line(&mut conn, "GEN 3 ok then");
+    let ack = read_line(&mut reader);
+    let id2: u64 = ack.strip_prefix("ACK ").unwrap().parse().unwrap();
+    assert_ne!(id, id2);
+    let mut got_end = false;
+    let mut n_toks = 0;
+    while !got_end {
+        let frame = read_line(&mut reader);
+        if frame.starts_with(&format!("TOK {id2} ")) {
+            n_toks += 1;
+        } else if frame.starts_with(&format!("END {id2} ")) {
+            got_end = true;
+        } else {
+            panic!("unexpected frame {frame:?}");
+        }
+    }
+    assert_eq!(n_toks, 3);
+    let engine = handle.join().unwrap();
+    assert_eq!(engine.available(), 2, "cancel leaked a KV slot");
+}
+
+#[test]
+fn v2_parse_errors_carry_stable_codes() {
+    let (addr, handle) = spawn_stub_server(StubSessionEngine::new(1), 1);
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "HELLO v2");
+    assert_eq!(read_line(&mut reader), "HELLO v2");
+    send_line(&mut conn, "NONSENSE");
+    assert_eq!(read_line(&mut reader), "ERR 11 0 expected GEN or STATS");
+    send_line(&mut conn, "GEN 8");
+    assert_eq!(read_line(&mut reader), "ERR 15 0 empty prompt");
+    send_line(&mut conn, "CANCEL nope");
+    assert_eq!(read_line(&mut reader), "ERR 16 0 bad id");
+    send_line(&mut conn, "HELLO v9");
+    assert_eq!(
+        read_line(&mut reader),
+        "ERR 17 0 unsupported protocol version"
+    );
+    // Unblock the server's max-requests bound.
+    send_line(&mut conn, "GEN 2 bye");
+    let _ack = read_line(&mut reader);
+    let mut saw_end = false;
+    while !saw_end {
+        saw_end = read_line(&mut reader).starts_with("END ");
+    }
+    handle.join().unwrap();
+}

@@ -19,12 +19,13 @@
 //!   trace and the same simulated clock.
 
 use anyhow::Result;
-use m2cache::coordinator::workload::{generate, Mix, TraceEvent, TraceSpec};
+use m2cache::coordinator::workload::{generate, inject_cancellations, Mix, TraceEvent, TraceSpec};
 use m2cache::coordinator::{
     DecodeSession, Outcome, Priority, Request, SchedConfig, SchedMode, Scheduler, SessionEngine,
+    SessionEvent,
 };
 use m2cache::telemetry::{ClassCounters, N_CLASSES};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 const VOCAB: usize = 97;
 
@@ -392,6 +393,138 @@ fn deadline_miss_accounting_matches_replay_bookkeeping() {
             );
         }
     }
+}
+
+#[test]
+fn cancellation_trace_preserves_surviving_bytes_and_frees_every_slot() {
+    // A cancellation-bearing trace on the virtual clock: every 3rd
+    // batch-class flood request is abandoned 25 virtual ms after it
+    // arrives. The contract: cancels are acknowledged exactly once,
+    // every surviving request's bytes equal the sequential reference
+    // (cancellation is invisible to survivors), cancelled requests
+    // never reach their full budget accidentally, and every KV slot is
+    // back in the pool at the end.
+    const SLOTS: usize = 3;
+    let mut events = generate(&spec(Mix::AdversarialLongPrompt, 60));
+    let tagged = inject_cancellations(&mut events, 3, 25);
+    assert!(tagged >= 10, "trace too thin: {tagged} cancels");
+    let reference = sequential_reference(&events);
+
+    // Two cancel shapes. *Timed* cancels fire 25 virtual ms after
+    // arrival — far less than any flood prompt's prefill (≥ 48 forwards
+    // at 1 ms each), so they deterministically catch their target
+    // backlogged or mid-prefill. *Reactive* cancels model a client
+    // hanging up after reading streamed output: the first few tagged
+    // requests are cancelled the moment their second token is observed,
+    // which is deterministically mid-decode.
+    let tagged_ids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.cancel_after_ms.is_some())
+        .map(|e| e.id)
+        .collect();
+    let reactive: HashSet<u64> = tagged_ids.iter().copied().take(4).collect();
+    let mut cancels: Vec<(u64, u64)> = events
+        .iter()
+        .filter(|e| !reactive.contains(&e.id))
+        .filter_map(|e| e.cancel_after_ms.map(|d| (e.at_ms + d, e.id)))
+        .collect();
+    cancels.sort_unstable();
+
+    let mut sched = Scheduler::with_config(StubEngine::new(SLOTS), SLOTS, edf_cfg());
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut next_cancel = 0usize;
+    let mut tokens: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut cancelled: HashMap<u64, usize> = HashMap::new();
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        while next_cancel < cancels.len() && cancels[next_cancel].0 <= now {
+            let id = cancels[next_cancel].1;
+            next_cancel += 1;
+            match sched.cancel(id) {
+                Some(SessionEvent::Cancelled { id: cid, tokens }) => {
+                    assert_eq!(cid, id);
+                    assert!(cancelled.insert(id, tokens).is_none(), "double cancel ack");
+                }
+                Some(ev) => panic!("cancel returned {ev:?}"),
+                // Too late — the request finished before the client
+                // gave up. Legal; it must then appear in `tokens`.
+                None => {}
+            }
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() && next_cancel >= cancels.len() {
+                break;
+            }
+            let jump_ev = events.get(next_ev).map(|e| e.at_ms).unwrap_or(u64::MAX);
+            let jump_c = cancels.get(next_cancel).map(|c| c.0).unwrap_or(u64::MAX);
+            now = jump_ev.min(jump_c);
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        // A cancelled id must never appear in a later turn.
+        if let Some(id) = r.stepped {
+            assert!(!cancelled.contains_key(&id), "cancelled {id} got a turn");
+        }
+        for ev in &r.events {
+            if let SessionEvent::Token { id, index: 1, .. } = ev {
+                if reactive.contains(id) && !cancelled.contains_key(id) {
+                    // The client read two streamed tokens and hung up.
+                    match sched.cancel(*id) {
+                        Some(SessionEvent::Cancelled { tokens, .. }) => {
+                            assert!(tokens >= 2, "mid-decode cancel saw {tokens} tokens");
+                            cancelled.insert(*id, tokens);
+                        }
+                        other => panic!("reactive cancel of {id} returned {other:?}"),
+                    }
+                }
+            }
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+    }
+    // Every request settled exactly one way.
+    for ev in &events {
+        let done = tokens.contains_key(&ev.id);
+        let gone = cancelled.contains_key(&ev.id);
+        assert!(done ^ gone, "request {} done={done} cancelled={gone}", ev.id);
+    }
+    assert!(!cancelled.is_empty(), "no cancel landed in time");
+    // Byte-equality for every survivor; partial progress for the gone.
+    for (id, toks) in &tokens {
+        assert_eq!(toks, &reference[id], "survivor {id} bytes changed");
+    }
+    for (id, partial) in &cancelled {
+        let budget = events[*id as usize - 1].max_new;
+        assert!(
+            *partial < budget,
+            "cancelled {id} generated its whole budget ({partial}/{budget})"
+        );
+    }
+    // At least one cancel landed mid-decode (tokens flowing) — the
+    // trace exercises the hard path, not just backlog drops.
+    assert!(
+        cancelled.values().any(|&t| t > 0),
+        "every cancel hit before decode: {cancelled:?}"
+    );
+    // All KV slots returned; class accounting matches.
+    assert_eq!(sched.engine().free.len(), SLOTS, "leaked KV slots");
+    assert_eq!(sched.cancelled as usize, cancelled.len());
+    let batch_cls = Priority::Batch.index();
+    assert_eq!(sched.classes[batch_cls].cancelled as usize, cancelled.len());
 }
 
 #[test]
