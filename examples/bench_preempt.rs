@@ -1,0 +1,227 @@
+//! Preemptive-serving bench: quantifies the tiered-KV tentpole on the
+//! deterministic stub scheduler — 2x session oversubscription over N KV
+//! slots, replayed on the virtual clock (1 ms per engine forward)
+//! against the same trace served uncontended — and writes the numbers
+//! to `BENCH_preempt.json` so the serving trajectory has data points CI
+//! can archive per PR.
+//!
+//!   cargo run --release --example bench_preempt            # full run
+//!   cargo run --release --example bench_preempt -- --quick # CI smoke
+//!                                          [--out PATH]    # json path
+//!
+//! Acceptance bars (asserted in the full run, reported in both):
+//!   - the oversubscribed case completes EVERY request with zero
+//!     capacity rejections (spill/restore instead of refusal), with
+//!     preemptions actually exercised and every ticket resumed;
+//!   - p99 TTFT inflation vs the uncontended run stays bounded (the
+//!     price of halving KV slots is spill traffic and queueing, not
+//!     collapse).
+//!
+//! The trace is the adversarial long-prompt mix: a Batch flood holding
+//! every slot while sparse tight-deadline High requests arrive — the
+//! preemption trigger.
+
+use m2cache::coordinator::workload::{generate, Mix, TraceSpec};
+use m2cache::coordinator::{Outcome, Scheduler, SessionEvent, StubSessionEngine};
+use m2cache::util::bench::fmt_dur;
+use m2cache::util::text::JsonWriter;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+const VOCAB: u32 = 97;
+/// Generous structural bound for the full-run assertion: halving slots
+/// must not blow tail latency up by an order of magnitude.
+const MAX_P99_INFLATION: f64 = 10.0;
+
+struct Case {
+    label: &'static str,
+    slots: usize,
+    sessions: usize,
+    completed: usize,
+    rejected: u64,
+    preemptions: u64,
+    resumes: u64,
+    spills: u64,
+    restores: u64,
+    p99_ttft_ms: u64,
+    mean_ttft_ms: f64,
+    wall_virtual_ms: u64,
+    host: Duration,
+}
+
+fn p99(mut xs: Vec<u64>) -> u64 {
+    assert!(!xs.is_empty());
+    xs.sort_unstable();
+    let idx = ((xs.len() as f64) * 0.99).ceil() as usize - 1;
+    xs[idx.min(xs.len() - 1)]
+}
+
+/// Replay the trace through a scheduler over `slots` physical KV slots
+/// with `sessions` allowed in flight, on the virtual clock.
+fn run_case(label: &'static str, slots: usize, sessions: usize, n: usize) -> Case {
+    let events = generate(&TraceSpec {
+        mix: Mix::AdversarialLongPrompt,
+        n,
+        seed: 0x7ACE,
+        vocab: VOCAB,
+    });
+    let host = Instant::now();
+    let engine = StubSessionEngine::new(slots).with_spill();
+    let mut sched = Scheduler::new(engine, sessions);
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut submit_ms: HashMap<u64, u64> = HashMap::new();
+    let mut ttft_ms: HashMap<u64, u64> = HashMap::new();
+    let mut completed = 0usize;
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            submit_ms.insert(events[next_ev].id, now);
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        for ev in &r.events {
+            if let SessionEvent::Token { id, index: 0, .. } = ev {
+                ttft_ms.entry(*id).or_insert(now);
+            }
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(_) => completed += 1,
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+    }
+    let ttfts: Vec<u64> = events
+        .iter()
+        .map(|e| ttft_ms[&e.id].saturating_sub(submit_ms[&e.id]))
+        .collect();
+    let mean = ttfts.iter().sum::<u64>() as f64 / ttfts.len() as f64;
+    assert_eq!(sched.engine().parked(), 0, "{label}: leaked spill tickets");
+    assert_eq!(sched.engine().available(), slots, "{label}: leaked KV slots");
+    Case {
+        label,
+        slots,
+        sessions,
+        completed,
+        rejected: sched.rejected,
+        preemptions: sched.preemptions,
+        resumes: sched.resumes,
+        spills: sched.engine().spills,
+        restores: sched.engine().restores,
+        p99_ttft_ms: p99(ttfts),
+        mean_ttft_ms: mean,
+        wall_virtual_ms: now,
+        host: host.elapsed(),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_preempt.json".to_string());
+    let (slots, n): (usize, usize) = if quick { (2, 24) } else { (4, 60) };
+    let sessions = 2 * slots; // the oversubscription under test
+
+    let over = run_case("oversubscribed", slots, sessions, n);
+    let base = run_case("uncontended", sessions, sessions, n);
+
+    println!(
+        "Preemptive serving, stub scheduler on the virtual clock, \
+         adversarial trace (n={n}):\n"
+    );
+    println!(
+        "{:<16} {:>5} {:>8} {:>9} {:>8} {:>7} {:>8} {:>11} {:>12} {:>9}",
+        "case", "slots", "sessions", "completed", "rejected", "preempt", "resumes",
+        "p99 TTFT ms", "mean TTFT ms", "host"
+    );
+    for c in [&over, &base] {
+        println!(
+            "{:<16} {:>5} {:>8} {:>9} {:>8} {:>7} {:>8} {:>11} {:>12.1} {:>9}",
+            c.label,
+            c.slots,
+            c.sessions,
+            c.completed,
+            c.rejected,
+            c.preemptions,
+            c.resumes,
+            c.p99_ttft_ms,
+            c.mean_ttft_ms,
+            fmt_dur(c.host),
+        );
+    }
+    let inflation = over.p99_ttft_ms as f64 / (base.p99_ttft_ms.max(1)) as f64;
+    println!(
+        "\noversubscribed {sessions} sessions over {slots} slots: {} preemptions, \
+         {} spills / {} restores, p99 TTFT {inflation:.2}x uncontended",
+        over.preemptions, over.spills, over.restores
+    );
+
+    let mut w = JsonWriter::new();
+    w.begin_obj()
+        .field_str("engine", "stub-virtual-clock")
+        .field_str("trace", "adversarial-long-prompt")
+        .field_int("n", n as i64)
+        .field_num("p99_ttft_inflation", inflation);
+    w.key("cases").begin_arr();
+    for c in [&over, &base] {
+        w.begin_obj()
+            .field_str("label", c.label)
+            .field_int("slots", c.slots as i64)
+            .field_int("sessions", c.sessions as i64)
+            .field_int("completed", c.completed as i64)
+            .field_int("rejected", c.rejected as i64)
+            .field_int("preemptions", c.preemptions as i64)
+            .field_int("resumes", c.resumes as i64)
+            .field_int("spills", c.spills as i64)
+            .field_int("restores", c.restores as i64)
+            .field_int("p99_ttft_ms", c.p99_ttft_ms as i64)
+            .field_num("mean_ttft_ms", c.mean_ttft_ms)
+            .field_int("wall_virtual_ms", c.wall_virtual_ms as i64)
+            .field_num("host_ms", c.host.as_secs_f64() * 1e3)
+            .end_obj();
+    }
+    w.end_arr().end_obj();
+    std::fs::write(&out_path, w.finish()).expect("write BENCH_preempt.json");
+    println!("wrote {out_path}");
+
+    if !quick {
+        // The PR acceptance bars — fail loudly on regression.
+        assert_eq!(
+            (over.completed, over.rejected),
+            (n, 0),
+            "REGRESSION: oversubscribed serving dropped or rejected requests"
+        );
+        assert_eq!((base.completed, base.rejected), (n, 0));
+        assert!(
+            over.preemptions > 0 && over.resumes == over.preemptions,
+            "REGRESSION: preemption not exercised ({} preempt / {} resume)",
+            over.preemptions,
+            over.resumes
+        );
+        assert!(
+            inflation <= MAX_P99_INFLATION,
+            "REGRESSION: p99 TTFT inflated {inflation:.2}x (> {MAX_P99_INFLATION}x)"
+        );
+        println!(
+            "acceptance: zero rejections, preemption exercised, \
+             p99 inflation {inflation:.2}x <= {MAX_P99_INFLATION}x — PASS"
+        );
+    }
+}

@@ -117,7 +117,12 @@ fn main() -> anyhow::Result<()> {
                 n_toks += 1;
             } else if frame.starts_with("END ") {
                 break;
-            } else if frame.starts_with("ACK ") {
+            } else if frame.starts_with("ACK ")
+                || frame.starts_with("PREEMPTED ")
+                || frame.starts_with("RESUMED ")
+            {
+                // Status frames: accepted, or parked/restored by the
+                // preemptive scheduler (tokens pause, then continue).
                 continue;
             } else {
                 anyhow::bail!("unexpected frame {frame:?}");

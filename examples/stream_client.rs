@@ -3,24 +3,32 @@
 //!
 //!   cargo run --release --example stream_client
 //!       self-hosts a server over the deterministic stub engine (no
-//!       artifacts needed), streams one generation, then demonstrates
-//!       a mid-decode CANCEL — asserting the streaming contract:
-//!       `ACK` first, at least one `TOK` strictly before `END`, and
-//!       `CANCELLED` freeing the request early. Exits non-zero if any
-//!       of it fails, so CI can gate on it.
+//!       artifacts needed), streams one generation, demonstrates a
+//!       mid-decode CANCEL, then *pipelines* several requests on the
+//!       same connection — asserting the streaming contract: `ACK`
+//!       first, at least one `TOK` strictly before `END`, `CANCELLED`
+//!       freeing the request early, and interleaved TOK frames
+//!       demultiplexing by id back to each request's solo bytes. Exits
+//!       non-zero if any of it fails, so CI can gate on it.
 //!
 //!   cargo run --release --example stream_client -- --addr HOST:PORT
 //!       talks v2 to a running `m2cache serve` (any engine) instead;
-//!       the cancel demo is skipped unless `--cancel` is passed.
+//!       the cancel and pipeline demos are skipped unless `--cancel` /
+//!       `--pipeline` are passed.
 //!
-//! Flags: --tokens N (default 24), --prompt TEXT, --cancel
+//! Flags: --tokens N (default 24), --prompt TEXT, --cancel, --pipeline
 
-use m2cache::coordinator::{server, StubSessionEngine};
+use m2cache::coordinator::{detokenize, server, tokenize, StubSessionEngine};
 use m2cache::util::cli::Args;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Requests the pipelining demo multiplexes on one connection.
+const PIPELINE_PROMPTS: [&str; 3] = ["alpha says ", "beta notes ", "gamma adds "];
+const PIPELINE_TOKENS: usize = 8;
 
 fn send(conn: &mut TcpStream, line: &str) -> anyhow::Result<()> {
     conn.write_all(line.as_bytes())?;
@@ -47,7 +55,8 @@ fn main() -> anyhow::Result<()> {
         None => {
             let engine =
                 StubSessionEngine::new(2).with_step_delay(Duration::from_millis(2));
-            let max = 2; // the streamed GEN + the cancelled GEN
+            // The streamed GEN + the cancelled GEN + the pipeline batch.
+            let max = 2 + PIPELINE_PROMPTS.len() as u64;
             let (tx, rx) = mpsc::channel();
             let handle = std::thread::spawn(move || {
                 server::serve(engine, "127.0.0.1:0", Some(max), move |a| {
@@ -61,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let run_cancel_demo = server_handle.is_some() || args.flag("cancel");
+    let run_pipeline_demo = server_handle.is_some() || args.flag("pipeline");
 
     let mut conn = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(conn.try_clone()?);
@@ -90,6 +100,10 @@ fn main() -> anyhow::Result<()> {
         } else if let Some(rest) = frame.strip_prefix(&format!("END {id} ")) {
             end_line = rest.to_string();
             break;
+        } else if frame.starts_with("PREEMPTED ") || frame.starts_with("RESUMED ") {
+            // Parked/restored by a preemptive server: tokens pause,
+            // then continue byte-identically.
+            continue;
         } else {
             anyhow::bail!("unexpected frame {frame:?}");
         }
@@ -125,13 +139,84 @@ fn main() -> anyhow::Result<()> {
                 cancelled_at = rest.parse::<usize>()?;
                 break;
             }
-            anyhow::ensure!(frame.starts_with("TOK "), "unexpected frame {frame:?}");
+            anyhow::ensure!(
+                frame.starts_with("TOK ")
+                    || frame.starts_with("PREEMPTED ")
+                    || frame.starts_with("RESUMED "),
+                "unexpected frame {frame:?}"
+            );
         }
         anyhow::ensure!(
             cancelled_at < 200,
             "cancel failed to stop the 200-token request"
         );
         println!("cancel OK: request {cid} stopped after {cancelled_at}/200 tokens");
+    }
+
+    // --- multi-request pipelining demo ---------------------------
+    // Submit several GENs back-to-back on this one v2 connection and
+    // demultiplex the interleaved TOK frames by id. ACKs arrive in
+    // submission order, which is how ids map back to prompts.
+    if run_pipeline_demo {
+        for p in &PIPELINE_PROMPTS {
+            send(&mut conn, &format!("GEN {PIPELINE_TOKENS} {p}"))?;
+        }
+        let mut acks: Vec<u64> = Vec::new();
+        let mut streams: HashMap<u64, String> = HashMap::new();
+        let mut tok_order: Vec<u64> = Vec::new();
+        let mut ended: HashSet<u64> = HashSet::new();
+        while ended.len() < PIPELINE_PROMPTS.len() {
+            let frame = recv(&mut reader)?;
+            if let Some(rest) = frame.strip_prefix("ACK ") {
+                acks.push(rest.trim().parse()?);
+            } else if let Some(rest) = frame.strip_prefix("TOK ") {
+                let (fid, text) = rest.split_once(' ').unwrap_or((rest, ""));
+                let fid: u64 = fid.parse()?;
+                tok_order.push(fid);
+                streams.entry(fid).or_default().push_str(text);
+            } else if let Some(rest) = frame.strip_prefix("END ") {
+                let fid: u64 = rest.split(' ').next().unwrap_or("").parse()?;
+                anyhow::ensure!(ended.insert(fid), "duplicate END for {fid}");
+            } else if frame.starts_with("PREEMPTED ") || frame.starts_with("RESUMED ") {
+                continue;
+            } else {
+                anyhow::bail!("unexpected frame {frame:?}");
+            }
+        }
+        anyhow::ensure!(
+            acks.len() == PIPELINE_PROMPTS.len(),
+            "expected {} ACKs, saw {acks:?}",
+            PIPELINE_PROMPTS.len()
+        );
+        for (p, fid) in PIPELINE_PROMPTS.iter().zip(&acks) {
+            let got = streams.get(fid).cloned().unwrap_or_default();
+            anyhow::ensure!(!got.is_empty(), "request {fid} streamed nothing");
+            if server_handle.is_some() {
+                // Self-hosted stub: each demultiplexed stream must be
+                // byte-identical to the request served alone.
+                let expect = detokenize(&StubSessionEngine::reference_tokens(
+                    &tokenize(p),
+                    PIPELINE_TOKENS,
+                ));
+                anyhow::ensure!(
+                    got == expect,
+                    "request {fid} demux mismatch: {got:?} != {expect:?}"
+                );
+            }
+        }
+        if server_handle.is_some() {
+            // Fair interleaving over the stub server: the TOK stream
+            // must actually switch between ids, not serialize.
+            let switches = tok_order.windows(2).filter(|w| w[0] != w[1]).count();
+            anyhow::ensure!(
+                switches >= PIPELINE_PROMPTS.len(),
+                "TOK frames never interleaved: {tok_order:?}"
+            );
+        }
+        println!(
+            "pipeline OK: {} interleaved requests demultiplexed on one connection",
+            PIPELINE_PROMPTS.len()
+        );
     }
 
     if let Some(handle) = server_handle {

@@ -72,10 +72,25 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Token-to-token overlap for synthetic traces (Fig 6: ~0.8).
     pub trace_overlap: f64,
-    /// Concurrent decode sessions the engine reserves KV slots for (the
-    /// scheduler's admission bound; `--sessions N` on the CLI). 1 keeps
-    /// the paper's batch-1 decode shape.
+    /// Concurrent decode sessions the scheduler keeps in flight
+    /// (`--sessions N` on the CLI). 1 keeps the paper's batch-1 decode
+    /// shape. May exceed [`Self::kv_slots`]: the overflow parks in the
+    /// tiered KV store's spill tiers under preemptive scheduling.
     pub max_sessions: usize,
+    /// Physical HBM KV slots the engine reserves (`--kv-slots N`).
+    /// None sizes the pool at `max_sessions` — the PR-1 shape with no
+    /// oversubscription. Fewer slots than sessions turns the scheduler
+    /// preemptive: it spills the lowest-utility session's KV to
+    /// DRAM/SSD when a more urgent request needs a slot.
+    pub kv_slots: Option<usize>,
+    /// DRAM spill-area budget for preempted KV state, bytes
+    /// (`--kv-spill-dram-mib M`). Spills past it land in the SSD spill
+    /// file. Shared meaning across the executed store and the sim cost
+    /// model.
+    pub kv_spill_dram: u64,
+    /// Times one session may be preempted before it becomes
+    /// unpreemptible (`--preempt-cap N`; 0 disables preemption).
+    pub preempt_cap: u32,
     /// Max prompt tokens one scheduler turn may feed (chunked prefill):
     /// long prompts yield the engine between chunks instead of
     /// head-of-line blocking in-flight decodes, short prompts absorb in
@@ -127,6 +142,9 @@ impl Default for EngineConfig {
             seed: 0,
             trace_overlap: 0.8,
             max_sessions: 1,
+            kv_slots: None,
+            kv_spill_dram: 64 << 20,
+            preempt_cap: crate::coordinator::scheduler::DEFAULT_PREEMPT_CAP,
             prefill_chunk: 16,
             starvation_guard: crate::coordinator::scheduler::DEFAULT_STARVATION_GUARD,
             continuous: true,

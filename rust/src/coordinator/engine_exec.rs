@@ -7,18 +7,21 @@
 //! path.
 //!
 //! Per-request decode state lives in [`DecodeSession`]s drawing KV
-//! slots from a bounded [`KvPool`]; the engine itself holds only the
-//! shared, warm state (runtime, weight store, cache units, DRAM cache,
-//! preloader). See [`crate::coordinator::scheduler`] for how sessions
-//! interleave.
+//! slots from the tiered [`KvStore`] (bounded HBM slot array plus the
+//! DRAM/SSD spill tiers preempted sessions park in); the engine itself
+//! holds only the shared, warm state (runtime, weight store, cache
+//! units, DRAM cache, preloader). See
+//! [`crate::coordinator::scheduler`] for how sessions interleave and
+//! preempt.
 
 use crate::cache::{
     partition_by_union, union_plans, CacheUnit, DramCache, FileFlash, FlashStore, HbmPolicy,
     NeuronAt, Preloader,
 };
 use crate::coordinator::config::EngineConfig;
+use crate::coordinator::kv_store::KvStore;
 use crate::coordinator::request::Request;
-use crate::coordinator::session::{DecodeSession, KvPool, SessionEngine};
+use crate::coordinator::session::{DecodeSession, KvTicket, SessionEngine};
 use crate::model::weights::{PredictorWeights, WeightStore};
 use crate::precision::plan::{plan_from_scores, LayerPlan};
 use crate::precision::quant::wire_bytes;
@@ -44,10 +47,13 @@ pub struct ExecEngine {
     policy: Box<dyn HbmPolicy>,
     dram: DramCache,
     preloader: Preloader,
-    // Per-session KV cache slots ([S*d] per layer per slot). Slot
-    // `legacy_slot` backs the single-cursor feed()/reset() API; the
-    // remaining `cfg.max_sessions` slots serve concurrent sessions.
-    pool: KvPool,
+    // Tiered per-session KV store: HBM slots ([S*d] per layer per
+    // slot) plus the DRAM/SSD spill tiers preempted sessions park in.
+    // Slot `legacy_slot` backs the single-cursor feed()/reset() API;
+    // the remaining slots serve concurrent sessions — and with
+    // `cfg.kv_slots` below `cfg.max_sessions`, the scheduler
+    // oversubscribes them via spill/restore.
+    kv: KvStore,
     legacy_slot: usize,
     pos: usize,
     pub overlap: OverlapTracker,
@@ -154,13 +160,16 @@ impl ExecEngine {
 
         let n_layers = spec.n_layers;
         let policy = cfg.policy.build();
-        // One KV slot per concurrent session plus one for the legacy
-        // single-cursor feed() path, so serving and direct scoring never
-        // contend for the same buffers.
-        let mut pool = KvPool::new(cfg.max_sessions.max(1) + 1, n_layers, max_seq * d);
-        let legacy_slot = pool.acquire().expect("fresh pool has a slot");
+        // One HBM KV slot per *resident* session (physical slots:
+        // `kv_slots`, defaulting to `max_sessions`) plus one for the
+        // legacy single-cursor feed() path, so serving and direct
+        // scoring never contend for the same buffers. Sessions beyond
+        // the slot count park in the store's DRAM/SSD spill tiers.
+        let slots = cfg.kv_slots.unwrap_or(cfg.max_sessions).max(1);
+        let mut kv = KvStore::new(slots + 1, n_layers, max_seq * d, cfg.kv_spill_dram);
+        let legacy_slot = kv.acquire().expect("fresh pool has a slot");
         let tel = Telemetry {
-            kv_pool_bytes: pool.bytes(),
+            kv_pool_bytes: kv.bytes(),
             ..Telemetry::default()
         };
         Ok(ExecEngine {
@@ -176,7 +185,7 @@ impl ExecEngine {
             policy,
             dram,
             preloader,
-            pool,
+            kv,
             legacy_slot,
             pos: 0,
             overlap: OverlapTracker::new(n_layers),
@@ -223,7 +232,7 @@ impl ExecEngine {
     /// units and DRAM stay warm — exactly like a long-running server.
     /// Concurrent sessions are unaffected; they own their own slots.
     pub fn reset(&mut self) {
-        self.pool.zero(self.legacy_slot);
+        self.kv.zero(self.legacy_slot);
         self.pos = 0;
     }
 
@@ -359,8 +368,8 @@ impl ExecEngine {
             }
             let m = lit_f32(&step_mask, &[unit.capacity as i64])?;
             self.mask_buf = step_mask;
-            let kc = lit_f32(self.pool.k_layer(slot, l), &[s, d as i64])?;
-            let vc = lit_f32(self.pool.v_layer(slot, l), &[s, d as i64])?;
+            let kc = lit_f32(self.kv.k_layer(slot, l), &[s, d as i64])?;
+            let vc = lit_f32(self.kv.v_layer(slot, l), &[s, d as i64])?;
             let a = &self.attn[l];
             let out = self.rt.exec(
                 "layer_step",
@@ -384,7 +393,7 @@ impl ExecEngine {
                 .map_err(|_| anyhow::anyhow!("layer_step arity"))?;
             let kv = to_vec_f32(&k_new)?;
             let vv = to_vec_f32(&v_new)?;
-            self.pool.write_token(slot, l, pos, d, &kv, &vv);
+            self.kv.write_token(slot, l, pos, d, &kv, &vv);
             x = x_out;
             self.tel.phases.ffn_s += timer.lap_s();
 
@@ -552,8 +561,8 @@ impl ExecEngine {
             }
             let m = lit_f32(&step_mask, &[capacity as i64])?;
             self.mask_buf = step_mask;
-            let kc = lit_f32(self.pool.k_layer(slot, l), &[s, d as i64])?;
-            let vc = lit_f32(self.pool.v_layer(slot, l), &[s, d as i64])?;
+            let kc = lit_f32(self.kv.k_layer(slot, l), &[s, d as i64])?;
+            let vc = lit_f32(self.kv.v_layer(slot, l), &[s, d as i64])?;
             let a = &self.attn[l];
             let out = self.rt.exec(
                 "layer_step",
@@ -577,7 +586,7 @@ impl ExecEngine {
                 .map_err(|_| anyhow::anyhow!("layer_step arity"))?;
             let kv = to_vec_f32(&k_new)?;
             let vv = to_vec_f32(&v_new)?;
-            self.pool.write_token(slot, l, pos, d, &kv, &vv);
+            self.kv.write_token(slot, l, pos, d, &kv, &vv);
             xs[li] = x_out;
         }
         Ok(())
@@ -639,9 +648,9 @@ impl ExecEngine {
                     mask_stage[lane * capacity + sl] = 1.0;
                 }
                 k_stage[lane * s * d..(lane + 1) * s * d]
-                    .copy_from_slice(self.pool.k_layer(slot, l));
+                    .copy_from_slice(self.kv.k_layer(slot, l));
                 v_stage[lane * s * d..(lane + 1) * s * d]
-                    .copy_from_slice(self.pool.v_layer(slot, l));
+                    .copy_from_slice(self.kv.v_layer(slot, l));
                 pos_stage[lane] = pos as i32;
             }
             let a = &self.attn[l];
@@ -670,7 +679,7 @@ impl ExecEngine {
             let vo = to_vec_f32(&v_new)?;
             for (lane, &li) in chunk.iter().enumerate() {
                 let (_token, slot, pos) = lanes[li];
-                self.pool.write_token(
+                self.kv.write_token(
                     slot,
                     l,
                     pos,
@@ -765,10 +774,46 @@ impl ExecEngine {
         }
         Ok(total)
     }
+
+    /// Per-tier KV spill/restore counters of the tiered store.
+    pub fn kv_spill_counters(&self) -> &crate::telemetry::SpillCounters {
+        self.kv.counters()
+    }
+
+    /// Fold a finished session's counters into aggregate telemetry —
+    /// the slot-free half of teardown. `close` (resident sessions)
+    /// releases the HBM slot too; `discard` (parked sessions) drops the
+    /// spill ticket instead, because the slot went back at spill time.
+    fn fold_closed(&mut self, s: &mut DecodeSession) {
+        self.tel.prefill_tokens += s.fed() as u64;
+        self.tel.tokens_generated += s.generated.len() as u64;
+        if !s.generated.is_empty() && !s.is_cancelled() {
+            // Aggregate TTFT tracks the most recently completed session
+            // (matches the single-request semantics of generate()).
+            self.tel.ttft_s = s.stats.ttft_s;
+        }
+        if s.is_cancelled() {
+            // Mid-flight cancels release resources early; mirror them
+            // so the shutdown telemetry distinguishes abandonment from
+            // completion (partial tokens stay in the totals above —
+            // that work really ran).
+            self.tel.bump("sessions_cancelled", 1);
+        }
+        self.tel.bump("sessions_closed", 1);
+    }
 }
 
 impl SessionEngine for ExecEngine {
     fn capacity(&self) -> usize {
+        // Physical HBM KV slots serving sessions (the store also holds
+        // the legacy cursor's slot — not schedulable).
+        self.kv.capacity().saturating_sub(1).max(1)
+    }
+
+    fn max_sessions(&self) -> usize {
+        // The in-flight bound: may exceed `capacity()` when
+        // `cfg.kv_slots` undersizes the pool — the scheduler then
+        // parks the overflow through spill/restore.
         self.cfg.max_sessions.max(1)
     }
 
@@ -790,11 +835,12 @@ impl SessionEngine for ExecEngine {
             self.max_seq
         );
         let slot = self
-            .pool
+            .kv
             .acquire()
             .ok_or_else(|| anyhow::anyhow!("session slots exhausted"))?;
         // The legacy cursor permanently holds one slot; don't count it.
-        let active = (self.pool.in_use() - 1) as u64;
+        // Parked sessions are still in flight, so they count.
+        let active = (self.kv.in_use() - 1 + self.kv.spilled()) as u64;
         self.tel.peak_active_sessions = self.tel.peak_active_sessions.max(active);
         self.tel.bump("sessions_opened", 1);
         Ok(DecodeSession::new(req, slot))
@@ -875,22 +921,38 @@ impl SessionEngine for ExecEngine {
     }
 
     fn close(&mut self, s: &mut DecodeSession) {
-        self.pool.release(s.slot());
-        self.tel.prefill_tokens += s.fed() as u64;
-        self.tel.tokens_generated += s.generated.len() as u64;
-        if !s.generated.is_empty() && !s.is_cancelled() {
-            // Aggregate TTFT tracks the most recently completed session
-            // (matches the single-request semantics of generate()).
-            self.tel.ttft_s = s.stats.ttft_s;
-        }
-        if s.is_cancelled() {
-            // Mid-flight cancels release the slot early; mirror them so
-            // the shutdown telemetry distinguishes abandonment from
-            // completion (partial tokens stay in the totals above —
-            // that work really ran).
-            self.tel.bump("sessions_cancelled", 1);
-        }
-        self.tel.bump("sessions_closed", 1);
+        self.kv.release(s.slot());
+        self.fold_closed(s);
+    }
+
+    fn supports_spill(&self) -> bool {
+        true
+    }
+
+    fn spill(&mut self, s: &DecodeSession) -> Result<KvTicket> {
+        // Park only the rows decode has written ([0, pos) per layer) —
+        // the slot's tail is zero and restores as zero for free, so
+        // spill traffic is proportional to the session's actual KV,
+        // matching the sim cost model's per-token accounting.
+        let used = s.pos() * self.spec().d_model;
+        let ticket = self.kv.spill_prefix(s.slot(), used)?;
+        self.tel.kv_spill = *self.kv.counters();
+        self.tel.bump("sessions_preempted", 1);
+        Ok(ticket)
+    }
+
+    fn restore(&mut self, s: &mut DecodeSession, ticket: KvTicket) -> Result<()> {
+        let slot = self.kv.restore(ticket)?;
+        s.rebind_slot(slot);
+        self.tel.kv_spill = *self.kv.counters();
+        self.tel.bump("sessions_resumed", 1);
+        Ok(())
+    }
+
+    fn discard(&mut self, s: &mut DecodeSession, ticket: KvTicket) {
+        self.kv.discard(ticket);
+        self.tel.kv_spill = *self.kv.counters();
+        self.fold_closed(s);
     }
 
     fn sched_config(&self) -> crate::coordinator::scheduler::SchedConfig {
@@ -899,6 +961,7 @@ impl SessionEngine for ExecEngine {
             starvation_guard: self.cfg.starvation_guard,
             continuous: self.cfg.continuous,
             batch: self.cfg.batch,
+            preempt_cap: self.cfg.preempt_cap,
             ..crate::coordinator::scheduler::SchedConfig::default()
         }
     }

@@ -114,6 +114,15 @@ struct SimSession {
     cancelled: bool,
     /// Recency stamp mirroring the scheduler's ring order.
     stamp: u64,
+    /// Holds one of the bounded KV slots (`cfg.kv_slots`); always true
+    /// for scheduled sessions when the bound is off.
+    resident: bool,
+    /// Parked KV: (went to SSD, bytes) — restored (and re-charged on
+    /// the opposite links) when the session re-enters residency.
+    spilled: Option<(bool, u64)>,
+    /// Times preempted (capped by `cfg.preempt_cap`, mirroring the
+    /// scheduler's starvation guard).
+    preempts: u32,
 }
 
 /// Per-tenant result of a multi-session simulated run — latency from
@@ -147,6 +156,9 @@ pub struct TenantResult {
 fn retire(tel: &mut Telemetry, s: &mut SimSession, finish_s: f64) {
     s.done = true;
     s.finish_s = finish_s;
+    // A finished session's KV slot frees (the bounded-residency mirror
+    // backfills it next turn).
+    s.resident = false;
     let c = &mut tel.classes[s.priority.index()];
     if s.cancelled {
         c.cancelled += 1;
@@ -674,6 +686,149 @@ impl SimEngine {
         self.clock.now_s() - t0
     }
 
+    // ---------------- KV spill mirror (tiered KvStore cost model)
+
+    /// Charge the tier transfers for spilling `bytes` of KV out of
+    /// HBM: one PCIe D2H copy always, plus an NVMe write when the DRAM
+    /// spill budget (`cfg.kv_spill_dram`) is exhausted. Returns whether
+    /// the state landed on SSD.
+    fn charge_kv_spill(&mut self, bytes: u64, spill_dram_used: &mut u64) -> bool {
+        let d2h = self.hw.links.get(Link::HbmToDram);
+        self.clock.run(Channel::PcieD2h, d2h.time_s(bytes));
+        self.tel.traffic.hbm_to_dram += bytes;
+        let to_ssd = *spill_dram_used + bytes > self.cfg.kv_spill_dram;
+        if to_ssd {
+            let w = self.hw.links.get(Link::DramToSsd);
+            self.clock.run(Channel::Ssd, w.time_s(bytes));
+            self.tel.traffic.dram_to_ssd += bytes;
+            self.tel.kv_spill.spills_ssd += 1;
+            self.tel.kv_spill.spill_bytes_ssd += bytes;
+        } else {
+            *spill_dram_used += bytes;
+            self.tel.kv_spill.spills_dram += 1;
+            self.tel.kv_spill.spill_bytes_dram += bytes;
+        }
+        to_ssd
+    }
+
+    /// The reverse path: NVMe read when the state sat on SSD, then one
+    /// PCIe H2D copy back into the KV slot.
+    fn charge_kv_restore(&mut self, bytes: u64, from_ssd: bool, spill_dram_used: &mut u64) {
+        if from_ssd {
+            let r = self.hw.links.get(Link::SsdToDram);
+            self.clock.run(Channel::Ssd, r.time_s(bytes));
+            self.tel.traffic.ssd_to_dram += bytes;
+            self.tel.kv_spill.restores_ssd += 1;
+            self.tel.kv_spill.restore_bytes_ssd += bytes;
+        } else {
+            *spill_dram_used = spill_dram_used.saturating_sub(bytes);
+            self.tel.kv_spill.restores_dram += 1;
+            self.tel.kv_spill.restore_bytes_dram += bytes;
+        }
+        let h2d = self.hw.links.get(Link::DramToHbm);
+        self.clock.run(Channel::PcieH2d, h2d.time_s(bytes));
+        self.tel.traffic.dram_to_hbm += bytes;
+    }
+
+    fn spill_session(&mut self, s: &mut SimSession, spill_dram_used: &mut u64) {
+        let bytes = s.kv_len as u64 * self.spec.kv_bytes_per_token();
+        s.resident = false;
+        s.preempts += 1;
+        s.spilled = if bytes == 0 {
+            None // nothing accumulated yet: parking is free
+        } else {
+            Some((self.charge_kv_spill(bytes, spill_dram_used), bytes))
+        };
+    }
+
+    fn restore_session(&mut self, s: &mut SimSession, spill_dram_used: &mut u64) {
+        if let Some((from_ssd, bytes)) = s.spilled.take() {
+            self.charge_kv_restore(bytes, from_ssd, spill_dram_used);
+        }
+        s.resident = true;
+    }
+
+    /// Mirror of the scheduler's preemption policy: give `target` a KV
+    /// slot, spilling the lowest-utility resident when `target`
+    /// strictly outranks it on (class, deadline) — equal keys never
+    /// thrash, and sessions at the preempt cap are pinned. Lanes in
+    /// `protected` (already chosen for this turn's step set) are never
+    /// victimized, so a guard turn's stamp ordering cannot spill a
+    /// lane it is about to step. Returns false when no slot can be
+    /// made.
+    fn make_resident(
+        &mut self,
+        sessions: &mut [SimSession],
+        target: usize,
+        slots: usize,
+        protected: &[usize],
+        spill_dram_used: &mut u64,
+    ) -> bool {
+        if sessions[target].resident {
+            return true;
+        }
+        let residents: Vec<usize> = (0..sessions.len())
+            .filter(|&j| sessions[j].resident && !sessions[j].done)
+            .collect();
+        if residents.len() < slots {
+            self.restore_session(&mut sessions[target], spill_dram_used);
+            return true;
+        }
+        let key = |s: &SimSession| (s.priority.index(), s.deadline_ms.unwrap_or(u64::MAX));
+        let cand = key(&sessions[target]);
+        let victim = residents
+            .into_iter()
+            .filter(|j| !protected.contains(j))
+            .filter(|&j| sessions[j].preempts < self.cfg.preempt_cap)
+            .max_by_key(|&j| (key(&sessions[j]), sessions[j].stamp));
+        let Some(v) = victim else { return false };
+        if cand >= key(&sessions[v]) {
+            return false;
+        }
+        self.spill_session(&mut sessions[v], spill_dram_used);
+        self.restore_session(&mut sessions[target], spill_dram_used);
+        true
+    }
+
+    /// Single-turn pick under bounded KV residency: the most urgent
+    /// live session gets the turn if it holds (or can take) a slot;
+    /// otherwise the most urgent *resident* runs — exactly the serving
+    /// scheduler's admission-then-turn order. Guard turns rotate among
+    /// residents by recency, like `Scheduler::pick`.
+    fn pick_bounded(
+        &mut self,
+        sessions: &mut [SimSession],
+        now_rel: f64,
+        guard: bool,
+        slots: usize,
+        spill_dram_used: &mut u64,
+    ) -> Option<usize> {
+        let live: Vec<usize> = (0..sessions.len())
+            .filter(|&i| !sessions[i].done && sessions[i].arrive_rel_s <= now_rel + 1e-9)
+            .collect();
+        if live.is_empty() {
+            return None;
+        }
+        if guard {
+            if let Some(&i) = live
+                .iter()
+                .filter(|&&i| sessions[i].resident)
+                .min_by_key(|&&i| sessions[i].stamp)
+            {
+                return Some(i);
+            }
+        }
+        let key =
+            |s: &SimSession| (s.priority.index(), s.deadline_ms.unwrap_or(u64::MAX), s.stamp);
+        let mut order = live;
+        order.sort_by_key(|&i| key(&sessions[i]));
+        let best = order[0];
+        if self.make_resident(sessions, best, slots, &[], spill_dram_used) {
+            return Some(best);
+        }
+        order.into_iter().find(|&i| sessions[i].resident)
+    }
+
     /// Full request: prefill + decode. Returns timing, telemetry, carbon.
     pub fn run(&mut self, prompt_len: usize, gen_tokens: usize, gpu: &GpuSpec) -> SimResult {
         self.prefill(prompt_len);
@@ -778,6 +933,9 @@ impl SimEngine {
                     missed: false,
                     cancelled: false,
                     stamp: i as u64,
+                    resident: false,
+                    spilled: None,
+                    preempts: 0,
                 }
             })
             .collect();
@@ -785,6 +943,12 @@ impl SimEngine {
         let guard_every = self.cfg.starvation_guard;
         let mut stamp = sessions.len() as u64;
         let mut turn: u64 = 0;
+        // Bounded KV residency (`cfg.kv_slots`): at most this many
+        // sessions hold KV slots at once; the rest wait or are parked
+        // through the spill cost model. None = every session resident
+        // (the pre-preemption shape, bit-identical costs).
+        let kv_slots = self.cfg.kv_slots;
+        let mut spill_dram_used: u64 = 0;
         // Peak *concurrent* KV tokens across tenants — finished tenants
         // free their KV, in-flight ones hold theirs.
         let mut peak_kv_tokens = 0usize;
@@ -834,8 +998,37 @@ impl SimEngine {
                     });
                 }
                 turn += 1;
+                // Residency: unbounded turns step every live lane;
+                // bounded turns take lanes in key order until the
+                // slots are full, preempting strictly-worse residents
+                // (spill/restore charged on the tier links) — the
+                // mirror of `Scheduler::tick_batch` over the tiered
+                // KV store.
+                let step_set: Vec<usize> = match kv_slots {
+                    None => live.clone(),
+                    Some(slots) => {
+                        let slots = slots.max(1);
+                        let mut set: Vec<usize> = Vec::new();
+                        for &i in &live {
+                            if set.len() >= slots {
+                                break;
+                            }
+                            if self.make_resident(
+                                &mut sessions,
+                                i,
+                                slots,
+                                &set,
+                                &mut spill_dram_used,
+                            ) {
+                                set.push(i);
+                            }
+                        }
+                        set
+                    }
+                };
                 let now = self.clock.now_s();
-                for &i in &live {
+                for &i in &step_set {
+                    sessions[i].resident = true;
                     if !sessions[i].started {
                         sessions[i].started = true;
                         // Clamp: the arrival tolerance can put "now" an
@@ -845,7 +1038,7 @@ impl SimEngine {
                     }
                 }
                 // Phase A: chunked prefill per still-prefilling lane.
-                for &i in &live {
+                for &i in &step_set {
                     if sessions[i].prefilled < sessions[i].prompt_len {
                         let n = chunk.min(sessions[i].prompt_len - sessions[i].prefilled);
                         self.prefill_work(n);
@@ -857,7 +1050,7 @@ impl SimEngine {
                 // lane past prefill.
                 let mut decoders: Vec<usize> = Vec::new();
                 let mut finished: Vec<usize> = Vec::new();
-                for &i in &live {
+                for &i in &step_set {
                     if sessions[i].prefilled < sessions[i].prompt_len {
                         continue;
                     }
@@ -895,15 +1088,16 @@ impl SimEngine {
                         }
                     }
                 }
-                for &i in &live {
+                for &i in &step_set {
                     stamp += 1;
                     sessions[i].stamp = stamp;
                 }
-                // Peak is sampled while every finishing lane's KV is
-                // still live.
+                // Peak samples *resident* KV while every finishing
+                // lane's KV is still live (parked state sits in the
+                // spill tiers, not HBM).
                 let live_kv: usize = sessions
                     .iter()
-                    .filter(|t| t.started && !t.done)
+                    .filter(|t| t.started && !t.done && t.resident)
                     .map(|t| t.kv_len)
                     .sum();
                 peak_kv_tokens = peak_kv_tokens.max(live_kv);
@@ -922,23 +1116,34 @@ impl SimEngine {
             // (class, deadline, recency) — which is plain round-robin
             // when every tenant is untagged.
             let now_rel = self.clock.now_s() - t_arrive;
-            let pick = {
-                let guard = guard_every > 0 && turn > 0 && turn % guard_every == 0;
-                let live = sessions
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, s)| !s.done && s.arrive_rel_s <= now_rel + 1e-9);
-                if guard {
-                    live.min_by_key(|(_, s)| s.stamp).map(|(i, _)| i)
-                } else {
-                    live.min_by_key(|(_, s)| {
-                        (
-                            s.priority.index(),
-                            s.deadline_ms.unwrap_or(u64::MAX),
-                            s.stamp,
-                        )
-                    })
-                    .map(|(i, _)| i)
+            let guard = guard_every > 0 && turn > 0 && turn % guard_every == 0;
+            let pick = match kv_slots {
+                // Bounded residency: admission-then-turn through the
+                // spill cost model ([`Self::pick_bounded`]).
+                Some(slots) => self.pick_bounded(
+                    &mut sessions,
+                    now_rel,
+                    guard,
+                    slots.max(1),
+                    &mut spill_dram_used,
+                ),
+                None => {
+                    let live = sessions
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| !s.done && s.arrive_rel_s <= now_rel + 1e-9);
+                    if guard {
+                        live.min_by_key(|(_, s)| s.stamp).map(|(i, _)| i)
+                    } else {
+                        live.min_by_key(|(_, s)| {
+                            (
+                                s.priority.index(),
+                                s.deadline_ms.unwrap_or(u64::MAX),
+                                s.stamp,
+                            )
+                        })
+                        .map(|(i, _)| i)
+                    }
                 }
             };
             let Some(i) = pick else {
@@ -958,6 +1163,7 @@ impl SimEngine {
             };
             turn += 1;
             let now = self.clock.now_s();
+            sessions[i].resident = true;
             if !sessions[i].started {
                 sessions[i].started = true;
                 // Clamp: the arrival tolerance can put "now" an ns shy
@@ -1016,10 +1222,11 @@ impl SimEngine {
             }
             stamp += 1;
             sessions[i].stamp = stamp;
-            // Peak is sampled while tenant i's KV is still live.
+            // Peak samples *resident* KV while tenant i's KV is still
+            // live (parked state is in the spill tiers, not HBM).
             let live_kv: usize = sessions
                 .iter()
-                .filter(|t| t.started && !t.done)
+                .filter(|t| t.started && !t.done && t.resident)
                 .map(|t| t.kv_len)
                 .sum();
             peak_kv_tokens = peak_kv_tokens.max(live_kv);
@@ -1529,6 +1736,92 @@ mod tests {
         assert_eq!(res[2].tokens, 0);
         assert!(res[2].queue_s <= res[2].ttft_s);
         assert_eq!(e.kv_len, 0, "batched run must not disturb the KV cursor");
+    }
+
+    #[test]
+    fn bounded_kv_slots_spill_restore_and_complete() {
+        // The tentpole's sim mirror: one KV slot, a High tenant
+        // arriving to a busy box. The resident is preempted (KV spilled
+        // over PCIe D2H into the DRAM spill area), the High tenant
+        // runs, the victim restores and finishes — tokens conserved,
+        // per-tier byte meters balanced.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut cfg = EngineConfig::full();
+        cfg.kv_slots = Some(1);
+        let mut e = engine(ModelSpec::llama2_7b(), cfg);
+        let tenants = [
+            SimTenant::untagged(8, 24),
+            SimTenant::untagged(4, 6)
+                .with_class(Priority::High, Some(600_000))
+                .arriving_at(200),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        assert_eq!(res[0].tokens, 24);
+        assert_eq!(res[1].tokens, 6);
+        assert!(e.tel.kv_spill.spills() >= 1, "no spill charged: {:?}", e.tel.kv_spill);
+        assert_eq!(
+            e.tel.kv_spill.spills(),
+            e.tel.kv_spill.restores(),
+            "every parked tenant must resume"
+        );
+        assert_eq!(e.tel.kv_spill.spill_bytes(), e.tel.kv_spill.restore_bytes());
+        assert!(e.tel.kv_spill.spill_bytes() > 0);
+        assert!(e.tel.traffic.hbm_to_dram > 0, "KV spill must cross PCIe D2H");
+        // The default spill budget (64 MiB) holds this KV: DRAM tier.
+        assert_eq!(e.tel.kv_spill.spills_ssd, 0);
+        for r in &res {
+            assert!(r.queue_s <= r.ttft_s && r.ttft_s <= r.total_s + 1e-12);
+        }
+        assert_eq!(e.tel.classes[Priority::High.index()].completed, 1);
+    }
+
+    #[test]
+    fn zero_dram_spill_budget_routes_kv_through_the_ssd_file() {
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut cfg = EngineConfig::full();
+        cfg.kv_slots = Some(1);
+        cfg.kv_spill_dram = 0;
+        let mut e = engine(ModelSpec::llama2_7b(), cfg);
+        let tenants = [
+            SimTenant::untagged(8, 24),
+            SimTenant::untagged(4, 6)
+                .with_class(Priority::High, Some(600_000))
+                .arriving_at(200),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        assert_eq!(res.iter().map(|r| r.tokens).sum::<u64>(), 30);
+        assert!(e.tel.kv_spill.spills_ssd >= 1, "{:?}", e.tel.kv_spill);
+        assert_eq!(e.tel.kv_spill.spills_dram, 0);
+        assert_eq!(e.tel.kv_spill.spills_ssd, e.tel.kv_spill.restores_ssd);
+        assert!(e.tel.traffic.dram_to_ssd > 0, "spill file ingest uncharged");
+    }
+
+    #[test]
+    fn batched_bounded_residency_preempts_and_conserves_tokens() {
+        // Batched turns over bounded slots: the turn set is capped at
+        // `kv_slots` lanes, preemption swaps a strictly-worse resident
+        // out, and everything still completes with conserved tokens.
+        let gpu = find_gpu("RTX3090").unwrap();
+        let mut cfg = EngineConfig::full();
+        cfg.batch = true;
+        cfg.max_sessions = 4;
+        cfg.kv_slots = Some(2);
+        let mut e = engine(ModelSpec::llama2_7b(), cfg);
+        let tenants = [
+            SimTenant::untagged(6, 10).with_class(Priority::Batch, None),
+            SimTenant::untagged(6, 10).with_class(Priority::Batch, None),
+            SimTenant::untagged(4, 4)
+                .with_class(Priority::High, Some(900_000))
+                .arriving_at(400),
+            SimTenant::untagged(6, 10).with_class(Priority::Batch, None),
+        ];
+        let res = e.run_sessions_policy(&tenants, gpu);
+        assert_eq!(res.iter().map(|r| r.tokens).sum::<u64>(), 34);
+        assert!(e.tel.kv_spill.spills() >= 1, "{:?}", e.tel.kv_spill);
+        assert_eq!(e.tel.kv_spill.spills(), e.tel.kv_spill.restores());
+        assert_eq!(e.tel.classes[Priority::High.index()].completed, 1);
+        assert_eq!(e.tel.classes[Priority::Batch.index()].completed, 3);
+        assert_eq!(e.kv_len, 0, "bounded run must not disturb the KV cursor");
     }
 
     #[test]

@@ -1,0 +1,492 @@
+//! Tiered KV store — the paper's HBM/DRAM/SSD hierarchy applied to KV
+//! state instead of weights. The HBM level is the bounded [`KvPool`]
+//! slot array serving active decode sessions; below it sit a
+//! byte-budgeted **DRAM spill area** and an **SSD spill file** that
+//! park the KV of preempted sessions, so the number of sessions in
+//! flight is no longer capped by HBM slots.
+//!
+//! [`KvStore::spill`] copies a slot's K/V planes down the hierarchy
+//! (DRAM while the budget lasts, the spill file past it) and frees the
+//! slot; [`KvStore::restore`] redeems the returned [`KvTicket`] into
+//! any free slot, byte-identically — f32 bits survive the file via
+//! little-endian round-trip, NaN payloads included. Byte meters follow
+//! the same per-tier accounting discipline as the weight caches in
+//! `cache/` ([`SpillCounters`]), and the simulated engine charges the
+//! same transfers on the `memsim` links (`HbmToDram`, `DramToSsd`,
+//! `SsdToDram`, `DramToHbm`).
+
+use crate::coordinator::session::{KvPool, KvTicket};
+use crate::telemetry::SpillCounters;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Uniquifies default spill-file names when several stores coexist in
+/// one process (tests, a server plus a bench harness).
+static SPILL_FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn default_spill_path() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "m2cache-kvspill-{}-{}.bin",
+        std::process::id(),
+        SPILL_FILE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// A ticket's KV state parked in the DRAM spill area.
+#[derive(Debug)]
+struct DramSpill {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The tiered KV memory manager (see the module docs).
+#[derive(Debug)]
+pub struct KvStore {
+    pool: KvPool,
+    /// DRAM spill-area budget, bytes; overflow goes to the SSD file.
+    dram_budget: u64,
+    dram_used: u64,
+    dram: HashMap<u64, DramSpill>,
+    /// Ticket -> (record index in the spill file, used f32 per layer).
+    ssd: HashMap<u64, (usize, usize)>,
+    /// Lazily created on the first SSD spill, deleted on drop.
+    file: Option<File>,
+    path: Option<PathBuf>,
+    /// Records the file has ever grown to (allocation high-water mark).
+    file_records: usize,
+    /// Free record indices available for reuse.
+    file_free: Vec<usize>,
+    next_ticket: u64,
+    counters: SpillCounters,
+}
+
+impl KvStore {
+    /// A store of `slots` HBM KV slots (geometry as [`KvPool::new`])
+    /// over a DRAM spill area of `dram_spill_bytes`.
+    pub fn new(slots: usize, n_layers: usize, stride: usize, dram_spill_bytes: u64) -> KvStore {
+        KvStore {
+            pool: KvPool::new(slots, n_layers, stride),
+            dram_budget: dram_spill_bytes,
+            dram_used: 0,
+            dram: HashMap::new(),
+            ssd: HashMap::new(),
+            file: None,
+            path: None,
+            file_records: 0,
+            file_free: Vec::new(),
+            next_ticket: 1,
+            counters: SpillCounters::default(),
+        }
+    }
+
+    /// Put the SSD spill file at an explicit path instead of a fresh
+    /// temp-dir name (still deleted on drop).
+    pub fn with_spill_path(mut self, path: PathBuf) -> KvStore {
+        self.path = Some(path);
+        self
+    }
+
+    /// Bytes of one *full* slot (both K/V planes) — the spill file's
+    /// fixed record capacity. Prefix spills move and meter only the
+    /// used leading rows (see [`Self::spill_prefix`]).
+    pub fn slot_bytes(&self) -> u64 {
+        2 * self.pool.slot_len() as u64 * 4
+    }
+
+    /// Per-tier spill/restore counts and byte meters.
+    pub fn counters(&self) -> &SpillCounters {
+        &self.counters
+    }
+
+    /// Tickets currently parked (DRAM + SSD).
+    pub fn spilled(&self) -> usize {
+        self.dram.len() + self.ssd.len()
+    }
+
+    /// Bytes currently held in the DRAM spill area.
+    pub fn dram_spill_used(&self) -> u64 {
+        self.dram_used
+    }
+
+    // ------------------------- HBM tier (the PR-1 KvPool surface)
+
+    pub fn capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn available(&self) -> usize {
+        self.pool.available()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    /// Bytes reserved by the HBM slot pool (the spill tiers grow and
+    /// shrink with parked sessions and are metered by [`Self::counters`]).
+    pub fn bytes(&self) -> u64 {
+        self.pool.bytes()
+    }
+
+    pub fn acquire(&mut self) -> Option<usize> {
+        self.pool.acquire()
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        self.pool.release(slot);
+    }
+
+    pub fn zero(&mut self, slot: usize) {
+        self.pool.zero(slot);
+    }
+
+    pub fn k_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        self.pool.k_layer(slot, layer)
+    }
+
+    pub fn v_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        self.pool.v_layer(slot, layer)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn write_token(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        pos: usize,
+        d: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        self.pool.write_token(slot, layer, pos, d, k_row, v_row);
+    }
+
+    // ------------------------- spill / restore
+
+    /// Park `slot`'s full KV planes below HBM and free the slot (see
+    /// [`Self::spill_prefix`] for the cheaper used-rows-only variant
+    /// the engine uses).
+    pub fn spill(&mut self, slot: usize) -> Result<KvTicket> {
+        self.spill_prefix(slot, self.pool.stride())
+    }
+
+    /// Park only the first `used` f32 values of each of `slot`'s layer
+    /// planes — the rows decode has actually written. The untouched
+    /// tail of the slot is zero (acquire zeroes), and restore lands the
+    /// prefix in a freshly zeroed slot, so the round-trip is still
+    /// byte-identical while moving `pos/max_seq` of the bytes — the
+    /// same proportional accounting the sim cost model charges. DRAM
+    /// takes the state while the spill budget lasts; past that it
+    /// lands in the SSD spill file. On error the pool is unchanged
+    /// (the slot stays live).
+    pub fn spill_prefix(&mut self, slot: usize, used: usize) -> Result<KvTicket> {
+        let n_layers = self.pool.n_layers();
+        let used = used.min(self.pool.stride());
+        let plane = n_layers * used;
+        let bytes = 2 * plane as u64 * 4;
+        let id = self.next_ticket;
+        let mut k = Vec::with_capacity(plane);
+        let mut v = Vec::with_capacity(plane);
+        for l in 0..n_layers {
+            k.extend_from_slice(&self.pool.k_layer(slot, l)[..used]);
+            v.extend_from_slice(&self.pool.v_layer(slot, l)[..used]);
+        }
+        if self.dram_used + bytes <= self.dram_budget {
+            self.dram.insert(id, DramSpill { k, v });
+            self.dram_used += bytes;
+            self.counters.spills_dram += 1;
+            self.counters.spill_bytes_dram += bytes;
+        } else {
+            let rec = self.alloc_record();
+            if let Err(e) = self.write_record(rec, &k, &v) {
+                self.file_free.push(rec);
+                return Err(e.context("KV spill file write"));
+            }
+            self.ssd.insert(id, (rec, used));
+            self.counters.spills_ssd += 1;
+            self.counters.spill_bytes_ssd += bytes;
+        }
+        self.next_ticket += 1;
+        self.pool.release(slot);
+        Ok(KvTicket::new(id))
+    }
+
+    /// Redeem a ticket into a free HBM slot, byte-identically. On error
+    /// (no free slot, file trouble) the ticket stays redeemable and no
+    /// slot is held.
+    pub fn restore(&mut self, ticket: KvTicket) -> Result<usize> {
+        let id = ticket.id();
+        anyhow::ensure!(
+            self.dram.contains_key(&id) || self.ssd.contains_key(&id),
+            "unknown KV ticket {id}"
+        );
+        let slot = self
+            .pool
+            .acquire()
+            .ok_or_else(|| anyhow::anyhow!("no free HBM KV slot to restore ticket {id} into"))?;
+        if let Some(sp) = self.dram.remove(&id) {
+            let bytes = (sp.k.len() + sp.v.len()) as u64 * 4;
+            self.load_prefix(slot, &sp.k, &sp.v);
+            self.dram_used -= bytes;
+            self.counters.restores_dram += 1;
+            self.counters.restore_bytes_dram += bytes;
+            return Ok(slot);
+        }
+        let (rec, used) = self.ssd[&id];
+        match self.read_record(rec, used) {
+            Ok((k, v)) => {
+                let bytes = (k.len() + v.len()) as u64 * 4;
+                self.load_prefix(slot, &k, &v);
+                self.ssd.remove(&id);
+                self.file_free.push(rec);
+                self.counters.restores_ssd += 1;
+                self.counters.restore_bytes_ssd += bytes;
+                Ok(slot)
+            }
+            Err(e) => {
+                self.pool.release(slot);
+                Err(e.context("KV spill file read"))
+            }
+        }
+    }
+
+    /// Scatter concatenated per-layer prefixes back into a (zeroed)
+    /// slot.
+    fn load_prefix(&mut self, slot: usize, k: &[f32], v: &[f32]) {
+        let n_layers = self.pool.n_layers().max(1);
+        let used = k.len() / n_layers;
+        for l in 0..n_layers {
+            self.pool.load_layer_prefix(
+                slot,
+                l,
+                &k[l * used..(l + 1) * used],
+                &v[l * used..(l + 1) * used],
+            );
+        }
+    }
+
+    /// Drop a parked ticket without restoring it (a preempted session
+    /// cancelled). Returns false for unknown tickets.
+    pub fn discard(&mut self, ticket: KvTicket) -> bool {
+        let id = ticket.id();
+        if let Some(sp) = self.dram.remove(&id) {
+            self.dram_used -= (sp.k.len() + sp.v.len()) as u64 * 4;
+            self.counters.discards += 1;
+            return true;
+        }
+        if let Some((rec, _)) = self.ssd.remove(&id) {
+            self.file_free.push(rec);
+            self.counters.discards += 1;
+            return true;
+        }
+        false
+    }
+
+    // ------------------------- SSD spill file plumbing
+
+    fn alloc_record(&mut self) -> usize {
+        self.file_free.pop().unwrap_or_else(|| {
+            let r = self.file_records;
+            self.file_records += 1;
+            r
+        })
+    }
+
+    fn ensure_file(&mut self) -> Result<&mut File> {
+        if self.file.is_none() {
+            let path = self.path.clone().unwrap_or_else(default_spill_path);
+            let f = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&path)
+                .with_context(|| format!("create KV spill file {}", path.display()))?;
+            self.path = Some(path);
+            self.file = Some(f);
+        }
+        match self.file.as_mut() {
+            Some(f) => Ok(f),
+            None => unreachable!("spill file just opened"),
+        }
+    }
+
+    fn write_record(&mut self, rec: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        let off = rec as u64 * self.slot_bytes();
+        let mut buf = Vec::with_capacity(self.slot_bytes() as usize);
+        for &x in k.iter().chain(v.iter()) {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let file = self.ensure_file()?;
+        file.seek(SeekFrom::Start(off))?;
+        file.write_all(&buf)?;
+        Ok(())
+    }
+
+    fn read_record(&mut self, rec: usize, used: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let off = rec as u64 * self.slot_bytes();
+        let plane = self.pool.n_layers() * used;
+        let mut buf = vec![0u8; 2 * plane * 4];
+        let file = self
+            .file
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("KV spill file missing for record {rec}"))?;
+        file.seek(SeekFrom::Start(off))?;
+        file.read_exact(&mut buf)?;
+        let floats: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((floats[..plane].to_vec(), floats[plane..].to_vec()))
+    }
+}
+
+impl Drop for KvStore {
+    fn drop(&mut self) {
+        self.file = None;
+        if let Some(p) = self.path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn dram_spill_roundtrips_byte_identically() {
+        let mut kv = KvStore::new(2, 2, 4, 1 << 20);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 1, 2, &[1.25, -0.5], &[9.0, f32::NAN]);
+        kv.write_token(a, 1, 0, 2, &[7.0, 8.0], &[-7.0, -8.0]);
+        let (k0, v0) = (kv.k_layer(a, 0).to_vec(), kv.v_layer(a, 0).to_vec());
+        let (k1, v1) = (kv.k_layer(a, 1).to_vec(), kv.v_layer(a, 1).to_vec());
+        let t = kv.spill(a).unwrap();
+        assert_eq!(kv.available(), 2, "spill must free the slot");
+        assert_eq!(kv.spilled(), 1);
+        assert_eq!(kv.counters().spills_dram, 1);
+        assert_eq!(kv.counters().spill_bytes_dram, kv.slot_bytes());
+        assert!(kv.dram_spill_used() > 0);
+        let b = kv.restore(t).unwrap();
+        assert_eq!(bits(kv.k_layer(b, 0)), bits(&k0));
+        assert_eq!(bits(kv.v_layer(b, 0)), bits(&v0));
+        assert_eq!(bits(kv.k_layer(b, 1)), bits(&k1));
+        assert_eq!(bits(kv.v_layer(b, 1)), bits(&v1));
+        assert_eq!(kv.counters().restores_dram, 1);
+        assert_eq!(kv.spilled(), 0);
+        assert_eq!(kv.dram_spill_used(), 0);
+        // A ticket redeems exactly once.
+        assert!(kv.restore(t).is_err());
+    }
+
+    #[test]
+    fn zero_dram_budget_spills_to_the_ssd_file_and_roundtrips() {
+        let mut kv = KvStore::new(2, 3, 8, 0);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 2, 3, 2, &[0.1, 0.2], &[f32::INFINITY, -0.0]);
+        let k2 = kv.k_layer(a, 2).to_vec();
+        let v2 = kv.v_layer(a, 2).to_vec();
+        let t = kv.spill(a).unwrap();
+        assert_eq!(kv.counters().spills_ssd, 1);
+        assert_eq!(kv.counters().spill_bytes_ssd, kv.slot_bytes());
+        assert_eq!(kv.counters().spills_dram, 0);
+        let b = kv.restore(t).unwrap();
+        assert_eq!(bits(kv.k_layer(b, 2)), bits(&k2));
+        assert_eq!(bits(kv.v_layer(b, 2)), bits(&v2));
+        assert_eq!(kv.counters().restores_ssd, 1);
+    }
+
+    #[test]
+    fn prefix_spill_moves_only_used_rows_and_restores_zero_tail() {
+        // stride 6 = 3 positions x d 2; two positions written -> 4
+        // used f32 per layer travel, the tail restores as zero.
+        let mut kv = KvStore::new(1, 2, 6, 1 << 20);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.write_token(a, 1, 1, 2, &[5.0, 6.0], &[7.0, 8.0]);
+        let t = kv.spill_prefix(a, 4).unwrap();
+        // 2 planes x 2 layers x 4 values x 4 B.
+        assert_eq!(kv.counters().spill_bytes_dram, 64);
+        let b = kv.restore(t).unwrap();
+        assert_eq!(&kv.k_layer(b, 0)[..2], &[1.0, 2.0]);
+        assert_eq!(&kv.k_layer(b, 1)[2..4], &[5.0, 6.0]);
+        assert_eq!(&kv.v_layer(b, 1)[2..4], &[7.0, 8.0]);
+        assert!(kv.k_layer(b, 0)[4..].iter().all(|&x| x == 0.0), "tail not zero");
+        assert!(kv.v_layer(b, 0)[4..].iter().all(|&x| x == 0.0), "tail not zero");
+        assert_eq!(kv.counters().restore_bytes_dram, 64);
+        // A zero-length prefix (preempted before any step) is free.
+        kv.release(b);
+        let c = kv.acquire().unwrap();
+        let t0 = kv.spill_prefix(c, 0).unwrap();
+        assert_eq!(kv.counters().spill_bytes_dram, 64, "empty prefix moved bytes");
+        let d = kv.restore(t0).unwrap();
+        assert!(kv.k_layer(d, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ssd_records_are_reused_after_discard() {
+        let mut kv = KvStore::new(1, 1, 4, 0);
+        let a = kv.acquire().unwrap();
+        let t1 = kv.spill(a).unwrap();
+        assert!(kv.discard(t1));
+        assert!(!kv.discard(t1), "double discard");
+        assert_eq!(kv.counters().discards, 1);
+        let b = kv.acquire().unwrap();
+        kv.write_token(b, 0, 0, 2, &[5.0, 6.0], &[7.0, 8.0]);
+        let t2 = kv.spill(b).unwrap();
+        // The freed record backs the new spill (file did not grow).
+        assert_eq!(kv.file_records, 1);
+        let c = kv.restore(t2).unwrap();
+        assert_eq!(&kv.k_layer(c, 0)[..2], &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn restore_without_free_slot_keeps_ticket_redeemable() {
+        let mut kv = KvStore::new(1, 1, 4, 1 << 20);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[3.0, 4.0], &[5.0, 6.0]);
+        let t = kv.spill(a).unwrap();
+        let b = kv.acquire().unwrap(); // the only slot, taken again
+        assert!(kv.restore(t).is_err(), "no slot free");
+        assert_eq!(kv.spilled(), 1, "failed restore must not drop state");
+        kv.release(b);
+        let c = kv.restore(t).unwrap();
+        assert_eq!(&kv.k_layer(c, 0)[..2], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn dram_budget_overflow_cascades_to_ssd() {
+        // Budget fits exactly one slot: the second concurrent spill
+        // must cascade to the file, and freeing the DRAM one lets a
+        // later spill use DRAM again.
+        let one_slot = KvStore::new(3, 1, 4, 0).slot_bytes();
+        let mut kv = KvStore::new(3, 1, 4, one_slot);
+        let a = kv.acquire().unwrap();
+        let b = kv.acquire().unwrap();
+        let ta = kv.spill(a).unwrap();
+        let tb = kv.spill(b).unwrap();
+        assert_eq!(kv.counters().spills_dram, 1);
+        assert_eq!(kv.counters().spills_ssd, 1);
+        kv.restore(ta).unwrap();
+        let c = kv.acquire().unwrap();
+        kv.spill(c).unwrap();
+        assert_eq!(kv.counters().spills_dram, 2, "freed budget reused");
+        let _ = tb;
+    }
+
+    #[test]
+    fn unknown_ticket_is_an_error_not_a_panic() {
+        let mut kv = KvStore::new(1, 1, 4, 0);
+        assert!(kv.restore(KvTicket::new(99)).is_err());
+        assert!(!kv.discard(KvTicket::new(99)));
+    }
+}

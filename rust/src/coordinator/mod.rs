@@ -10,8 +10,10 @@
 //!   carbon / ablation experiments).
 //!
 //! Plus the serving plumbing: bounded admission queue, per-request
-//! [`session::DecodeSession`]s over a bounded KV slot pool, the
-//! priority/deadline-aware chunked-prefill [`scheduler::Scheduler`]
+//! [`session::DecodeSession`]s over the tiered
+//! [`kv_store::KvStore`] (HBM KV slots + DRAM/SSD spill tiers that
+//! park preempted sessions), the priority/deadline-aware
+//! chunked-prefill *preemptive* [`scheduler::Scheduler`]
 //! with its per-token [`scheduler::SessionEvent`] stream, the
 //! transport-agnostic event-driven [`serving::ServingCore`] (token
 //! streaming, mid-decode cancel, continuous admission), a deterministic
@@ -22,6 +24,7 @@
 pub mod config;
 pub mod engine_exec;
 pub mod engine_sim;
+pub mod kv_store;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -38,7 +41,10 @@ pub use scheduler::{
     ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, SessionEvent,
     TickReport, DEFAULT_STARVATION_GUARD,
 };
+pub use kv_store::KvStore;
 pub use server::ParseError;
 pub use serving::{ServingCore, StatsSnapshot};
-pub use session::{DecodeSession, KvPool, SessionEngine, SessionState, SessionStats, StepOutcome};
+pub use session::{
+    DecodeSession, KvPool, KvTicket, SessionEngine, SessionState, SessionStats, StepOutcome,
+};
 pub use stub::StubSessionEngine;

@@ -47,10 +47,26 @@
 //! or mid-decode, returning its KV slot immediately); and
 //! [`Scheduler::tick_with_intake`] admits arrivals into turns already
 //! in flight (continuous admission, [`SchedConfig::continuous`]).
+//!
+//! Over an engine that can park KV state outside HBM
+//! ([`SessionEngine::supports_spill`] — the tiered
+//! [`crate::coordinator::kv_store::KvStore`]), serving becomes
+//! **preemptive and oversubscribable**: `max_sessions` may exceed the
+//! engine's physical KV slots, and when admission finds every slot
+//! occupied by less urgent work it spills the lowest-utility active
+//! session — worst class first, then latest deadline, newest arrival —
+//! and parks it in a [`SessionState::Preempted`] state that re-enters
+//! the EDF admission queue with its *original* key. Preemption happens
+//! only at turn boundaries (never under an in-flight turn set), is
+//! bounded per session by [`SchedConfig::preempt_cap`] (the starvation
+//! guard against spill thrash), and requires the candidate to
+//! *strictly* outrank the victim — equal-key traffic waits in the
+//! backlog exactly as before, so non-preemptive workloads keep the
+//! PR-1..4 schedules bit-for-bit.
 
 use crate::coordinator::request::{Priority, Request, Response};
 use crate::coordinator::session::{
-    DecodeSession, SessionEngine, SessionState, SessionStats, StepOutcome,
+    DecodeSession, KvTicket, SessionEngine, SessionState, SessionStats, StepOutcome,
 };
 use crate::telemetry::{ClassCounters, N_CLASSES};
 use std::collections::{HashMap, VecDeque};
@@ -59,6 +75,10 @@ use std::time::Instant;
 /// Default turn period at which the starvation guard overrides class
 /// order (shared with the simulated mirror in `SimEngine`).
 pub const DEFAULT_STARVATION_GUARD: u64 = 8;
+
+/// Default bound on how many times one session may be preempted before
+/// it becomes unpreemptible (shared with the simulated mirror).
+pub const DEFAULT_PREEMPT_CAP: u32 = 2;
 
 /// Scheduling policy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +119,12 @@ pub struct SchedConfig {
     /// only reorders within the batch). Off by default — single-turn
     /// PR-1/2 semantics are preserved exactly.
     pub batch: bool,
+    /// Times one session may be preempted (KV spilled, parked, later
+    /// restored) before it becomes unpreemptible — the starvation guard
+    /// that bounds spill thrash. 0 disables preemption entirely; only
+    /// meaningful over engines with [`SessionEngine::supports_spill`]
+    /// and under [`SchedMode::PriorityEdf`].
+    pub preempt_cap: u32,
 }
 
 impl Default for SchedConfig {
@@ -109,6 +135,7 @@ impl Default for SchedConfig {
             starvation_guard: DEFAULT_STARVATION_GUARD,
             continuous: true,
             batch: false,
+            preempt_cap: DEFAULT_PREEMPT_CAP,
         }
     }
 }
@@ -161,6 +188,13 @@ pub enum SessionEvent {
     /// `tokens` is how many it had generated when it was torn down
     /// (0 when it was still backlogged or prefilling).
     Cancelled { id: u64, tokens: usize },
+    /// The scheduler preempted the session: its KV spilled out of HBM
+    /// and it is parked until a slot frees. Non-terminal — tokens for
+    /// this id resume after a matching [`SessionEvent::Resumed`].
+    Preempted { id: u64 },
+    /// A preempted session's KV was restored into an HBM slot; it is
+    /// active again and continues byte-identically.
+    Resumed { id: u64 },
 }
 
 impl SessionEvent {
@@ -169,14 +203,22 @@ impl SessionEvent {
             SessionEvent::Admitted { id }
             | SessionEvent::Token { id, .. }
             | SessionEvent::Failed { id, .. }
-            | SessionEvent::Cancelled { id, .. } => *id,
+            | SessionEvent::Cancelled { id, .. }
+            | SessionEvent::Preempted { id }
+            | SessionEvent::Resumed { id } => *id,
             SessionEvent::Done(c) => c.response.id,
         }
     }
 
     /// Done / Failed / Cancelled — the events that settle a request.
     pub fn is_terminal(&self) -> bool {
-        !matches!(self, SessionEvent::Admitted { .. } | SessionEvent::Token { .. })
+        !matches!(
+            self,
+            SessionEvent::Admitted { .. }
+                | SessionEvent::Token { .. }
+                | SessionEvent::Preempted { .. }
+                | SessionEvent::Resumed { .. }
+        )
     }
 }
 
@@ -241,12 +283,36 @@ struct Active {
     /// Monotone recency stamp: refreshed on every turn, so the minimum
     /// stamp is the least-recently-stepped session (= ring order).
     stamp: u64,
+    /// Arrival stamp — preemption compares candidates against actives
+    /// by the same (class, deadline, arrival) admission key.
+    seq: u64,
+    /// Times this session has been preempted (capped by
+    /// [`SchedConfig::preempt_cap`]).
+    preemptions: u32,
 }
+
+/// A preempted in-flight session: KV spilled below HBM, waiting to be
+/// restored. Competes for readmission with its *original* admission
+/// key, so parked seniors outrank newer arrivals of the same class.
+struct Parked {
+    s: DecodeSession,
+    deadline_abs: Option<u64>,
+    /// Redeems the spilled KV state at restore time.
+    ticket: KvTicket,
+    seq: u64,
+    preemptions: u32,
+}
+
+/// Admission/preemption ordering key: (class rank, absolute deadline,
+/// arrival stamp) — smaller is more urgent.
+type AdmitKey = (usize, u64, u64);
 
 pub struct Scheduler<E: SessionEngine> {
     engine: E,
     backlog: VecDeque<Queued>,
     active: Vec<Active>,
+    /// Preempted sessions (KV spilled, no HBM slot held).
+    parked: Vec<Parked>,
     max_sessions: usize,
     cfg: SchedConfig,
     /// Count of turns that stepped a session (drives the guard period).
@@ -265,6 +331,10 @@ pub struct Scheduler<E: SessionEngine> {
     pub rejected: u64,
     /// Requests torn down by [`Scheduler::cancel`] (not in `completed`).
     pub cancelled: u64,
+    /// Preemption events: sessions spilled out of HBM and parked.
+    pub preemptions: u64,
+    /// Parked sessions restored into an HBM slot.
+    pub resumes: u64,
     /// Per-priority-class serving counters.
     pub classes: [ClassCounters; N_CLASSES],
 }
@@ -277,11 +347,19 @@ impl<E: SessionEngine> Scheduler<E> {
     }
 
     pub fn with_config(engine: E, max_sessions: usize, cfg: SchedConfig) -> Scheduler<E> {
-        let cap = max_sessions.min(engine.capacity()).max(1);
+        // A spilling engine may carry more sessions in flight than it
+        // has HBM KV slots (the overflow parks in the spill tiers);
+        // everything else keeps the PR-1 clamp to physical capacity.
+        let cap = if engine.supports_spill() {
+            max_sessions.max(1)
+        } else {
+            max_sessions.min(engine.capacity()).max(1)
+        };
         Scheduler {
             engine,
             backlog: VecDeque::new(),
             active: Vec::new(),
+            parked: Vec::new(),
             max_sessions: cap,
             cfg,
             turn: 0,
@@ -292,8 +370,16 @@ impl<E: SessionEngine> Scheduler<E> {
             completed: 0,
             rejected: 0,
             cancelled: 0,
+            preemptions: 0,
+            resumes: 0,
             classes: [ClassCounters::default(); N_CLASSES],
         }
+    }
+
+    /// HBM KV slots the scheduler may occupy at once (the active-set
+    /// bound; `max_sessions` bounds active + parked).
+    fn resident_cap(&self) -> usize {
+        self.engine.capacity().max(1).min(self.max_sessions)
     }
 
     pub fn max_sessions(&self) -> usize {
@@ -362,9 +448,14 @@ impl<E: SessionEngine> Scheduler<E> {
         self.active.len()
     }
 
-    /// No work queued or in flight.
+    /// Sessions currently preempted (KV spilled, awaiting a slot).
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// No work queued, parked, or in flight.
     pub fn is_idle(&self) -> bool {
-        self.backlog.is_empty() && self.active.is_empty()
+        self.backlog.is_empty() && self.active.is_empty() && self.parked.is_empty()
     }
 
     /// Snapshot of in-flight sessions (id, class, absolute deadline).
@@ -381,79 +472,270 @@ impl<E: SessionEngine> Scheduler<E> {
             .collect()
     }
 
-    /// Fill free session slots from the backlog. `PriorityEdf` admits by
-    /// `(class, deadline, arrival)`; `RoundRobin` admits strict FIFO.
-    /// Requests the engine rejects (bad prompt, over-length) fail fast
-    /// without consuming a slot. A prompt whose position budget exceeds
-    /// `max_positions` is also rejected *here*, so the admission
-    /// guarantee holds for every [`SessionEngine`] — the executed
-    /// engine validates in `open()` too, but stub/test engines that
-    /// skip it would otherwise panic mid-decode on a KV write past the
-    /// stride.
-    fn admit(&mut self, report: &mut TickReport) {
-        while self.active.len() < self.max_sessions && !self.backlog.is_empty() {
-            let qi = match self.cfg.mode {
-                SchedMode::RoundRobin => 0,
-                SchedMode::PriorityEdf => self
-                    .backlog
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, q)| {
+    /// Fill free session slots from the backlog *and* the parked set.
+    /// `PriorityEdf` admits by `(class, deadline, arrival)`;
+    /// `RoundRobin` admits strict FIFO. Requests the engine rejects
+    /// (bad prompt, over-length) fail fast without consuming a slot. A
+    /// prompt whose position budget exceeds `max_positions` is also
+    /// rejected *here*, so the admission guarantee holds for every
+    /// [`SessionEngine`] — the executed engine validates in `open()`
+    /// too, but stub/test engines that skip it would otherwise panic
+    /// mid-decode on a KV write past the stride.
+    ///
+    /// With `allow_preempt`, admission that finds every HBM slot held
+    /// by strictly less urgent work spills the lowest-utility active
+    /// session to make room ([`Self::preempt_for`]). Mid-turn admission
+    /// (continuous intake, retirement backfill) never preempts — the
+    /// in-flight turn holds indices into the active set, and append-only
+    /// admission keeps them valid.
+    fn admit_with(&mut self, report: &mut TickReport, allow_preempt: bool) {
+        let resident_cap = self.resident_cap();
+        loop {
+            // The best backlog request, admissible only while the
+            // in-flight budget (active + parked) has room for one more.
+            let in_flight = self.active.len() + self.parked.len();
+            let backlog_best: Option<(usize, AdmitKey)> = if in_flight < self.max_sessions {
+                match self.cfg.mode {
+                    SchedMode::RoundRobin => self.backlog.front().map(|q| {
                         (
-                            q.req.priority.index(),
-                            q.deadline_abs.unwrap_or(u64::MAX),
-                            q.seq,
+                            0,
+                            (
+                                q.req.priority.index(),
+                                q.deadline_abs.unwrap_or(u64::MAX),
+                                q.seq,
+                            ),
                         )
-                    })
-                    .map(|(i, _)| i)
-                    .expect("non-empty backlog"),
+                    }),
+                    SchedMode::PriorityEdf => self
+                        .backlog
+                        .iter()
+                        .enumerate()
+                        .map(|(i, q)| {
+                            (
+                                i,
+                                (
+                                    q.req.priority.index(),
+                                    q.deadline_abs.unwrap_or(u64::MAX),
+                                    q.seq,
+                                ),
+                            )
+                        })
+                        .min_by_key(|&(_, key)| key),
+                }
+            } else {
+                None
             };
-            let q = self.backlog.remove(qi).expect("index from enumerate");
-            let id = q.req.id;
-            let class = q.req.priority.index();
-            let need = q.req.prompt.len() + q.req.max_new.saturating_sub(1);
-            let budget = self.engine.max_positions();
-            if need > budget {
-                self.rejected += 1;
-                self.classes[class].failed += 1;
-                report_failed(
-                    report,
-                    id,
-                    format!("request needs {need} positions > engine budget {budget}"),
-                );
+            // The best parked session (already in flight — resuming
+            // consumes a slot but no in-flight budget).
+            let parked_best: Option<(usize, AdmitKey)> = self
+                .parked
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    (
+                        i,
+                        (
+                            p.s.priority.index(),
+                            p.deadline_abs.unwrap_or(u64::MAX),
+                            p.seq,
+                        ),
+                    )
+                })
+                .min_by_key(|&(_, key)| key);
+            let (from_parked, idx, key) = match (backlog_best, parked_best) {
+                (None, None) => break,
+                (Some((i, k)), None) => (false, i, k),
+                (None, Some((i, k))) => (true, i, k),
+                (Some((bi, bk)), Some((pi, pk))) => {
+                    if pk <= bk {
+                        (true, pi, pk)
+                    } else {
+                        (false, bi, bk)
+                    }
+                }
+            };
+            // Position-budget validation runs BEFORE any preemption: a
+            // doomed request is rejected right here (rejection needs no
+            // slot), so it can never evict an innocent session or burn
+            // a victim's preempt-cap budget on its way to failing.
+            if !from_parked {
+                let need = self.backlog[idx].req.prompt.len()
+                    + self.backlog[idx].req.max_new.saturating_sub(1);
+                let budget = self.engine.max_positions();
+                if need > budget {
+                    if let Some(q) = self.backlog.remove(idx) {
+                        self.rejected += 1;
+                        self.classes[q.req.priority.index()].failed += 1;
+                        report_failed(
+                            report,
+                            q.req.id,
+                            format!("request needs {need} positions > engine budget {budget}"),
+                        );
+                    }
+                    continue;
+                }
+            }
+            if self.active.len() >= resident_cap {
+                // No free HBM slot: make one by preempting strictly
+                // less urgent work, or stop admitting.
+                if !allow_preempt || !self.preempt_for(key, report) {
+                    break;
+                }
                 continue;
             }
-            match self.engine.open(q.req) {
-                Ok(s) => {
-                    self.admitted += 1;
-                    self.classes[class].admitted += 1;
-                    self.stamp += 1;
-                    self.active.push(Active {
-                        s,
-                        deadline_abs: q.deadline_abs,
-                        stamp: self.stamp,
-                    });
-                    report.events.push(SessionEvent::Admitted { id });
-                }
-                Err(e) => {
-                    self.rejected += 1;
-                    self.classes[class].failed += 1;
-                    report_failed(report, id, format!("{e:#}"));
-                }
+            if from_parked {
+                self.resume_parked(idx, report);
+            } else {
+                self.admit_from_backlog(idx, report);
             }
         }
+    }
+
+    /// One pre-validated backlog request into a free slot (see
+    /// [`Self::admit_with`], which rejects over-budget prompts before
+    /// this point).
+    fn admit_from_backlog(&mut self, qi: usize, report: &mut TickReport) {
+        let Some(q) = self.backlog.remove(qi) else {
+            return; // index raced away — nothing to admit
+        };
+        let id = q.req.id;
+        let class = q.req.priority.index();
+        let (seq, deadline_abs) = (q.seq, q.deadline_abs);
+        match self.engine.open(q.req) {
+            Ok(s) => {
+                self.admitted += 1;
+                self.classes[class].admitted += 1;
+                self.stamp += 1;
+                self.active.push(Active {
+                    s,
+                    deadline_abs,
+                    stamp: self.stamp,
+                    seq,
+                    preemptions: 0,
+                });
+                report.events.push(SessionEvent::Admitted { id });
+            }
+            Err(e) => {
+                self.rejected += 1;
+                self.classes[class].failed += 1;
+                report_failed(report, id, format!("{e:#}"));
+            }
+        }
+    }
+
+    /// Restore one parked session into a free slot. A failed restore
+    /// fails the request (propagated, not panicked): the engine holds
+    /// no slot on error and the ticket's state is discarded here.
+    fn resume_parked(&mut self, idx: usize, report: &mut TickReport) {
+        let mut p = self.parked.swap_remove(idx);
+        match self.engine.restore(&mut p.s, p.ticket) {
+            Ok(()) => {
+                p.s.resume();
+                self.resumes += 1;
+                self.stamp += 1;
+                report.events.push(SessionEvent::Resumed { id: p.s.id });
+                self.active.push(Active {
+                    s: p.s,
+                    deadline_abs: p.deadline_abs,
+                    stamp: self.stamp,
+                    seq: p.seq,
+                    preemptions: p.preemptions,
+                });
+            }
+            Err(e) => {
+                let id = p.s.id;
+                let msg = format!("restore after preemption failed: {e:#}");
+                self.engine.discard(&mut p.s, p.ticket);
+                self.completed += 1;
+                self.classes[p.s.priority.index()].failed += 1;
+                report_failed(report, id, msg);
+            }
+        }
+    }
+
+    /// Spill the lowest-utility active session — worst class, then
+    /// latest deadline, then newest arrival — to free an HBM slot for a
+    /// strictly more urgent candidate. Returns whether a slot was
+    /// freed. Sessions at [`SchedConfig::preempt_cap`] are skipped
+    /// (starvation guard), and equal keys never preempt, so untagged
+    /// FIFO traffic is never disturbed.
+    fn preempt_for(&mut self, cand_key: AdmitKey, report: &mut TickReport) -> bool {
+        if self.cfg.mode != SchedMode::PriorityEdf
+            || self.cfg.preempt_cap == 0
+            || !self.engine.supports_spill()
+        {
+            return false;
+        }
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.preemptions < self.cfg.preempt_cap)
+            .max_by_key(|(_, a)| {
+                (
+                    a.s.priority.index(),
+                    a.deadline_abs.unwrap_or(u64::MAX),
+                    a.seq,
+                )
+            })
+            .map(|(i, a)| {
+                (
+                    i,
+                    (
+                        a.s.priority.index(),
+                        a.deadline_abs.unwrap_or(u64::MAX),
+                        a.seq,
+                    ),
+                )
+            });
+        let Some((vi, vkey)) = victim else {
+            return false;
+        };
+        if cand_key >= vkey {
+            return false;
+        }
+        let ticket = match self.engine.spill(&self.active[vi].s) {
+            Ok(t) => t,
+            // Spill tiers full or unavailable: serve non-preemptively.
+            Err(_) => return false,
+        };
+        let mut entry = self.active.swap_remove(vi);
+        self.preemptions += 1;
+        if let Err(e) = entry.s.pause() {
+            // A done/already-paused session in the active set is a
+            // bookkeeping bug; fail the request instead of panicking on
+            // the decode thread.
+            let id = entry.s.id;
+            self.engine.discard(&mut entry.s, ticket);
+            self.completed += 1;
+            self.classes[entry.s.priority.index()].failed += 1;
+            report_failed(report, id, format!("preemption bookkeeping: {e:#}"));
+            return true;
+        }
+        report.events.push(SessionEvent::Preempted { id: entry.s.id });
+        self.parked.push(Parked {
+            ticket,
+            seq: entry.seq,
+            deadline_abs: entry.deadline_abs,
+            preemptions: entry.preemptions + 1,
+            s: entry.s,
+        });
+        true
     }
 
     /// Abort a request wherever it currently is. A backlogged request
     /// is dropped before it ever touches the engine; an in-flight
     /// session is closed so its KV slot returns to the pool *now* and
-    /// the next turn set no longer contains it. Returns the
-    /// [`SessionEvent::Cancelled`] event, or None when the id is
+    /// the next turn set no longer contains it; a *parked* session's
+    /// spilled KV is discarded without ever re-entering HBM. Returns
+    /// the [`SessionEvent::Cancelled`] event, or None when the id is
     /// unknown (already finished, or never submitted) — cancelling is
     /// idempotent and never disturbs other sessions.
     pub fn cancel(&mut self, id: u64) -> Option<SessionEvent> {
         if let Some(i) = self.backlog.iter().position(|q| q.req.id == id) {
-            let q = self.backlog.remove(i).expect("index from position");
+            let Some(q) = self.backlog.remove(i) else {
+                return None;
+            };
             self.cancelled += 1;
             self.classes[q.req.priority.index()].cancelled += 1;
             return Some(SessionEvent::Cancelled { id, tokens: 0 });
@@ -466,15 +748,23 @@ impl<E: SessionEngine> Scheduler<E> {
             self.classes[entry.s.priority.index()].cancelled += 1;
             return Some(SessionEvent::Cancelled { id, tokens: entry.s.generated.len() });
         }
+        if let Some(i) = self.parked.iter().position(|p| p.s.id == id) {
+            let mut p = self.parked.swap_remove(i);
+            p.s.abort();
+            self.engine.discard(&mut p.s, p.ticket);
+            self.cancelled += 1;
+            self.classes[p.s.priority.index()].cancelled += 1;
+            return Some(SessionEvent::Cancelled { id, tokens: p.s.generated.len() });
+        }
         None
     }
 
     /// Pull arrivals from an intake source into the backlog, bounded at
-    /// one extra slot-width beyond the active set so admission ordering
-    /// has a reorder window without becoming unbounded (the bound the
-    /// server loop used to enforce itself).
+    /// one extra slot-width beyond the in-flight set so admission
+    /// ordering has a reorder window without becoming unbounded (the
+    /// bound the server loop used to enforce itself).
     fn drain_intake(&mut self, intake: &mut dyn FnMut() -> Option<Request>) {
-        while self.active.len() + self.backlog.len() < 2 * self.max_sessions {
+        while self.active.len() + self.parked.len() + self.backlog.len() < 2 * self.max_sessions {
             let Some(req) = intake() else { break };
             self.submit(req);
         }
@@ -485,31 +775,32 @@ impl<E: SessionEngine> Scheduler<E> {
     /// so using it first is a no-op for scheduling order.
     pub fn admit_pending(&mut self) -> Vec<Outcome> {
         let mut report = TickReport::default();
-        self.admit(&mut report);
+        self.admit_with(&mut report, true);
         report.outcomes
     }
 
     /// Choose the next session to step; `true` = starvation-guard pick.
+    /// (Selection helpers return `Option` end to end — the "non-empty
+    /// active set" invariant is handled, not `expect`ed, so a
+    /// bookkeeping bug idles a tick instead of panicking the one decode
+    /// thread the server shares.)
     fn pick(&self) -> Option<(usize, bool)> {
-        if self.active.is_empty() {
-            return None;
-        }
         let by_recency = |entries: &[Active]| {
             entries
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, a)| a.stamp)
                 .map(|(i, _)| i)
-                .expect("non-empty active set")
         };
         match self.cfg.mode {
-            SchedMode::RoundRobin => Some((by_recency(&self.active), false)),
+            SchedMode::RoundRobin => by_recency(&self.active).map(|i| (i, false)),
             SchedMode::PriorityEdf => {
                 let guard = self.cfg.starvation_guard > 0
                     && self.turn > 0
-                    && self.turn % self.cfg.starvation_guard == 0;
+                    && self.turn % self.cfg.starvation_guard == 0
+                    && !self.active.is_empty();
                 if guard {
-                    Some((by_recency(&self.active), true))
+                    by_recency(&self.active).map(|i| (i, true))
                 } else {
                     self.active
                         .iter()
@@ -563,7 +854,8 @@ impl<E: SessionEngine> Scheduler<E> {
     fn tick_single(&mut self, intake: &mut dyn FnMut() -> Option<Request>) -> TickReport {
         let mut report = TickReport::default();
         self.drain_intake(intake);
-        self.admit(&mut report);
+        // Turn-start admission may preempt (no turn is in flight yet).
+        self.admit_with(&mut report, true);
         let Some((idx, guard)) = self.pick() else {
             return report;
         };
@@ -580,10 +872,11 @@ impl<E: SessionEngine> Scheduler<E> {
             // Continuous admission: between chunk steps, pull arrivals
             // into any free slots so they start decoding next turn
             // rather than after this whole prefill chunk drains.
-            // (Admission appends to `active`, so `idx` stays valid.)
+            // (Mid-turn admission never preempts, so it only appends to
+            // `active` and `idx` stays valid.)
             if step > 0 && self.cfg.continuous {
                 self.drain_intake(intake);
-                self.admit(&mut report);
+                self.admit_with(&mut report, false);
             }
             let before = self.active[idx].s.generated.len();
             match self.active[idx].s.step(&mut self.engine) {
@@ -611,8 +904,9 @@ impl<E: SessionEngine> Scheduler<E> {
             self.classes[entry.s.priority.index()].failed += 1;
             report_failed(&mut report, id, msg);
             // Backfill the freed slot immediately so capacity never
-            // idles while the backlog is non-empty.
-            self.admit(&mut report);
+            // idles while the backlog is non-empty (no preemption
+            // needed — a slot just freed).
+            self.admit_with(&mut report, false);
         } else if outcome == StepOutcome::Finished {
             let mut entry = self.active.swap_remove(idx);
             self.engine.close(&mut entry.s);
@@ -628,7 +922,7 @@ impl<E: SessionEngine> Scheduler<E> {
                 cls.ttft_s_max = entry.s.stats.ttft_s;
             }
             report_done(&mut report, finish(entry.s, missed));
-            self.admit(&mut report);
+            self.admit_with(&mut report, false);
         }
         report
     }
@@ -645,7 +939,8 @@ impl<E: SessionEngine> Scheduler<E> {
     fn tick_batch(&mut self, intake: &mut dyn FnMut() -> Option<Request>) -> TickReport {
         let mut report = TickReport::default();
         self.drain_intake(intake);
-        self.admit(&mut report);
+        // Turn-start admission may preempt (no turn set assembled yet).
+        self.admit_with(&mut report, true);
         if self.active.is_empty() {
             return report;
         }
@@ -682,13 +977,14 @@ impl<E: SessionEngine> Scheduler<E> {
             // Continuous admission: between rounds, arrivals join THIS
             // turn set — a freshly admitted session starts prefilling in
             // the very turn that was already in flight when it arrived,
-            // instead of waiting out the survivors' chunk. (Admission
-            // appends to `active`; retirement below runs after the
-            // round loop, so indices in `order` stay valid.)
+            // instead of waiting out the survivors' chunk. (Mid-turn
+            // admission never preempts, so it appends to `active`;
+            // retirement below runs after the round loop, so indices in
+            // `order` stay valid.)
             if round > 0 && self.cfg.continuous {
                 let before = self.active.len();
                 self.drain_intake(intake);
-                self.admit(&mut report);
+                self.admit_with(&mut report, false);
                 for i in before..self.active.len() {
                     order.push(i);
                     report.batch.push(self.active[i].s.id);
@@ -780,7 +1076,9 @@ impl<E: SessionEngine> Scheduler<E> {
                 }
                 report_done(&mut report, finish(entry.s, missed));
             }
-            self.admit(&mut report);
+            // Backfill append-only: the retirement scan above holds an
+            // index into `active`.
+            self.admit_with(&mut report, false);
         }
         report
     }
@@ -823,11 +1121,16 @@ mod tests {
     /// Deterministic stub: next token is a pure function of (token, pos);
     /// slots come from a free list like a real KV pool, so slot-crossing
     /// bugs would be observable. `max_pos` mimics a bounded KV stride.
+    /// `Stub::spilling` builds one that can park sessions (the stub's
+    /// KV is positional, so spill/restore is pure slot bookkeeping).
     struct Stub {
         slots: usize,
         max_pos: usize,
         free: Vec<usize>,
         open_order: Vec<u64>,
+        can_spill: bool,
+        next_ticket: u64,
+        parked: std::collections::HashSet<u64>,
     }
 
     impl Stub {
@@ -837,12 +1140,22 @@ mod tests {
                 max_pos: usize::MAX,
                 free: (0..slots).rev().collect(),
                 open_order: Vec::new(),
+                can_spill: false,
+                next_ticket: 0,
+                parked: std::collections::HashSet::new(),
             }
         }
 
         fn with_max_pos(slots: usize, max_pos: usize) -> Stub {
             Stub {
                 max_pos,
+                ..Stub::new(slots)
+            }
+        }
+
+        fn spilling(slots: usize) -> Stub {
+            Stub {
+                can_spill: true,
                 ..Stub::new(slots)
             }
         }
@@ -870,6 +1183,30 @@ mod tests {
         fn close(&mut self, s: &mut DecodeSession) {
             assert!(!self.free.contains(&s.slot()), "double release");
             self.free.push(s.slot());
+        }
+        fn supports_spill(&self) -> bool {
+            self.can_spill
+        }
+        fn spill(&mut self, s: &DecodeSession) -> Result<KvTicket> {
+            anyhow::ensure!(self.can_spill, "engine does not support KV spill");
+            assert!(!self.free.contains(&s.slot()), "spilling a freed slot");
+            self.free.push(s.slot());
+            self.next_ticket += 1;
+            self.parked.insert(self.next_ticket);
+            Ok(KvTicket::new(self.next_ticket))
+        }
+        fn restore(&mut self, s: &mut DecodeSession, t: KvTicket) -> Result<()> {
+            anyhow::ensure!(self.parked.contains(&t.id()), "unknown ticket");
+            let slot = self
+                .free
+                .pop()
+                .ok_or_else(|| anyhow::anyhow!("no free slot to restore into"))?;
+            self.parked.remove(&t.id());
+            s.rebind_slot(slot);
+            Ok(())
+        }
+        fn discard(&mut self, _s: &mut DecodeSession, t: KvTicket) {
+            self.parked.remove(&t.id());
         }
     }
 
@@ -1296,6 +1633,149 @@ mod tests {
         assert_eq!(r.batch, vec![1], "non-continuous turn set must not grow");
         let r = sched.tick_with_intake(&mut intake);
         assert!(r.batch.contains(&2), "arrival admitted at the next assembly");
+    }
+
+    #[test]
+    fn preemption_oversubscribes_2x_slots_with_byte_identical_resumes() {
+        // The tentpole acceptance bar at the scheduler level: 4
+        // sessions over 2 KV slots. Tight deadlines force two
+        // preemptions; every request completes (zero capacity
+        // rejections) and preempted-then-resumed sessions reproduce
+        // the uncontended bytes exactly.
+        let reference: HashMap<u64, Vec<u32>> = {
+            let mut eng = Stub::new(1);
+            let mut out = HashMap::new();
+            for id in 1..=4u64 {
+                let mut s = eng.open(req(id, &[id as u32, 3], 6)).unwrap();
+                while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {}
+                eng.close(&mut s);
+                out.insert(id, s.generated);
+            }
+            out
+        };
+        let mut sched = Scheduler::new(Stub::spilling(2), 4);
+        assert_eq!(sched.max_sessions(), 4, "spilling engine oversubscribes");
+        sched.set_virtual_now_ms(0);
+        sched.submit(req(1, &[1, 3], 6).with_class(Priority::Normal, Some(9_000)));
+        sched.submit(req(2, &[2, 3], 6).with_class(Priority::Normal, Some(8_000)));
+        sched.tick(); // both resident and decoding
+        sched.submit(req(3, &[3, 3], 6).with_class(Priority::Normal, Some(100)));
+        sched.submit(req(4, &[4, 3], 6).with_class(Priority::Normal, Some(200)));
+        let mut events = Vec::new();
+        let mut outs = Vec::new();
+        while !sched.is_idle() {
+            let r = sched.tick();
+            events.extend(r.events);
+            outs.extend(r.outcomes);
+        }
+        assert_eq!(sched.rejected, 0, "oversubscription must not reject");
+        assert_eq!(sched.preemptions, 2);
+        assert_eq!(sched.resumes, 2);
+        let preempted: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                SessionEvent::Preempted { id } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(preempted, vec![1, 2], "latest deadlines must spill first");
+        assert_eq!(outs.len(), 4);
+        for o in outs {
+            match o {
+                Outcome::Done(c) => assert_eq!(
+                    c.response.tokens, reference[&c.response.id],
+                    "req {} bytes changed across preemption",
+                    c.response.id
+                ),
+                Outcome::Failed { id, error } => panic!("req {id} failed: {error}"),
+            }
+        }
+        assert_eq!(sched.engine().free.len(), 2, "all slots returned");
+        assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
+    }
+
+    #[test]
+    fn preempt_cap_pins_a_session_after_repeated_spills() {
+        // The preemption starvation guard: once a session has been
+        // spilled `preempt_cap` times it becomes unpreemptible, even
+        // for a higher class — bounded spill thrash, guaranteed
+        // completion.
+        let cfg = SchedConfig {
+            preempt_cap: 1,
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::with_config(Stub::spilling(1), 3, cfg);
+        sched.set_virtual_now_ms(0);
+        sched.submit(req(1, &[1], 8).with_class(Priority::Normal, Some(10_000)));
+        sched.tick(); // 1 resident
+        sched.submit(req(2, &[2], 2).with_class(Priority::Normal, Some(1_000)));
+        let r = sched.tick();
+        assert!(
+            r.events.iter().any(|e| matches!(e, SessionEvent::Preempted { id: 1 })),
+            "tighter deadline must preempt: {:?}",
+            r.events
+        );
+        // Drive until 2 completes; the backfill resumes 1.
+        let mut done2 = false;
+        while !done2 {
+            done2 = sched.tick().outcomes.iter().any(|o| o.id() == 2);
+        }
+        assert_eq!(sched.resumes, 1);
+        // Session 1 is now at the cap: even a High request cannot evict
+        // it — it waits its turn in the backlog instead.
+        sched.submit(req(3, &[3], 2).with_class(Priority::High, Some(10)));
+        let r = sched.tick();
+        assert!(
+            !r.events.iter().any(|e| matches!(e, SessionEvent::Preempted { .. })),
+            "preempt cap must pin session 1: {:?}",
+            r.events
+        );
+        let outs = sched.run_until_idle();
+        assert_eq!(sched.preemptions, 1);
+        let ids: Vec<u64> = outs.iter().map(|o| o.id()).collect();
+        assert!(ids.contains(&1) && ids.contains(&3), "{ids:?}");
+        assert_eq!(sched.engine().free.len(), 1);
+    }
+
+    #[test]
+    fn cancelling_a_parked_session_discards_its_ticket() {
+        let mut sched = Scheduler::new(Stub::spilling(1), 2);
+        sched.set_virtual_now_ms(0);
+        sched.submit(req(1, &[1], 8).with_class(Priority::Batch, None));
+        sched.tick();
+        sched.submit(req(2, &[2], 4).with_class(Priority::High, Some(50)));
+        let r = sched.tick();
+        assert!(
+            r.events.iter().any(|e| matches!(e, SessionEvent::Preempted { id: 1 })),
+            "{:?}",
+            r.events
+        );
+        assert_eq!(sched.parked_len(), 1);
+        let ev = sched.cancel(1).expect("parked session is cancellable");
+        assert!(matches!(ev, SessionEvent::Cancelled { id: 1, .. }));
+        assert_eq!(sched.parked_len(), 0);
+        assert!(sched.engine().parked.is_empty(), "ticket leaked");
+        let outs = sched.run_until_idle();
+        assert!(matches!(&outs[0], Outcome::Done(c) if c.response.id == 2));
+        assert_eq!(sched.cancelled, 1);
+        assert_eq!(sched.resumes, 0, "cancelled parked session must not resume");
+        assert_eq!(sched.engine().free.len(), 1);
+    }
+
+    #[test]
+    fn equal_key_traffic_never_preempts() {
+        // Untagged FIFO oversubscription: newer arrivals wait in the
+        // backlog exactly as before — spill support alone must not
+        // change the schedule.
+        let mut sched = Scheduler::new(Stub::spilling(2), 4);
+        for id in 1..=4 {
+            sched.submit(req(id, &[id as u32, 2], 3));
+        }
+        let outs = sched.run_until_idle();
+        assert_eq!(outs.len(), 4);
+        assert_eq!(sched.preemptions, 0, "equal keys must not spill");
+        assert_eq!(sched.engine().open_order, vec![1, 2, 3, 4]);
+        assert_eq!(sched.rejected, 0);
     }
 
     #[test]

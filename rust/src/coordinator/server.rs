@@ -24,6 +24,10 @@
 //!   `CANCEL <id>`        → `CANCELLED <id> <tokens_generated>` on the
 //!                          request's connection (the KV slot frees
 //!                          immediately; the next turn set excludes it)
+//!   `PREEMPTED <id>` /   → unsolicited status frames when the
+//!   `RESUMED <id>`         scheduler parks a session's KV below HBM
+//!                          and later restores it (tokens pause in
+//!                          between, then continue byte-identically)
 //!   errors               → `ERR <code> <id> <msg...>` with the stable
 //!                          codes of [`ParseError::code`] and the
 //!                          `ERR_*` constants; `<id>` is 0 for
@@ -43,9 +47,12 @@
 //! admission — a request landing mid-turn joins the in-flight batched
 //! turn), CANCEL frames tear sessions down between turns, and every
 //! [`SessionEvent`] maps to wire frames the moment the tick that
-//! produced it returns. STATS is answered from one [`StatsSnapshot`]
-//! refreshed under the queue lock after every pump — a single source of
-//! truth instead of per-counter atomic mirrors.
+//! produced it returns. Frames are *enqueued* into a bounded
+//! per-connection outbox drained by that connection's writer thread,
+//! so a client that stops reading backpressures only itself. STATS is
+//! answered from one [`StatsSnapshot`] refreshed under the queue lock
+//! after every pump — a single source of truth instead of per-counter
+//! atomic mirrors.
 
 use crate::coordinator::request::{detokenize, tokenize, Priority, Request, RequestQueue};
 use crate::coordinator::scheduler::SessionEvent;
@@ -57,7 +64,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// Wire protocol of one connection (`HELLO v2` upgrades it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -222,15 +229,79 @@ pub fn parse_request(line: &str) -> Result<Command, ParseError> {
     })
 }
 
-/// One connection's write half, shared by its acceptor-side handler
-/// (STATS, parse errors, HELLO) and the decode thread (ACK/TOK/END/
-/// CANCELLED frames). v2 makes concurrent producers the normal case;
-/// the mutex keeps every line atomic on the wire so frames can never
-/// interleave mid-line.
-type ConnWriter = Arc<Mutex<TcpStream>>;
+/// One connection's outbound frame queue, shared by its acceptor-side
+/// handler (STATS, parse errors, HELLO) and the decode thread (ACK/
+/// TOK/END/CANCELLED frames). Lines enqueue here and a per-connection
+/// *writer thread* drains them to the socket, so a client that stops
+/// reading backpressures only its own connection — never the decode
+/// thread every session shares (v1 frames used to be written inline on
+/// whichever thread produced them). One queue per connection keeps
+/// frame order exactly as produced; the queue is bounded, and a client
+/// that lets it overflow is poisoned (its remaining frames drop)
+/// rather than allowed to wedge serving.
+struct ConnTx {
+    tx: mpsc::SyncSender<String>,
+    /// The outbox overflowed or the socket died; the connection is
+    /// beyond saving, so frames are dropped from here on.
+    dead: AtomicBool,
+    /// Lines enqueued but not yet written — shutdown waits (bounded)
+    /// for live connections to drain to zero, so the final OK/END of a
+    /// `--max-requests` run is on the wire before the process can
+    /// exit (the old synchronous write path gave that for free).
+    pending: std::sync::atomic::AtomicUsize,
+}
+
+type ConnWriter = Arc<ConnTx>;
+
+/// Outbox depth per connection — deep enough for bursty TOK streams,
+/// bounded so a stuck client cannot hold unbounded frame memory.
+const CONN_OUTBOX_DEPTH: usize = 1024;
+
+/// Start a connection's writer thread over its owned write half.
+fn spawn_conn_writer(conn: TcpStream) -> ConnWriter {
+    let (tx, rx) = mpsc::sync_channel::<String>(CONN_OUTBOX_DEPTH);
+    let writer = Arc::new(ConnTx {
+        tx,
+        dead: AtomicBool::new(false),
+        pending: std::sync::atomic::AtomicUsize::new(0),
+    });
+    let mark = Arc::clone(&writer);
+    std::thread::spawn(move || {
+        // Exits when every ConnWriter clone is gone (channel closes) or
+        // the socket errors — either way the connection is done.
+        let mut conn = conn;
+        while let Ok(line) = rx.recv() {
+            let failed = conn.write_all(line.as_bytes()).is_err();
+            mark.pending.fetch_sub(1, Ordering::SeqCst);
+            if failed {
+                mark.dead.store(true, Ordering::SeqCst);
+                break;
+            }
+        }
+    });
+    writer
+}
 
 fn write_line(writer: &ConnWriter, line: &str) {
-    let _ = writer.lock().unwrap().write_all(line.as_bytes());
+    if writer.dead.load(Ordering::SeqCst) {
+        return;
+    }
+    // Count before sending so `pending` is always >= the queue depth
+    // (the writer thread decrements only after the socket write).
+    writer.pending.fetch_add(1, Ordering::SeqCst);
+    match writer.tx.try_send(line.to_string()) {
+        Ok(()) => {}
+        Err(mpsc::TrySendError::Full(_)) => {
+            // The client stopped draining and its outbox filled: poison
+            // this connection instead of blocking the producer (which
+            // may be the decode thread serving everyone else).
+            writer.pending.fetch_sub(1, Ordering::SeqCst);
+            writer.dead.store(true, Ordering::SeqCst);
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => {
+            writer.pending.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
 }
 
 /// A request parked between the acceptor and the decode loop, with the
@@ -264,6 +335,9 @@ struct Shared {
     cv: Condvar,
     stop: AtomicBool,
     next_id: AtomicU64,
+    /// Every connection's outbox (weak: a closed connection's entry
+    /// just stops upgrading) — shutdown drains these before returning.
+    writers: Mutex<Vec<std::sync::Weak<ConnTx>>>,
 }
 
 /// Format a v1 or v2 error line for a request-grammar failure.
@@ -293,6 +367,8 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
         "{{\"depth\":{depth},\"enqueued\":{enqueued},\"rejected\":{rejected},\
          \"active\":{},\"backlog\":{},\"served\":{},\"cancelled\":{},\
          \"batch\":{{\"turns\":{},\"tokens\":{},\"occupancy\":{:.2},\"union_hits\":{}}},\
+         \"preempt\":{{\"parked\":{},\"preemptions\":{},\"resumes\":{},\
+         \"spill_dram_b\":{},\"spill_ssd_b\":{},\"restore_b\":{}}},\
          \"classes\":{{{}}}}}\n",
         s.active,
         s.backlog,
@@ -302,6 +378,12 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
         s.batch_tokens,
         s.batch_occupancy(),
         s.union_plan_hits,
+        s.parked,
+        s.preemptions,
+        s.resumes,
+        s.kv_spill.spill_bytes_dram,
+        s.kv_spill.spill_bytes_ssd,
+        s.kv_spill.restore_bytes(),
         classes.join(",")
     )
 }
@@ -334,6 +416,7 @@ pub fn serve<E: SessionEngine>(
         cv: Condvar::new(),
         stop: AtomicBool::new(false),
         next_id: AtomicU64::new(1),
+        writers: Mutex::new(Vec::new()),
     });
 
     // Acceptor thread: parse lines, enqueue.
@@ -465,13 +548,11 @@ pub fn serve<E: SessionEngine>(
                 };
                 // The decode thread owns every frame of a submitted
                 // request, so this ACK trivially precedes its first
-                // TOK — and no client socket write ever happens while
-                // the state lock is held, so a non-reading client never
-                // blocks the acceptor-side handlers (STATS, parsing).
-                // Frame delivery itself still shares the decode thread
-                // — the same single-writer model v1 replies always had;
-                // per-connection writer queues are the ROADMAP step if
-                // hostile clients become a serving concern.
+                // TOK — and frames only *enqueue* here: each
+                // connection's writer thread does the socket I/O, so a
+                // non-draining client backpressures (and eventually
+                // poisons) only its own outbox, never the decode
+                // thread or the acceptor-side handlers.
                 if client.proto == Proto::V2 {
                     write_line(&client.conn, &format!("ACK {}\n", req.id));
                 }
@@ -553,6 +634,24 @@ pub fn serve<E: SessionEngine>(
                         write_line(&c.conn, &line);
                     }
                 }
+                // Preemption is visible, not silent: a v2 client sees
+                // its request parked and resumed (the token stream
+                // pauses in between, byte-identical on resume). v1
+                // clients block on one reply and never learn.
+                SessionEvent::Preempted { id } => {
+                    if let Some(c) = conns.get(&id) {
+                        if c.proto == Proto::V2 {
+                            write_line(&c.conn, &format!("PREEMPTED {id}\n"));
+                        }
+                    }
+                }
+                SessionEvent::Resumed { id } => {
+                    if let Some(c) = conns.get(&id) {
+                        if c.proto == Proto::V2 {
+                            write_line(&c.conn, &format!("RESUMED {id}\n"));
+                        }
+                    }
+                }
             }
         }
     }
@@ -580,6 +679,27 @@ pub fn serve<E: SessionEngine>(
     }
     let _ = TcpStream::connect(bound);
     let _ = acceptor.join();
+    // Frames only *enqueue* into per-connection outboxes; give the
+    // writer threads a bounded window to put every owed line (final
+    // OK/END frames, the shutdown ERRs above) on the wire before the
+    // caller can exit the process. Dead/poisoned connections are
+    // skipped, so a wedged client cannot stall shutdown past the cap.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+    loop {
+        let owed: usize = shared
+            .writers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|w| w.upgrade())
+            .filter(|w| !w.dead.load(Ordering::SeqCst))
+            .map(|w| w.pending.load(Ordering::SeqCst))
+            .sum();
+        if owed == 0 || std::time::Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
     // The core folds per-class accounting into the engine's telemetry
     // (when it keeps one) so callers see one report.
     Ok(core.into_engine())
@@ -590,11 +710,19 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
         Ok(c) => c,
         Err(_) => return,
     };
-    // The single shared write half for this connection: the decode
-    // thread gets clones of it (via Pending/cancels), so its frames and
-    // this handler's replies serialize per line instead of interleaving
-    // mid-frame on the wire.
-    let writer: ConnWriter = Arc::new(Mutex::new(conn));
+    // The single outbound queue for this connection: the decode thread
+    // gets clones of it (via Pending/cancels), so its frames and this
+    // handler's replies serialize in production order, and the writer
+    // thread is the only one that ever touches the socket's write half.
+    let writer: ConnWriter = spawn_conn_writer(conn);
+    {
+        // Register for the shutdown drain, pruning entries whose
+        // connections are gone so the registry stays proportional to
+        // *live* connections, not to every connection ever accepted.
+        let mut writers = shared.writers.lock().unwrap();
+        writers.retain(|w| w.strong_count() > 0);
+        writers.push(Arc::downgrade(&writer));
+    }
     let mut lines = BufReader::new(reader).lines();
     let mut proto = Proto::V1;
     while let Some(Ok(line)) = lines.next() {

@@ -16,7 +16,7 @@
 use crate::coordinator::request::Request;
 use crate::coordinator::scheduler::{SchedConfig, Scheduler, SessionEvent};
 use crate::coordinator::session::SessionEngine;
-use crate::telemetry::{ClassCounters, N_CLASSES};
+use crate::telemetry::{ClassCounters, SpillCounters, N_CLASSES};
 
 /// One coherent view of the serving state, taken from the scheduler and
 /// the engine's telemetry in a single call — the replacement for the
@@ -42,6 +42,14 @@ pub struct StatsSnapshot {
     pub batch_tokens: u64,
     /// Cache hits scored against batched union plans.
     pub union_plan_hits: u64,
+    /// Sessions currently preempted (KV parked outside HBM).
+    pub parked: usize,
+    /// Preemption events so far (sessions spilled and parked).
+    pub preemptions: u64,
+    /// Parked sessions restored into an HBM slot.
+    pub resumes: u64,
+    /// Per-tier KV spill/restore byte meters, from engine telemetry.
+    pub kv_spill: SpillCounters,
 }
 
 impl StatsSnapshot {
@@ -70,10 +78,12 @@ impl<E: SessionEngine> ServingCore<E> {
     }
 
     /// Build a core sized and configured by the engine itself
-    /// ([`SessionEngine::capacity`] slots, [`SessionEngine::sched_config`]
-    /// policy) — how the server boots over any engine.
+    /// ([`SessionEngine::max_sessions`] in flight — which may exceed
+    /// the engine's physical KV slots when it can spill —
+    /// [`SessionEngine::sched_config`] policy) — how the server boots
+    /// over any engine.
     pub fn from_engine(engine: E) -> ServingCore<E> {
-        let sessions = engine.capacity();
+        let sessions = engine.max_sessions();
         let cfg = engine.sched_config();
         ServingCore::new(engine, sessions, cfg)
     }
@@ -141,6 +151,10 @@ impl<E: SessionEngine> ServingCore<E> {
             batch_turns: tel.map_or(0, |t| t.batch_turns),
             batch_tokens: tel.map_or(0, |t| t.batch_tokens),
             union_plan_hits: tel.map_or(0, |t| t.union_plan_hits),
+            parked: self.sched.parked_len(),
+            preemptions: self.sched.preemptions,
+            resumes: self.sched.resumes,
+            kv_spill: tel.map_or(SpillCounters::default(), |t| t.kv_spill),
         }
     }
 

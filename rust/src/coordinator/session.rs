@@ -26,8 +26,28 @@ pub enum SessionState {
     Prefill,
     /// Generating new tokens.
     Decode,
+    /// Paused by the scheduler with its KV spilled out of HBM
+    /// ([`DecodeSession::pause`]); resumes into its pre-pause phase.
+    Preempted,
     /// All requested tokens produced (or the session was aborted).
     Done,
+}
+
+/// Opaque handle to a session's spilled KV state, returned by
+/// [`SessionEngine::spill`] and redeemed by [`SessionEngine::restore`]
+/// (or dropped via [`SessionEngine::discard`] when a parked session is
+/// cancelled). Only the issuing engine can interpret it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KvTicket(u64);
+
+impl KvTicket {
+    pub fn new(id: u64) -> KvTicket {
+        KvTicket(id)
+    }
+
+    pub fn id(self) -> u64 {
+        self.0
+    }
 }
 
 /// What one call to [`DecodeSession::step`] did.
@@ -83,6 +103,9 @@ pub struct DecodeSession {
     last_token_at: Option<Instant>,
     /// The session was aborted mid-flight ([`Self::abort`]).
     cancelled: bool,
+    /// Phase to return to when a [`SessionState::Preempted`] session
+    /// resumes (the state [`Self::pause`] left).
+    paused_from: SessionState,
 }
 
 impl DecodeSession {
@@ -105,12 +128,22 @@ impl DecodeSession {
             logits: Vec::new(),
             last_token_at: None,
             cancelled: false,
+            paused_from: SessionState::Queued,
         }
     }
 
-    /// KV slot assigned by the engine at open time.
+    /// KV slot assigned by the engine at open time (rebound on a
+    /// restore after preemption — see [`Self::rebind_slot`]).
     pub fn slot(&self) -> usize {
         self.slot
+    }
+
+    /// Point the session at a different KV slot. Only the engine that
+    /// owns the KV store may call this, and only while the session is
+    /// preempted: [`SessionEngine::restore`] lands the spilled state in
+    /// whatever slot is free, which need not be the original one.
+    pub fn rebind_slot(&mut self, slot: usize) {
+        self.slot = slot;
     }
 
     /// Tokens fed so far — the next forward pass writes KV row `pos`.
@@ -140,6 +173,41 @@ impl DecodeSession {
     /// The session ended via [`Self::abort`], not by finishing.
     pub fn is_cancelled(&self) -> bool {
         self.cancelled
+    }
+
+    /// Park the session: the scheduler preempted it and its KV left
+    /// HBM ([`SessionEngine::spill`]). No steps run until
+    /// [`Self::resume`]; generated tokens and cursors are untouched, so
+    /// a resumed session continues byte-identically. Pausing a finished
+    /// session is an error (there is nothing left to resume).
+    pub fn pause(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.state != SessionState::Done,
+            "session {} cannot pause: already done",
+            self.id
+        );
+        anyhow::ensure!(
+            self.state != SessionState::Preempted,
+            "session {} already paused",
+            self.id
+        );
+        self.paused_from = self.state;
+        self.state = SessionState::Preempted;
+        Ok(())
+    }
+
+    /// Return from [`Self::pause`] into the exact phase the session
+    /// left (Queued/Prefill/Decode). The engine must have restored the
+    /// KV slot first.
+    pub fn resume(&mut self) {
+        if self.state == SessionState::Preempted {
+            self.state = self.paused_from;
+        }
+    }
+
+    /// Currently parked by the scheduler (KV spilled out of HBM).
+    pub fn is_preempted(&self) -> bool {
+        self.state == SessionState::Preempted
     }
 
     /// Still consuming prompt tokens (a chunked-prefill turn may keep
@@ -182,6 +250,14 @@ impl DecodeSession {
         // forgotten check into a failed request instead of an
         // out-of-bounds panic on the one decode thread.
         anyhow::ensure!(!self.prompt.is_empty(), "session {} has an empty prompt", self.id);
+        // A parked session's KV is not in HBM: stepping it would read
+        // another session's slot. The scheduler never schedules parked
+        // sessions; this turns a bookkeeping bug into a failed request.
+        anyhow::ensure!(
+            self.state != SessionState::Preempted,
+            "session {} stepped while preempted",
+            self.id
+        );
         if self.state == SessionState::Queued {
             self.stats.queue_s = self.arrived.elapsed().as_secs_f64();
             self.state = SessionState::Prefill;
@@ -192,7 +268,9 @@ impl DecodeSession {
             SessionState::Decode => {
                 *self.generated.last().expect("decode state has a token")
             }
-            SessionState::Queued | SessionState::Done => unreachable!("handled above"),
+            SessionState::Queued | SessionState::Preempted | SessionState::Done => {
+                unreachable!("handled above")
+            }
         }))
     }
 
@@ -242,7 +320,7 @@ impl DecodeSession {
                     StepOutcome::Working
                 }
             }
-            SessionState::Queued | SessionState::Done => {
+            SessionState::Queued | SessionState::Preempted | SessionState::Done => {
                 unreachable!("complete_step without begin_step")
             }
         }
@@ -298,8 +376,53 @@ pub trait SessionEngine {
 
     /// Release the session's engine resources and fold its counters into
     /// aggregate telemetry. Called exactly once per opened session —
-    /// including sessions torn down early via [`DecodeSession::abort`].
+    /// including sessions torn down early via [`DecodeSession::abort`]
+    /// — except sessions that end *parked*, which tear down through
+    /// [`Self::discard`] instead (their KV slot was already freed at
+    /// spill time).
     fn close(&mut self, s: &mut DecodeSession);
+
+    /// Whether this engine can park a session's KV outside HBM. The
+    /// scheduler only oversubscribes (`max_sessions` beyond
+    /// [`Self::capacity`]) and preempts over engines that report true;
+    /// for everything else the PR-1..4 admission semantics are
+    /// unchanged.
+    fn supports_spill(&self) -> bool {
+        false
+    }
+
+    /// Spill the session's KV state out of its HBM slot to a lower tier
+    /// (DRAM spill area, then the SSD spill file), freeing the slot for
+    /// another session. On success the slot is free and the returned
+    /// ticket redeems the state; on error the engine is unchanged and
+    /// the scheduler will not preempt.
+    fn spill(&mut self, _s: &DecodeSession) -> Result<KvTicket> {
+        anyhow::bail!("engine does not support KV spill")
+    }
+
+    /// Bring a spilled session back: bind a free HBM slot, copy the
+    /// ticket's KV state into it byte-identically, and rebind the
+    /// session to the slot ([`DecodeSession::rebind_slot`]). On error
+    /// the ticket stays redeemable (the caller may [`Self::discard`]
+    /// it) and the engine holds no extra slot.
+    fn restore(&mut self, _s: &mut DecodeSession, _ticket: KvTicket) -> Result<()> {
+        anyhow::bail!("engine does not support KV restore")
+    }
+
+    /// Tear down a session that ends while parked (cancel, or a failed
+    /// restore): drop the ticket's spilled state and fold the session's
+    /// counters into telemetry, like [`Self::close`] minus the slot
+    /// release (the slot went back to the pool at spill time).
+    fn discard(&mut self, _s: &mut DecodeSession, _ticket: KvTicket) {}
+
+    /// How many sessions this engine wants in flight at once — admitted
+    /// and holding either an HBM KV slot or a spill ticket. Engines
+    /// without spill support keep the default (in flight == resident);
+    /// a spilling engine may report more than [`Self::capacity`], which
+    /// is exactly the oversubscription `--sessions 2N` over N KV slots.
+    fn max_sessions(&self) -> usize {
+        self.capacity()
+    }
 
     /// The scheduling policy this engine wants to be served with. The
     /// generic server ([`crate::coordinator::server::serve`]) and
@@ -407,6 +530,57 @@ impl KvPool {
     pub fn v_layer(&self, slot: usize, layer: usize) -> &[f32] {
         let b = self.base(slot, layer);
         &self.v[b..b + self.stride]
+    }
+
+    /// f32 values in one slot's K (equally V) plane.
+    pub fn slot_len(&self) -> usize {
+        self.n_layers * self.stride
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// f32 values per (slot, layer) plane.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Overwrite the first `k.len()` values of one layer's K/V planes —
+    /// the restore half of a *prefix* spill (only the rows decode
+    /// actually wrote travel through the spill tiers; the tail of a
+    /// freshly acquired slot is already zero, exactly what the
+    /// unspilled slot held there).
+    pub fn load_layer_prefix(&mut self, slot: usize, layer: usize, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), v.len(), "K/V prefix lengths");
+        assert!(k.len() <= self.stride, "prefix past stride");
+        let b = self.base(slot, layer);
+        self.k[b..b + k.len()].copy_from_slice(k);
+        self.v[b..b + v.len()].copy_from_slice(v);
+    }
+
+    /// A slot's entire K plane (`n_layers * stride` contiguous f32) —
+    /// what the tiered store copies out on spill.
+    pub fn k_slot(&self, slot: usize) -> &[f32] {
+        let b = slot * self.slot_len();
+        &self.k[b..b + self.slot_len()]
+    }
+
+    /// A slot's entire V plane.
+    pub fn v_slot(&self, slot: usize) -> &[f32] {
+        let b = slot * self.slot_len();
+        &self.v[b..b + self.slot_len()]
+    }
+
+    /// Overwrite a slot's full K/V planes (the restore half of a
+    /// spill round-trip).
+    pub fn load_slot(&mut self, slot: usize, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.slot_len(), "K plane length");
+        assert_eq!(v.len(), self.slot_len(), "V plane length");
+        let b = slot * self.slot_len();
+        let e = b + self.slot_len();
+        self.k[b..e].copy_from_slice(k);
+        self.v[b..e].copy_from_slice(v);
     }
 
     /// Write the KV rows produced at `pos` (`d` values each).
@@ -541,6 +715,66 @@ mod tests {
         let mut p = KvPool::new(1, 1, 4);
         let s = p.acquire().unwrap();
         p.write_token(s, 0, 2, 2, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn pause_resume_is_transparent_to_generation() {
+        // A session paused and resumed mid-decode (the preemption
+        // round-trip at the session level) generates the same bytes as
+        // one that ran straight through.
+        let mut eng = Echo;
+        let straight = {
+            let mut s = eng.open(req(1, vec![3, 1, 4], 6)).unwrap();
+            while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {}
+            s.generated
+        };
+        let mut s = eng.open(req(1, vec![3, 1, 4], 6)).unwrap();
+        let mut steps = 0;
+        loop {
+            if steps == 2 || steps == 5 {
+                s.pause().unwrap();
+                assert!(s.is_preempted());
+                assert!(s.begin_step().is_err(), "parked sessions must not step");
+                s.resume();
+                assert!(!s.is_preempted());
+            }
+            steps += 1;
+            if matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {
+                break;
+            }
+        }
+        assert_eq!(s.generated, straight);
+        // Pausing a finished session is an error; double pause too.
+        assert!(s.pause().is_err());
+        let mut p = eng.open(req(2, vec![1], 4)).unwrap();
+        p.step(&mut eng).unwrap();
+        p.pause().unwrap();
+        assert!(p.pause().is_err(), "double pause");
+        p.resume();
+        p.resume(); // idempotent outside Preempted
+        assert!(matches!(p.state, SessionState::Decode | SessionState::Prefill));
+    }
+
+    #[test]
+    fn kv_pool_slot_planes_roundtrip() {
+        let mut p = KvPool::new(2, 3, 4);
+        assert_eq!(p.slot_len(), 12);
+        let a = p.acquire().unwrap();
+        p.write_token(a, 1, 0, 2, &[1.5, -2.5], &[3.5, f32::NAN]);
+        let k = p.k_slot(a).to_vec();
+        let v = p.v_slot(a).to_vec();
+        p.zero(a);
+        assert!(p.k_slot(a).iter().all(|&x| x == 0.0));
+        p.load_slot(a, &k, &v);
+        // Bit-exact round-trip, NaN included.
+        assert_eq!(
+            p.k_slot(a).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            k.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            p.v_slot(a).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

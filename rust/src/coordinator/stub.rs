@@ -8,8 +8,9 @@
 //! protocol tests pin.
 
 use crate::coordinator::request::Request;
-use crate::coordinator::session::{DecodeSession, SessionEngine};
+use crate::coordinator::session::{DecodeSession, KvTicket, SessionEngine};
 use anyhow::Result;
+use std::collections::HashSet;
 use std::time::Duration;
 
 /// Smallest printable ASCII byte the stub emits.
@@ -24,8 +25,18 @@ pub struct StubSessionEngine {
     /// Artificial per-forward latency — lets wire-level tests pace the
     /// decode loop so a CANCEL deterministically lands mid-decode.
     step_delay: Duration,
+    /// Spill support is opt-in ([`Self::with_spill`]) so existing
+    /// harnesses keep the PR-1..4 non-preemptive schedules exactly.
+    can_spill: bool,
+    /// Outstanding spill tickets (the stub's KV is a pure function of
+    /// position, so parking is slot bookkeeping only).
+    parked: HashSet<u64>,
+    next_ticket: u64,
     /// Total forwards run (test observability).
     pub forwards: u64,
+    /// Spill/restore events (test observability).
+    pub spills: u64,
+    pub restores: u64,
 }
 
 impl StubSessionEngine {
@@ -35,8 +46,26 @@ impl StubSessionEngine {
             max_pos: usize::MAX,
             free: (0..slots).rev().collect(),
             step_delay: Duration::ZERO,
+            can_spill: false,
+            parked: HashSet::new(),
+            next_ticket: 0,
             forwards: 0,
+            spills: 0,
+            restores: 0,
         }
+    }
+
+    /// Enable KV spill/restore: the scheduler may then oversubscribe
+    /// sessions beyond `slots` and preempt (artifact-free preemption
+    /// harnesses, `bench_preempt`).
+    pub fn with_spill(mut self) -> StubSessionEngine {
+        self.can_spill = true;
+        self
+    }
+
+    /// Tickets currently parked outside the slot pool.
+    pub fn parked(&self) -> usize {
+        self.parked.len()
     }
 
     /// Bound the per-slot KV stride (admission rejects oversize).
@@ -121,6 +150,36 @@ impl SessionEngine for StubSessionEngine {
     fn close(&mut self, s: &mut DecodeSession) {
         debug_assert!(!self.free.contains(&s.slot()), "double release");
         self.free.push(s.slot());
+    }
+
+    fn supports_spill(&self) -> bool {
+        self.can_spill
+    }
+
+    fn spill(&mut self, s: &DecodeSession) -> Result<KvTicket> {
+        anyhow::ensure!(self.can_spill, "engine does not support KV spill");
+        debug_assert!(!self.free.contains(&s.slot()), "spilling a freed slot");
+        self.free.push(s.slot());
+        self.next_ticket += 1;
+        self.parked.insert(self.next_ticket);
+        self.spills += 1;
+        Ok(KvTicket::new(self.next_ticket))
+    }
+
+    fn restore(&mut self, s: &mut DecodeSession, ticket: KvTicket) -> Result<()> {
+        anyhow::ensure!(self.parked.contains(&ticket.id()), "unknown ticket");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("no free slot to restore into"))?;
+        self.parked.remove(&ticket.id());
+        s.rebind_slot(slot);
+        self.restores += 1;
+        Ok(())
+    }
+
+    fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
+        self.parked.remove(&ticket.id());
     }
 }
 

@@ -54,6 +54,17 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.fixed_layers = args.get_usize("fixed-layers", cfg.fixed_layers);
     cfg.preload_depth = args.get_usize("preload-depth", cfg.preload_depth);
     cfg.max_sessions = args.get_usize("sessions", cfg.max_sessions).max(1);
+    // Tiered KV: physical HBM slots (default = sessions). Fewer slots
+    // than sessions oversubscribes serving — the scheduler preempts by
+    // spilling KV to the DRAM spill area / SSD spill file.
+    cfg.kv_slots = args
+        .get("kv-slots")
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1));
+    if let Some(mib) = args.get("kv-spill-dram-mib").and_then(|v| v.parse::<u64>().ok()) {
+        cfg.kv_spill_dram = mib << 20;
+    }
+    cfg.preempt_cap = args.get_usize("preempt-cap", cfg.preempt_cap as usize) as u32;
     cfg.prefill_chunk = args.get_usize("prefill-chunk", cfg.prefill_chunk).max(1);
     cfg.starvation_guard =
         args.get_usize("starvation-guard", cfg.starvation_guard as usize) as u64;
@@ -115,6 +126,13 @@ COMMANDS:
                                        event-driven serving core)
   serve           TCP server: --addr HOST:PORT [--max-requests N]
                   [--sessions N]       interleave up to N decode sessions
+                  [--kv-slots K]       physical HBM KV slots (default N;
+                                       K < N oversubscribes — preempted
+                                       sessions spill KV to DRAM/SSD and
+                                       resume byte-identically)
+                  [--kv-spill-dram-mib M]  DRAM spill-area budget
+                  [--preempt-cap C]    max preemptions per session (0
+                                       disables preemption)
                   [--prefill-chunk N]  prompt tokens per scheduler turn
                   [--batch]            one shared per-layer pass for all
                                        co-resident sessions (union-plan

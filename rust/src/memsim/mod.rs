@@ -20,6 +20,7 @@ pub fn channel_for(link: Link) -> Channel {
         Link::DramToHbm => Channel::PcieH2d,
         Link::HbmToDram => Channel::PcieD2h,
         Link::SsdToDram => Channel::Ssd,
+        Link::DramToSsd => Channel::Ssd,
     }
 }
 

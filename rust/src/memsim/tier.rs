@@ -38,6 +38,8 @@ pub enum Link {
     HbmToDram,
     /// SSD -> DRAM (NVMe read, PCIe 3.0 x4).
     SsdToDram,
+    /// DRAM -> SSD (NVMe write — the KV spill file's ingest path).
+    DramToSsd,
 }
 
 /// Cost-model parameters for one link.
@@ -88,6 +90,7 @@ pub struct Links {
     pub dram_to_hbm: LinkSpec,
     pub hbm_to_dram: LinkSpec,
     pub ssd_to_dram: LinkSpec,
+    pub dram_to_ssd: LinkSpec,
 }
 
 impl Links {
@@ -98,6 +101,7 @@ impl Links {
             Link::DramToHbm => self.dram_to_hbm,
             Link::HbmToDram => self.hbm_to_dram,
             Link::SsdToDram => self.ssd_to_dram,
+            Link::DramToSsd => self.dram_to_ssd,
         }
     }
 }
@@ -140,6 +144,11 @@ impl HardwareSpec {
                 ssd_to_dram: LinkSpec {
                     bandwidth_bps: 3.2e9,
                     base_latency_s: 80.0e-6,
+                },
+                // NVMe sustained write runs below its read rate.
+                dram_to_ssd: LinkSpec {
+                    bandwidth_bps: 2.7e9,
+                    base_latency_s: 90.0e-6,
                 },
             },
         }

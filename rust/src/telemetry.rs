@@ -15,12 +15,55 @@ pub struct Traffic {
     pub ssd_to_dram: u64,
     pub dram_to_hbm: u64,
     pub hbm_to_dram: u64,
+    /// Writes into the SSD spill file (KV state parked past the DRAM
+    /// spill budget by the tiered KV store).
+    pub dram_to_ssd: u64,
     pub hbm_internal: u64,
 }
 
 impl Traffic {
     pub fn total(&self) -> u64 {
-        self.ssd_to_dram + self.dram_to_hbm + self.hbm_to_dram + self.hbm_internal
+        self.ssd_to_dram
+            + self.dram_to_hbm
+            + self.hbm_to_dram
+            + self.dram_to_ssd
+            + self.hbm_internal
+    }
+}
+
+/// KV spill/restore accounting per destination tier — the traffic the
+/// tiered KV store ([`crate::coordinator::KvStore`]) moves when the
+/// scheduler preempts a session out of HBM (DRAM spill area first, the
+/// SSD spill file past its budget) and later restores it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillCounters {
+    pub spills_dram: u64,
+    pub spills_ssd: u64,
+    pub restores_dram: u64,
+    pub restores_ssd: u64,
+    /// Tickets dropped without a restore (a parked session cancelled).
+    pub discards: u64,
+    pub spill_bytes_dram: u64,
+    pub spill_bytes_ssd: u64,
+    pub restore_bytes_dram: u64,
+    pub restore_bytes_ssd: u64,
+}
+
+impl SpillCounters {
+    pub fn spills(&self) -> u64 {
+        self.spills_dram + self.spills_ssd
+    }
+
+    pub fn restores(&self) -> u64 {
+        self.restores_dram + self.restores_ssd
+    }
+
+    pub fn spill_bytes(&self) -> u64 {
+        self.spill_bytes_dram + self.spill_bytes_ssd
+    }
+
+    pub fn restore_bytes(&self) -> u64 {
+        self.restore_bytes_dram + self.restore_bytes_ssd
     }
 }
 
@@ -118,6 +161,9 @@ pub struct Telemetry {
     pub union_plan_hits: u64,
     /// Per-priority-class serving counters (see [`ClassCounters`]).
     pub classes: [ClassCounters; N_CLASSES],
+    /// KV spill/restore counts and bytes per tier (preemption traffic
+    /// of the tiered KV store; zero when nothing was ever preempted).
+    pub kv_spill: SpillCounters,
     /// Free-form counters for experiment-specific series.
     pub counters: BTreeMap<String, u64>,
 }
@@ -179,6 +225,11 @@ impl Telemetry {
             .field_int("peak_sessions", self.peak_active_sessions as i64)
             .field_num("batch_occupancy", self.batch_occupancy())
             .field_int("union_plan_hits", self.union_plan_hits as i64)
+            .field_int("kv_spills_dram", self.kv_spill.spills_dram as i64)
+            .field_int("kv_spills_ssd", self.kv_spill.spills_ssd as i64)
+            .field_int("kv_restores", self.kv_spill.restores() as i64)
+            .field_int("kv_spill_bytes", self.kv_spill.spill_bytes() as i64)
+            .field_int("kv_restore_bytes", self.kv_spill.restore_bytes() as i64)
             .field_num("predict_s", self.phases.predict_s)
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)
@@ -292,9 +343,36 @@ mod tests {
             ssd_to_dram: 1,
             dram_to_hbm: 2,
             hbm_to_dram: 3,
+            dram_to_ssd: 5,
             hbm_internal: 4,
         };
-        assert_eq!(tr.total(), 10);
+        assert_eq!(tr.total(), 15);
+    }
+
+    #[test]
+    fn spill_counters_aggregate_per_tier() {
+        let c = SpillCounters {
+            spills_dram: 2,
+            spills_ssd: 1,
+            restores_dram: 2,
+            restores_ssd: 1,
+            discards: 1,
+            spill_bytes_dram: 100,
+            spill_bytes_ssd: 50,
+            restore_bytes_dram: 100,
+            restore_bytes_ssd: 50,
+        };
+        assert_eq!(c.spills(), 3);
+        assert_eq!(c.restores(), 3);
+        assert_eq!(c.spill_bytes(), 150);
+        assert_eq!(c.restore_bytes(), 150);
+        let t = Telemetry {
+            kv_spill: c,
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert!(j.contains("\"kv_spills_dram\":2"), "{j}");
+        assert!(j.contains("\"kv_spill_bytes\":150"), "{j}");
     }
 
     #[test]

@@ -1,14 +1,17 @@
-//! KvPool property tier — runs WITHOUT `make artifacts`. Random
-//! acquire/release/zero/write sequences against a shadow model, in the
-//! same `util::check` style as the CacheUnit property sweeps: the pool
-//! must never alias two live slots, always satisfy
+//! KvPool/KvStore property tier — runs WITHOUT `make artifacts`.
+//! Random acquire/release/zero/write sequences against a shadow model,
+//! in the same `util::check` style as the CacheUnit property sweeps:
+//! the pool must never alias two live slots, always satisfy
 //! `in_use + available == capacity`, and hand back zeroed memory on
-//! every (re-)acquire.
+//! every (re-)acquire. The tiered-store sweeps extend the op set with
+//! spill/restore/discard: parked state must round-trip byte-
+//! identically through whichever spill tier (DRAM area or SSD file)
+//! took it, and no slot or ticket may ever leak.
 
-use m2cache::coordinator::KvPool;
+use m2cache::coordinator::{KvPool, KvStore, KvTicket};
 use m2cache::util::check::Check;
 use m2cache::util::rng::Rng;
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 
 /// One random op sequence against a freshly built pool.
 fn pool_invariants(rng: &mut Rng) -> Result<(), String> {
@@ -120,6 +123,155 @@ fn pool_invariants(rng: &mut Rng) -> Result<(), String> {
 #[test]
 fn kv_pool_random_ops_never_alias_and_conserve_slots() {
     Check::new(200, 0x5107).run("kv-pool-invariants", pool_invariants);
+}
+
+/// Random spill/restore/discard sequences against a shadow model: the
+/// tiered store must conserve slots, track exactly the outstanding
+/// tickets, and restore each parked session's sentinel bit-exactly.
+fn kv_store_spill_invariants(rng: &mut Rng) -> Result<(), String> {
+    let slots = rng.range(1, 5);
+    let layers = rng.range(1, 4);
+    let d = rng.range(1, 4);
+    let max_seq = rng.range(1, 5);
+    let stride = max_seq * d;
+    let slot_bytes = (2 * layers * stride * 4) as u64;
+    // Three budget regimes: everything to the SSD file, a one-slot
+    // DRAM area that cascades, and DRAM-only.
+    let budget = [0, slot_bytes, u64::MAX / 2][rng.below(3) as usize];
+    let mut kv = KvStore::new(slots, layers, stride, budget);
+    let mut live: Vec<usize> = Vec::new();
+    // slot -> sentinel (layer, pos, val) last written.
+    let mut wrote: HashMap<usize, (usize, usize, f32)> = HashMap::new();
+    // Outstanding tickets with the sentinel their state must carry.
+    let mut parked: Vec<(KvTicket, Option<(usize, usize, f32)>)> = Vec::new();
+    for step in 0..96 {
+        match rng.below(5) {
+            0 => {
+                if let Some(s) = kv.acquire() {
+                    if live.contains(&s) {
+                        return Err(format!("step {step}: slot {s} double-acquired"));
+                    }
+                    live.push(s);
+                }
+            }
+            1 => {
+                if !live.is_empty() {
+                    let s = live.swap_remove(rng.range(0, live.len()));
+                    kv.release(s);
+                    wrote.remove(&s);
+                }
+            }
+            2 => {
+                if !live.is_empty() {
+                    let s = live[rng.range(0, live.len())];
+                    let layer = rng.range(0, layers);
+                    let pos = rng.range(0, max_seq);
+                    let val = (step + 1) as f32;
+                    kv.write_token(s, layer, pos, d, &vec![val; d], &vec![-val; d]);
+                    wrote.insert(s, (layer, pos, val));
+                }
+            }
+            3 => {
+                if !live.is_empty() {
+                    let s = live.swap_remove(rng.range(0, live.len()));
+                    let t = kv.spill(s).map_err(|e| format!("step {step}: spill: {e:#}"))?;
+                    parked.push((t, wrote.remove(&s)));
+                }
+            }
+            _ => {
+                if !parked.is_empty() {
+                    let pi = rng.range(0, parked.len());
+                    let (t, sentinel) = parked.swap_remove(pi);
+                    if rng.below(4) == 0 {
+                        if !kv.discard(t) {
+                            return Err(format!("step {step}: known ticket not discarded"));
+                        }
+                    } else if kv.available() == 0 {
+                        // Full pool: restore must refuse AND keep the
+                        // ticket redeemable.
+                        if kv.restore(t).is_ok() {
+                            return Err(format!("step {step}: restore into a full pool"));
+                        }
+                        parked.push((t, sentinel));
+                    } else {
+                        let s = kv
+                            .restore(t)
+                            .map_err(|e| format!("step {step}: restore: {e:#}"))?;
+                        if live.contains(&s) {
+                            return Err(format!("step {step}: restore aliased slot {s}"));
+                        }
+                        if let Some((layer, pos, val)) = sentinel {
+                            let k = &kv.k_layer(s, layer)[pos * d..pos * d + d];
+                            let v = &kv.v_layer(s, layer)[pos * d..pos * d + d];
+                            if k.iter().any(|&x| x != val) || v.iter().any(|&x| x != -val) {
+                                return Err(format!(
+                                    "step {step}: ticket restored wrong bytes (k {k:?})"
+                                ));
+                            }
+                            wrote.insert(s, (layer, pos, val));
+                        }
+                        live.push(s);
+                    }
+                }
+            }
+        }
+        // Invariants after every op.
+        if kv.in_use() + kv.available() != kv.capacity() {
+            return Err(format!(
+                "step {step}: in_use {} + available {} != capacity {}",
+                kv.in_use(),
+                kv.available(),
+                kv.capacity()
+            ));
+        }
+        if kv.in_use() != live.len() {
+            return Err(format!(
+                "step {step}: store thinks {} in use, model says {}",
+                kv.in_use(),
+                live.len()
+            ));
+        }
+        if kv.spilled() != parked.len() {
+            return Err(format!(
+                "step {step}: store tracks {} tickets, model says {}",
+                kv.spilled(),
+                parked.len()
+            ));
+        }
+        // Live sentinels never clobbered by spill/restore churn.
+        for (&s, &(layer, pos, val)) in &wrote {
+            let k = &kv.k_layer(s, layer)[pos * d..pos * d + d];
+            if k.iter().any(|&x| x != val) {
+                return Err(format!("step {step}: slot {s} sentinel clobbered"));
+            }
+        }
+    }
+    // Drain: every outstanding ticket restores cleanly, no leaks.
+    for s in live.drain(..) {
+        kv.release(s);
+    }
+    while let Some((t, _)) = parked.pop() {
+        let s = kv.restore(t).map_err(|e| format!("drain restore: {e:#}"))?;
+        kv.release(s);
+    }
+    if kv.spilled() != 0 {
+        return Err(format!("{} tickets leaked after drain", kv.spilled()));
+    }
+    let c = *kv.counters();
+    if c.spills() != c.restores() + c.discards {
+        return Err(format!(
+            "ticket conservation: {} spills != {} restores + {} discards",
+            c.spills(),
+            c.restores(),
+            c.discards
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn kv_store_random_spill_restore_discard_conserves_everything() {
+    Check::new(150, 0x51F7).run("kv-store-spill-invariants", kv_store_spill_invariants);
 }
 
 #[test]

@@ -189,6 +189,67 @@ fn continuous_admission_joins_inflight_turn_and_streams_same_bytes() {
     );
 }
 
+#[test]
+fn preempted_session_parks_resumes_and_streams_identical_bytes() {
+    // Oversubscribed serving core over the spill-capable stub: a High
+    // request arriving to a full box preempts the Batch session, whose
+    // stream pauses (Preempted), resumes (Resumed), and finishes with
+    // the same bytes as an uncontended run — preemption is visible in
+    // the event stream but invisible in the output.
+    use m2cache::coordinator::Priority;
+    let mut core = ServingCore::new(
+        StubSessionEngine::new(1).with_spill(),
+        2,
+        SchedConfig::default(),
+    );
+    core.submit(
+        Request::new(1, tokenize("slow batch job"), 12).with_class(Priority::Batch, None),
+    );
+    let mut events = Vec::new();
+    for _ in 0..3 {
+        events.extend(core.pump(&mut || None));
+    }
+    core.submit(Request::new(2, tokenize("now"), 3).with_class(Priority::High, Some(5_000)));
+    events.extend(core.run_until_idle());
+    let preempts: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            SessionEvent::Preempted { id } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(preempts, vec![1], "{events:?}");
+    assert!(events.iter().any(|e| matches!(e, SessionEvent::Resumed { id: 1 })));
+    let mut finals: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut streamed: HashMap<u64, Vec<u32>> = HashMap::new();
+    for ev in &events {
+        match ev {
+            SessionEvent::Token { id, token, .. } => {
+                streamed.entry(*id).or_default().push(*token)
+            }
+            SessionEvent::Done(c) => {
+                finals.insert(c.response.id, c.response.tokens.clone());
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(
+        finals[&1],
+        StubSessionEngine::reference_tokens(&tokenize("slow batch job"), 12)
+    );
+    assert_eq!(
+        finals[&2],
+        StubSessionEngine::reference_tokens(&tokenize("now"), 3)
+    );
+    assert_eq!(streamed[&1], finals[&1], "stream != final across preemption");
+    let snap = core.snapshot();
+    assert_eq!((snap.preemptions, snap.resumes, snap.parked), (1, 1, 0));
+    let engine = core.scheduler().engine();
+    assert_eq!(engine.available(), 1, "slot not returned");
+    assert_eq!(engine.parked(), 0, "ticket leaked");
+    assert_eq!((engine.spills, engine.restores), (1, 1));
+}
+
 // ---------------------------------------------------------------- wire
 
 /// Boot the generic server over a stub engine; returns the address and

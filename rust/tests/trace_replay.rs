@@ -21,8 +21,8 @@
 use anyhow::Result;
 use m2cache::coordinator::workload::{generate, inject_cancellations, Mix, TraceEvent, TraceSpec};
 use m2cache::coordinator::{
-    DecodeSession, Outcome, Priority, Request, SchedConfig, SchedMode, Scheduler, SessionEngine,
-    SessionEvent,
+    DecodeSession, KvTicket, Outcome, Priority, Request, SchedConfig, SchedMode, Scheduler,
+    SessionEngine, SessionEvent,
 };
 use m2cache::telemetry::{ClassCounters, N_CLASSES};
 use std::collections::{HashMap, HashSet};
@@ -32,10 +32,16 @@ const VOCAB: usize = 97;
 /// Deterministic stub engine: next token is a pure function of the fed
 /// token and the session position, so any correct scheduler reproduces
 /// the same per-request bytes regardless of interleaving.
+/// `StubEngine::spilling` builds one that can park sessions, enabling
+/// oversubscription + preemption (positional KV: parking is pure slot
+/// bookkeeping).
 struct StubEngine {
     slots: usize,
     free: Vec<usize>,
     forwards: u64,
+    can_spill: bool,
+    next_ticket: u64,
+    parked: HashSet<u64>,
 }
 
 impl StubEngine {
@@ -44,6 +50,16 @@ impl StubEngine {
             slots,
             free: (0..slots).rev().collect(),
             forwards: 0,
+            can_spill: false,
+            next_ticket: 0,
+            parked: HashSet::new(),
+        }
+    }
+
+    fn spilling(slots: usize) -> StubEngine {
+        StubEngine {
+            can_spill: true,
+            ..StubEngine::new(slots)
         }
     }
 }
@@ -73,6 +89,34 @@ impl SessionEngine for StubEngine {
     fn close(&mut self, s: &mut DecodeSession) {
         assert!(!self.free.contains(&s.slot()), "double release");
         self.free.push(s.slot());
+    }
+
+    fn supports_spill(&self) -> bool {
+        self.can_spill
+    }
+
+    fn spill(&mut self, s: &DecodeSession) -> Result<KvTicket> {
+        anyhow::ensure!(self.can_spill, "engine does not support KV spill");
+        assert!(!self.free.contains(&s.slot()), "spilling a freed slot");
+        self.free.push(s.slot());
+        self.next_ticket += 1;
+        self.parked.insert(self.next_ticket);
+        Ok(KvTicket::new(self.next_ticket))
+    }
+
+    fn restore(&mut self, s: &mut DecodeSession, ticket: KvTicket) -> Result<()> {
+        anyhow::ensure!(self.parked.contains(&ticket.id()), "unknown ticket");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("no free slot to restore into"))?;
+        self.parked.remove(&ticket.id());
+        s.rebind_slot(slot);
+        Ok(())
+    }
+
+    fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
+        self.parked.remove(&ticket.id());
     }
 }
 
@@ -525,6 +569,97 @@ fn cancellation_trace_preserves_surviving_bytes_and_frees_every_slot() {
     assert_eq!(sched.cancelled as usize, cancelled.len());
     let batch_cls = Priority::Batch.index();
     assert_eq!(sched.classes[batch_cls].cancelled as usize, cancelled.len());
+}
+
+#[test]
+fn preemption_trace_resumes_byte_identically_and_leaks_nothing() {
+    // The tentpole's trace tier: 2x oversubscription (4 sessions in
+    // flight over 2 KV slots) on the adversarial mix, whose tight-
+    // deadline High requests land while Batch floods hold every slot —
+    // exactly the preemption trigger. Contract: zero capacity
+    // rejections, preemptions really happen, every session's bytes
+    // (preempted-then-resumed ones included) equal the uncontended
+    // sequential reference, preempted ids match resumed ids, and every
+    // KV slot and spill ticket is accounted for at the end.
+    const SLOTS: usize = 2;
+    let events = generate(&spec(Mix::AdversarialLongPrompt, 40));
+    let reference = sequential_reference(&events);
+    let mut sched = Scheduler::with_config(StubEngine::spilling(SLOTS), 2 * SLOTS, edf_cfg());
+    assert_eq!(sched.max_sessions(), 2 * SLOTS, "oversubscription refused");
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut tokens: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut preempted: Vec<u64> = Vec::new();
+    let mut resumed: Vec<u64> = Vec::new();
+    let mut parked_now: HashSet<u64> = HashSet::new();
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        for ev in &r.events {
+            match ev {
+                SessionEvent::Preempted { id } => {
+                    preempted.push(*id);
+                    assert!(parked_now.insert(*id), "{id} preempted while parked");
+                }
+                SessionEvent::Resumed { id } => {
+                    resumed.push(*id);
+                    assert!(parked_now.remove(id), "{id} resumed but never parked");
+                }
+                SessionEvent::Token { id, .. } => {
+                    assert!(!parked_now.contains(id), "parked {id} produced a token");
+                }
+                _ => {}
+            }
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+    }
+    assert_eq!(tokens.len(), events.len(), "lost requests");
+    assert_eq!(sched.rejected, 0, "oversubscription must not reject");
+    assert!(sched.preemptions > 0, "trace never exercised preemption");
+    assert_eq!(sched.preemptions as usize, preempted.len());
+    assert_eq!(sched.resumes as usize, resumed.len());
+    // Every preempted session eventually resumed (none cancelled here).
+    assert!(parked_now.is_empty(), "sessions left parked: {parked_now:?}");
+    {
+        let mut p = preempted.clone();
+        let mut q = resumed.clone();
+        p.sort_unstable();
+        q.sort_unstable();
+        assert_eq!(p, q, "preempted/resumed ids must pair up");
+    }
+    // Byte identity for everyone — the resumed sessions especially.
+    for (id, toks) in &tokens {
+        assert_eq!(toks, &reference[id], "request {id} bytes changed");
+    }
+    for id in &preempted {
+        assert_eq!(
+            &tokens[id], &reference[id],
+            "preempted-then-resumed {id} diverged from the uncontended run"
+        );
+    }
+    assert_eq!(sched.engine().free.len(), SLOTS, "leaked KV slots");
+    assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
 }
 
 #[test]
