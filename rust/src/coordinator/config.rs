@@ -123,6 +123,20 @@ pub struct EngineConfig {
     /// sequential *by construction*; the stacked kernel computes the
     /// same per-lane arithmetic in one dispatch.
     pub batch_kernel: bool,
+    /// Shared-prefix KV cache (`--prefix-cache`): completed prompts
+    /// donate their leading KV rows to later requests that share a
+    /// token prefix, so repeated preambles skip those prefill
+    /// forwards. Off by default — the PR-1..6 admission path and the
+    /// spill-counter telemetry stay bit-exact unless asked for.
+    pub prefix_cache: bool,
+    /// HBM KV slots reserved for hot prefix entries
+    /// (`--prefix-hot-slots N`). The engine sizes its pool at
+    /// `kv_slots + 1 + prefix_hot_slots` so pinned cache entries never
+    /// starve session admission.
+    pub prefix_hot_slots: usize,
+    /// Max cached prefix entries across all tiers
+    /// (`--prefix-entries N`); LRU past it.
+    pub prefix_max_entries: usize,
 }
 
 impl Default for EngineConfig {
@@ -150,6 +164,9 @@ impl Default for EngineConfig {
             continuous: true,
             batch: false,
             batch_kernel: false,
+            prefix_cache: false,
+            prefix_hot_slots: 1,
+            prefix_max_entries: 64,
         }
     }
 }
@@ -260,6 +277,17 @@ mod tests {
         // Tiny layer: capped at 3 entries per neuron.
         c.max_sessions = 100;
         assert_eq!(c.unit_capacity_batched(10), 30);
+    }
+
+    #[test]
+    fn prefix_cache_defaults_off_and_ablations_inherit() {
+        let c = EngineConfig::default();
+        assert!(!c.prefix_cache, "prefix cache is opt-in");
+        assert_eq!((c.prefix_hot_slots, c.prefix_max_entries), (1, 64));
+        // Ablation constructors build through Default, so the knob
+        // exists (and stays off) on every stage.
+        assert!(!EngineConfig::ablation_mp_only().prefix_cache);
+        assert!(!EngineConfig::full().prefix_cache);
     }
 
     #[test]

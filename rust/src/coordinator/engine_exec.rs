@@ -20,8 +20,10 @@ use crate::cache::{
 };
 use crate::coordinator::config::EngineConfig;
 use crate::coordinator::kv_store::KvStore;
+use crate::coordinator::prefix::{PrefixConfig, PrefixStats, TieredPrefixCache};
 use crate::coordinator::request::Request;
 use crate::coordinator::session::{DecodeSession, KvTicket, SessionEngine};
+use crate::memsim::Tier;
 use crate::model::weights::{PredictorWeights, WeightStore};
 use crate::precision::plan::{plan_from_scores, LayerPlan};
 use crate::precision::quant::wire_bytes;
@@ -55,6 +57,12 @@ pub struct ExecEngine {
     // oversubscribes them via spill/restore.
     kv: KvStore,
     legacy_slot: usize,
+    /// Shared-prefix KV cache (`cfg.prefix_cache`): completed prompts
+    /// park their leading KV rows across the store's tiers; admissions
+    /// that share a prefix copy them in instead of recomputing. The
+    /// pool is oversized by `cfg.prefix_hot_slots` so pinned hot
+    /// entries never starve session admission.
+    prefix: Option<TieredPrefixCache>,
     pos: usize,
     pub overlap: OverlapTracker,
     pub tel: Telemetry,
@@ -166,8 +174,23 @@ impl ExecEngine {
         // scoring never contend for the same buffers. Sessions beyond
         // the slot count park in the store's DRAM/SSD spill tiers.
         let slots = cfg.kv_slots.unwrap_or(cfg.max_sessions).max(1);
-        let mut kv = KvStore::new(slots + 1, n_layers, max_seq * d, cfg.kv_spill_dram);
+        let hot_slots = if cfg.prefix_cache { cfg.prefix_hot_slots } else { 0 };
+        let mut kv = KvStore::new(
+            slots + 1 + hot_slots,
+            n_layers,
+            max_seq * d,
+            cfg.kv_spill_dram,
+        );
         let legacy_slot = kv.acquire().expect("fresh pool has a slot");
+        let prefix = cfg.prefix_cache.then(|| {
+            TieredPrefixCache::new(PrefixConfig {
+                max_entries: cfg.prefix_max_entries,
+                hot_slots: cfg.prefix_hot_slots,
+                // One KV value per token per layer side is `d` floats.
+                vals_per_token: d,
+                ..PrefixConfig::default()
+            })
+        });
         let tel = Telemetry {
             kv_pool_bytes: kv.bytes(),
             ..Telemetry::default()
@@ -187,6 +210,7 @@ impl ExecEngine {
             preloader,
             kv,
             legacy_slot,
+            prefix,
             pos: 0,
             overlap: OverlapTracker::new(n_layers),
             tel,
@@ -780,6 +804,23 @@ impl ExecEngine {
         self.kv.counters()
     }
 
+    /// Shared-prefix cache counters, if the cache is enabled.
+    pub fn prefix_stats(&self) -> Option<&PrefixStats> {
+        self.prefix.as_ref().map(|p| p.stats())
+    }
+
+    /// Release every pinned slot and parked ticket the prefix cache
+    /// holds (the leak tripwire: afterwards the store reports zero
+    /// pins and no cache-owned tickets). The cache stays enabled and
+    /// simply refills.
+    pub fn drain_prefix_cache(&mut self) {
+        if let Some(mut pc) = self.prefix.take() {
+            pc.drain(&mut self.kv);
+            self.tel.kv_spill = *self.kv.counters();
+            self.prefix = Some(pc);
+        }
+    }
+
     /// Fold a finished session's counters into aggregate telemetry —
     /// the slot-free half of teardown. `close` (resident sessions)
     /// releases the HBM slot too; `discard` (parked sessions) drops the
@@ -806,8 +847,14 @@ impl ExecEngine {
 impl SessionEngine for ExecEngine {
     fn capacity(&self) -> usize {
         // Physical HBM KV slots serving sessions (the store also holds
-        // the legacy cursor's slot — not schedulable).
-        self.kv.capacity().saturating_sub(1).max(1)
+        // the legacy cursor's slot, plus the prefix cache's reserved
+        // hot slots when enabled — neither is schedulable).
+        let reserved = 1 + if self.prefix.is_some() {
+            self.cfg.prefix_hot_slots
+        } else {
+            0
+        };
+        self.kv.capacity().saturating_sub(reserved).max(1)
     }
 
     fn max_sessions(&self) -> usize {
@@ -838,9 +885,17 @@ impl SessionEngine for ExecEngine {
             .kv
             .acquire()
             .ok_or_else(|| anyhow::anyhow!("session slots exhausted"))?;
-        // The legacy cursor permanently holds one slot; don't count it.
-        // Parked sessions are still in flight, so they count.
-        let active = (self.kv.in_use() - 1 + self.kv.spilled()) as u64;
+        // The legacy cursor permanently holds one slot and the prefix
+        // cache pins hot slots / parks tickets of its own; none of
+        // those is a session. Parked sessions are still in flight, so
+        // they count.
+        let cache_parked = self
+            .prefix
+            .as_ref()
+            .map(|p| p.len() - p.hot_count())
+            .unwrap_or(0);
+        let active =
+            (self.kv.in_use() - 1 - self.kv.pins() + self.kv.spilled() - cache_parked) as u64;
         self.tel.peak_active_sessions = self.tel.peak_active_sessions.max(active);
         self.tel.bump("sessions_opened", 1);
         Ok(DecodeSession::new(req, slot))
@@ -953,6 +1008,50 @@ impl SessionEngine for ExecEngine {
         self.kv.discard(ticket);
         self.tel.kv_spill = *self.kv.counters();
         self.fold_closed(s);
+    }
+
+    fn prefix_attach(&mut self, s: &mut DecodeSession) -> usize {
+        let Some(mut pc) = self.prefix.take() else {
+            return 0;
+        };
+        let hit = pc.attach(&mut self.kv, &s.prompt, s.slot());
+        self.prefix = Some(pc);
+        let Some(hit) = hit else { return 0 };
+        if s.attach_prefix(hit.depth).is_err() {
+            // The destination slot was freshly zeroed and nothing has
+            // been fed, so a refused attach just means the cold
+            // prefill overwrites the copied rows.
+            return 0;
+        }
+        match hit.tier {
+            Tier::Hbm => self.tel.traffic.hbm_internal += hit.bytes,
+            Tier::Dram => self.tel.traffic.dram_to_hbm += hit.bytes,
+            Tier::Ssd => {
+                // The record surfaces through DRAM on its way into the
+                // HBM slot. `traffic.ssd_to_dram` is owned (assigned,
+                // not accumulated) by the weight preloader, so the SSD
+                // leg is metered under its own counter.
+                self.tel.traffic.dram_to_hbm += hit.bytes;
+                self.tel.bump("prefix_bytes_ssd", hit.bytes);
+            }
+        }
+        self.tel.prefix_hits += 1;
+        self.tel.prefix_hit_tokens += hit.depth as u64;
+        hit.depth
+    }
+
+    fn prefix_insert(&mut self, s: &DecodeSession) {
+        if s.is_cancelled() {
+            return;
+        }
+        let Some(mut pc) = self.prefix.take() else {
+            return;
+        };
+        pc.insert(&mut self.kv, &s.prompt, s.slot());
+        self.prefix = Some(pc);
+        // Parking a prefix copy rides the spill machinery; keep the
+        // snapshot in step so `kv_spill` reflects prefix parks too.
+        self.tel.kv_spill = *self.kv.counters();
     }
 
     fn sched_config(&self) -> crate::coordinator::scheduler::SchedConfig {

@@ -43,6 +43,15 @@ struct DramSpill {
     v: Vec<f32>,
 }
 
+/// Which spill tier currently holds a parked ticket's state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillTier {
+    /// The byte-budgeted DRAM spill area.
+    Dram,
+    /// The SSD spill file.
+    Ssd,
+}
+
 /// The tiered KV memory manager (see the module docs).
 #[derive(Debug)]
 pub struct KvStore {
@@ -62,6 +71,10 @@ pub struct KvStore {
     file_free: Vec<usize>,
     next_ticket: u64,
     counters: SpillCounters,
+    /// Slot -> outstanding prefix-cache pins. A pinned slot's rows are
+    /// shared state (attached into sessions by copy) and must not be
+    /// released back to the pool until every pin is dropped.
+    pins: HashMap<usize, u32>,
 }
 
 impl KvStore {
@@ -80,6 +93,7 @@ impl KvStore {
             file_free: Vec::new(),
             next_ticket: 1,
             counters: SpillCounters::default(),
+            pins: HashMap::new(),
         }
     }
 
@@ -137,6 +151,10 @@ impl KvStore {
     }
 
     pub fn release(&mut self, slot: usize) {
+        debug_assert!(
+            !matches!(self.pins.get(&slot), Some(&c) if c > 0),
+            "releasing pinned slot {slot}"
+        );
         self.pool.release(slot);
     }
 
@@ -165,6 +183,70 @@ impl KvStore {
         self.pool.write_token(slot, layer, pos, d, k_row, v_row);
     }
 
+    /// HBM-internal prefix copy between two live slots (see
+    /// [`KvPool::copy_prefix`]) — the hot-tier attach path.
+    pub fn copy_prefix(&mut self, src: usize, dst: usize, values: usize) {
+        self.pool.copy_prefix(src, dst, values);
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.pool.n_layers()
+    }
+
+    pub fn stride(&self) -> usize {
+        self.pool.stride()
+    }
+
+    // ------------------------- prefix-cache pinning
+
+    /// Pin a live slot against release: the prefix cache holds hot
+    /// entries in HBM slots whose rows are copied into admitted
+    /// sessions, and a leaked pin means a leaked slot.
+    pub fn pin_slot(&mut self, slot: usize) {
+        *self.pins.entry(slot).or_insert(0) += 1;
+    }
+
+    /// Drop one pin from `slot`.
+    pub fn unpin_slot(&mut self, slot: usize) {
+        match self.pins.get_mut(&slot) {
+            Some(c) if *c > 1 => *c -= 1,
+            Some(_) => {
+                self.pins.remove(&slot);
+            }
+            None => debug_assert!(false, "unpin of unpinned slot {slot}"),
+        }
+    }
+
+    /// Pin count of one slot.
+    pub fn pinned(&self, slot: usize) -> u32 {
+        self.pins.get(&slot).copied().unwrap_or(0)
+    }
+
+    /// Outstanding pins across all slots — zero after a clean prefix-
+    /// cache teardown (the refcount-leak tripwire).
+    pub fn pins(&self) -> usize {
+        self.pins.values().map(|&c| c as usize).sum()
+    }
+
+    // ------------------------- spill-file observability
+
+    /// Records the spill file has ever grown to — its allocation
+    /// high-water mark. Steady-state churn must plateau here: every
+    /// discard/restore recycles its record through the free list.
+    pub fn file_high_water(&self) -> usize {
+        self.file_records
+    }
+
+    /// Free spill-file records available for reuse.
+    pub fn file_free_records(&self) -> usize {
+        self.file_free.len()
+    }
+
+    /// Tickets currently parked in the SSD spill file.
+    pub fn ssd_parked(&self) -> usize {
+        self.ssd.len()
+    }
+
     // ------------------------- spill / restore
 
     /// Park `slot`'s full KV planes below HBM and free the slot (see
@@ -184,6 +266,18 @@ impl KvStore {
     /// lands in the SSD spill file. On error the pool is unchanged
     /// (the slot stays live).
     pub fn spill_prefix(&mut self, slot: usize, used: usize) -> Result<KvTicket> {
+        let t = self.park_prefix_copy(slot, used)?;
+        self.release(slot);
+        Ok(t)
+    }
+
+    /// Copy the first `used` f32 values of each of `slot`'s layer
+    /// planes into a spill tier *without freeing the slot* — the
+    /// prefix cache parks a completed session's prompt KV while the
+    /// session's own close path still owns (and later releases) the
+    /// slot. Tier choice and byte metering are identical to
+    /// [`Self::spill_prefix`]; on error the store is unchanged.
+    pub fn park_prefix_copy(&mut self, slot: usize, used: usize) -> Result<KvTicket> {
         let n_layers = self.pool.n_layers();
         let used = used.min(self.pool.stride());
         let plane = n_layers * used;
@@ -195,24 +289,89 @@ impl KvStore {
             k.extend_from_slice(&self.pool.k_layer(slot, l)[..used]);
             v.extend_from_slice(&self.pool.v_layer(slot, l)[..used]);
         }
-        if self.dram_used + bytes <= self.dram_budget {
-            self.dram.insert(id, DramSpill { k, v });
-            self.dram_used += bytes;
-            self.counters.spills_dram += 1;
-            self.counters.spill_bytes_dram += bytes;
-        } else {
-            let rec = self.alloc_record();
-            if let Err(e) = self.write_record(rec, &k, &v) {
-                self.file_free.push(rec);
-                return Err(e.context("KV spill file write"));
+        match self.spill_tier_for(bytes) {
+            SpillTier::Dram => {
+                self.dram.insert(id, DramSpill { k, v });
+                self.dram_used += bytes;
+                self.counters.spills_dram += 1;
+                self.counters.spill_bytes_dram += bytes;
             }
-            self.ssd.insert(id, (rec, used));
-            self.counters.spills_ssd += 1;
-            self.counters.spill_bytes_ssd += bytes;
+            SpillTier::Ssd => {
+                let rec = self.alloc_record();
+                if let Err(e) = self.write_record(rec, &k, &v) {
+                    self.file_free.push(rec);
+                    return Err(e.context("KV spill file write"));
+                }
+                self.ssd.insert(id, (rec, used));
+                self.counters.spills_ssd += 1;
+                self.counters.spill_bytes_ssd += bytes;
+            }
         }
         self.next_ticket += 1;
-        self.pool.release(slot);
         Ok(KvTicket::new(id))
+    }
+
+    /// Which tier the *next* park of `bytes` would land in — the
+    /// prefix cache's cost policy asks before moving anything.
+    pub fn spill_tier_for(&self, bytes: u64) -> SpillTier {
+        if self.dram_used + bytes <= self.dram_budget {
+            SpillTier::Dram
+        } else {
+            SpillTier::Ssd
+        }
+    }
+
+    /// Tier currently holding a parked ticket, or None if unknown.
+    pub fn ticket_tier(&self, ticket: KvTicket) -> Option<SpillTier> {
+        let id = ticket.id();
+        if self.dram.contains_key(&id) {
+            Some(SpillTier::Dram)
+        } else if self.ssd.contains_key(&id) {
+            Some(SpillTier::Ssd)
+        } else {
+            None
+        }
+    }
+
+    /// Copy the first `values` f32 of each layer plane of a parked
+    /// ticket into live slot `dst` *without consuming the ticket* —
+    /// the read side of prefix attachment (the cache keeps its parked
+    /// copy; the session gets the shared rows). Returns the bytes the
+    /// tier actually moved: a DRAM peek moves only the rows taken,
+    /// an SSD peek reads the ticket's whole record (file records are
+    /// read back in full before the leading rows are scattered). No
+    /// [`SpillCounters`] are bumped — callers meter prefix traffic
+    /// separately from preemption spill traffic.
+    pub fn peek_prefix_into(&mut self, ticket: KvTicket, dst: usize, values: usize) -> Result<u64> {
+        let id = ticket.id();
+        let n_layers = self.pool.n_layers().max(1);
+        if let Some(sp) = self.dram.get(&id) {
+            let used = sp.k.len() / n_layers;
+            let take = values.min(used);
+            for l in 0..n_layers {
+                self.pool.load_layer_prefix(
+                    dst,
+                    l,
+                    &sp.k[l * used..l * used + take],
+                    &sp.v[l * used..l * used + take],
+                );
+            }
+            return Ok(2 * (n_layers * take) as u64 * 4);
+        }
+        let Some(&(rec, used)) = self.ssd.get(&id) else {
+            anyhow::bail!("unknown KV ticket {id}");
+        };
+        let (k, v) = self.read_record(rec, used).context("KV spill file read")?;
+        let take = values.min(used);
+        for l in 0..n_layers {
+            self.pool.load_layer_prefix(
+                dst,
+                l,
+                &k[l * used..l * used + take],
+                &v[l * used..l * used + take],
+            );
+        }
+        Ok(2 * (n_layers * used) as u64 * 4)
     }
 
     /// Redeem a ticket into a free HBM slot, byte-identically. On error
@@ -488,5 +647,79 @@ mod tests {
         let mut kv = KvStore::new(1, 1, 4, 0);
         assert!(kv.restore(KvTicket::new(99)).is_err());
         assert!(!kv.discard(KvTicket::new(99)));
+        assert_eq!(kv.ticket_tier(KvTicket::new(99)), None);
+        let b = kv.acquire().unwrap();
+        assert!(kv.peek_prefix_into(KvTicket::new(99), b, 2).is_err());
+    }
+
+    #[test]
+    fn park_copy_leaves_slot_live_and_peek_does_not_consume() {
+        let mut kv = KvStore::new(3, 2, 6, 1 << 20);
+        assert_eq!(kv.spill_tier_for(1), SpillTier::Dram);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.write_token(a, 1, 0, 2, &[5.0, 6.0], &[7.0, 8.0]);
+        let t = kv.park_prefix_copy(a, 2).unwrap();
+        assert_eq!(kv.in_use(), 1, "park must not free the source slot");
+        assert_eq!(kv.ticket_tier(t), Some(SpillTier::Dram));
+        assert_eq!(&kv.k_layer(a, 0)[..2], &[1.0, 2.0], "source untouched");
+        // Two independent peeks redeem the same ticket: non-consuming.
+        for _ in 0..2 {
+            let b = kv.acquire().unwrap();
+            let bytes = kv.peek_prefix_into(t, b, 2).unwrap();
+            assert_eq!(bytes, 2 * 2 * 2 * 4, "2 planes x 2 layers x 2 f32 x 4 B");
+            assert_eq!(&kv.k_layer(b, 0)[..2], &[1.0, 2.0]);
+            assert_eq!(&kv.v_layer(b, 1)[..2], &[7.0, 8.0]);
+            kv.release(b);
+        }
+        assert_eq!(kv.spilled(), 1);
+        assert!(kv.discard(t));
+        assert_eq!(kv.spilled(), 0);
+        kv.release(a);
+    }
+
+    #[test]
+    fn ssd_peek_attaches_partial_rows_without_consuming() {
+        let mut kv = KvStore::new(2, 1, 6, 0);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[1.0, 2.0], &[5.0, 6.0]);
+        kv.write_token(a, 0, 1, 2, &[3.0, 4.0], &[7.0, 8.0]);
+        let t = kv.park_prefix_copy(a, 4).unwrap();
+        assert_eq!(kv.ticket_tier(t), Some(SpillTier::Ssd));
+        assert_eq!(kv.ssd_parked(), 1);
+        let b = kv.acquire().unwrap();
+        // Take only the first row: the SSD still reads its full
+        // 4-value record, but only 2 values land in the slot.
+        let bytes = kv.peek_prefix_into(t, b, 2).unwrap();
+        assert_eq!(bytes, 2 * 4 * 4, "SSD peek moves the full record");
+        assert_eq!(&kv.k_layer(b, 0)[..2], &[1.0, 2.0]);
+        assert_eq!(&kv.v_layer(b, 0)[..2], &[5.0, 6.0]);
+        assert!(
+            kv.k_layer(b, 0)[2..].iter().all(|&x| x == 0.0),
+            "rows past the requested prefix must not attach"
+        );
+        assert!(kv.discard(t));
+        assert_eq!(kv.ssd_parked(), 0);
+        assert_eq!(kv.file_high_water(), 1);
+        assert_eq!(kv.file_free_records(), 1);
+    }
+
+    #[test]
+    fn pins_are_counted_per_slot_and_in_total() {
+        let mut kv = KvStore::new(2, 1, 4, 0);
+        let a = kv.acquire().unwrap();
+        let b = kv.acquire().unwrap();
+        kv.pin_slot(a);
+        kv.pin_slot(a);
+        kv.pin_slot(b);
+        assert_eq!(kv.pinned(a), 2);
+        assert_eq!(kv.pinned(b), 1);
+        assert_eq!(kv.pins(), 3);
+        kv.unpin_slot(a);
+        kv.unpin_slot(a);
+        kv.unpin_slot(b);
+        assert_eq!((kv.pins(), kv.pinned(a), kv.pinned(b)), (0, 0, 0));
+        kv.release(a);
+        kv.release(b);
     }
 }

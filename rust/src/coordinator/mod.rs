@@ -12,7 +12,9 @@
 //! Plus the serving plumbing: bounded admission queue, per-request
 //! [`session::DecodeSession`]s over the tiered
 //! [`kv_store::KvStore`] (HBM KV slots + DRAM/SSD spill tiers that
-//! park preempted sessions), the priority/deadline-aware
+//! park preempted sessions), the shared-prefix KV cache
+//! ([`prefix::TieredPrefixCache`]) that turns repeated prompt
+//! preambles into cache hits, the priority/deadline-aware
 //! chunked-prefill *preemptive* [`scheduler::Scheduler`]
 //! with its per-token [`scheduler::SessionEvent`] stream, the
 //! transport-agnostic event-driven [`serving::ServingCore`] (token
@@ -25,6 +27,7 @@ pub mod config;
 pub mod engine_exec;
 pub mod engine_sim;
 pub mod kv_store;
+pub mod prefix;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -41,7 +44,11 @@ pub use scheduler::{
     ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, SessionEvent,
     TickReport, DEFAULT_STARVATION_GUARD,
 };
-pub use kv_store::KvStore;
+pub use kv_store::{KvStore, SpillTier};
+pub use prefix::{
+    PrefixConfig, PrefixCostModel, PrefixHit, PrefixHome, PrefixStats, TieredPrefixCache,
+    VirtualPrefixCache,
+};
 pub use server::ParseError;
 pub use serving::{ServingCore, StatsSnapshot};
 pub use session::{

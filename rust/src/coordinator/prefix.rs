@@ -1,0 +1,1079 @@
+//! Shared-prefix KV cache — a token-trie (radix) index over the tiered
+//! [`KvStore`], turning prefill into a cache-hit problem.
+//!
+//! At scale most traffic shares system prompts and few-shot preambles,
+//! yet a cold admission prefills from position 0. Because attention is
+//! causal, KV row `i` depends only on tokens `0..=i`: any cached
+//! prompt that shares a session's first `m` tokens can donate its
+//! first `m` KV rows verbatim. On admission the scheduler asks the
+//! cache for the longest such match, copies the shared rows into the
+//! session's freshly acquired slot (copy-on-write — the cache keeps
+//! ownership of its storage, so a session scribbling past the prefix
+//! never corrupts a neighbour), and chunk-prefills only the tail.
+//!
+//! Entries live at one of three residency levels, riding the store's
+//! existing spill machinery:
+//! - **Hot** — a pinned HBM slot; attach is an HBM-internal copy.
+//! - **Warm** — a ticket in the DRAM spill area.
+//! - **Cold** — a ticket in the SSD spill file.
+//!
+//! Placement and eviction are cost-aware in the spirit of the paper's
+//! carbon accounting: a [`PrefixCostModel`] calibrated from the
+//! `memsim` link bandwidths and the `carbon` power constants weighs
+//! the energy of parking + replaying a prefix through a spill tier
+//! against simply recomputing it at the GPU, and the cache chooses
+//! recompute when the tier round-trip costs more (tracked as
+//! `recomputes_chosen`). Frequently hit entries are promoted into HBM
+//! slots (demoting the LRU hot entry down a tier, or dropping it when
+//! the cost model says recompute), and capacity pressure evicts whole
+//! entries LRU-first.
+
+use crate::carbon::model::{CPU_CORE_W, SSD_W};
+use crate::coordinator::kv_store::{KvStore, SpillTier};
+use crate::coordinator::session::KvTicket;
+use crate::memsim::{HardwareSpec, Tier};
+use std::collections::VecDeque;
+
+/// Where one cached prefix currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixHome {
+    /// Pinned HBM slot owned by the cache.
+    Hot { slot: usize },
+    /// Parked in the DRAM spill area.
+    Warm { ticket: KvTicket },
+    /// Parked in the SSD spill file.
+    Cold { ticket: KvTicket },
+    /// Index-only entry carrying no bytes (see [`VirtualPrefixCache`]).
+    Virtual,
+}
+
+/// Counters the serving stack reports through STATS.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub hits: u64,
+    /// Prompt tokens whose prefill was skipped via attachment.
+    pub hit_tokens: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    /// Entries evicted whole under capacity pressure.
+    pub evictions: u64,
+    /// Warm/cold entries promoted into HBM slots.
+    pub promotions: u64,
+    /// Hot entries demoted down a spill tier.
+    pub demotions: u64,
+    /// Times the cost model chose recompute over a tier round-trip.
+    pub recomputes_chosen: u64,
+    /// Attach bytes served per tier.
+    pub bytes_hbm: u64,
+    pub bytes_dram: u64,
+    pub bytes_ssd: u64,
+}
+
+/// Evict-vs-recompute energy model: is parking a prefix down a spill
+/// tier and replaying it later cheaper than recomputing its prefill
+/// at the GPU?
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixCostModel {
+    /// Energy to recompute one prompt token's KV at the GPU, joules.
+    pub recompute_j_per_token: f64,
+    /// Energy per byte through the DRAM spill path, joules.
+    pub dram_j_per_byte: f64,
+    /// Energy per byte through the SSD spill path, joules.
+    pub ssd_j_per_byte: f64,
+}
+
+impl Default for PrefixCostModel {
+    fn default() -> PrefixCostModel {
+        // 7B-class prefill on the paper's RTX 3090 testbed.
+        PrefixCostModel::from_testbed(&HardwareSpec::rtx3090_testbed(), 350.0, 14.0e9)
+    }
+}
+
+impl PrefixCostModel {
+    /// Calibrate from a `memsim` hardware spec and the `carbon` power
+    /// constants: link energy is the attributed component power (one
+    /// pinned host core; plus the SSD's active power on its path)
+    /// divided by the link's sustained bandwidth, and recompute energy
+    /// is GPU power for the roofline time of one token's prefill
+    /// FLOPs.
+    pub fn from_testbed(hw: &HardwareSpec, gpu_w: f64, flops_per_token: f64) -> PrefixCostModel {
+        PrefixCostModel {
+            recompute_j_per_token: gpu_w * hw.gpu_time_s(flops_per_token, 0),
+            dram_j_per_byte: CPU_CORE_W / hw.links.dram_to_hbm.bandwidth_bps,
+            ssd_j_per_byte: (CPU_CORE_W + SSD_W) / hw.links.ssd_to_dram.bandwidth_bps,
+        }
+    }
+
+    /// Energy to park `bytes` down `tier` and replay them once.
+    pub fn park_j(&self, tier: SpillTier, bytes: u64) -> f64 {
+        let per = match tier {
+            SpillTier::Dram => self.dram_j_per_byte,
+            SpillTier::Ssd => self.ssd_j_per_byte,
+        };
+        2.0 * bytes as f64 * per
+    }
+
+    /// Energy to recompute a `depth`-token prefill.
+    pub fn recompute_j(&self, depth: usize) -> f64 {
+        depth as f64 * self.recompute_j_per_token
+    }
+
+    /// Keep the prefix in `tier` only if one park + replay undercuts
+    /// recomputing it.
+    pub fn keep_in_tier(&self, tier: SpillTier, depth: usize, bytes: u64) -> bool {
+        self.park_j(tier, bytes) < self.recompute_j(depth)
+    }
+}
+
+/// Cache tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixConfig {
+    /// Index capacity in entries; LRU past it.
+    pub max_entries: usize,
+    /// Shortest match worth attaching (tokens).
+    pub min_depth: usize,
+    /// HBM slots the cache may pin for hot entries.
+    pub hot_slots: usize,
+    /// Hits at which a warm/cold entry earns promotion to HBM.
+    pub promote_hits: u32,
+    /// f32 values one token occupies per layer plane (the model's
+    /// per-head dim × heads — `d` in the [`KvStore`] geometry).
+    pub vals_per_token: usize,
+    pub cost: PrefixCostModel,
+}
+
+impl Default for PrefixConfig {
+    fn default() -> PrefixConfig {
+        PrefixConfig {
+            max_entries: 64,
+            min_depth: 1,
+            hot_slots: 1,
+            promote_hits: 2,
+            vals_per_token: 1,
+            cost: PrefixCostModel::default(),
+        }
+    }
+}
+
+/// One successful attachment: `depth` prompt tokens skipped, served
+/// from `tier`, moving `bytes` (what the engine charges on its links).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    pub depth: usize,
+    pub tier: Tier,
+    pub bytes: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    /// Terminal trie node of this entry's full prompt.
+    node: usize,
+    /// Prompt length in tokens.
+    depth: usize,
+    home: PrefixHome,
+    hits: u32,
+    last_use: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    token: u32,
+    parent: usize,
+    children: Vec<usize>,
+    /// Entry terminating exactly here, if any.
+    entry: Option<usize>,
+    /// Entries in this node's subtree (self included) — pruning and
+    /// match-feasibility both key off it.
+    subtree_entries: usize,
+}
+
+/// The token trie: maps a prompt to the deepest cached node sharing
+/// its leading tokens, and from there to a donor entry. Pure index —
+/// it never touches KV bytes, which is what keeps it unit-testable
+/// and lets [`VirtualPrefixCache`] reuse it byte-free.
+#[derive(Debug)]
+struct PrefixIndex {
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    entries: Vec<Option<Entry>>,
+    free_entries: Vec<usize>,
+    len: usize,
+}
+
+impl PrefixIndex {
+    fn new() -> PrefixIndex {
+        PrefixIndex {
+            nodes: vec![Node {
+                token: 0,
+                parent: 0,
+                children: Vec::new(),
+                entry: None,
+                subtree_entries: 0,
+            }],
+            free_nodes: Vec::new(),
+            entries: Vec::new(),
+            free_entries: Vec::new(),
+            len: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn child(&self, node: usize, token: u32) -> Option<usize> {
+        self.nodes[node]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].token == token)
+    }
+
+    /// Deepest match of `prompt`'s leading tokens, capped one short of
+    /// the full prompt (the last token is always fed — its logits seed
+    /// decode). Returns the donor entry and the shared depth.
+    fn lookup(&self, prompt: &[u32], min_depth: usize) -> Option<(usize, usize)> {
+        let cap = prompt.len().saturating_sub(1);
+        let mut node = 0;
+        let mut depth = 0;
+        for &t in &prompt[..cap] {
+            match self.child(node, t) {
+                Some(c) => {
+                    node = c;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        if depth < min_depth.max(1) {
+            return None;
+        }
+        self.entry_below(node).map(|e| (e, depth))
+    }
+
+    /// Shallowest entry in `node`'s subtree (BFS): every entry below
+    /// shares the matched tokens, and a shallow donor keeps its own
+    /// hot rows small.
+    fn entry_below(&self, node: usize) -> Option<usize> {
+        if self.nodes[node].subtree_entries == 0 {
+            return None;
+        }
+        let mut q = VecDeque::from([node]);
+        while let Some(x) = q.pop_front() {
+            if let Some(e) = self.nodes[x].entry {
+                return Some(e);
+            }
+            q.extend(
+                self.nodes[x]
+                    .children
+                    .iter()
+                    .copied()
+                    .filter(|&c| self.nodes[c].subtree_entries > 0),
+            );
+        }
+        None
+    }
+
+    /// Is `prompt` already a prefix of some cached entry? (Inserting
+    /// it would add nothing any lookup could not already match.)
+    fn covered(&self, prompt: &[u32]) -> bool {
+        let mut node = 0;
+        for &t in prompt {
+            match self.child(node, t) {
+                Some(c) => node = c,
+                None => return false,
+            }
+        }
+        self.nodes[node].subtree_entries > 0
+    }
+
+    /// Insert an entry terminating at `prompt`'s full path. Gives the
+    /// entry back untouched if the exact path already terminates one.
+    fn insert(&mut self, prompt: &[u32], mut e: Entry) -> Result<usize, Entry> {
+        let mut node = 0;
+        for &t in prompt {
+            node = match self.child(node, t) {
+                Some(c) => c,
+                None => self.new_node(node, t),
+            };
+        }
+        if self.nodes[node].entry.is_some() {
+            return Err(e);
+        }
+        e.node = node;
+        let eid = match self.free_entries.pop() {
+            Some(i) => {
+                self.entries[i] = Some(e);
+                i
+            }
+            None => {
+                self.entries.push(Some(e));
+                self.entries.len() - 1
+            }
+        };
+        self.nodes[node].entry = Some(eid);
+        let mut x = node;
+        loop {
+            self.nodes[x].subtree_entries += 1;
+            if x == 0 {
+                break;
+            }
+            x = self.nodes[x].parent;
+        }
+        self.len += 1;
+        Ok(eid)
+    }
+
+    /// Remove an entry, prune the now entry-less chain, and hand back
+    /// its home for the caller to free.
+    fn remove(&mut self, eid: usize) -> PrefixHome {
+        let e = self.entries[eid].take().expect("remove of dead entry");
+        self.free_entries.push(eid);
+        self.len -= 1;
+        let node = e.node;
+        self.nodes[node].entry = None;
+        let mut x = node;
+        loop {
+            self.nodes[x].subtree_entries -= 1;
+            if x == 0 {
+                break;
+            }
+            x = self.nodes[x].parent;
+        }
+        let mut x = node;
+        while x != 0 && self.nodes[x].subtree_entries == 0 {
+            let p = self.nodes[x].parent;
+            self.nodes[p].children.retain(|&c| c != x);
+            self.free_nodes.push(x);
+            x = p;
+        }
+        e.home
+    }
+
+    fn new_node(&mut self, parent: usize, token: u32) -> usize {
+        let n = Node {
+            token,
+            parent,
+            children: Vec::new(),
+            entry: None,
+            subtree_entries: 0,
+        };
+        let id = match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = n;
+                i
+            }
+            None => {
+                self.nodes.push(n);
+                self.nodes.len() - 1
+            }
+        };
+        self.nodes[parent].children.push(id);
+        id
+    }
+
+    fn entry(&self, eid: usize) -> &Entry {
+        self.entries[eid].as_ref().expect("dead entry")
+    }
+
+    fn entry_mut(&mut self, eid: usize) -> &mut Entry {
+        self.entries[eid].as_mut().expect("dead entry")
+    }
+
+    fn lru_where(&self, pred: impl Fn(&Entry) -> bool) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| match e {
+                Some(e) if pred(e) => Some((i, e.last_use)),
+                _ => None,
+            })
+            .min_by_key(|&(_, t)| t)
+            .map(|(i, _)| i)
+    }
+
+    /// Tear the index down, yielding every live home.
+    fn drain(&mut self) -> Vec<PrefixHome> {
+        let homes = self
+            .entries
+            .drain(..)
+            .flatten()
+            .map(|e| e.home)
+            .collect::<Vec<_>>();
+        *self = PrefixIndex::new();
+        homes
+    }
+}
+
+/// The tiered prefix cache over a [`KvStore`] (see the module docs).
+/// Every method takes the store explicitly — the cache owns no KV
+/// bytes of its own beyond the pins and tickets it tracks, so the
+/// whole policy is unit-testable against a store with no engine.
+#[derive(Debug)]
+pub struct TieredPrefixCache {
+    cfg: PrefixConfig,
+    index: PrefixIndex,
+    stats: PrefixStats,
+    hot_count: usize,
+    clock: u64,
+}
+
+impl TieredPrefixCache {
+    pub fn new(cfg: PrefixConfig) -> TieredPrefixCache {
+        TieredPrefixCache {
+            cfg,
+            index: PrefixIndex::new(),
+            stats: PrefixStats::default(),
+            hot_count: 0,
+            clock: 0,
+        }
+    }
+
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.len() == 0
+    }
+
+    /// Hot entries currently pinning HBM slots.
+    pub fn hot_count(&self) -> usize {
+        self.hot_count
+    }
+
+    /// Match `prompt` against the index and copy the shared rows into
+    /// the freshly acquired (zeroed) slot `dst`. Returns the hit, or
+    /// None on a miss — including when the donor's tier read fails,
+    /// in which case the broken entry is dropped and the caller's
+    /// cold prefill simply overwrites whatever partially landed.
+    pub fn attach(&mut self, kv: &mut KvStore, prompt: &[u32], dst: usize) -> Option<PrefixHit> {
+        let Some((eid, depth)) = self.index.lookup(prompt, self.cfg.min_depth) else {
+            self.stats.misses += 1;
+            return None;
+        };
+        let values = depth * self.cfg.vals_per_token;
+        let home = self.index.entry(eid).home;
+        let (tier, bytes) = match home {
+            PrefixHome::Hot { slot } => {
+                kv.copy_prefix(slot, dst, values);
+                (Tier::Hbm, 2 * (kv.n_layers() * values) as u64 * 4)
+            }
+            PrefixHome::Warm { ticket } => match kv.peek_prefix_into(ticket, dst, values) {
+                Ok(b) => (Tier::Dram, b),
+                Err(_) => {
+                    self.remove_entry(kv, eid);
+                    self.stats.misses += 1;
+                    return None;
+                }
+            },
+            PrefixHome::Cold { ticket } => match kv.peek_prefix_into(ticket, dst, values) {
+                Ok(b) => (Tier::Ssd, b),
+                Err(_) => {
+                    self.remove_entry(kv, eid);
+                    self.stats.misses += 1;
+                    return None;
+                }
+            },
+            PrefixHome::Virtual => (Tier::Hbm, 0),
+        };
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.index.entry_mut(eid);
+        e.hits += 1;
+        e.last_use = clock;
+        self.stats.hits += 1;
+        self.stats.hit_tokens += depth as u64;
+        match tier {
+            Tier::Hbm => self.stats.bytes_hbm += bytes,
+            Tier::Dram => self.stats.bytes_dram += bytes,
+            Tier::Ssd => self.stats.bytes_ssd += bytes,
+        }
+        self.maybe_promote(kv, eid);
+        Some(PrefixHit { depth, tier, bytes })
+    }
+
+    /// Cache a completed session's full prompt KV, copied out of its
+    /// still-live slot (the caller closes the session afterwards; the
+    /// cache never takes ownership of `src_slot`). Placement: an HBM
+    /// slot while the hot budget and the pool allow, else the spill
+    /// tier the store quotes — unless the cost model says that tier's
+    /// round-trip costs more than recomputing, in which case nothing
+    /// is cached.
+    pub fn insert(&mut self, kv: &mut KvStore, prompt: &[u32], src_slot: usize) {
+        if prompt.is_empty() || prompt.len() < self.cfg.min_depth {
+            return;
+        }
+        if self.index.covered(prompt) {
+            return;
+        }
+        while self.index.len() >= self.cfg.max_entries.max(1) {
+            match self.index.lru_where(|_| true) {
+                Some(victim) => {
+                    self.remove_entry(kv, victim);
+                    self.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        let values = prompt.len() * self.cfg.vals_per_token;
+        let bytes = 2 * (kv.n_layers() * values) as u64 * 4;
+        let home = if self.hot_count < self.cfg.hot_slots {
+            match kv.acquire() {
+                Some(slot) => {
+                    kv.copy_prefix(src_slot, slot, values);
+                    kv.pin_slot(slot);
+                    self.hot_count += 1;
+                    PrefixHome::Hot { slot }
+                }
+                None => match self.park(kv, src_slot, prompt.len(), values, bytes) {
+                    Some(h) => h,
+                    None => return,
+                },
+            }
+        } else {
+            match self.park(kv, src_slot, prompt.len(), values, bytes) {
+                Some(h) => h,
+                None => return,
+            }
+        };
+        self.clock += 1;
+        let e = Entry {
+            node: 0,
+            depth: prompt.len(),
+            home,
+            hits: 0,
+            last_use: self.clock,
+        };
+        match self.index.insert(prompt, e) {
+            Ok(_) => self.stats.inserts += 1,
+            // Unreachable past the covered() check, but never leak.
+            Err(e) => self.free_home(kv, e.home),
+        }
+    }
+
+    /// Park `src_slot`'s leading rows down the spill tier the store
+    /// quotes, or choose recompute when the tier is not cost-worthy.
+    fn park(
+        &mut self,
+        kv: &mut KvStore,
+        src_slot: usize,
+        depth: usize,
+        values: usize,
+        bytes: u64,
+    ) -> Option<PrefixHome> {
+        let tier = kv.spill_tier_for(bytes);
+        if !self.cfg.cost.keep_in_tier(tier, depth, bytes) {
+            self.stats.recomputes_chosen += 1;
+            return None;
+        }
+        let ticket = kv.park_prefix_copy(src_slot, values).ok()?;
+        Some(match tier {
+            SpillTier::Dram => PrefixHome::Warm { ticket },
+            SpillTier::Ssd => PrefixHome::Cold { ticket },
+        })
+    }
+
+    /// Promote a frequently hit warm/cold entry into an HBM slot,
+    /// demoting (or dropping, per the cost model) the LRU hot entry
+    /// if the hot budget is exhausted.
+    fn maybe_promote(&mut self, kv: &mut KvStore, eid: usize) {
+        let e = self.index.entry(eid);
+        let ticket = match e.home {
+            PrefixHome::Warm { ticket } | PrefixHome::Cold { ticket } => ticket,
+            PrefixHome::Hot { .. } | PrefixHome::Virtual => return,
+        };
+        if e.hits < self.cfg.promote_hits || self.cfg.hot_slots == 0 {
+            return;
+        }
+        let values = e.depth * self.cfg.vals_per_token;
+        if self.hot_count >= self.cfg.hot_slots {
+            match self.index.lru_where(|e| matches!(e.home, PrefixHome::Hot { .. })) {
+                Some(victim) => self.demote(kv, victim),
+                None => return,
+            }
+            if self.hot_count >= self.cfg.hot_slots {
+                return; // demotion did not free a hot slot
+            }
+        }
+        let Some(slot) = kv.acquire() else { return };
+        match kv.peek_prefix_into(ticket, slot, values) {
+            Ok(_) => {
+                kv.discard(ticket);
+                kv.pin_slot(slot);
+                self.index.entry_mut(eid).home = PrefixHome::Hot { slot };
+                self.hot_count += 1;
+                self.stats.promotions += 1;
+            }
+            Err(_) => {
+                kv.release(slot);
+                self.remove_entry(kv, eid);
+            }
+        }
+    }
+
+    /// Push a hot entry down a spill tier, or drop it entirely when
+    /// the cost model prefers recompute.
+    fn demote(&mut self, kv: &mut KvStore, eid: usize) {
+        let (home, depth) = {
+            let e = self.index.entry(eid);
+            (e.home, e.depth)
+        };
+        let PrefixHome::Hot { slot } = home else {
+            return;
+        };
+        let values = depth * self.cfg.vals_per_token;
+        let bytes = 2 * (kv.n_layers() * values) as u64 * 4;
+        let tier = kv.spill_tier_for(bytes);
+        if self.cfg.cost.keep_in_tier(tier, depth, bytes) {
+            if let Ok(ticket) = kv.park_prefix_copy(slot, values) {
+                kv.unpin_slot(slot);
+                kv.release(slot);
+                self.hot_count -= 1;
+                self.index.entry_mut(eid).home = match tier {
+                    SpillTier::Dram => PrefixHome::Warm { ticket },
+                    SpillTier::Ssd => PrefixHome::Cold { ticket },
+                };
+                self.stats.demotions += 1;
+                return;
+            }
+        }
+        self.stats.recomputes_chosen += 1;
+        self.remove_entry(kv, eid);
+    }
+
+    fn remove_entry(&mut self, kv: &mut KvStore, eid: usize) {
+        let home = self.index.remove(eid);
+        self.free_home(kv, home);
+    }
+
+    fn free_home(&mut self, kv: &mut KvStore, home: PrefixHome) {
+        match home {
+            PrefixHome::Hot { slot } => {
+                kv.unpin_slot(slot);
+                kv.release(slot);
+                self.hot_count -= 1;
+            }
+            PrefixHome::Warm { ticket } | PrefixHome::Cold { ticket } => {
+                kv.discard(ticket);
+            }
+            PrefixHome::Virtual => {}
+        }
+    }
+
+    /// Free every pinned slot and parked ticket and empty the index —
+    /// after this the store reports `pins() == 0` and none of the
+    /// cache's tickets remain parked (the leak tripwire the replay
+    /// tests assert).
+    pub fn drain(&mut self, kv: &mut KvStore) {
+        for home in self.index.drain() {
+            self.free_home(kv, home);
+        }
+        debug_assert_eq!(self.hot_count, 0, "hot-slot accounting leaked");
+        self.hot_count = 0;
+    }
+}
+
+/// Index-only prefix cache for engines whose KV is position-pure (the
+/// stub and the simulator): a hit skips prefill work without moving
+/// any bytes, so entries carry [`PrefixHome::Virtual`] and no store
+/// is needed.
+#[derive(Debug)]
+pub struct VirtualPrefixCache {
+    max_entries: usize,
+    min_depth: usize,
+    index: PrefixIndex,
+    stats: PrefixStats,
+    clock: u64,
+}
+
+impl VirtualPrefixCache {
+    pub fn new(max_entries: usize, min_depth: usize) -> VirtualPrefixCache {
+        VirtualPrefixCache {
+            max_entries: max_entries.max(1),
+            min_depth,
+            index: PrefixIndex::new(),
+            stats: PrefixStats::default(),
+            clock: 0,
+        }
+    }
+
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.len() == 0
+    }
+
+    /// Longest cached prefix depth for `prompt` (0 = miss).
+    pub fn lookup(&mut self, prompt: &[u32]) -> usize {
+        match self.index.lookup(prompt, self.min_depth) {
+            Some((eid, depth)) => {
+                self.clock += 1;
+                let clock = self.clock;
+                let e = self.index.entry_mut(eid);
+                e.hits += 1;
+                e.last_use = clock;
+                self.stats.hits += 1;
+                self.stats.hit_tokens += depth as u64;
+                depth
+            }
+            None => {
+                self.stats.misses += 1;
+                0
+            }
+        }
+    }
+
+    /// Record `prompt` in the index.
+    pub fn insert(&mut self, prompt: &[u32]) {
+        if prompt.is_empty() || prompt.len() < self.min_depth || self.index.covered(prompt) {
+            return;
+        }
+        while self.index.len() >= self.max_entries {
+            match self.index.lru_where(|_| true) {
+                Some(victim) => {
+                    self.index.remove(victim);
+                    self.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        self.clock += 1;
+        let e = Entry {
+            node: 0,
+            depth: prompt.len(),
+            home: PrefixHome::Virtual,
+            hits: 0,
+            last_use: self.clock,
+        };
+        if self.index.insert(prompt, e).is_ok() {
+            self.stats.inserts += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: usize = 2; // f32 values per token per layer plane
+
+    fn store(slots: usize, dram_budget: u64) -> KvStore {
+        // 2 layers, 8 positions of D values each.
+        KvStore::new(slots, 2, 8 * D, dram_budget)
+    }
+
+    fn cfg(max_entries: usize, hot_slots: usize) -> PrefixConfig {
+        PrefixConfig {
+            max_entries,
+            min_depth: 1,
+            hot_slots,
+            promote_hits: 2,
+            vals_per_token: D,
+            cost: PrefixCostModel::default(),
+        }
+    }
+
+    /// Write a recognisable per-position pattern into a slot.
+    fn fill(kv: &mut KvStore, slot: usize, tokens: &[u32]) {
+        for (pos, &t) in tokens.iter().enumerate() {
+            for layer in 0..2 {
+                let base = (t as f32) * 10.0 + layer as f32;
+                kv.write_token(slot, layer, pos, D, &[base, base + 0.5], &[-base, -base - 0.5]);
+            }
+        }
+    }
+
+    fn row(kv: &KvStore, slot: usize, layer: usize, pos: usize) -> Vec<f32> {
+        kv.k_layer(slot, layer)[pos * D..(pos + 1) * D].to_vec()
+    }
+
+    #[test]
+    fn index_matches_longest_prefix_and_shares_subtree_entries() {
+        let mut idx = PrefixIndex::new();
+        let e = |depth| Entry {
+            node: 0,
+            depth,
+            home: PrefixHome::Virtual,
+            hits: 0,
+            last_use: 0,
+        };
+        idx.insert(&[1, 2, 3, 4], e(4)).unwrap();
+        idx.insert(&[1, 2, 9], e(3)).unwrap();
+        assert_eq!(idx.len(), 2);
+        // Exact-path prefix: depth caps one short of the probe prompt.
+        let (_, d) = idx.lookup(&[1, 2, 3, 4, 5], 1).unwrap();
+        assert_eq!(d, 4);
+        // Divergent tail still shares [1,2] — the subtree donates.
+        let (_, d) = idx.lookup(&[1, 2, 7, 7], 1).unwrap();
+        assert_eq!(d, 2);
+        // A probe that IS a cached prompt matches depth len-1.
+        let (_, d) = idx.lookup(&[1, 2, 3, 4], 1).unwrap();
+        assert_eq!(d, 3);
+        assert!(idx.lookup(&[5, 5], 1).is_none(), "disjoint prompt hits");
+        assert!(idx.lookup(&[1, 9], 2).is_none(), "min_depth floor");
+        // covered(): a prefix of a cached prompt adds nothing.
+        assert!(idx.covered(&[1, 2, 3]));
+        assert!(idx.covered(&[1, 2, 3, 4]));
+        assert!(!idx.covered(&[1, 2, 3, 4, 5]));
+    }
+
+    #[test]
+    fn index_remove_prunes_chains_and_recycles_slabs() {
+        let mut idx = PrefixIndex::new();
+        let e = || Entry {
+            node: 0,
+            depth: 0,
+            home: PrefixHome::Virtual,
+            hits: 0,
+            last_use: 0,
+        };
+        let a = idx.insert(&[1, 2, 3], e()).unwrap();
+        let b = idx.insert(&[1, 2, 4, 5], e()).unwrap();
+        let nodes_before = idx.nodes.len();
+        idx.remove(b);
+        assert!(idx.lookup(&[1, 2, 4, 5, 6], 3).is_none(), "pruned branch");
+        assert_eq!(idx.lookup(&[1, 2, 3, 9], 1).unwrap().0, a);
+        idx.remove(a);
+        assert_eq!(idx.len(), 0);
+        assert!(idx.lookup(&[1, 2], 1).is_none());
+        // Reinsert reuses freed slab space rather than growing.
+        idx.insert(&[7, 8, 9, 10], e()).unwrap();
+        assert!(idx.nodes.len() <= nodes_before);
+    }
+
+    #[test]
+    fn insert_then_attach_copies_shared_rows_cow() {
+        let mut kv = store(4, 1 << 20);
+        let mut pc = TieredPrefixCache::new(cfg(8, 1));
+        let src = kv.acquire().unwrap();
+        let prompt = [3, 1, 4, 1];
+        fill(&mut kv, src, &prompt);
+        pc.insert(&mut kv, &prompt, src);
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pc.hot_count(), 1, "first insert takes the hot slot");
+        assert_eq!(kv.pins(), 1);
+        kv.release(src); // the session closes; the cache's copy lives on
+        // New session sharing 3 leading tokens, then diverging.
+        let dst = kv.acquire().unwrap();
+        let hit = pc.attach(&mut kv, &[3, 1, 4, 9, 9], dst).unwrap();
+        assert_eq!(hit.depth, 3);
+        assert_eq!(hit.tier, Tier::Hbm);
+        assert_eq!(hit.bytes, 2 * (2 * 3 * D) as u64 * 4);
+        for pos in 0..3 {
+            let base = (prompt[pos] as f32) * 10.0;
+            assert_eq!(row(&kv, dst, 0, pos), vec![base, base + 0.5]);
+        }
+        assert!(row(&kv, dst, 0, 3).iter().all(|&x| x == 0.0), "tail zero");
+        // COW: scribbling on the attached slot leaves the donor alone.
+        kv.write_token(dst, 0, 0, D, &[99.0, 99.0], &[99.0, 99.0]);
+        let probe = kv.acquire().unwrap();
+        let h2 = pc.attach(&mut kv, &[3, 1, 7], probe).unwrap();
+        assert_eq!(h2.depth, 2);
+        assert_eq!(row(&kv, probe, 0, 0), vec![30.0, 30.5], "donor intact");
+        let stats = *pc.stats();
+        assert_eq!((stats.hits, stats.hit_tokens, stats.misses), (2, 5, 0));
+        kv.release(dst);
+        kv.release(probe);
+        pc.drain(&mut kv);
+        assert_eq!((kv.pins(), kv.spilled(), kv.in_use()), (0, 0, 0));
+    }
+
+    #[test]
+    fn residency_spans_hot_warm_cold_and_attach_reads_every_tier() {
+        // Budget fits exactly one parked prompt: insert #2 goes warm,
+        // insert #3 cascades cold to the SSD file.
+        let one = 2 * (2 * 4 * D) as u64 * 4;
+        let mut kv = store(4, one);
+        let mut pc = TieredPrefixCache::new(cfg(8, 1));
+        for (i, prompt) in [[1, 1, 1, 1], [2, 2, 2, 2], [3, 3, 3, 3]].iter().enumerate() {
+            let s = kv.acquire().unwrap();
+            fill(&mut kv, s, prompt);
+            pc.insert(&mut kv, prompt, s);
+            kv.release(s);
+            assert_eq!(pc.len(), i + 1);
+        }
+        assert_eq!(pc.hot_count(), 1);
+        assert_eq!(kv.dram_spill_used(), one);
+        assert_eq!(kv.ssd_parked(), 1);
+        let d = kv.acquire().unwrap();
+        let hot = pc.attach(&mut kv, &[1, 1, 9], d).unwrap();
+        assert_eq!((hot.tier, hot.depth), (Tier::Hbm, 2));
+        assert_eq!(row(&kv, d, 0, 0), vec![10.0, 10.5]);
+        kv.zero(d);
+        let warm = pc.attach(&mut kv, &[2, 2, 9], d).unwrap();
+        assert_eq!(warm.tier, Tier::Dram);
+        assert_eq!(row(&kv, d, 1, 1), vec![21.0, 21.5]);
+        kv.zero(d);
+        let cold = pc.attach(&mut kv, &[3, 3, 9], d).unwrap();
+        assert_eq!(cold.tier, Tier::Ssd);
+        assert_eq!(cold.bytes, 2 * (2 * 4 * D) as u64 * 4, "full record read");
+        assert_eq!(row(&kv, d, 0, 1), vec![30.0, 30.5]);
+        let stats = *pc.stats();
+        assert!(stats.bytes_hbm > 0 && stats.bytes_dram > 0 && stats.bytes_ssd > 0);
+        kv.release(d);
+        pc.drain(&mut kv);
+        assert_eq!((kv.pins(), kv.spilled()), (0, 0));
+    }
+
+    #[test]
+    fn repeated_hits_promote_and_demote_through_the_hierarchy() {
+        let mut kv = store(4, 1 << 20);
+        let mut pc = TieredPrefixCache::new(cfg(8, 1));
+        for prompt in [[1u32, 1, 1, 1], [2, 2, 2, 2]] {
+            let s = kv.acquire().unwrap();
+            fill(&mut kv, s, &prompt);
+            pc.insert(&mut kv, &prompt, s);
+            kv.release(s);
+        }
+        assert_eq!(pc.hot_count(), 1, "only entry #1 is hot");
+        // Hammer the warm entry past promote_hits: it must take the
+        // hot slot, demoting the idle entry to the DRAM area.
+        let d = kv.acquire().unwrap();
+        for _ in 0..2 {
+            pc.attach(&mut kv, &[2, 2, 2, 9], d).unwrap();
+            kv.zero(d);
+        }
+        let stats = *pc.stats();
+        assert_eq!(stats.promotions, 1);
+        assert_eq!(stats.demotions, 1);
+        let h = pc.attach(&mut kv, &[2, 2, 9], d).unwrap();
+        assert_eq!(h.tier, Tier::Hbm, "promoted entry now serves from HBM");
+        kv.zero(d);
+        let h = pc.attach(&mut kv, &[1, 1, 9], d).unwrap();
+        assert_eq!(h.tier, Tier::Dram, "demoted entry serves from DRAM");
+        assert_eq!(row(&kv, d, 0, 0), vec![10.0, 10.5], "demotion kept bytes");
+        kv.release(d);
+        pc.drain(&mut kv);
+        assert_eq!((kv.pins(), kv.spilled(), kv.in_use()), (0, 0, 0));
+    }
+
+    #[test]
+    fn capacity_pressure_evicts_lru_and_frees_its_home() {
+        let mut kv = store(4, 1 << 20);
+        let mut pc = TieredPrefixCache::new(cfg(2, 0)); // spill-only cache
+        for prompt in [[1u32, 1, 1], [2, 2, 2]] {
+            let s = kv.acquire().unwrap();
+            fill(&mut kv, s, &prompt);
+            pc.insert(&mut kv, &prompt, s);
+            kv.release(s);
+        }
+        assert_eq!((pc.len(), kv.spilled()), (2, 2));
+        // Touch #1 so #2 is LRU, then overflow.
+        let d = kv.acquire().unwrap();
+        pc.attach(&mut kv, &[1, 1, 9], d).unwrap();
+        let s = kv.acquire().unwrap();
+        fill(&mut kv, s, &[3, 3, 3]);
+        pc.insert(&mut kv, &[3, 3, 3], s);
+        kv.release(s);
+        assert_eq!(pc.len(), 2);
+        assert_eq!(kv.spilled(), 2, "evicted entry's ticket was discarded");
+        assert_eq!(pc.stats().evictions, 1);
+        kv.zero(d);
+        assert!(pc.attach(&mut kv, &[2, 2, 9], d).is_none(), "LRU gone");
+        assert!(pc.attach(&mut kv, &[1, 1, 9], d).is_some(), "MRU kept");
+        kv.release(d);
+        pc.drain(&mut kv);
+        assert_eq!(kv.spilled(), 0);
+    }
+
+    #[test]
+    fn covered_prompts_and_short_prompts_are_not_reinserted() {
+        let mut kv = store(4, 1 << 20);
+        let mut pc = TieredPrefixCache::new(cfg(8, 0));
+        let s = kv.acquire().unwrap();
+        fill(&mut kv, s, &[1, 2, 3, 4]);
+        pc.insert(&mut kv, &[1, 2, 3, 4], s);
+        pc.insert(&mut kv, &[1, 2, 3], s); // prefix of an entry: covered
+        pc.insert(&mut kv, &[1, 2, 3, 4], s); // exact duplicate
+        pc.insert(&mut kv, &[], s);
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pc.stats().inserts, 1);
+        // A longer prompt sharing the path IS new information.
+        pc.insert(&mut kv, &[1, 2, 3, 4, 5], s);
+        assert_eq!(pc.len(), 2);
+        kv.release(s);
+        pc.drain(&mut kv);
+    }
+
+    #[test]
+    fn cost_model_prefers_recompute_when_the_tier_is_expensive() {
+        // Real-scale prefill dwarfs tier traffic for KV-sized payloads.
+        let m = PrefixCostModel::default();
+        let kv_bytes_per_token = 512 * 1024; // 7B-class f16 KV row
+        assert!(m.keep_in_tier(SpillTier::Ssd, 16, 16 * kv_bytes_per_token));
+        assert!(m.keep_in_tier(SpillTier::Dram, 16, 16 * kv_bytes_per_token));
+        assert!(m.dram_j_per_byte < m.ssd_j_per_byte);
+        // A near-free recompute flips the decision.
+        let cheap = PrefixCostModel {
+            recompute_j_per_token: 1e-12,
+            ..m
+        };
+        assert!(!cheap.keep_in_tier(SpillTier::Ssd, 4, 4 * kv_bytes_per_token));
+        // And the cache then declines to park at all.
+        let mut kv = store(2, 0); // SSD-only spill
+        let mut pc = TieredPrefixCache::new(PrefixConfig {
+            hot_slots: 0,
+            cost: cheap,
+            ..cfg(8, 0)
+        });
+        let s = kv.acquire().unwrap();
+        fill(&mut kv, s, &[5, 5, 5]);
+        pc.insert(&mut kv, &[5, 5, 5], s);
+        assert_eq!(pc.len(), 0, "recompute chosen: nothing cached");
+        assert_eq!(pc.stats().recomputes_chosen, 1);
+        assert_eq!(kv.spilled(), 0);
+        kv.release(s);
+    }
+
+    #[test]
+    fn hot_budget_exhaustion_falls_back_to_spill_tiers() {
+        // 2 slots total, hot budget 2: the second insert finds the
+        // pool exhausted (session + hot pin) and parks instead.
+        let mut kv = store(2, 1 << 20);
+        let mut pc = TieredPrefixCache::new(cfg(8, 2));
+        let s = kv.acquire().unwrap();
+        fill(&mut kv, s, &[1, 1, 1]);
+        pc.insert(&mut kv, &[1, 1, 1], s); // takes the last free slot
+        assert_eq!(pc.hot_count(), 1);
+        fill(&mut kv, s, &[2, 2, 2]);
+        pc.insert(&mut kv, &[2, 2, 2], s);
+        assert_eq!(pc.hot_count(), 1, "no slot free: parked instead");
+        assert_eq!(kv.spilled(), 1);
+        assert_eq!(pc.len(), 2);
+        kv.release(s);
+        pc.drain(&mut kv);
+        assert_eq!((kv.pins(), kv.spilled(), kv.in_use()), (0, 0, 0));
+    }
+
+    #[test]
+    fn virtual_cache_tracks_depths_without_bytes() {
+        let mut vc = VirtualPrefixCache::new(2, 2);
+        assert_eq!(vc.lookup(&[1, 2, 3]), 0);
+        vc.insert(&[1, 2, 3, 4]);
+        assert_eq!(vc.lookup(&[1, 2, 3, 9]), 3);
+        assert_eq!(vc.lookup(&[1, 9]), 0, "below min_depth");
+        vc.insert(&[1, 2]); // covered
+        assert_eq!(vc.len(), 1);
+        vc.insert(&[5, 6, 7]);
+        // [1,2,3,4] (hit before [5,6,7] was inserted) is now the LRU.
+        vc.insert(&[8, 9, 10]);
+        assert_eq!(vc.len(), 2);
+        assert_eq!(vc.stats().evictions, 1);
+        assert_eq!(vc.lookup(&[1, 2, 3, 9]), 0, "LRU evicted");
+        assert_eq!(vc.lookup(&[5, 6, 9]), 2, "survivor still matches");
+        assert_eq!(vc.lookup(&[8, 9, 10, 11]), 3);
+        let s = *vc.stats();
+        assert_eq!((s.hits, s.inserts), (3, 3));
+    }
+}

@@ -335,6 +335,11 @@ pub struct Scheduler<E: SessionEngine> {
     pub preemptions: u64,
     /// Parked sessions restored into an HBM slot.
     pub resumes: u64,
+    /// Admissions that attached a cached shared prefix
+    /// ([`SessionEngine::prefix_attach`]).
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped via prefix attachment.
+    pub prefix_hit_tokens: u64,
     /// Per-priority-class serving counters.
     pub classes: [ClassCounters; N_CLASSES],
 }
@@ -372,6 +377,8 @@ impl<E: SessionEngine> Scheduler<E> {
             cancelled: 0,
             preemptions: 0,
             resumes: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
             classes: [ClassCounters::default(); N_CLASSES],
         }
     }
@@ -602,7 +609,16 @@ impl<E: SessionEngine> Scheduler<E> {
         let class = q.req.priority.index();
         let (seq, deadline_abs) = (q.seq, q.deadline_abs);
         match self.engine.open(q.req) {
-            Ok(s) => {
+            Ok(mut s) => {
+                // Shared-prefix attachment: the engine copies any cached
+                // leading rows into the fresh slot and advances the
+                // prefill cursor past them, so the turn loop prefills
+                // only the tail.
+                let depth = self.engine.prefix_attach(&mut s);
+                if depth > 0 {
+                    self.prefix_hits += 1;
+                    self.prefix_hit_tokens += depth as u64;
+                }
                 self.admitted += 1;
                 self.classes[class].admitted += 1;
                 self.stamp += 1;
@@ -630,7 +646,19 @@ impl<E: SessionEngine> Scheduler<E> {
         let mut p = self.parked.swap_remove(idx);
         match self.engine.restore(&mut p.s, p.ticket) {
             Ok(()) => {
-                p.s.resume();
+                if let Err(e) = p.s.resume() {
+                    // A parked session that is not Preempted is a
+                    // bookkeeping bug; fail the request instead of
+                    // silently serving corrupt state. The restore above
+                    // already rebound a slot — close() frees it.
+                    let id = p.s.id;
+                    p.s.abort();
+                    self.engine.close(&mut p.s);
+                    self.completed += 1;
+                    self.classes[p.s.priority.index()].failed += 1;
+                    report_failed(report, id, format!("resume bookkeeping: {e:#}"));
+                    return;
+                }
                 self.resumes += 1;
                 self.stamp += 1;
                 report.events.push(SessionEvent::Resumed { id: p.s.id });
@@ -862,6 +890,10 @@ impl<E: SessionEngine> Scheduler<E> {
         report.guard = guard;
         report.stepped = Some(self.active[idx].s.id);
         self.turn += 1;
+        // Token timing follows the scheduler's clock: pinned virtual
+        // time under trace replay, wall time otherwise — never a mix.
+        let vnow = self.virtual_now_ms;
+        self.active[idx].s.set_clock_ms(vnow);
         let chunk = match self.cfg.mode {
             SchedMode::RoundRobin => 1,
             SchedMode::PriorityEdf => self.cfg.prefill_chunk.max(1),
@@ -909,6 +941,10 @@ impl<E: SessionEngine> Scheduler<E> {
             self.admit_with(&mut report, false);
         } else if outcome == StepOutcome::Finished {
             let mut entry = self.active.swap_remove(idx);
+            // Clean completion: offer the prompt's KV (still resident in
+            // the slot) to the engine's prefix cache before the slot is
+            // released.
+            self.engine.prefix_insert(&entry.s);
             self.engine.close(&mut entry.s);
             self.completed += 1;
             let missed = entry.deadline_abs.is_some_and(|d| self.now_ms() > d);
@@ -1007,7 +1043,10 @@ impl<E: SessionEngine> Scheduler<E> {
                 break;
             }
             let mut staged: Vec<(usize, u32)> = Vec::with_capacity(lanes.len());
+            let vnow = self.virtual_now_ms;
             for &i in &lanes {
+                // Per-round so continuous-admission joiners are covered.
+                self.active[i].s.set_clock_ms(vnow);
                 match self.active[i].s.begin_step() {
                     Ok(Some(tok)) => staged.push((i, tok)),
                     Ok(None) => {}
@@ -1058,6 +1097,11 @@ impl<E: SessionEngine> Scheduler<E> {
                 continue;
             }
             let mut entry = self.active.swap_remove(i);
+            // Clean completions feed the prefix cache while their rows
+            // are still resident; failed lanes never do.
+            if !errors.contains_key(&id) {
+                self.engine.prefix_insert(&entry.s);
+            }
             self.engine.close(&mut entry.s);
             self.completed += 1;
             if let Some(error) = errors.remove(&id) {

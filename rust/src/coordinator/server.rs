@@ -340,6 +340,19 @@ struct Shared {
     writers: Mutex<Vec<std::sync::Weak<ConnTx>>>,
 }
 
+/// Take a lock even when another thread panicked while holding it. The
+/// guarded state (queues, counters, registries) stays structurally
+/// valid across a panic — every mutation under these locks is a push/
+/// pop/assign, not a multi-step invariant — and propagating the poison
+/// would turn one failed connection handler into a whole-server
+/// outage: every later `.lock().unwrap()` on any thread would panic
+/// too. The panicking request already failed its own connection (its
+/// handler thread died; the client sees EOF); everyone else keeps
+/// being served.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Format a v1 or v2 error line for a request-grammar failure.
 fn parse_err_line(proto: Proto, e: ParseError) -> String {
     match proto {
@@ -369,6 +382,7 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
          \"batch\":{{\"turns\":{},\"tokens\":{},\"occupancy\":{:.2},\"union_hits\":{}}},\
          \"preempt\":{{\"parked\":{},\"preemptions\":{},\"resumes\":{},\
          \"spill_dram_b\":{},\"spill_ssd_b\":{},\"restore_b\":{}}},\
+         \"prefix\":{{\"hits\":{},\"hit_tokens\":{}}},\
          \"classes\":{{{}}}}}\n",
         s.active,
         s.backlog,
@@ -384,6 +398,8 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
         s.kv_spill.spill_bytes_dram,
         s.kv_spill.spill_bytes_ssd,
         s.kv_spill.restore_bytes(),
+        s.prefix_hits,
+        s.prefix_hit_tokens,
         classes.join(",")
     )
 }
@@ -460,7 +476,7 @@ pub fn serve<E: SessionEngine>(
         let mut sched_cancels: Vec<(u64, ConnWriter)> = Vec::new();
         let mut writes: Vec<(ConnWriter, String)> = Vec::new();
         {
-            let mut guard = shared.state.lock().unwrap();
+            let mut guard = lock_unpoisoned(&shared.state);
             loop {
                 let taken: Vec<(u64, ConnWriter)> = guard.cancels.drain(..).collect();
                 for (id, requester) in taken {
@@ -503,7 +519,10 @@ pub fn serve<E: SessionEngine>(
                 {
                     break;
                 }
-                guard = shared.cv.wait(guard).unwrap();
+                guard = shared
+                    .cv
+                    .wait(guard)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         }
         for (conn, line) in writes {
@@ -536,7 +555,7 @@ pub fn serve<E: SessionEngine>(
                     return None;
                 }
                 let (req, client) = {
-                    let mut g = intake_shared.state.lock().unwrap();
+                    let mut g = lock_unpoisoned(&intake_shared.state);
                     loop {
                         let req = g.queue.pop()?;
                         let Some(i) = g.pending.iter().position(|p| p.req.id == req.id) else {
@@ -575,7 +594,7 @@ pub fn serve<E: SessionEngine>(
             for (c, &n) in snap.classes.iter_mut().zip(queue_cancelled_class.iter()) {
                 c.cancelled += n;
             }
-            shared.state.lock().unwrap().stats = snap;
+            lock_unpoisoned(&shared.state).stats = snap;
         }
         // Map the event stream to wire frames. v1 connections get the
         // original one-shot replies (byte-identical); v2 connections
@@ -661,7 +680,7 @@ pub fn serve<E: SessionEngine>(
     // admission queue get an explicit error instead of a silent EOF.
     shared.stop.store(true, Ordering::SeqCst);
     {
-        let mut guard = shared.state.lock().unwrap();
+        let mut guard = lock_unpoisoned(&shared.state);
         while guard.queue.pop().is_some() {}
         for p in guard.pending.drain(..) {
             let line = match p.proto {
@@ -686,10 +705,7 @@ pub fn serve<E: SessionEngine>(
     // skipped, so a wedged client cannot stall shutdown past the cap.
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
     loop {
-        let owed: usize = shared
-            .writers
-            .lock()
-            .unwrap()
+        let owed: usize = lock_unpoisoned(&shared.writers)
             .iter()
             .filter_map(|w| w.upgrade())
             .filter(|w| !w.dead.load(Ordering::SeqCst))
@@ -719,7 +735,7 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
         // Register for the shutdown drain, pruning entries whose
         // connections are gone so the registry stays proportional to
         // *live* connections, not to every connection ever accepted.
-        let mut writers = shared.writers.lock().unwrap();
+        let mut writers = lock_unpoisoned(&shared.writers);
         writers.retain(|w| w.strong_count() > 0);
         writers.push(Arc::downgrade(&writer));
     }
@@ -759,7 +775,7 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                     continue;
                 }
                 let stopped = {
-                    let mut g = shared.state.lock().unwrap();
+                    let mut g = lock_unpoisoned(&shared.state);
                     if shared.stop.load(Ordering::SeqCst) {
                         true
                     } else {
@@ -780,7 +796,7 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                 // Queue counters live with the queue; everything else
                 // comes from the decode loop's last snapshot — all read
                 // under one lock, so the reply is one coherent view.
-                let g = shared.state.lock().unwrap();
+                let g = lock_unpoisoned(&shared.state);
                 let msg = stats_json(
                     g.queue.len(),
                     g.queue.enqueued,
@@ -812,7 +828,7 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                 // the request up, keeping all frames for an id on one
                 // writer (and no socket writes under this lock).
                 let admitted = {
-                    let mut g = shared.state.lock().unwrap();
+                    let mut g = lock_unpoisoned(&shared.state);
                     if shared.stop.load(Ordering::SeqCst) {
                         None
                     } else {
@@ -944,6 +960,36 @@ mod tests {
         assert_eq!(parse_request("CANCEL x"), Err(ParseError::BadId));
         assert_eq!(parse_request("CANCEL -3"), Err(ParseError::BadId));
         assert_eq!(parse_request("CANCEL42"), Err(ParseError::UnknownCommand));
+    }
+
+    #[test]
+    fn parse_zero_max_new_is_legal() {
+        // `GEN 0 <prompt>` is a valid degenerate request: the session
+        // prefills and ends with zero TOK frames (v2) / empty text
+        // (v1), not a grammar error.
+        assert_eq!(
+            parse_request("GEN 0 just prefill this"),
+            Ok(Command::Gen {
+                max_new: 0,
+                prompt: "just prefill this".into(),
+                priority: Priority::Normal,
+                deadline_ms: None,
+            })
+        );
+    }
+
+    #[test]
+    fn stats_json_carries_prefix_counters() {
+        let s = StatsSnapshot {
+            prefix_hits: 5,
+            prefix_hit_tokens: 80,
+            ..Default::default()
+        };
+        let j = stats_json(0, 0, 0, &s);
+        assert!(
+            j.contains("\"prefix\":{\"hits\":5,\"hit_tokens\":80}"),
+            "{j}"
+        );
     }
 
     #[test]

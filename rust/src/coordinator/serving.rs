@@ -50,6 +50,10 @@ pub struct StatsSnapshot {
     pub resumes: u64,
     /// Per-tier KV spill/restore byte meters, from engine telemetry.
     pub kv_spill: SpillCounters,
+    /// Admissions that attached a shared-prefix KV hit.
+    pub prefix_hits: u64,
+    /// Prompt tokens those hits skipped prefilling.
+    pub prefix_hit_tokens: u64,
 }
 
 impl StatsSnapshot {
@@ -155,6 +159,8 @@ impl<E: SessionEngine> ServingCore<E> {
             preemptions: self.sched.preemptions,
             resumes: self.sched.resumes,
             kv_spill: tel.map_or(SpillCounters::default(), |t| t.kv_spill),
+            prefix_hits: self.sched.prefix_hits,
+            prefix_hit_tokens: self.sched.prefix_hit_tokens,
         }
     }
 
@@ -197,6 +203,19 @@ mod tests {
         assert_eq!(snap.served, 2);
         assert_eq!(snap.active, 0);
         assert_eq!(snap.cancelled, 0);
+    }
+
+    #[test]
+    fn snapshot_reports_prefix_hits() {
+        let mut core = ServingCore::from_engine(StubSessionEngine::new(2).with_prefix_cache(8));
+        core.submit(req(1, "shared preamble alpha", 2));
+        core.run_until_idle();
+        assert_eq!(core.snapshot().prefix_hits, 0, "first request is cold");
+        core.submit(req(2, "shared preamble beta!", 2));
+        core.run_until_idle();
+        let snap = core.snapshot();
+        assert_eq!(snap.prefix_hits, 1);
+        assert_eq!(snap.prefix_hit_tokens, "shared preamble ".len() as u64);
     }
 
     #[test]

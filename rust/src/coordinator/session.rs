@@ -76,6 +76,16 @@ pub struct SessionStats {
     pub inter_token_sum_s: f64,
 }
 
+/// A token timestamp on whichever clock the session runs under: wall
+/// time normally, the scheduler's virtual clock under trace replay.
+/// Inter-token gaps are only measured between stamps of the same kind,
+/// so replay stats never mix virtual and wall durations.
+#[derive(Debug, Clone, Copy)]
+enum TokenStamp {
+    Wall(Instant),
+    Virtual(u64),
+}
+
 /// One in-flight request's decode state. The session owns *which* KV
 /// slot it writes, not the KV memory itself — that stays in the engine's
 /// [`KvPool`] so the bound on concurrent sessions is also the bound on
@@ -100,7 +110,10 @@ pub struct DecodeSession {
     /// Prompt tokens consumed.
     fed: usize,
     logits: Vec<f32>,
-    last_token_at: Option<Instant>,
+    last_token_at: Option<TokenStamp>,
+    /// Virtual "now" in ms when the owner drives a virtual clock
+    /// (trace replay); None = wall clock. See [`Self::set_clock_ms`].
+    clock_ms: Option<u64>,
     /// The session was aborted mid-flight ([`Self::abort`]).
     cancelled: bool,
     /// Phase to return to when a [`SessionState::Preempted`] session
@@ -127,6 +140,7 @@ impl DecodeSession {
             fed: 0,
             logits: Vec::new(),
             last_token_at: None,
+            clock_ms: None,
             cancelled: false,
             paused_from: SessionState::Queued,
         }
@@ -198,11 +212,19 @@ impl DecodeSession {
 
     /// Return from [`Self::pause`] into the exact phase the session
     /// left (Queued/Prefill/Decode). The engine must have restored the
-    /// KV slot first.
-    pub fn resume(&mut self) {
-        if self.state == SessionState::Preempted {
-            self.state = self.paused_from;
-        }
+    /// KV slot first. Resuming a session that is not parked is an
+    /// error, symmetric with [`Self::pause`]: a silent no-op here would
+    /// hide exactly the scheduler bookkeeping bugs `begin_step`'s
+    /// guards exist to catch.
+    pub fn resume(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.state == SessionState::Preempted,
+            "session {} cannot resume: not preempted ({:?})",
+            self.id,
+            self.state
+        );
+        self.state = self.paused_from;
+        Ok(())
     }
 
     /// Currently parked by the scheduler (KV spilled out of HBM).
@@ -223,16 +245,62 @@ impl DecodeSession {
         self.prompt.len() + self.max_new.saturating_sub(1)
     }
 
+    /// Pin the session's token timestamps to a virtual clock (ms). The
+    /// scheduler refreshes this with its own virtual "now" before every
+    /// turn it runs under trace replay, so inter-token stats are a pure
+    /// function of the trace instead of mixing wall time into a virtual
+    /// replay. `None` (the serving default) keeps wall-clock stamps.
+    pub fn set_clock_ms(&mut self, now_ms: Option<u64>) {
+        self.clock_ms = now_ms;
+    }
+
     fn note_token(&mut self) {
-        let now = Instant::now();
-        if let Some(prev) = self.last_token_at {
-            let gap = now.duration_since(prev).as_secs_f64();
+        let now = match self.clock_ms {
+            Some(ms) => TokenStamp::Virtual(ms),
+            None => TokenStamp::Wall(Instant::now()),
+        };
+        // Gaps only between same-clock stamps: a session switching
+        // clocks mid-flight (defensive; the scheduler pins the clock
+        // before the first step) skips the unmeasurable gap rather than
+        // subtracting a virtual stamp from a wall one.
+        let gap = match (self.last_token_at, now) {
+            (Some(TokenStamp::Wall(prev)), TokenStamp::Wall(n)) => {
+                Some(n.duration_since(prev).as_secs_f64())
+            }
+            (Some(TokenStamp::Virtual(prev)), TokenStamp::Virtual(n)) => {
+                Some(n.saturating_sub(prev) as f64 / 1e3)
+            }
+            _ => None,
+        };
+        if let Some(gap) = gap {
             self.stats.inter_token_sum_s += gap;
             if gap > self.stats.max_inter_token_s {
                 self.stats.max_inter_token_s = gap;
             }
         }
         self.last_token_at = Some(now);
+    }
+
+    /// Start this session's prefill cursor at `depth`: rows `0..depth`
+    /// of its KV slot were attached from a shared-prefix cache, so
+    /// prefill feeds only the tail. Only legal before the first step,
+    /// and only for a *strict* prefix (`depth < prompt.len()`): the
+    /// last prompt token is always fed, because its logits seed decode.
+    pub fn attach_prefix(&mut self, depth: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.state == SessionState::Queued && self.fed == 0 && self.pos == 0,
+            "session {} cannot attach a prefix after stepping",
+            self.id
+        );
+        anyhow::ensure!(
+            depth < self.prompt.len(),
+            "session {}: prefix depth {depth} must leave a tail (prompt len {})",
+            self.id,
+            self.prompt.len()
+        );
+        self.fed = depth;
+        self.pos = depth;
+        Ok(())
     }
 
     /// Stage one token of engine work: validates, flips Queued→Prefill
@@ -415,6 +483,23 @@ pub trait SessionEngine {
     /// release (the slot went back to the pool at spill time).
     fn discard(&mut self, _s: &mut DecodeSession, _ticket: KvTicket) {}
 
+    /// Attach the longest cached shared prefix to a *freshly opened*
+    /// session: copy the cached KV rows into its slot and advance its
+    /// prefill cursor ([`DecodeSession::attach_prefix`]), so prefill
+    /// feeds only the tail. Returns the attached depth in tokens
+    /// (0 = no cache, or a miss). Called by the scheduler right after
+    /// [`Self::open`], before the first step. Engines without a prefix
+    /// cache keep the default.
+    fn prefix_attach(&mut self, _s: &mut DecodeSession) -> usize {
+        0
+    }
+
+    /// Offer a cleanly finished session's prompt KV to the prefix
+    /// cache. Called by the scheduler right before [`Self::close`],
+    /// while the session's rows are still resident in its slot; never
+    /// called for cancelled or failed sessions. Default: no cache.
+    fn prefix_insert(&mut self, _s: &DecodeSession) {}
+
     /// How many sessions this engine wants in flight at once — admitted
     /// and holding either an HBM KV slot or a spill ticket. Engines
     /// without spill support keep the default (in flight == resident);
@@ -557,6 +642,23 @@ impl KvPool {
         let b = self.base(slot, layer);
         self.k[b..b + k.len()].copy_from_slice(k);
         self.v[b..b + v.len()].copy_from_slice(v);
+    }
+
+    /// Copy the first `len` values of every layer plane from `src`
+    /// into `dst` — the HBM-internal row copy behind shared-prefix
+    /// attachment (COW: the destination owns its copy and may extend
+    /// it freely). `dst`'s remaining rows are untouched.
+    pub fn copy_prefix(&mut self, src: usize, dst: usize, len: usize) {
+        assert!(len <= self.stride, "prefix past stride");
+        if src == dst || len == 0 {
+            return;
+        }
+        for l in 0..self.n_layers {
+            let s = self.base(src, l);
+            let d = self.base(dst, l);
+            self.k.copy_within(s..s + len, d);
+            self.v.copy_within(s..s + len, d);
+        }
     }
 
     /// A slot's entire K plane (`n_layers * stride` contiguous f32) —
@@ -735,7 +837,7 @@ mod tests {
                 s.pause().unwrap();
                 assert!(s.is_preempted());
                 assert!(s.begin_step().is_err(), "parked sessions must not step");
-                s.resume();
+                s.resume().unwrap();
                 assert!(!s.is_preempted());
             }
             steps += 1;
@@ -746,13 +848,87 @@ mod tests {
         assert_eq!(s.generated, straight);
         // Pausing a finished session is an error; double pause too.
         assert!(s.pause().is_err());
+        assert!(s.resume().is_err(), "resuming a done session");
         let mut p = eng.open(req(2, vec![1], 4)).unwrap();
+        assert!(p.resume().is_err(), "resuming a never-paused session");
         p.step(&mut eng).unwrap();
         p.pause().unwrap();
         assert!(p.pause().is_err(), "double pause");
-        p.resume();
-        p.resume(); // idempotent outside Preempted
+        p.resume().unwrap();
+        assert!(p.resume().is_err(), "double resume must error, not no-op");
         assert!(matches!(p.state, SessionState::Decode | SessionState::Prefill));
+    }
+
+    #[test]
+    fn attach_prefix_skips_prefill_and_keeps_bytes() {
+        // Echo's logits are a pure function of (token, pos), so a
+        // session whose first rows were attached from a cache generates
+        // the same bytes as the cold run — the session-level half of
+        // the prefix-cache byte-equality contract.
+        let mut eng = Echo;
+        let cold = {
+            let mut s = eng.open(req(1, vec![7, 2, 9, 4], 5)).unwrap();
+            while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {}
+            s.generated
+        };
+        let mut s = eng.open(req(1, vec![7, 2, 9, 4], 5)).unwrap();
+        s.attach_prefix(3).unwrap();
+        assert_eq!((s.fed(), s.pos()), (3, 3));
+        let mut steps = 0;
+        while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {
+            steps += 1;
+        }
+        // Only the one-token tail plus the decode feeds ran.
+        assert_eq!(steps + 1, s.total_steps() - 3);
+        assert_eq!(s.generated, cold, "prefix-attached bytes diverged");
+        // Guards: never a full prefix (the last token seeds decode),
+        // never after stepping.
+        let mut t = eng.open(req(2, vec![1, 2], 3)).unwrap();
+        assert!(t.attach_prefix(2).is_err(), "full-prompt attach");
+        t.step(&mut eng).unwrap();
+        assert!(t.attach_prefix(1).is_err(), "attach after stepping");
+    }
+
+    #[test]
+    fn virtual_clock_token_stats_are_deterministic() {
+        // Under a pinned virtual clock the inter-token stats are a pure
+        // function of the clock values — identical across runs, exact
+        // in value, and never contaminated by wall time.
+        let mut eng = Echo;
+        let run = |eng: &mut Echo| {
+            let mut s = eng.open(req(1, vec![4, 2], 4)).unwrap();
+            let mut now = 0u64;
+            s.set_clock_ms(Some(now));
+            while !matches!(s.step(eng).unwrap(), StepOutcome::Finished) {
+                now += 7;
+                s.set_clock_ms(Some(now));
+            }
+            (s.stats.inter_token_sum_s, s.stats.max_inter_token_s)
+        };
+        let a = run(&mut eng);
+        let b = run(&mut eng);
+        assert_eq!(a, b, "virtual-clock stats must replay bit-identically");
+        // 4 tokens → 3 gaps of exactly 7 virtual ms each.
+        assert!((a.0 - 3.0 * 7.0 / 1e3).abs() < 1e-12, "sum {}", a.0);
+        assert_eq!(a.1, 7.0 / 1e3);
+    }
+
+    #[test]
+    fn kv_pool_copy_prefix_copies_rows_and_leaves_tail() {
+        let mut p = KvPool::new(2, 2, 6);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        p.write_token(a, 0, 0, 2, &[1.0, 2.0], &[-1.0, -2.0]);
+        p.write_token(a, 1, 1, 2, &[3.0, 4.0], &[-3.0, -4.0]);
+        p.write_token(b, 0, 2, 2, &[9.0, 9.0], &[9.0, 9.0]);
+        p.copy_prefix(a, b, 4);
+        // The leading rows of every layer came over...
+        assert_eq!(&p.k_layer(b, 0)[..4], &p.k_layer(a, 0)[..4]);
+        assert_eq!(&p.v_layer(b, 1)[..4], &p.v_layer(a, 1)[..4]);
+        // ...and b's own tail rows survived.
+        assert_eq!(&p.k_layer(b, 0)[4..6], &[9.0, 9.0]);
+        // a is untouched.
+        assert_eq!(&p.k_layer(a, 1)[2..4], &[3.0, 4.0]);
     }
 
     #[test]

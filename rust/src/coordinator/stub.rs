@@ -7,6 +7,7 @@
 //! wire, and independent of interleaving — exactly the properties the
 //! protocol tests pin.
 
+use crate::coordinator::prefix::VirtualPrefixCache;
 use crate::coordinator::request::Request;
 use crate::coordinator::session::{DecodeSession, KvTicket, SessionEngine};
 use anyhow::Result;
@@ -37,6 +38,12 @@ pub struct StubSessionEngine {
     /// Spill/restore events (test observability).
     pub spills: u64,
     pub restores: u64,
+    /// Index-only shared-prefix cache ([`Self::with_prefix_cache`]).
+    /// The stub's KV is a pure function of position, so a hit skips
+    /// the matched prompt feeds without moving any bytes — their
+    /// logits were discarded anyway, and decode continues from the
+    /// same (token, position) sequence byte-identically.
+    prefix: Option<VirtualPrefixCache>,
 }
 
 impl StubSessionEngine {
@@ -52,6 +59,7 @@ impl StubSessionEngine {
             forwards: 0,
             spills: 0,
             restores: 0,
+            prefix: None,
         }
     }
 
@@ -66,6 +74,19 @@ impl StubSessionEngine {
     /// Tickets currently parked outside the slot pool.
     pub fn parked(&self) -> usize {
         self.parked.len()
+    }
+
+    /// Enable the index-only shared-prefix cache: admissions whose
+    /// prompt shares leading tokens with a completed prompt skip those
+    /// prefill forwards (min match depth 1).
+    pub fn with_prefix_cache(mut self, max_entries: usize) -> StubSessionEngine {
+        self.prefix = Some(VirtualPrefixCache::new(max_entries, 1));
+        self
+    }
+
+    /// Prefix-cache counters, if the cache is enabled.
+    pub fn prefix_stats(&self) -> Option<&crate::coordinator::prefix::PrefixStats> {
+        self.prefix.as_ref().map(|p| p.stats())
     }
 
     /// Bound the per-slot KV stride (admission rejects oversize).
@@ -181,6 +202,26 @@ impl SessionEngine for StubSessionEngine {
     fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
         self.parked.remove(&ticket.id());
     }
+
+    fn prefix_attach(&mut self, s: &mut DecodeSession) -> usize {
+        let Some(pc) = self.prefix.as_mut() else {
+            return 0;
+        };
+        let depth = pc.lookup(&s.prompt);
+        if depth == 0 || s.attach_prefix(depth).is_err() {
+            return 0;
+        }
+        depth
+    }
+
+    fn prefix_insert(&mut self, s: &DecodeSession) {
+        if s.is_cancelled() {
+            return;
+        }
+        if let Some(pc) = self.prefix.as_mut() {
+            pc.insert(&s.prompt);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +240,40 @@ mod tests {
         eng.close(&mut s);
         assert_eq!(s.generated, StubSessionEngine::reference_tokens(&prompt, 9));
         assert_eq!(eng.available(), 1);
+    }
+
+    #[test]
+    fn prefix_cache_skips_prefill_forwards_byte_identically() {
+        let mut eng = StubSessionEngine::new(1).with_prefix_cache(8);
+        let prompt = tokenize("system preamble: answer briefly. user: hi");
+        let mut a = eng.open(Request::new(1, prompt.clone(), 6)).unwrap();
+        assert_eq!(eng.prefix_attach(&mut a), 0, "nothing cached yet");
+        while !a.is_done() {
+            a.step(&mut eng).unwrap();
+        }
+        eng.prefix_insert(&a);
+        eng.close(&mut a);
+        let cold = eng.forwards;
+        // Same preamble, divergent final token: everything but the
+        // last prompt feed comes from the cache.
+        let mut prompt2 = prompt.clone();
+        *prompt2.last_mut().unwrap() ^= 1;
+        let mut b = eng.open(Request::new(2, prompt2.clone(), 6)).unwrap();
+        let depth = eng.prefix_attach(&mut b);
+        assert_eq!(depth, prompt2.len() - 1);
+        while !b.is_done() {
+            b.step(&mut eng).unwrap();
+        }
+        eng.close(&mut b);
+        assert_eq!(
+            b.generated,
+            StubSessionEngine::reference_tokens(&prompt2, 6),
+            "prefix-hit decode must be byte-identical to a cold run"
+        );
+        assert_eq!(eng.forwards - cold, cold - depth as u64);
+        let stats = eng.prefix_stats().unwrap();
+        assert_eq!((stats.hits, stats.hit_tokens), (1, depth as u64));
+        assert_eq!(stats.misses, 1);
     }
 
     #[test]

@@ -176,6 +176,38 @@ pub fn inject_cancellations(events: &mut [TraceEvent], every: usize, delay_ms: u
     tagged
 }
 
+/// Deterministically rewrite a fraction of a trace's prompts to share
+/// a common preamble: every event whose index `i` satisfies
+/// `i % denom < num` gets `prefix` spliced in front of its own prompt
+/// (`num/denom` is the skew — 1/2 = half the requests share the
+/// preamble). The event's original tokens follow the preamble, so
+/// tagged prompts still diverge after it — exactly the
+/// repeated-system-prompt shape the shared-prefix KV cache targets.
+/// Pure function of the inputs; replays bit-identically. Returns how
+/// many prompts were rewritten.
+pub fn inject_shared_prefix(
+    events: &mut [TraceEvent],
+    prefix: &[u32],
+    num: usize,
+    denom: usize,
+) -> usize {
+    if prefix.is_empty() || num == 0 {
+        return 0;
+    }
+    let denom = denom.max(1);
+    let mut tagged = 0usize;
+    for (i, ev) in events.iter_mut().enumerate() {
+        if i % denom < num {
+            let mut p = Vec::with_capacity(prefix.len() + ev.prompt.len());
+            p.extend_from_slice(prefix);
+            p.append(&mut ev.prompt);
+            ev.prompt = p;
+            tagged += 1;
+        }
+    }
+    tagged
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +261,30 @@ mod tests {
         assert!(generate(&spec(Mix::Steady))
             .iter()
             .all(|e| e.cancel_after_ms.is_none()));
+    }
+
+    #[test]
+    fn shared_prefix_injection_is_deterministic_and_preserves_tails() {
+        let mut a = generate(&spec(Mix::Steady));
+        let originals: Vec<Vec<u32>> = a.iter().map(|e| e.prompt.clone()).collect();
+        let preamble: Vec<u32> = (0..8).collect();
+        let n = inject_shared_prefix(&mut a, &preamble, 1, 2);
+        assert_eq!(n, 30, "1/2 skew tags every even index");
+        let mut b = generate(&spec(Mix::Steady));
+        inject_shared_prefix(&mut b, &preamble, 1, 2);
+        for (i, (ev, orig)) in a.iter().zip(&originals).enumerate() {
+            assert_eq!(ev.prompt, b[i].prompt, "not deterministic at {i}");
+            if i % 2 == 0 {
+                assert!(ev.prompt.starts_with(&preamble));
+                assert_eq!(&ev.prompt[preamble.len()..], &orig[..]);
+            } else {
+                assert_eq!(&ev.prompt, orig);
+            }
+        }
+        // Degenerate skews are no-ops.
+        let mut c = generate(&spec(Mix::Steady));
+        assert_eq!(inject_shared_prefix(&mut c, &preamble, 0, 2), 0);
+        assert_eq!(inject_shared_prefix(&mut c, &[], 1, 2), 0);
     }
 
     #[test]

@@ -164,6 +164,10 @@ pub struct Telemetry {
     /// KV spill/restore counts and bytes per tier (preemption traffic
     /// of the tiered KV store; zero when nothing was ever preempted).
     pub kv_spill: SpillCounters,
+    /// Admissions that attached a shared-prefix KV hit instead of
+    /// cold-prefilling, and the prompt tokens those hits skipped.
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
     /// Free-form counters for experiment-specific series.
     pub counters: BTreeMap<String, u64>,
 }
@@ -230,6 +234,8 @@ impl Telemetry {
             .field_int("kv_restores", self.kv_spill.restores() as i64)
             .field_int("kv_spill_bytes", self.kv_spill.spill_bytes() as i64)
             .field_int("kv_restore_bytes", self.kv_spill.restore_bytes() as i64)
+            .field_int("prefix_hits", self.prefix_hits as i64)
+            .field_int("prefix_hit_tokens", self.prefix_hit_tokens as i64)
             .field_num("predict_s", self.phases.predict_s)
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)
@@ -373,6 +379,18 @@ mod tests {
         let j = t.to_json();
         assert!(j.contains("\"kv_spills_dram\":2"), "{j}");
         assert!(j.contains("\"kv_spill_bytes\":150"), "{j}");
+    }
+
+    #[test]
+    fn prefix_counters_in_json() {
+        let t = Telemetry {
+            prefix_hits: 3,
+            prefix_hit_tokens: 42,
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert!(j.contains("\"prefix_hits\":3"), "{j}");
+        assert!(j.contains("\"prefix_hit_tokens\":42"), "{j}");
     }
 
     #[test]

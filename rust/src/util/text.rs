@@ -102,6 +102,10 @@ impl JsonWriter {
         self.key(k).int(v)
     }
 
+    pub fn field_bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k).boolean(v)
+    }
+
     pub fn finish(self) -> String {
         assert!(self.needs_comma.is_empty(), "unbalanced JSON writer");
         self.buf

@@ -8,7 +8,7 @@
 //! identically through whichever spill tier (DRAM area or SSD file)
 //! took it, and no slot or ticket may ever leak.
 
-use m2cache::coordinator::{KvPool, KvStore, KvTicket};
+use m2cache::coordinator::{KvPool, KvStore, KvTicket, SpillTier};
 use m2cache::util::check::Check;
 use m2cache::util::rng::Rng;
 use std::collections::{BTreeSet, HashMap};
@@ -145,7 +145,7 @@ fn kv_store_spill_invariants(rng: &mut Rng) -> Result<(), String> {
     // Outstanding tickets with the sentinel their state must carry.
     let mut parked: Vec<(KvTicket, Option<(usize, usize, f32)>)> = Vec::new();
     for step in 0..96 {
-        match rng.below(5) {
+        match rng.below(6) {
             0 => {
                 if let Some(s) = kv.acquire() {
                     if live.contains(&s) {
@@ -176,6 +176,24 @@ fn kv_store_spill_invariants(rng: &mut Rng) -> Result<(), String> {
                     let s = live.swap_remove(rng.range(0, live.len()));
                     let t = kv.spill(s).map_err(|e| format!("step {step}: spill: {e:#}"))?;
                     parked.push((t, wrote.remove(&s)));
+                }
+            }
+            4 => {
+                // Prefix-cache-style park: copy a live slot's full
+                // planes into a spill tier WITHOUT releasing the slot.
+                // The ticket joins the parked set as a first-class
+                // citizen (restorable, discardable) carrying a copy of
+                // the sentinel as of park time; the source slot keeps
+                // serving (and may later overwrite) its own.
+                if !live.is_empty() {
+                    let s = live[rng.range(0, live.len())];
+                    let t = kv
+                        .park_prefix_copy(s, stride)
+                        .map_err(|e| format!("step {step}: park: {e:#}"))?;
+                    if kv.in_use() != live.len() {
+                        return Err(format!("step {step}: park released slot {s}"));
+                    }
+                    parked.push((t, wrote.get(&s).copied()));
                 }
             }
             _ => {
@@ -272,6 +290,48 @@ fn kv_store_spill_invariants(rng: &mut Rng) -> Result<(), String> {
 #[test]
 fn kv_store_random_spill_restore_discard_conserves_everything() {
     Check::new(150, 0x51F7).run("kv-store-spill-invariants", kv_store_spill_invariants);
+}
+
+/// Record recycling in the SSD spill file: steady churn of `w`
+/// concurrent tickets must reuse freed records (the free list) instead
+/// of appending — the file's allocation high-water mark plateaus after
+/// the first round and never grows again.
+#[test]
+fn spill_file_high_water_plateaus_under_steady_churn() {
+    // DRAM budget 0: every park lands in the SSD spill file.
+    let mut kv = KvStore::new(4, 2, 8, 0);
+    let w = 3usize;
+    let mut high = 0usize;
+    for round in 0..32 {
+        let mut tickets = Vec::new();
+        for i in 0..w {
+            let s = kv.acquire().expect("pool has room");
+            let val = (round * w + i + 1) as f32;
+            kv.write_token(s, 1, 0, 2, &[val, val], &[-val, -val]);
+            let t = kv.spill(s).expect("spill to file");
+            assert_eq!(kv.ticket_tier(t), Some(SpillTier::Ssd), "budget 0 must hit the file");
+            tickets.push((t, val));
+        }
+        assert_eq!(kv.ssd_parked(), w);
+        // Alternate drain order so records also recycle out of order.
+        if round % 2 == 1 {
+            tickets.reverse();
+        }
+        for (t, val) in tickets {
+            let s = kv.restore(t).expect("restore from file");
+            let k = &kv.k_layer(s, 1)[..2];
+            assert_eq!(k, [val, val], "round {round}: wrong bytes back");
+            kv.release(s);
+        }
+        if round == 0 {
+            high = kv.file_high_water();
+            assert_eq!(high, w, "first round allocates one record per ticket");
+        } else {
+            assert_eq!(kv.file_high_water(), high, "file grew at round {round}");
+        }
+        assert_eq!(kv.file_free_records(), high, "records not recycled at round {round}");
+        assert_eq!(kv.ssd_parked(), 0);
+    }
 }
 
 #[test]

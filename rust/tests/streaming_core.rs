@@ -250,6 +250,45 @@ fn preempted_session_parks_resumes_and_streams_identical_bytes() {
     assert_eq!((engine.spills, engine.restores), (1, 1));
 }
 
+#[test]
+fn zero_max_new_request_completes_with_no_token_events() {
+    // `max_new == 0` is a legal prefill-only request: it must terminate
+    // with a Done carrying zero tokens (no Token events, no hang) and
+    // give its KV slot back — alongside a normal request whose bytes it
+    // must not disturb.
+    let mut core = ServingCore::from_engine(StubSessionEngine::new(2));
+    core.submit(req(1, "just prefill me", 0));
+    core.submit(req(2, "ab", 2));
+    let events = core.run_until_idle();
+    assert!(
+        !events
+            .iter()
+            .any(|e| matches!(e, SessionEvent::Token { id: 1, .. })),
+        "zero-budget request streamed a token: {events:?}"
+    );
+    let done = events
+        .iter()
+        .find_map(|e| match e {
+            SessionEvent::Done(c) if c.response.id == 1 => Some(c.response.clone()),
+            _ => None,
+        })
+        .expect("zero-budget request never completed");
+    assert!(done.tokens.is_empty(), "{:?}", done.tokens);
+    let other = events
+        .iter()
+        .find_map(|e| match e {
+            SessionEvent::Done(c) if c.response.id == 2 => Some(c.response.clone()),
+            _ => None,
+        })
+        .expect("neighbour never completed");
+    assert_eq!(
+        other.tokens,
+        StubSessionEngine::reference_tokens(&tokenize("ab"), 2)
+    );
+    assert_eq!(core.served(), 2);
+    assert_eq!(core.scheduler().engine().available(), 2, "slot leaked");
+}
+
 // ---------------------------------------------------------------- wire
 
 /// Boot the generic server over a stub engine; returns the address and
@@ -446,6 +485,50 @@ fn v2_cancel_lands_mid_decode_over_the_wire() {
     assert_eq!(n_toks, 3);
     let engine = handle.join().unwrap();
     assert_eq!(engine.available(), 2, "cancel leaked a KV slot");
+}
+
+#[test]
+fn zero_max_new_round_trips_on_both_protocols() {
+    // `GEN 0 <prompt>` over the wire: v2 answers ACK then END with no
+    // TOK frames in between; a v1 connection gets the one-shot OK reply
+    // with an empty completion. Neither hangs the decode loop.
+    let (addr, handle) = spawn_stub_server(StubSessionEngine::new(2), 2);
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        send_line(&mut conn, "HELLO v2");
+        assert_eq!(read_line(&mut reader), "HELLO v2");
+        send_line(&mut conn, "GEN 0 measure my prefill");
+        let ack = read_line(&mut reader);
+        let id: u64 = ack
+            .strip_prefix("ACK ")
+            .unwrap_or_else(|| panic!("expected ACK, got {ack:?}"))
+            .parse()
+            .unwrap();
+        let frame = read_line(&mut reader);
+        let rest = frame
+            .strip_prefix("END ")
+            .unwrap_or_else(|| panic!("expected END with no TOK frames, got {frame:?}"));
+        let mut parts = rest.split(' ');
+        assert_eq!(parts.next().unwrap().parse::<u64>().unwrap(), id);
+        for ms in parts {
+            assert!(ms.parse::<f64>().unwrap() >= 0.0);
+        }
+    }
+    {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        send_line(&mut conn, "GEN 0 hello");
+        let reply = read_line(&mut reader);
+        let mut parts = reply.splitn(6, ' ');
+        assert_eq!(parts.next(), Some("OK"));
+        let _id: u64 = parts.next().unwrap().parse().unwrap();
+        for _ in 0..3 {
+            let _ms: f64 = parts.next().unwrap().parse().unwrap();
+        }
+        assert_eq!(parts.next().unwrap_or(""), "", "v1 completion not empty");
+    }
+    handle.join().unwrap();
 }
 
 #[test]

@@ -19,10 +19,12 @@
 //!   trace and the same simulated clock.
 
 use anyhow::Result;
-use m2cache::coordinator::workload::{generate, inject_cancellations, Mix, TraceEvent, TraceSpec};
+use m2cache::coordinator::workload::{
+    generate, inject_cancellations, inject_shared_prefix, Mix, TraceEvent, TraceSpec,
+};
 use m2cache::coordinator::{
     DecodeSession, KvTicket, Outcome, Priority, Request, SchedConfig, SchedMode, Scheduler,
-    SessionEngine, SessionEvent,
+    SessionEngine, SessionEvent, StubSessionEngine,
 };
 use m2cache::telemetry::{ClassCounters, N_CLASSES};
 use std::collections::{HashMap, HashSet};
@@ -660,6 +662,91 @@ fn preemption_trace_resumes_byte_identically_and_leaks_nothing() {
     }
     assert_eq!(sched.engine().free.len(), SLOTS, "leaked KV slots");
     assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
+}
+
+/// Drive a trace through the scheduler over the library stub engine
+/// (plain drive-to-idle on the virtual clock, like the batched replay),
+/// returning per-request bytes plus the scheduler's prefix-hit
+/// counters and the engine's total forward count. Asserts zero leaks.
+fn drive_stub(
+    events: &[TraceEvent],
+    engine: StubSessionEngine,
+    slots: usize,
+) -> (HashMap<u64, Vec<u32>>, u64, u64, u64) {
+    let mut sched = Scheduler::with_config(engine, slots, edf_cfg());
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut tokens: HashMap<u64, Vec<u32>> = HashMap::new();
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+    }
+    assert_eq!(sched.engine().available(), slots, "leaked KV slots");
+    assert_eq!(sched.engine().parked(), 0, "leaked spill tickets");
+    (
+        tokens,
+        sched.prefix_hits,
+        sched.prefix_hit_tokens,
+        sched.engine().forwards,
+    )
+}
+
+#[test]
+fn shared_prefix_replay_is_byte_identical_and_saves_forwards() {
+    // The tentpole's trace tier: a prefix-skewed trace (half the
+    // requests share a 24-token preamble) replayed through the
+    // scheduler over the prefix-caching stub must produce per-request
+    // bytes identical to the cold per-request reference — a prefix hit
+    // changes *when* prompt tokens are fed, never *what* comes out —
+    // while skipping exactly one engine forward per hit token. Both
+    // runs must return every slot and ticket.
+    const SLOTS: usize = 3;
+    let mut events = generate(&spec(Mix::Steady, 48));
+    let preamble: Vec<u32> = (0..24).map(|i| (i * 5 + 2) % VOCAB as u32).collect();
+    let tagged = inject_shared_prefix(&mut events, &preamble, 1, 2);
+    assert_eq!(tagged, 24, "1/2 skew over 48 events");
+    let reference: HashMap<u64, Vec<u32>> = events
+        .iter()
+        .map(|e| (e.id, StubSessionEngine::reference_tokens(&e.prompt, e.max_new)))
+        .collect();
+    let (cold, cold_hits, _, cold_fwd) = drive_stub(&events, StubSessionEngine::new(SLOTS), SLOTS);
+    assert_eq!(cold, reference, "uncached replay diverged from reference");
+    assert_eq!(cold_hits, 0, "no cache, no hits");
+    let warm_engine = || StubSessionEngine::new(SLOTS).with_prefix_cache(32);
+    let (warm, hits, hit_tokens, warm_fwd) = drive_stub(&events, warm_engine(), SLOTS);
+    assert_eq!(warm, reference, "prefix-hit decode changed generated bytes");
+    assert!(hits >= 8, "prefix skew produced only {hits} hits");
+    assert!(
+        hit_tokens >= 8 * preamble.len() as u64,
+        "hits too shallow: {hit_tokens} tokens over {hits} hits"
+    );
+    // Every hit token is a prefill forward the engine never ran.
+    assert_eq!(warm_fwd + hit_tokens, cold_fwd, "forward savings must equal hit tokens exactly");
+    // And the cached replay is as deterministic as the cold one.
+    let again = drive_stub(&events, warm_engine(), SLOTS);
+    assert_eq!(again, (warm, hits, hit_tokens, warm_fwd));
 }
 
 #[test]
