@@ -10,8 +10,11 @@
 //! order-invariant, slot order never needs fixing up.
 //!
 //! The update policy is pluggable ([`HbmPolicy`]): the paper's ATU
-//! (Adjacent Token Update) is the default; LRU and LLM-in-a-Flash's
-//! sliding window are provided as comparators for the ablations.
+//! (Adjacent Token Update) is the baseline; LRU and LLM-in-a-Flash's
+//! sliding window are provided as comparators for the ablations. The
+//! default is the set-associative + victim-buffer + way-predicted
+//! organization in [`crate::cache::setassoc`], chosen by the
+//! trace-driven policy sweep (`experiments cache_policy`).
 
 use crate::precision::plan::LayerPlan;
 use crate::precision::Dtype;
@@ -35,6 +38,16 @@ pub struct UpdateResult {
     pub evicted: usize,
     /// Plan entries already resident (cache hits).
     pub hits: usize,
+    /// Hits served out of the victim buffer (set-associative
+    /// organization only; zero for the flat policies).
+    pub victim_hits: usize,
+    /// Main-cache hits whose set's MRU way prediction was correct
+    /// (set-associative organization only).
+    pub way_hits: usize,
+    /// Main-cache hits where a way prediction was consulted
+    /// (set-associative organization only; `way_hits / way_lookups`
+    /// is the prediction accuracy).
+    pub way_lookups: usize,
 }
 
 /// One layer's isolated cache unit.
@@ -225,6 +238,11 @@ impl CacheUnit {
         self.resident.clear();
         self.free = (0..self.capacity).rev().collect();
         self.mask.fill(0.0);
+        // Reset the use clock too: a cleared unit must not leak
+        // pre-clear recency stamps into post-clear LRU ordering (a
+        // fresh insert would otherwise look *older* than a stale slot).
+        self.tick = 0;
+        self.last_use.fill(0);
     }
 
     /// HBM bytes held by this unit's buffer (the capacity reservation,
@@ -284,7 +302,7 @@ impl HbmPolicy for AtuPolicy {
             }
         }
         load.sort_by_key(|na| (na.neuron, na.dtype));
-        UpdateResult { load, evicted, hits }
+        UpdateResult { load, evicted, hits, ..Default::default() }
     }
 
     fn name(&self) -> &'static str {
@@ -347,7 +365,7 @@ impl HbmPolicy for LruPolicy {
             load.push(na);
         }
         load.sort_by_key(|na| (na.neuron, na.dtype));
-        UpdateResult { load, evicted, hits }
+        UpdateResult { load, evicted, hits, ..Default::default() }
     }
 
     fn name(&self) -> &'static str {
@@ -436,7 +454,7 @@ impl HbmPolicy for SlidingWindowPolicy {
             }
         }
         load.sort_by_key(|na| (na.neuron, na.dtype));
-        UpdateResult { load, evicted, hits }
+        UpdateResult { load, evicted, hits, ..Default::default() }
     }
 
     fn name(&self) -> &'static str {
@@ -682,8 +700,10 @@ mod tests {
                 Box::new(AtuPolicy),
                 Box::new(LruPolicy),
                 Box::new(SlidingWindowPolicy::new(3)),
+                Box::new(crate::cache::SetAssocPolicy::new(4, 8)),
+                Box::new(crate::cache::SetAssocPolicy::new(8, 0)),
             ];
-            let pol = &mut policies[rng.range(0, 3)];
+            let pol = &mut policies[rng.range(0, 5)];
             for _ in 0..8 {
                 let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
                 let plan =
@@ -729,8 +749,8 @@ mod tests {
             let mut u = CacheUnit::meta_only(cap);
             for op in 0..64 {
                 let neuron = rng.below(32) as u32;
-                let prev_tick = u.tick;
-                match rng.range(0, 4) {
+                let mut prev_tick = u.tick;
+                match rng.range(0, 5) {
                     0 => {
                         if u.free_slots() > 0 && u.dtype_of(neuron).is_none() {
                             let dt = [Dtype::F16, Dtype::Int8, Dtype::Int4]
@@ -762,6 +782,21 @@ mod tests {
                         } else if u.tick != prev_tick {
                             return Err(format!("op {op}: touch of absent advanced clock"));
                         }
+                    }
+                    3 => {
+                        // clear() must forget residency AND recency: a
+                        // stale clock would make post-clear inserts look
+                        // older than pre-clear slots ever were.
+                        u.clear();
+                        if u.tick != 0 || u.last_use.iter().any(|&t| t != 0) {
+                            return Err(format!(
+                                "op {op}: clear left recency stamps behind"
+                            ));
+                        }
+                        if u.len() != 0 || u.free_slots() != cap {
+                            return Err(format!("op {op}: clear left residents"));
+                        }
+                        prev_tick = 0; // the clock legitimately restarts
                     }
                     _ => {} // no-op round: re-check invariants only
                 }
@@ -1016,6 +1051,64 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn sliding_window_state_must_not_alias_across_layers() {
+        // Headline regression: ExecEngine/SimEngine used to hold ONE
+        // policy instance shared by every per-layer unit, so a stateful
+        // SlidingWindowPolicy's "last `window` plans" were really an
+        // interleaving of EVERY layer's plans. A layer-local resident
+        // still inside its own layer's window then got evicted because
+        // OTHER layers' plans had pushed it out of the shared history.
+        //
+        // Engines now build one instance per layer
+        // (`PolicyKind::build_per_layer`); this pins the behavior at the
+        // policy level by replaying the engine's exact update order.
+        let drive = |policies: &mut [&mut SlidingWindowPolicy]| -> (CacheUnit, CacheUnit) {
+            let mut u0 = CacheUnit::meta_only(8);
+            let mut u1 = CacheUnit::meta_only(8);
+            // Token 0: layer 0 wants {1,2}, layer 1 wants {10,11}.
+            // Token 1: layer 0 wants {2,3}, layer 1 repeats {10,11}.
+            let tokens = [
+                (plan_of(&[1, 2], &[], &[]), plan_of(&[10, 11], &[], &[])),
+                (plan_of(&[2, 3], &[], &[]), plan_of(&[10, 11], &[], &[])),
+            ];
+            for (p0, p1) in &tokens {
+                // The engine's order: layer 0 then layer 1, per token.
+                let i1 = policies.len() - 1; // shared => same instance
+                for na in policies[0].update(&mut u0, p0).load {
+                    u0.insert(na.neuron, na.dtype, &[]);
+                }
+                for na in policies[i1].update(&mut u1, p1).load {
+                    u1.insert(na.neuron, na.dtype, &[]);
+                }
+            }
+            (u0, u1)
+        };
+
+        // Per-layer instances (the fix): neuron 1 was planned by layer 0
+        // one token ago — inside the window of 2 — so it must survive
+        // token 1's update no matter what layer 1's plans were.
+        let (mut a, mut b) = (SlidingWindowPolicy::new(2), SlidingWindowPolicy::new(2));
+        let (u0, u1) = drive(&mut [&mut a, &mut b]);
+        assert!(
+            u0.contains(1, Dtype::F16),
+            "layer-local resident inside the window evicted by another layer's plans"
+        );
+        assert_eq!(u0.resident_neurons(), vec![1, 2, 3]);
+        assert_eq!(u1.resident_neurons(), vec![10, 11]);
+
+        // Shared instance (the old engine shape): layer 1's plans flush
+        // layer 0's history out of the shared window, so neuron 1 is
+        // gone — the §5.3 ablation corruption this PR fixes. Kept as a
+        // demonstration that the test above is load-bearing.
+        let mut shared = SlidingWindowPolicy::new(2);
+        let (u0, _) = drive(&mut [&mut shared]);
+        assert!(
+            !u0.contains(1, Dtype::F16),
+            "shared-instance aliasing no longer reproduces; update this test"
+        );
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! The multi-level cache (paper §5.3–5.4): neuron-level HBM cache units
-//! with pluggable policies (ATU / LRU / sliding-window), the two-level
-//! DRAM cache (fixed + dynamic areas), the pluggable SSD tier, and the
-//! pattern-aware preloader that hides SSD latency behind compute.
+//! with pluggable policies (ATU / LRU / sliding-window, plus the
+//! default set-associative + victim-buffer + way-predicted
+//! organization), the two-level DRAM cache (fixed + dynamic areas),
+//! the pluggable SSD tier, and the pattern-aware preloader that hides
+//! SSD latency behind compute.
 
 pub mod dram;
 pub mod hbm;
 pub mod preloader;
+pub mod setassoc;
 pub mod ssd;
 
 pub use dram::{DramCache, LayerData};
@@ -14,4 +17,5 @@ pub use hbm::{
     SlidingWindowPolicy, UpdateResult,
 };
 pub use preloader::Preloader;
+pub use setassoc::SetAssocPolicy;
 pub use ssd::{FaultyFlash, FileFlash, FlashStore, SimFlash, StorageMix, FRAME_DTYPES};

@@ -58,10 +58,13 @@ impl Preloader {
     }
 
     /// Request layers `current+1 ..= current+depth` (mod ring) that are
-    /// neither DRAM-resident nor already in flight.
+    /// neither DRAM-resident nor already in flight. Effective look-ahead
+    /// is clamped to `n_layers - 1`: a deeper window would wrap onto
+    /// (or past) the currently-computing layer, wasting SSD reads on a
+    /// frame `ensure` already holds.
     pub fn kick(&mut self, current_layer: usize, dram: &DramCache) {
         let n = self.flash.n_layers();
-        for ahead in 1..=self.depth {
+        for ahead in 1..=self.depth.min(n.saturating_sub(1)) {
             let layer = (current_layer + ahead) % n;
             if dram.is_resident(layer) || self.inflight.contains(&layer) {
                 continue;
@@ -200,6 +203,24 @@ mod tests {
         assert_eq!(pre.inflight_count(), 1);
         pre.quiesce(&mut dram);
         assert!(dram.is_resident(2));
+    }
+
+    #[test]
+    fn kick_depth_clamps_to_ring_size() {
+        // Regression: depth >= n_layers used to wrap the look-ahead
+        // window onto the currently-computing layer (and re-request
+        // already-visited layers), wasting an SSD read per kick. On the
+        // 4-layer tiny ring, depth 8 must request exactly the OTHER
+        // three layers — never layer 0 itself, never a duplicate.
+        let (mut pre, mut dram) = sim_preloader(8);
+        pre.kick(0, &dram);
+        assert_eq!(pre.inflight_count(), 3, "n-1 distinct layers ahead");
+        pre.quiesce(&mut dram);
+        assert!(!dram.is_resident(0), "current layer never preloaded");
+        for l in 1..4 {
+            assert!(dram.is_resident(l));
+        }
+        assert_eq!(pre.loads, 3);
     }
 
     #[test]

@@ -6,13 +6,23 @@ use crate::precision::plan::PrecisionRatios;
 /// Which HBM cache policy reconciles cache units with plans.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
-    /// Paper default: Adjacent Token Update.
+    /// Paper baseline: Adjacent Token Update.
     Atu,
     /// Classic LRU with capacity slack (comparator).
     Lru,
     /// LLM-in-a-Flash sliding window (comparator).
     SlidingWindow(usize),
+    /// Set-associative organization with a fully-associative victim
+    /// buffer and MRU way prediction — the policy-sweep winner (see
+    /// `experiments cache_policy` / `BENCH_cache_policy.json`). At a
+    /// unit sized exactly to the plan it degenerates to ATU; any slack
+    /// capacity retains recently displaced entries, so its hit ratio
+    /// is never below ATU's on the same trace.
+    SetAssoc { ways: usize, victim: usize },
 }
+
+/// The sweep-chosen default organization (`experiments cache_policy`).
+pub const DEFAULT_SETASSOC: PolicyKind = PolicyKind::SetAssoc { ways: 8, victim: 32 };
 
 impl PolicyKind {
     pub fn build(self) -> Box<dyn crate::cache::HbmPolicy> {
@@ -22,14 +32,28 @@ impl PolicyKind {
             PolicyKind::SlidingWindow(w) => {
                 Box::new(crate::cache::SlidingWindowPolicy::new(w))
             }
+            PolicyKind::SetAssoc { ways, victim } => {
+                Box::new(crate::cache::SetAssocPolicy::new(ways, victim))
+            }
         }
     }
 
-    /// Capacity multiplier over the per-token plan size: ATU needs
-    /// exactly the plan; LRU/sliding-window hold extras.
+    /// One policy instance per layer. Stateful policies (sliding
+    /// window, set-associative) must NOT share one instance across
+    /// layers: a shared instance interleaves per-layer state (e.g. the
+    /// window's plan history) across every unit it touches, evicting
+    /// layer-local residents against other layers' plans.
+    pub fn build_per_layer(self, n_layers: usize) -> Vec<Box<dyn crate::cache::HbmPolicy>> {
+        (0..n_layers).map(|_| self.build()).collect()
+    }
+
+    /// Capacity multiplier over the per-token plan size: ATU and the
+    /// set-associative organization budget exactly the plan (the victim
+    /// buffer is carved out of the same capacity, not added on top);
+    /// LRU/sliding-window hold extras.
     pub fn capacity_factor(self) -> usize {
         match self {
-            PolicyKind::Atu => 1,
+            PolicyKind::Atu | PolicyKind::SetAssoc { .. } => 1,
             PolicyKind::Lru => 2,
             PolicyKind::SlidingWindow(w) => w.max(1).min(4),
         }
@@ -40,6 +64,7 @@ impl PolicyKind {
             "atu" => Some(PolicyKind::Atu),
             "lru" => Some(PolicyKind::Lru),
             "window" | "sliding" => Some(PolicyKind::SlidingWindow(3)),
+            "setassoc" | "set-assoc" | "victim" => Some(DEFAULT_SETASSOC),
             _ => None,
         }
     }
@@ -145,7 +170,7 @@ impl Default for EngineConfig {
             // Paper Fig 9 mix (25/25/50 of the active set) at 20%
             // Deja-Vu activity: population fractions 0.05/0.05/0.10.
             ratios: PrecisionRatios::new(0.05, 0.05, 0.10),
-            policy: PolicyKind::Atu,
+            policy: DEFAULT_SETASSOC,
             use_mp: true,
             use_hbm_cache: true,
             use_ssd: true,
@@ -252,7 +277,10 @@ mod tests {
     fn plan_and_capacity_sizing() {
         let c = EngineConfig::default();
         assert_eq!(c.plan_size(11008), 2202);
-        assert_eq!(c.unit_capacity(11008), 2202); // ATU factor 1
+        assert_eq!(c.unit_capacity(11008), 2202); // set-assoc factor 1, like ATU
+        let mut atu = EngineConfig::default();
+        atu.policy = PolicyKind::Atu;
+        assert_eq!(atu.unit_capacity(11008), 2202);
         let mut lru = EngineConfig::default();
         lru.policy = PolicyKind::Lru;
         assert_eq!(lru.unit_capacity(11008), 4404);
@@ -299,5 +327,17 @@ mod tests {
             Some(PolicyKind::SlidingWindow(_))
         ));
         assert_eq!(PolicyKind::parse("fifo"), None);
+        assert_eq!(PolicyKind::parse("setassoc"), Some(DEFAULT_SETASSOC));
+        assert_eq!(PolicyKind::parse("set-assoc"), Some(DEFAULT_SETASSOC));
+    }
+
+    #[test]
+    fn per_layer_policies_are_distinct_instances() {
+        let ps = PolicyKind::SlidingWindow(3).build_per_layer(4);
+        assert_eq!(ps.len(), 4);
+        for p in &ps {
+            assert_eq!(p.name(), "sliding_window");
+        }
+        assert_eq!(DEFAULT_SETASSOC.build_per_layer(0).len(), 0);
     }
 }

@@ -46,9 +46,20 @@ pub struct ExecEngine {
     predictors: Vec<PredictorWeights>,
     // The multi-level cache — shared across sessions and kept warm.
     units: Vec<CacheUnit>,
-    policy: Box<dyn HbmPolicy>,
+    // One policy instance PER LAYER: stateful policies (sliding window,
+    // set-associative) keep plan history / recency state that must not
+    // alias across layers — a single shared instance would interleave
+    // every layer's plans and evict layer-local residents against other
+    // layers' access streams (the §5.3 ablation corruption).
+    policies: Vec<Box<dyn HbmPolicy>>,
     dram: DramCache,
     preloader: Preloader,
+    /// When set (`capture_plans`), every cache reconciliation appends
+    /// its `(layer, plan)` to this trace — the input to the offline
+    /// policy-sweep harness (`experiments cache_policy`). Batched turns
+    /// record the per-group *union* plan, i.e. exactly what the unit
+    /// was reconciled against.
+    plan_trace: Option<crate::sparsity::PlanTrace>,
     // Tiered per-session KV store: HBM slots ([S*d] per layer per
     // slot) plus the DRAM/SSD spill tiers preempted sessions park in.
     // Slot `legacy_slot` backs the single-cursor feed()/reset() API;
@@ -167,7 +178,7 @@ impl ExecEngine {
         }
 
         let n_layers = spec.n_layers;
-        let policy = cfg.policy.build();
+        let policies = cfg.policy.build_per_layer(n_layers);
         // One HBM KV slot per *resident* session (physical slots:
         // `kv_slots`, defaulting to `max_sessions`) plus one for the
         // legacy single-cursor feed() path, so serving and direct
@@ -205,9 +216,10 @@ impl ExecEngine {
             attn,
             predictors,
             units,
-            policy,
+            policies,
             dram,
             preloader,
+            plan_trace: None,
             kv,
             legacy_slot,
             prefix,
@@ -250,6 +262,19 @@ impl ExecEngine {
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// Start capturing the `(layer, token, plan)` reconciliation stream
+    /// into a [`crate::sparsity::PlanTrace`] (replaces any capture in
+    /// progress). Capture is observation-only: it changes no plan, no
+    /// residency, and no output byte.
+    pub fn capture_plans(&mut self) {
+        self.plan_trace = Some(crate::sparsity::PlanTrace::new(self.spec().n_layers));
+    }
+
+    /// Stop capturing and take the recorded trace, if any.
+    pub fn take_captured_plans(&mut self) -> Option<crate::sparsity::PlanTrace> {
+        self.plan_trace.take()
     }
 
     /// Reset the legacy single-cursor state (KV slot, position). Cache
@@ -299,8 +324,11 @@ impl ExecEngine {
 
     /// The no-HBM-cache fallback (Fig 13 ablation): drop residency and
     /// reload the entire plan every step. Shared by both forward paths.
+    /// The cleared residents count as evictions — the ablation's
+    /// `evictions` telemetry must reflect the churn it actually causes.
     fn reload_all(unit: &mut CacheUnit, plan: &LayerPlan) -> crate::cache::UpdateResult {
         let mut all = crate::cache::UpdateResult::default();
+        all.evicted = unit.len();
         unit.clear();
         all.load = plan
             .iter()
@@ -344,13 +372,19 @@ impl ExecEngine {
             let _ = self.dram.probe(l);
 
             // 4. HBM cache reconciliation + real record loads.
+            if let Some(trace) = self.plan_trace.as_mut() {
+                trace.record(l, &plan);
+            }
             let upd = if self.cfg.use_hbm_cache {
-                self.policy.update(&mut self.units[l], &plan)
+                self.policies[l].update(&mut self.units[l], &plan)
             } else {
                 Self::reload_all(&mut self.units[l], &plan)
             };
             self.tel.cache_hits += upd.hits as u64;
             self.tel.cache_misses += upd.load.len() as u64;
+            self.tel.victim_hits += upd.victim_hits as u64;
+            self.tel.way_pred_hits += upd.way_hits as u64;
+            self.tel.way_pred_lookups += upd.way_lookups as u64;
             self.tel.bump("evictions", upd.evicted as u64);
             self.tel.phases.cache_mgmt_s += timer.lap_s();
 
@@ -488,14 +522,20 @@ impl ExecEngine {
             let groups = partition_by_union(&plans, self.units[l].capacity);
             for group in &groups {
                 let union = union_plans(group.iter().map(|&i| &plans[i]));
+                if let Some(trace) = self.plan_trace.as_mut() {
+                    trace.record(l, &union);
+                }
                 let upd = if self.cfg.use_hbm_cache {
-                    self.policy.update(&mut self.units[l], &union)
+                    self.policies[l].update(&mut self.units[l], &union)
                 } else {
                     Self::reload_all(&mut self.units[l], &union)
                 };
                 self.tel.cache_hits += upd.hits as u64;
                 self.tel.union_plan_hits += upd.hits as u64;
                 self.tel.cache_misses += upd.load.len() as u64;
+                self.tel.victim_hits += upd.victim_hits as u64;
+                self.tel.way_pred_hits += upd.way_hits as u64;
+                self.tel.way_pred_lookups += upd.way_lookups as u64;
                 self.tel.bump("evictions", upd.evicted as u64);
                 self.tel.phases.cache_mgmt_s += timer.lap_s();
 
@@ -1115,5 +1155,30 @@ mod tests {
     fn log_sum_exp_stable() {
         let v = log_sum_exp(&[1000.0, 1000.0]);
         assert!((v - (1000.0 + (2f32).ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reload_all_reports_cleared_residents_as_evictions() {
+        // Regression: the no-HBM-cache ablation cleared the unit but
+        // reported `evicted: 0`, undercounting the `evictions`
+        // telemetry by exactly the churn the ablation exists to show.
+        use crate::precision::Dtype;
+        let mut unit = CacheUnit::meta_only(8);
+        unit.insert(1, Dtype::F16, &[]);
+        unit.insert(2, Dtype::Int8, &[]);
+        unit.insert(3, Dtype::Int4, &[]);
+        let plan = LayerPlan {
+            fp16: vec![1, 5],
+            int8: vec![],
+            int4: vec![],
+        };
+        let r = ExecEngine::reload_all(&mut unit, &plan);
+        assert_eq!(r.evicted, 3, "all pre-clear residents count as evicted");
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.load.len(), 2, "the whole plan reloads");
+        assert!(unit.is_empty(), "unit left cleared for the reloads");
+        // Empty unit: nothing to evict, nothing hidden.
+        let r2 = ExecEngine::reload_all(&mut unit, &plan);
+        assert_eq!(r2.evicted, 0);
     }
 }

@@ -189,7 +189,13 @@ pub struct SimEngine {
     pub cfg: EngineConfig,
     clock: SimClock,
     layers: Vec<LayerState>,
-    policy: Box<dyn HbmPolicy>,
+    // One policy instance per layer (`PolicyKind::build_per_layer`):
+    // stateful policies keep layer-local history that must not alias
+    // across layers (see `cache::hbm` regression tests).
+    policies: Vec<Box<dyn HbmPolicy>>,
+    /// When set (`capture_plans`), every cache reconciliation appends
+    /// its `(layer, plan)` for the offline policy-sweep harness.
+    plan_trace: Option<crate::sparsity::PlanTrace>,
     dram: DramCache,
     flash: SimFlash,
     /// In-flight simulated SSD→DRAM preloads.
@@ -281,14 +287,15 @@ impl SimEngine {
             }
         }
         let rank = (spec.d_model / 8).max(8);
-        let policy = cfg.policy.build();
+        let policies = cfg.policy.build_per_layer(spec.n_layers);
         SimEngine {
             spec,
             hw,
             cfg,
             clock: SimClock::new(),
             layers,
-            policy,
+            policies,
+            plan_trace: None,
             dram,
             flash,
             pending: HashMap::new(),
@@ -298,6 +305,18 @@ impl SimEngine {
             kv_len: 0,
             rank,
         }
+    }
+
+    /// Start capturing the `(layer, token, plan)` reconciliation stream
+    /// (replaces any capture in progress). Observation-only: no plan,
+    /// residency, or cost changes.
+    pub fn capture_plans(&mut self) {
+        self.plan_trace = Some(crate::sparsity::PlanTrace::new(self.spec.n_layers));
+    }
+
+    /// Stop capturing and take the recorded trace, if any.
+    pub fn take_captured_plans(&mut self) -> Option<crate::sparsity::PlanTrace> {
+        self.plan_trace.take()
     }
 
     // ---------------- cost helpers ----------------
@@ -350,7 +369,10 @@ impl SimEngine {
             return;
         }
         let n = self.spec.n_layers;
-        for ahead in 1..=self.cfg.preload_depth {
+        // A depth >= n_layers would wrap onto (or past) the currently
+        // computing layer and waste SSD reads; `n - 1` distinct other
+        // layers is the most look-ahead a ring of n can use.
+        for ahead in 1..=self.cfg.preload_depth.min(n.saturating_sub(1)) {
             let layer = (current + ahead) % n;
             if self.dram.is_resident(layer) || self.pending.contains_key(&layer) {
                 continue;
@@ -528,13 +550,19 @@ impl SimEngine {
             self.dram_ensure(layer);
 
             // 3. HBM cache reconciliation.
+            if let Some(trace) = self.plan_trace.as_mut() {
+                trace.record(layer, &plan);
+            }
             let (loads, hits) = if self.cfg.use_hbm_cache {
+                let upd = self.policies[layer].update(&mut self.layers[layer].unit, &plan);
                 let st = &mut self.layers[layer];
-                let upd = self.policy.update(&mut st.unit, &plan);
                 for na in &upd.load {
                     st.unit.insert(na.neuron, na.dtype, &[]);
                 }
                 self.tel.bump("evictions", upd.evicted as u64);
+                self.tel.victim_hits += upd.victim_hits as u64;
+                self.tel.way_pred_hits += upd.way_hits as u64;
+                self.tel.way_pred_lookups += upd.way_lookups as u64;
                 (upd.load, upd.hits)
             } else {
                 // No cache: everything in the plan reloads every token.
@@ -648,13 +676,20 @@ impl SimEngine {
             let mut copies: Vec<(Completion, f64)> = Vec::with_capacity(groups.len());
             for (gi, group) in groups.iter().enumerate() {
                 let union = union_plans(group.iter().map(|&i| &plans[i]));
+                if let Some(trace) = self.plan_trace.as_mut() {
+                    trace.record(layer, &union);
+                }
                 let (loads, hits) = if self.cfg.use_hbm_cache {
+                    let upd =
+                        self.policies[layer].update(&mut self.layers[layer].unit, &union);
                     let st = &mut self.layers[layer];
-                    let upd = self.policy.update(&mut st.unit, &union);
                     for na in &upd.load {
                         st.unit.insert(na.neuron, na.dtype, &[]);
                     }
                     self.tel.bump("evictions", upd.evicted as u64);
+                    self.tel.victim_hits += upd.victim_hits as u64;
+                    self.tel.way_pred_hits += upd.way_hits as u64;
+                    self.tel.way_pred_lookups += upd.way_lookups as u64;
                     (upd.load, upd.hits)
                 } else {
                     let loads: Vec<crate::cache::NeuronAt> = union

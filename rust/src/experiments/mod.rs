@@ -15,8 +15,10 @@
 //! | fig13   | ablation: +MP / +Cache / +SSD                    |
 //! | table14 | task accuracy, dense vs M2Cache (executed)       |
 //! | alg1    | uncertainty-guided ratio search                  |
+//! | cache_policy | HBM cache-organization sweep over a plan trace |
 
 pub mod accuracy;
+pub mod cache_policy;
 pub mod fig1;
 pub mod fig11;
 pub mod fig12;
@@ -61,16 +63,17 @@ pub fn run(id: &str, opts: ExpOpts) -> Result<String> {
         "fig13" => fig13::run(opts),
         "table14" => accuracy::run_table14(opts)?,
         "alg1" => ratio::run(opts)?,
+        "cache_policy" => cache_policy::run(opts),
         other => bail!(
             "unknown experiment {other:?}; available: fig1 fig4 fig5 fig6 \
-             fig9 fig10 fig11 fig12 fig13 table14 alg1"
+             fig9 fig10 fig11 fig12 fig13 table14 alg1 cache_policy"
         ),
     })
 }
 
-pub const ALL: [&str; 11] = [
+pub const ALL: [&str; 12] = [
     "fig1", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table14", "alg1",
+    "fig13", "table14", "alg1", "cache_policy",
 ];
 
 #[cfg(test)]

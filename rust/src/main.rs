@@ -124,6 +124,9 @@ COMMANDS:
   generate        run the executed tiny model: --prompt TEXT --tokens N
                   [--stream]           print tokens as they decode (the
                                        event-driven serving core)
+                  [--capture-trace F]  record the (layer, token, plan)
+                                       stream to F for the offline
+                                       cache-policy sweep
   serve           TCP server: --addr HOST:PORT [--max-requests N]
                   [--sessions N]       interleave up to N decode sessions
                   [--kv-slots K]       physical HBM KV slots (default N;
@@ -148,10 +151,13 @@ COMMANDS:
                   `ACK/TOK/END` frames, `CANCEL <id>` mid-decode,
                   typed `ERR <code> <id> <msg>`
   simulate        simulated large-model run: --model {7B,13B,40B,70B}
-                  --in N --out N [--policy atu|lru|window] [--dram-gib G]
-                  [--no-ssd] [--no-cache] [--no-mp]
+                  --in N --out N [--dram-gib G]
+                  [--policy atu|lru|window|setassoc] (default: setassoc,
+                  the cache_policy sweep winner)
+                  [--capture-trace F] [--no-ssd] [--no-cache] [--no-mp]
   experiment ID   regenerate a paper artifact: fig1 fig4 fig5 fig6 fig9
-                  fig10 fig11 fig12 fig13 table14 alg1, or `all`
+                  fig10 fig11 fig12 fig13 table14 alg1 cache_policy,
+                  or `all`
   ratio-search    Algorithm 1 (uncertainty-guided mix search)
   carbon-report   Fig 1 + Fig 12 summary
 
@@ -245,6 +251,9 @@ fn generate(args: &Args) -> anyhow::Result<()> {
     let prompt_text = args.get_or("prompt", "the quick brown fox ");
     let n = args.get_usize("tokens", 48);
     let mut eng = ExecEngine::new(Path::new(opts.artifacts), engine_config(args))?;
+    if args.get("capture-trace").is_some() {
+        eng.capture_plans();
+    }
     let start = std::time::Instant::now();
     let out = eng.generate(&tokenize(prompt_text), n)?;
     let dt = start.elapsed().as_secs_f64();
@@ -260,6 +269,11 @@ fn generate(args: &Args) -> anyhow::Result<()> {
         m2cache::util::text::fmt_bytes(eng.tel.traffic.dram_to_hbm)
     );
     println!("telemetry: {}", eng.tel.to_json());
+    if let Some(path) = args.get("capture-trace") {
+        let trace = eng.take_captured_plans().expect("capture was enabled");
+        trace.save(path)?;
+        println!("captured {} plan records to {path}", trace.len());
+    }
     Ok(())
 }
 
@@ -291,6 +305,9 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let gpu = m2cache::carbon::find_gpu(args.get_or("gpu", "RTX3090"))
         .ok_or_else(|| anyhow::anyhow!("unknown gpu"))?;
     let mut e = SimEngine::new(spec, HardwareSpec::rtx3090_testbed(), engine_config(args));
+    if args.get("capture-trace").is_some() {
+        e.capture_plans();
+    }
     let r = e.run(inp, outp, gpu);
     println!(
         "{}: {:.3} tok/s | ttft {:.2}s | total {:.2}s (simulated)",
@@ -308,6 +325,11 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         r.carbon.total_g(),
         m2cache::carbon::g_per_token(&r.carbon, r.telemetry.tokens_generated)
     );
+    if let Some(path) = args.get("capture-trace") {
+        let trace = e.take_captured_plans().expect("capture was enabled");
+        trace.save(path)?;
+        println!("captured {} plan records to {path}", trace.len());
+    }
     Ok(())
 }
 

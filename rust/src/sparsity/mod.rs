@@ -1,11 +1,14 @@
 //! Dynamic contextual sparsity (Deja Vu-style): predictor scoring +
 //! top-k on the host, synthetic activation traces for simulated
-//! geometries, and the Fig 6 overlap analytics.
+//! geometries, the Fig 6 overlap analytics, and replayable
+//! `(layer, token, plan)` traces feeding the cache-policy sweep.
 
 pub mod overlap;
+pub mod plan_trace;
 pub mod predictor;
 pub mod trace;
 
 pub use overlap::OverlapTracker;
+pub use plan_trace::{PlanRecord, PlanTrace};
 pub use predictor::{recall, score, top_k};
 pub use trace::{ActivationTrace, TraceConfig};

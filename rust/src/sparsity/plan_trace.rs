@@ -1,0 +1,239 @@
+//! Replayable `(layer, token, plan)` traces of the sparsity predictor's
+//! access stream — the input to the offline cache-policy sweep
+//! (`experiments cache_policy`, `examples/bench_cache_policy.rs`).
+//!
+//! Engines record the exact per-layer [`LayerPlan`] sequence they
+//! reconciled their cache units against (`--capture-trace FILE` on
+//! `simulate`/`generate`, or `capture_plans()` in code). The file is a
+//! plain line-oriented text format so traces diff cleanly and survive
+//! hand-editing in tests:
+//!
+//! ```text
+//! m2cache-plantrace v1
+//! layers 4
+//! 0 0 fp16=1,2 int8=3 int4=
+//! 1 0 fp16= int8=7,9 int4=4
+//! ...
+//! ```
+//!
+//! Records keep *capture order*, which is the engine's actual update
+//! order (layer-major within a token) — replaying them against
+//! per-layer units reproduces the residency evolution of the live run.
+
+use crate::precision::plan::LayerPlan;
+use anyhow::{Context, Result};
+
+/// One recorded cache reconciliation: layer `layer` updated against
+/// `plan` while decoding its `token`-th token since capture started.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRecord {
+    pub layer: u32,
+    pub token: u32,
+    pub plan: LayerPlan,
+}
+
+/// An append-only recording of per-layer plan streams.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanTrace {
+    pub n_layers: usize,
+    pub records: Vec<PlanRecord>,
+    /// Per-layer token counter: `record` stamps each layer's records
+    /// 0, 1, 2, … independently, so interleavings (batched turns,
+    /// preemption) don't skew token indices.
+    next_token: Vec<u32>,
+}
+
+impl PlanTrace {
+    pub fn new(n_layers: usize) -> PlanTrace {
+        PlanTrace {
+            n_layers,
+            records: Vec::new(),
+            next_token: vec![0; n_layers],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Append one reconciliation for `layer` (token index auto-assigned
+    /// per layer, in capture order).
+    pub fn record(&mut self, layer: usize, plan: &LayerPlan) {
+        assert!(layer < self.n_layers, "layer {layer} out of range");
+        let token = self.next_token[layer];
+        self.next_token[layer] += 1;
+        self.records.push(PlanRecord {
+            layer: layer as u32,
+            token,
+            plan: plan.clone(),
+        });
+    }
+
+    /// Largest plan in the trace, in `(neuron, dtype)` entries — the
+    /// minimum unit capacity that can replay it.
+    pub fn max_plan_entries(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.plan.total_active())
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn to_text(&self) -> String {
+        let csv = |ids: &[u32]| {
+            ids.iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<String>>()
+                .join(",")
+        };
+        let mut out = String::new();
+        out.push_str("m2cache-plantrace v1\n");
+        out.push_str(&format!("layers {}\n", self.n_layers));
+        for r in &self.records {
+            out.push_str(&format!(
+                "{} {} fp16={} int8={} int4={}\n",
+                r.layer,
+                r.token,
+                csv(&r.plan.fp16),
+                csv(&r.plan.int8),
+                csv(&r.plan.int4)
+            ));
+        }
+        out
+    }
+
+    pub fn from_text(text: &str) -> Result<PlanTrace> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty trace file")?;
+        anyhow::ensure!(
+            header == "m2cache-plantrace v1",
+            "bad trace header {header:?}"
+        );
+        let layers_line = lines.next().context("missing layers line")?;
+        let n_layers: usize = layers_line
+            .strip_prefix("layers ")
+            .context("missing layers line")?
+            .trim()
+            .parse()
+            .context("bad layer count")?;
+        let parse_ids = |field: &str, tag: &str| -> Result<Vec<u32>> {
+            let body = field
+                .strip_prefix(tag)
+                .with_context(|| format!("expected {tag}<ids>, got {field:?}"))?;
+            if body.is_empty() {
+                return Ok(Vec::new());
+            }
+            body.split(',')
+                .map(|s| s.parse::<u32>().with_context(|| format!("bad id {s:?}")))
+                .collect()
+        };
+        let mut trace = PlanTrace::new(n_layers);
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut f = line.split_whitespace();
+            let err = || format!("trace record {i} malformed: {line:?}");
+            let layer: u32 = f.next().with_context(err)?.parse().with_context(err)?;
+            let token: u32 = f.next().with_context(err)?.parse().with_context(err)?;
+            let plan = LayerPlan {
+                fp16: parse_ids(f.next().with_context(err)?, "fp16=")?,
+                int8: parse_ids(f.next().with_context(err)?, "int8=")?,
+                int4: parse_ids(f.next().with_context(err)?, "int4=")?,
+            };
+            anyhow::ensure!((layer as usize) < n_layers, "record {i}: layer oob");
+            // Re-record through the counter so round-tripped traces keep
+            // consistent per-layer token numbering; verify it agrees.
+            let before = trace.next_token[layer as usize];
+            anyhow::ensure!(
+                token == before,
+                "record {i}: token {token} != expected {before} for layer {layer}"
+            );
+            trace.record(layer as usize, &plan);
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing plan trace {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<PlanTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan trace {path}"))?;
+        PlanTrace::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_of(fp16: &[u32], int8: &[u32], int4: &[u32]) -> LayerPlan {
+        LayerPlan {
+            fp16: fp16.to_vec(),
+            int8: int8.to_vec(),
+            int4: int4.to_vec(),
+        }
+    }
+
+    #[test]
+    fn records_keep_capture_order_and_per_layer_tokens() {
+        let mut t = PlanTrace::new(2);
+        t.record(0, &plan_of(&[1], &[], &[]));
+        t.record(1, &plan_of(&[9], &[], &[]));
+        t.record(0, &plan_of(&[2], &[], &[]));
+        assert_eq!(t.len(), 3);
+        assert_eq!((t.records[0].layer, t.records[0].token), (0, 0));
+        assert_eq!((t.records[1].layer, t.records[1].token), (1, 0));
+        assert_eq!((t.records[2].layer, t.records[2].token), (0, 1));
+        assert_eq!(t.max_plan_entries(), 1);
+    }
+
+    #[test]
+    fn text_roundtrip_is_identity() {
+        let mut t = PlanTrace::new(3);
+        t.record(0, &plan_of(&[1, 2], &[3], &[]));
+        t.record(1, &plan_of(&[], &[], &[7, 8, 9]));
+        t.record(2, &plan_of(&[], &[], &[]));
+        t.record(0, &plan_of(&[2], &[1], &[5]));
+        let text = t.to_text();
+        let back = PlanTrace::from_text(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn empty_plans_and_empty_traces_roundtrip() {
+        let t = PlanTrace::new(1);
+        let back = PlanTrace::from_text(&t.to_text()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.max_plan_entries(), 0);
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        assert!(PlanTrace::from_text("").is_err());
+        assert!(PlanTrace::from_text("wrong header\nlayers 1\n").is_err());
+        assert!(
+            PlanTrace::from_text("m2cache-plantrace v1\nlayers 1\n5 0 fp16= int8= int4=\n")
+                .is_err(),
+            "layer out of range"
+        );
+        assert!(
+            PlanTrace::from_text("m2cache-plantrace v1\nlayers 1\n0 3 fp16= int8= int4=\n")
+                .is_err(),
+            "token numbering gap"
+        );
+        assert!(
+            PlanTrace::from_text("m2cache-plantrace v1\nlayers 1\n0 0 fp16=x int8= int4=\n")
+                .is_err(),
+            "non-numeric id"
+        );
+    }
+}

@@ -159,6 +159,13 @@ pub struct Telemetry {
     /// wanted it — the reuse that makes batched serving sublinear in
     /// DRAM→HBM traffic (subset of `cache_hits`).
     pub union_plan_hits: u64,
+    /// Set-associative HBM cache organization counters: hits served from
+    /// the fully-associative victim buffer (conflict misses the sets
+    /// alone would have paid), and MRU way-prediction hits vs lookups
+    /// (first-probe accuracy). All zero under the flat policies.
+    pub victim_hits: u64,
+    pub way_pred_hits: u64,
+    pub way_pred_lookups: u64,
     /// Per-priority-class serving counters (see [`ClassCounters`]).
     pub classes: [ClassCounters; N_CLASSES],
     /// KV spill/restore counts and bytes per tier (preemption traffic
@@ -229,6 +236,9 @@ impl Telemetry {
             .field_int("peak_sessions", self.peak_active_sessions as i64)
             .field_num("batch_occupancy", self.batch_occupancy())
             .field_int("union_plan_hits", self.union_plan_hits as i64)
+            .field_int("victim_hits", self.victim_hits as i64)
+            .field_int("way_pred_hits", self.way_pred_hits as i64)
+            .field_int("way_pred_lookups", self.way_pred_lookups as i64)
             .field_int("kv_spills_dram", self.kv_spill.spills_dram as i64)
             .field_int("kv_spills_ssd", self.kv_spill.spills_ssd as i64)
             .field_int("kv_restores", self.kv_spill.restores() as i64)
@@ -341,6 +351,20 @@ mod tests {
         let j = t.to_json();
         assert!(j.contains("\"batch_occupancy\":3.5"), "{j}");
         assert!(j.contains("\"union_plan_hits\":9"), "{j}");
+    }
+
+    #[test]
+    fn cache_org_counters_in_json() {
+        let t = Telemetry {
+            victim_hits: 5,
+            way_pred_hits: 7,
+            way_pred_lookups: 11,
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert!(j.contains("\"victim_hits\":5"), "{j}");
+        assert!(j.contains("\"way_pred_hits\":7"), "{j}");
+        assert!(j.contains("\"way_pred_lookups\":11"), "{j}");
     }
 
     #[test]

@@ -137,7 +137,12 @@ mod tests {
     }
 
     #[test]
-    fn drop_joins_workers() {
+    fn drop_joins_workers_and_drains_queue() {
+        // `worker_loop` only honors shutdown once the queue is EMPTY
+        // (the pop-before-shutdown-check order), so dropping the pool
+        // runs every queued job before the workers exit — a guarantee
+        // the preloader leans on: an SSD read submitted before engine
+        // teardown still lands in its completion channel. Pin it.
         let pool = ThreadPool::new(2);
         let counter = Arc::new(AtomicUsize::new(0));
         for _ in 0..10 {
@@ -147,9 +152,8 @@ mod tests {
                 c.fetch_add(1, Ordering::SeqCst);
             });
         }
-        drop(pool); // shutdown drains queue? No: shutdown stops at queue-empty.
-        // Jobs already dequeued finish; remaining may be dropped. We only
-        // assert no deadlock/panic here.
+        drop(pool); // joins workers; queued jobs all run first
+        assert_eq!(counter.load(Ordering::SeqCst), 10, "drop dropped queued jobs");
     }
 
     #[test]
