@@ -1,0 +1,338 @@
+//! Fault-injection bench: quantifies the self-healing storage
+//! hierarchy — the scheduler serving 2x oversubscription over the real
+//! tiered [`KvStore`] behind a seeded [`FaultyBackend`] — under
+//! escalating fault rates, on the virtual clock (1 ms per engine
+//! forward). Writes `BENCH_fault.json` so CI can archive the
+//! throughput/tail-latency cost of chaos per PR.
+//!
+//!   cargo run --release --example bench_fault            # full run
+//!   cargo run --release --example bench_fault -- --quick # CI smoke
+//!                                        [--out PATH]    # json path
+//!
+//! Acceptance bars (asserted in the full run, reported in both):
+//!   - EVERY rate completes EVERY request with zero rejections and
+//!     zero `Failed` outcomes — faults degrade latency, never
+//!     correctness;
+//!   - every rate's per-request bytes equal the fault-free run's
+//!     (recompute-from-prompt recovery is invisible in the output);
+//!   - the fault-free rate injects nothing (the decorator is inert at
+//!     rate 0), and the top rate actually injects faults;
+//!   - p99 TTFT inflation at the top rate stays structurally bounded.
+
+use m2cache::coordinator::workload::{generate, Mix, TraceSpec};
+use m2cache::coordinator::{
+    DecodeSession, FaultConfig, KvStore, KvTicket, Outcome, Request, Scheduler, SessionEngine,
+    SessionEvent,
+};
+use m2cache::telemetry::FaultCounters;
+use m2cache::util::bench::fmt_dur;
+use m2cache::util::text::JsonWriter;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+const VOCAB: usize = 97;
+const MAX_POS: usize = 64;
+const D: usize = 2;
+/// Structural bound for the full-run assertion: the top fault rate
+/// must cost retries and recomputes, not collapse the tail.
+const MAX_P99_INFLATION: f64 = 25.0;
+
+/// Deterministic engine over the real tiered store (same shape as the
+/// chaos test tier): next token is a pure function of the fed token
+/// and position, while spill/restore move real bytes through the
+/// fault-injected backend.
+struct ChaosEngine {
+    kv: KvStore,
+}
+
+impl ChaosEngine {
+    fn new(slots: usize, faults: FaultConfig) -> ChaosEngine {
+        ChaosEngine {
+            kv: KvStore::new(slots, 2, MAX_POS * D, 0)
+                .with_faults(faults)
+                .with_retry(3, 0),
+        }
+    }
+}
+
+impl SessionEngine for ChaosEngine {
+    fn capacity(&self) -> usize {
+        self.kv.capacity()
+    }
+
+    fn open(&mut self, req: Request) -> anyhow::Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .kv
+            .acquire()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> anyhow::Result<Vec<f32>> {
+        let pos = s.pos() % MAX_POS;
+        let val = token as f32 + s.pos() as f32 * 0.5;
+        self.kv
+            .write_token(s.slot(), s.pos() % 2, pos, D, &[val; D], &[-val; D]);
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[((token as usize).wrapping_mul(31) + s.pos() * 7 + 1) % VOCAB] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        self.kv.release(s.slot());
+    }
+
+    fn supports_spill(&self) -> bool {
+        true
+    }
+
+    fn spill(&mut self, s: &DecodeSession) -> anyhow::Result<KvTicket> {
+        self.kv.spill(s.slot())
+    }
+
+    fn restore(&mut self, s: &mut DecodeSession, ticket: KvTicket) -> anyhow::Result<()> {
+        let slot = self.kv.restore(ticket)?;
+        s.rebind_slot(slot);
+        Ok(())
+    }
+
+    fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
+        self.kv.discard(ticket);
+    }
+}
+
+/// Scale the chaos fault mix by `rate` (rate 0 keeps the real backend).
+fn faults_at(rate: f64) -> FaultConfig {
+    FaultConfig {
+        seed: 0xFA017,
+        read_error: rate,
+        write_error: rate,
+        torn_write: rate * 0.5,
+        bit_flip: rate * 0.25,
+        latency_spike: rate * 2.0,
+        spike_ms: 0, // count spikes; the clock stays virtual
+    }
+}
+
+struct Case {
+    rate: f64,
+    completed: usize,
+    rejected: u64,
+    preemptions: u64,
+    resumes: u64,
+    recoveries: u64,
+    faults: FaultCounters,
+    tokens: HashMap<u64, Vec<u32>>,
+    tok_s_virtual: f64,
+    p99_ttft_ms: u64,
+    mean_ttft_ms: f64,
+    wall_virtual_ms: u64,
+    host: Duration,
+}
+
+fn p99(mut xs: Vec<u64>) -> u64 {
+    assert!(!xs.is_empty());
+    xs.sort_unstable();
+    let idx = ((xs.len() as f64) * 0.99).ceil() as usize - 1;
+    xs[idx.min(xs.len() - 1)]
+}
+
+fn run_case(rate: f64, slots: usize, n: usize) -> Case {
+    let events = generate(&TraceSpec {
+        mix: Mix::AdversarialLongPrompt,
+        n,
+        seed: 0x7ACE,
+        vocab: VOCAB as u32,
+    });
+    let host = Instant::now();
+    let sessions = 2 * slots;
+    let mut sched = Scheduler::new(ChaosEngine::new(slots, faults_at(rate)), sessions);
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut submit_ms: HashMap<u64, u64> = HashMap::new();
+    let mut ttft_ms: HashMap<u64, u64> = HashMap::new();
+    let mut tokens: HashMap<u64, Vec<u32>> = HashMap::new();
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            submit_ms.insert(events[next_ev].id, now);
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        for ev in &r.events {
+            if let SessionEvent::Token { id, index: 0, .. } = ev {
+                ttft_ms.entry(*id).or_insert(now);
+            }
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => {
+                    panic!("rate {rate}: request {id} failed: {error}")
+                }
+            }
+        }
+    }
+    assert_eq!(sched.engine().kv.in_use(), 0, "rate {rate}: leaked KV slots");
+    assert_eq!(sched.engine().kv.spilled(), 0, "rate {rate}: leaked tickets");
+    let ttfts: Vec<u64> = events
+        .iter()
+        .map(|e| ttft_ms[&e.id].saturating_sub(submit_ms[&e.id]))
+        .collect();
+    let mean = ttfts.iter().sum::<u64>() as f64 / ttfts.len() as f64;
+    let generated: usize = tokens.values().map(|t| t.len()).sum();
+    Case {
+        rate,
+        completed: tokens.len(),
+        rejected: sched.rejected,
+        preemptions: sched.preemptions,
+        resumes: sched.resumes,
+        recoveries: sched.recoveries,
+        faults: sched.engine().kv.fault_counters(),
+        tok_s_virtual: generated as f64 * 1e3 / now.max(1) as f64,
+        p99_ttft_ms: p99(ttfts),
+        mean_ttft_ms: mean,
+        wall_virtual_ms: now,
+        host: host.elapsed(),
+        tokens,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_fault.json".to_string());
+    let (slots, n): (usize, usize) = if quick { (2, 24) } else { (2, 60) };
+    let rates = [0.0, 0.05, 0.20];
+
+    let cases: Vec<Case> = rates.iter().map(|&r| run_case(r, slots, n)).collect();
+
+    println!(
+        "Self-healing storage under escalating fault rates, real tiered \
+         KvStore + FaultyBackend, virtual clock, adversarial trace (n={n}):\n"
+    );
+    println!(
+        "{:<7} {:>9} {:>8} {:>7} {:>7} {:>9} {:>8} {:>8} {:>7} {:>10} {:>11} {:>9}",
+        "rate", "completed", "rejected", "preempt", "resume", "recovered", "injected",
+        "retries", "crc", "tok/s(v)", "p99 TTFT ms", "host"
+    );
+    for c in &cases {
+        println!(
+            "{:<7} {:>9} {:>8} {:>7} {:>7} {:>9} {:>8} {:>8} {:>7} {:>10.1} {:>11} {:>9}",
+            c.rate,
+            c.completed,
+            c.rejected,
+            c.preemptions,
+            c.resumes,
+            c.recoveries,
+            c.faults.injected(),
+            c.faults.io_retries,
+            c.faults.crc_failures,
+            c.tok_s_virtual,
+            c.p99_ttft_ms,
+            fmt_dur(c.host),
+        );
+    }
+    let top = cases.last().expect("at least one rate");
+    let inflation = top.p99_ttft_ms as f64 / (cases[0].p99_ttft_ms.max(1)) as f64;
+    println!(
+        "\ntop rate {}: p99 TTFT {inflation:.2}x the fault-free run, \
+         {} recoveries, degraded mode: {}",
+        top.rate, top.recoveries, top.faults.ssd_degraded,
+    );
+
+    let mut w = JsonWriter::new();
+    w.begin_obj()
+        .field_str("engine", "kvstore-faulty-backend-virtual-clock")
+        .field_str("trace", "adversarial-long-prompt")
+        .field_int("n", n as i64)
+        .field_int("slots", slots as i64)
+        .field_num("p99_ttft_inflation_top_rate", inflation);
+    w.key("cases").begin_arr();
+    for c in &cases {
+        w.begin_obj()
+            .field_num("rate", c.rate)
+            .field_int("completed", c.completed as i64)
+            .field_int("rejected", c.rejected as i64)
+            .field_int("preemptions", c.preemptions as i64)
+            .field_int("resumes", c.resumes as i64)
+            .field_int("recoveries", c.recoveries as i64)
+            .field_int("injected_faults", c.faults.injected() as i64)
+            .field_int("io_retries", c.faults.io_retries as i64)
+            .field_int("crc_failures", c.faults.crc_failures as i64)
+            .field_int("degraded_spills", c.faults.degraded_spills as i64)
+            .field_bool("ssd_degraded", c.faults.ssd_degraded)
+            .field_num("tok_s_virtual", c.tok_s_virtual)
+            .field_int("p99_ttft_ms", c.p99_ttft_ms as i64)
+            .field_num("mean_ttft_ms", c.mean_ttft_ms)
+            .field_int("wall_virtual_ms", c.wall_virtual_ms as i64)
+            .field_num("host_ms", c.host.as_secs_f64() * 1e3)
+            .end_obj();
+    }
+    w.end_arr().end_obj();
+    std::fs::write(&out_path, w.finish()).expect("write BENCH_fault.json");
+    println!("wrote {out_path}");
+
+    // Correctness bars hold at every rate, quick run included: faults
+    // may cost latency, never completeness or bytes.
+    for c in &cases {
+        assert_eq!(
+            (c.completed, c.rejected),
+            (n, 0),
+            "rate {}: dropped or rejected requests",
+            c.rate
+        );
+        assert_eq!(
+            c.tokens, cases[0].tokens,
+            "rate {}: generated bytes diverged from the fault-free run",
+            c.rate
+        );
+        assert_eq!(
+            c.preemptions,
+            c.resumes + c.recoveries,
+            "rate {}: preemptions must pair with resumes + recoveries",
+            c.rate
+        );
+    }
+    assert_eq!(
+        cases[0].faults.injected(),
+        0,
+        "rate 0 must keep the real backend inert"
+    );
+
+    if !quick {
+        // The PR acceptance bars — fail loudly on regression.
+        assert!(
+            top.faults.injected() > 0,
+            "REGRESSION: top fault rate injected nothing"
+        );
+        assert!(
+            inflation <= MAX_P99_INFLATION,
+            "REGRESSION: p99 TTFT inflated {inflation:.2}x (> {MAX_P99_INFLATION}x)"
+        );
+        println!(
+            "acceptance: zero failures at every rate, byte parity with \
+             the fault-free run, p99 inflation {inflation:.2}x <= \
+             {MAX_P99_INFLATION}x — PASS"
+        );
+    }
+}

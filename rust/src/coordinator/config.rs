@@ -1,6 +1,7 @@
 //! Engine configuration: precision ratios, cache policy selection, and
 //! the ablation feature flags of Fig 13.
 
+use crate::coordinator::kv_store::FaultConfig;
 use crate::precision::plan::PrecisionRatios;
 
 /// Which HBM cache policy reconciles cache units with plans.
@@ -162,6 +163,16 @@ pub struct EngineConfig {
     /// Max cached prefix entries across all tiers
     /// (`--prefix-entries N`); LRU past it.
     pub prefix_max_entries: usize,
+    /// Chaos engineering: per-op fault probabilities injected into the
+    /// KV spill path (`--fault-read P`, `--fault-write P`,
+    /// `--fault-torn P`, `--fault-flip P`, `--fault-spike P`,
+    /// `--fault-seed S`). All-zero (the default) routes spill I/O
+    /// through the real backend untouched, so production behavior is
+    /// bit-identical to the pre-fault-injection engine.
+    pub faults: FaultConfig,
+    /// Attempts per spill-file I/O op before the failure climbs the
+    /// degradation ladder (`--spill-retries N`; min 1).
+    pub spill_retries: u32,
 }
 
 impl Default for EngineConfig {
@@ -192,6 +203,8 @@ impl Default for EngineConfig {
             prefix_cache: false,
             prefix_hot_slots: 1,
             prefix_max_entries: 64,
+            faults: FaultConfig::default(),
+            spill_retries: crate::coordinator::kv_store::DEFAULT_RETRY_ATTEMPTS,
         }
     }
 }
@@ -316,6 +329,14 @@ mod tests {
         // exists (and stays off) on every stage.
         assert!(!EngineConfig::ablation_mp_only().prefix_cache);
         assert!(!EngineConfig::full().prefix_cache);
+    }
+
+    #[test]
+    fn fault_injection_defaults_off() {
+        let c = EngineConfig::default();
+        assert!(!c.faults.is_active(), "fault injection is opt-in");
+        assert_eq!(c.spill_retries, 3);
+        assert!(!EngineConfig::ablation_mp_only().faults.is_active());
     }
 
     #[test]

@@ -191,7 +191,9 @@ impl ExecEngine {
             n_layers,
             max_seq * d,
             cfg.kv_spill_dram,
-        );
+        )
+        .with_faults(cfg.faults)
+        .with_retry(cfg.spill_retries, 1);
         let legacy_slot = kv.acquire().expect("fresh pool has a slot");
         let prefix = cfg.prefix_cache.then(|| {
             TieredPrefixCache::new(PrefixConfig {
@@ -844,6 +846,20 @@ impl ExecEngine {
         self.kv.counters()
     }
 
+    /// Injected-fault and self-healing counters of the tiered store.
+    pub fn kv_fault_counters(&self) -> crate::telemetry::FaultCounters {
+        self.kv.fault_counters()
+    }
+
+    /// Re-snapshot the KV store's spill and fault meters into
+    /// telemetry — called after every operation that touches the spill
+    /// path, including ones that fail (a failed restore is exactly when
+    /// the fault counters moved).
+    fn snap_kv_tel(&mut self) {
+        self.tel.kv_spill = *self.kv.counters();
+        self.tel.faults = self.kv.fault_counters();
+    }
+
     /// Shared-prefix cache counters, if the cache is enabled.
     pub fn prefix_stats(&self) -> Option<&PrefixStats> {
         self.prefix.as_ref().map(|p| p.stats())
@@ -856,8 +872,8 @@ impl ExecEngine {
     pub fn drain_prefix_cache(&mut self) {
         if let Some(mut pc) = self.prefix.take() {
             pc.drain(&mut self.kv);
-            self.tel.kv_spill = *self.kv.counters();
             self.prefix = Some(pc);
+            self.snap_kv_tel();
         }
     }
 
@@ -1030,23 +1046,28 @@ impl SessionEngine for ExecEngine {
         // spill traffic is proportional to the session's actual KV,
         // matching the sim cost model's per-token accounting.
         let used = s.pos() * self.spec().d_model;
-        let ticket = self.kv.spill_prefix(s.slot(), used)?;
-        self.tel.kv_spill = *self.kv.counters();
+        let ticket = self.kv.spill_prefix(s.slot(), used);
+        self.snap_kv_tel();
+        let ticket = ticket?;
         self.tel.bump("sessions_preempted", 1);
         Ok(ticket)
     }
 
     fn restore(&mut self, s: &mut DecodeSession, ticket: KvTicket) -> Result<()> {
-        let slot = self.kv.restore(ticket)?;
-        s.rebind_slot(slot);
-        self.tel.kv_spill = *self.kv.counters();
+        // Snapshot even when the restore fails: a failed restore is
+        // exactly when the CRC/retry meters moved, and the scheduler
+        // heals it by recompute-from-prompt rather than failing the
+        // session.
+        let slot = self.kv.restore(ticket);
+        self.snap_kv_tel();
+        s.rebind_slot(slot?);
         self.tel.bump("sessions_resumed", 1);
         Ok(())
     }
 
     fn discard(&mut self, s: &mut DecodeSession, ticket: KvTicket) {
         self.kv.discard(ticket);
-        self.tel.kv_spill = *self.kv.counters();
+        self.snap_kv_tel();
         self.fold_closed(s);
     }
 
@@ -1056,6 +1077,10 @@ impl SessionEngine for ExecEngine {
         };
         let hit = pc.attach(&mut self.kv, &s.prompt, s.slot());
         self.prefix = Some(pc);
+        // Attach reads parked records (CRC-verified): keep the fault
+        // meters fresh whether it hit, missed, or invalidated a
+        // corrupt entry and fell back to cold prefill.
+        self.snap_kv_tel();
         let Some(hit) = hit else { return 0 };
         if s.attach_prefix(hit.depth).is_err() {
             // The destination slot was freshly zeroed and nothing has
@@ -1091,7 +1116,7 @@ impl SessionEngine for ExecEngine {
         self.prefix = Some(pc);
         // Parking a prefix copy rides the spill machinery; keep the
         // snapshot in step so `kv_spill` reflects prefix parks too.
-        self.tel.kv_spill = *self.kv.counters();
+        self.snap_kv_tel();
     }
 
     fn sched_config(&self) -> crate::coordinator::scheduler::SchedConfig {

@@ -14,15 +14,247 @@
 //! `cache/` ([`SpillCounters`]), and the simulated engine charges the
 //! same transfers on the `memsim` links (`HbmToDram`, `DramToSsd`,
 //! `SsdToDram`, `DramToHbm`).
+//!
+//! # Failure model
+//!
+//! The paper's carbon case rests on old, cheap storage — which fails.
+//! All spill I/O goes through a [`SpillBackend`] seam: [`RealBackend`]
+//! in production, the seeded [`FaultyBackend`] decorator under chaos
+//! testing (transient read/write errors, torn writes, bit flips,
+//! latency spikes, each sampled from the deterministic [`Rng`] so a
+//! chaos run replays exactly). On-SSD records are versioned and
+//! checksummed (magic + format version + per-record CRC-32 over header
+//! and payload) and DRAM parks carry a CRC too, so corruption is
+//! *detected* at restore/peek instead of silently served. Transient
+//! I/O failures get bounded retry-with-backoff; when SSD record writes
+//! keep failing the spill falls back to the DRAM area, and a
+//! persistent failure streak flips the store into DRAM-only spill mode
+//! ([`FaultCounters::ssd_degraded`]) rather than erroring every
+//! preemption. A record is always written *and synced* before its
+//! ticket publishes, so a torn write can never leave a redeemable
+//! ticket pointing at garbage.
 
 use crate::coordinator::session::{KvPool, KvTicket};
-use crate::telemetry::SpillCounters;
+use crate::telemetry::{FaultCounters, SpillCounters};
+use crate::util::crc32;
+use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Magic prefix of every on-SSD spill record.
+pub const SPILL_MAGIC: [u8; 4] = *b"M2KV";
+/// On-SSD record format version (bump on any layout change).
+pub const SPILL_VERSION: u16 = 1;
+/// Record header: magic (4) + version (2) + pad (2) + used-f32s (4) +
+/// CRC-32 (4). The CRC covers the first 12 header bytes and the whole
+/// payload.
+pub const SPILL_HEADER_BYTES: u64 = 16;
+
+/// Default bounded-retry policy for transient spill I/O.
+pub const DEFAULT_RETRY_ATTEMPTS: u32 = 3;
+const DEFAULT_RETRY_BACKOFF_MS: u64 = 1;
+/// Consecutive exhausted-retry record writes before the store gives up
+/// on the SSD tier entirely (DRAM-only spill mode).
+const SSD_DEGRADE_AFTER: u32 = 3;
+
+/// CRC-32 over concatenated K/V planes as their little-endian bytes —
+/// the integrity check both spill tiers share.
+fn planes_crc(k: &[f32], v: &[f32]) -> u32 {
+    let mut h = crc32::Hasher::new();
+    for &x in k.iter().chain(v.iter()) {
+        h.update(&x.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// The I/O seam between the [`KvStore`] and its spill media. The real
+/// backend does plain seeks and writes; the fault backend decorates
+/// them with seeded failures. Methods take the already-opened spill
+/// file so the store keeps owning file lifecycle (create/delete).
+pub trait SpillBackend: std::fmt::Debug + Send {
+    /// Write `buf` in full at absolute offset `off`.
+    fn write_at(&mut self, file: &mut File, off: u64, buf: &[u8]) -> io::Result<()>;
+    /// Fill `buf` in full from absolute offset `off`.
+    fn read_at(&mut self, file: &mut File, off: u64, buf: &mut [u8]) -> io::Result<()>;
+    /// Flush written record bytes to the device — called before a
+    /// ticket publishes, so redeemable tickets never point at unsynced
+    /// (possibly torn) records.
+    fn sync(&mut self, file: &mut File) -> io::Result<()>;
+    /// Hook over the DRAM spill area, called as parked planes are
+    /// stored. Fault backends model DRAM bit rot here; the real
+    /// backend does nothing.
+    fn dram_store(&mut self, _k: &mut [f32], _v: &mut [f32]) {}
+    /// Fault-injection counters (all zero for the real backend).
+    fn injected_counters(&self) -> FaultCounters {
+        FaultCounters::default()
+    }
+}
+
+/// The production backend: plain seek + full read/write + fdatasync.
+#[derive(Debug, Default)]
+pub struct RealBackend;
+
+impl SpillBackend for RealBackend {
+    fn write_at(&mut self, file: &mut File, off: u64, buf: &[u8]) -> io::Result<()> {
+        file.seek(SeekFrom::Start(off))?;
+        file.write_all(buf)
+    }
+
+    fn read_at(&mut self, file: &mut File, off: u64, buf: &mut [u8]) -> io::Result<()> {
+        file.seek(SeekFrom::Start(off))?;
+        file.read_exact(buf)
+    }
+
+    fn sync(&mut self, file: &mut File) -> io::Result<()> {
+        file.sync_data()
+    }
+}
+
+/// Per-op fault probabilities for the [`FaultyBackend`]. All-zero
+/// (the default) injects nothing; `seed` drives the deterministic RNG
+/// so a chaos schedule replays exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// P(transient read error) per spill-file read.
+    pub read_error: f64,
+    /// P(transient write error — no bytes land) per record write.
+    pub write_error: f64,
+    /// P(torn write — a strict prefix of the record lands, then the
+    /// write errors) per record write.
+    pub torn_write: f64,
+    /// P(silent single-bit corruption) per record write or DRAM park —
+    /// the persistent fault the CRC exists to catch.
+    pub bit_flip: f64,
+    /// P(latency spike) per surviving I/O op.
+    pub latency_spike: f64,
+    /// Spike duration; 0 counts spikes without sleeping (virtual-clock
+    /// test tiers).
+    pub spike_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xFA017,
+            read_error: 0.0,
+            write_error: 0.0,
+            torn_write: 0.0,
+            bit_flip: 0.0,
+            latency_spike: 0.0,
+            spike_ms: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any fault kind has non-zero probability.
+    pub fn is_active(&self) -> bool {
+        self.read_error > 0.0
+            || self.write_error > 0.0
+            || self.torn_write > 0.0
+            || self.bit_flip > 0.0
+            || self.latency_spike > 0.0
+    }
+}
+
+/// Seeded fault-injecting decorator over [`RealBackend`]. Faults are
+/// sampled in a fixed order per op (write: error → torn → flip →
+/// spike; read: error → spike) so one seed yields one exact schedule.
+#[derive(Debug)]
+pub struct FaultyBackend {
+    inner: RealBackend,
+    cfg: FaultConfig,
+    rng: Rng,
+    counters: FaultCounters,
+}
+
+impl FaultyBackend {
+    pub fn new(cfg: FaultConfig) -> FaultyBackend {
+        FaultyBackend {
+            inner: RealBackend,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            counters: FaultCounters::default(),
+        }
+    }
+
+    fn maybe_spike(&mut self) {
+        if self.cfg.latency_spike > 0.0 && self.rng.chance(self.cfg.latency_spike) {
+            self.counters.injected_latency_spikes += 1;
+            if self.cfg.spike_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.cfg.spike_ms));
+            }
+        }
+    }
+}
+
+impl SpillBackend for FaultyBackend {
+    fn write_at(&mut self, file: &mut File, off: u64, buf: &[u8]) -> io::Result<()> {
+        if self.cfg.write_error > 0.0 && self.rng.chance(self.cfg.write_error) {
+            self.counters.injected_write_errors += 1;
+            return Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                "injected transient write error",
+            ));
+        }
+        if self.cfg.torn_write > 0.0 && buf.len() >= 2 && self.rng.chance(self.cfg.torn_write) {
+            self.counters.injected_torn_writes += 1;
+            let cut = 1 + self.rng.below(buf.len() as u64 - 1) as usize;
+            let _ = self.inner.write_at(file, off, &buf[..cut]);
+            return Err(io::Error::new(
+                io::ErrorKind::WriteZero,
+                "injected torn write (partial record landed)",
+            ));
+        }
+        if self.cfg.bit_flip > 0.0 && !buf.is_empty() && self.rng.chance(self.cfg.bit_flip) {
+            self.counters.injected_bit_flips += 1;
+            let mut bad = buf.to_vec();
+            let i = self.rng.below(bad.len() as u64) as usize;
+            bad[i] ^= 1 << self.rng.below(8);
+            self.maybe_spike();
+            return self.inner.write_at(file, off, &bad);
+        }
+        self.maybe_spike();
+        self.inner.write_at(file, off, buf)
+    }
+
+    fn read_at(&mut self, file: &mut File, off: u64, buf: &mut [u8]) -> io::Result<()> {
+        if self.cfg.read_error > 0.0 && self.rng.chance(self.cfg.read_error) {
+            self.counters.injected_read_errors += 1;
+            return Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                "injected transient read error",
+            ));
+        }
+        self.maybe_spike();
+        self.inner.read_at(file, off, buf)
+    }
+
+    fn sync(&mut self, file: &mut File) -> io::Result<()> {
+        self.inner.sync(file)
+    }
+
+    fn dram_store(&mut self, k: &mut [f32], v: &mut [f32]) {
+        let total = k.len() + v.len();
+        if total == 0 || self.cfg.bit_flip <= 0.0 || !self.rng.chance(self.cfg.bit_flip) {
+            return;
+        }
+        self.counters.injected_bit_flips += 1;
+        let i = self.rng.below(total as u64) as usize;
+        let f = if i < k.len() { &mut k[i] } else { &mut v[i - k.len()] };
+        *f = f32::from_bits(f.to_bits() ^ (1 << self.rng.below(32)));
+    }
+
+    fn injected_counters(&self) -> FaultCounters {
+        self.counters
+    }
+}
 
 /// Uniquifies default spill-file names when several stores coexist in
 /// one process (tests, a server plus a bench harness).
@@ -36,11 +268,14 @@ fn default_spill_path() -> PathBuf {
     ))
 }
 
-/// A ticket's KV state parked in the DRAM spill area.
+/// A ticket's KV state parked in the DRAM spill area, with the CRC of
+/// its true bytes taken at park time (verified at peek/restore so DRAM
+/// bit rot is detected, not served).
 #[derive(Debug)]
 struct DramSpill {
     k: Vec<f32>,
     v: Vec<f32>,
+    crc: u32,
 }
 
 /// Which spill tier currently holds a parked ticket's state.
@@ -75,6 +310,17 @@ pub struct KvStore {
     /// shared state (attached into sessions by copy) and must not be
     /// released back to the pool until every pin is dropped.
     pins: HashMap<usize, u32>,
+    /// The I/O seam all spill-file traffic goes through.
+    backend: Box<dyn SpillBackend>,
+    /// Bounded-retry policy for transient spill I/O.
+    retry_attempts: u32,
+    retry_backoff_ms: u64,
+    /// Store-side self-healing counters (retries, CRC rejections,
+    /// degraded spills); injection counts live in the backend.
+    faults: FaultCounters,
+    /// Consecutive record writes that exhausted their retries —
+    /// reaching [`SSD_DEGRADE_AFTER`] flips DRAM-only spill mode.
+    ssd_write_streak: u32,
 }
 
 impl KvStore {
@@ -94,6 +340,11 @@ impl KvStore {
             next_ticket: 1,
             counters: SpillCounters::default(),
             pins: HashMap::new(),
+            backend: Box::new(RealBackend),
+            retry_attempts: DEFAULT_RETRY_ATTEMPTS,
+            retry_backoff_ms: DEFAULT_RETRY_BACKOFF_MS,
+            faults: FaultCounters::default(),
+            ssd_write_streak: 0,
         }
     }
 
@@ -104,11 +355,59 @@ impl KvStore {
         self
     }
 
+    /// Route all spill I/O through `backend` instead of the default
+    /// [`RealBackend`].
+    pub fn with_backend(mut self, backend: Box<dyn SpillBackend>) -> KvStore {
+        self.backend = backend;
+        self
+    }
+
+    /// Route spill I/O through a seeded [`FaultyBackend`] when `cfg`
+    /// has any active fault probability (a no-op config keeps the real
+    /// backend, so the happy path stays bit-identical).
+    pub fn with_faults(self, cfg: FaultConfig) -> KvStore {
+        if cfg.is_active() {
+            self.with_backend(Box::new(FaultyBackend::new(cfg)))
+        } else {
+            self
+        }
+    }
+
+    /// Override the bounded-retry policy for transient spill I/O
+    /// (`attempts` total tries; backoff doubles from `backoff_ms`).
+    pub fn with_retry(mut self, attempts: u32, backoff_ms: u64) -> KvStore {
+        self.retry_attempts = attempts.max(1);
+        self.retry_backoff_ms = backoff_ms;
+        self
+    }
+
     /// Bytes of one *full* slot (both K/V planes) — the spill file's
-    /// fixed record capacity. Prefix spills move and meter only the
-    /// used leading rows (see [`Self::spill_prefix`]).
+    /// fixed record *payload* capacity. Prefix spills move and meter
+    /// only the used leading rows (see [`Self::spill_prefix`]).
     pub fn slot_bytes(&self) -> u64 {
         2 * self.pool.slot_len() as u64 * 4
+    }
+
+    /// On-disk footprint of one spill-file record: the checksummed
+    /// header plus the full-slot payload capacity.
+    pub fn record_bytes(&self) -> u64 {
+        SPILL_HEADER_BYTES + self.slot_bytes()
+    }
+
+    /// Merged fault/self-healing counters: what the backend injected
+    /// plus what the store's retry/CRC/degradation machinery absorbed.
+    pub fn fault_counters(&self) -> FaultCounters {
+        let mut f = self.backend.injected_counters();
+        f.io_retries = self.faults.io_retries;
+        f.crc_failures = self.faults.crc_failures;
+        f.degraded_spills = self.faults.degraded_spills;
+        f.ssd_degraded = self.faults.ssd_degraded;
+        f
+    }
+
+    /// True once persistent SSD failure flipped DRAM-only spill mode.
+    pub fn ssd_degraded(&self) -> bool {
+        self.faults.ssd_degraded
     }
 
     /// Per-tier spill/restore counts and byte meters.
@@ -290,31 +589,64 @@ impl KvStore {
             v.extend_from_slice(&self.pool.v_layer(slot, l)[..used]);
         }
         match self.spill_tier_for(bytes) {
-            SpillTier::Dram => {
-                self.dram.insert(id, DramSpill { k, v });
-                self.dram_used += bytes;
-                self.counters.spills_dram += 1;
-                self.counters.spill_bytes_dram += bytes;
-            }
+            SpillTier::Dram => self.park_dram(id, k, v, bytes),
             SpillTier::Ssd => {
                 let rec = self.alloc_record();
-                if let Err(e) = self.write_record(rec, &k, &v) {
-                    self.file_free.push(rec);
-                    return Err(e.context("KV spill file write"));
+                match self.write_record(rec, used, &k, &v) {
+                    Ok(()) => {
+                        // The record is fully written *and synced*
+                        // before the ticket becomes redeemable.
+                        self.ssd_write_streak = 0;
+                        self.ssd.insert(id, (rec, used));
+                        self.counters.spills_ssd += 1;
+                        self.counters.spill_bytes_ssd += bytes;
+                    }
+                    Err(_) => {
+                        // Retries exhausted: degrade to the DRAM area
+                        // (past-budget) instead of failing the
+                        // preemption; a persistent streak flips
+                        // DRAM-only mode for good.
+                        self.file_free.push(rec);
+                        self.ssd_write_streak += 1;
+                        if self.ssd_write_streak >= SSD_DEGRADE_AFTER {
+                            self.faults.ssd_degraded = true;
+                        }
+                        self.faults.degraded_spills += 1;
+                        self.park_dram(id, k, v, bytes);
+                    }
                 }
-                self.ssd.insert(id, (rec, used));
-                self.counters.spills_ssd += 1;
-                self.counters.spill_bytes_ssd += bytes;
             }
         }
         self.next_ticket += 1;
         Ok(KvTicket::new(id))
     }
 
+    /// Park planes in the DRAM spill area under a CRC taken over their
+    /// true bytes (the backend hook may then model bit rot in place).
+    fn park_dram(&mut self, id: u64, mut k: Vec<f32>, mut v: Vec<f32>, bytes: u64) {
+        let crc = planes_crc(&k, &v);
+        self.backend.dram_store(&mut k, &mut v);
+        self.dram.insert(id, DramSpill { k, v, crc });
+        self.dram_used += bytes;
+        self.counters.spills_dram += 1;
+        self.counters.spill_bytes_dram += bytes;
+    }
+
+    /// Check a DRAM-parked ticket's CRC before serving it.
+    fn verify_dram(&mut self, id: u64) -> Result<()> {
+        let sp = &self.dram[&id];
+        if planes_crc(&sp.k, &sp.v) != sp.crc {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("DRAM spill for KV ticket {id}: CRC mismatch (bit rot detected)");
+        }
+        Ok(())
+    }
+
     /// Which tier the *next* park of `bytes` would land in — the
-    /// prefix cache's cost policy asks before moving anything.
+    /// prefix cache's cost policy asks before moving anything. In
+    /// degraded (DRAM-only) mode everything lands in DRAM.
     pub fn spill_tier_for(&self, bytes: u64) -> SpillTier {
-        if self.dram_used + bytes <= self.dram_budget {
+        if self.faults.ssd_degraded || self.dram_used + bytes <= self.dram_budget {
             SpillTier::Dram
         } else {
             SpillTier::Ssd
@@ -345,7 +677,9 @@ impl KvStore {
     pub fn peek_prefix_into(&mut self, ticket: KvTicket, dst: usize, values: usize) -> Result<u64> {
         let id = ticket.id();
         let n_layers = self.pool.n_layers().max(1);
-        if let Some(sp) = self.dram.get(&id) {
+        if self.dram.contains_key(&id) {
+            self.verify_dram(id).context("KV DRAM spill read")?;
+            let sp = &self.dram[&id];
             let used = sp.k.len() / n_layers;
             let take = values.min(used);
             for l in 0..n_layers {
@@ -387,7 +721,15 @@ impl KvStore {
             .pool
             .acquire()
             .ok_or_else(|| anyhow::anyhow!("no free HBM KV slot to restore ticket {id} into"))?;
-        if let Some(sp) = self.dram.remove(&id) {
+        if self.dram.contains_key(&id) {
+            // Verify before consuming: a corrupt park errors out with
+            // the ticket still parked (and discardable) and no slot
+            // held — the caller's degradation ladder takes over.
+            if let Err(e) = self.verify_dram(id) {
+                self.pool.release(slot);
+                return Err(e.context("KV DRAM spill read"));
+            }
+            let sp = self.dram.remove(&id).expect("verified entry present");
             let bytes = (sp.k.len() + sp.v.len()) as u64 * 4;
             self.load_prefix(slot, &sp.k, &sp.v);
             self.dram_used -= bytes;
@@ -474,33 +816,161 @@ impl KvStore {
         }
     }
 
-    fn write_record(&mut self, rec: usize, k: &[f32], v: &[f32]) -> Result<()> {
-        let off = rec as u64 * self.slot_bytes();
-        let mut buf = Vec::with_capacity(self.slot_bytes() as usize);
+    /// Serialize a record (header + payload + CRC), then write and
+    /// sync it through the backend with bounded retry-with-backoff.
+    /// Only returns Ok once the full record is durably on the file —
+    /// the caller publishes the ticket after that.
+    fn write_record(&mut self, rec: usize, used: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        let mut buf = Vec::with_capacity(SPILL_HEADER_BYTES as usize + (k.len() + v.len()) * 4);
+        buf.extend_from_slice(&SPILL_MAGIC);
+        buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&(used as u32).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]); // CRC placeholder
         for &x in k.iter().chain(v.iter()) {
             buf.extend_from_slice(&x.to_le_bytes());
         }
-        let file = self.ensure_file()?;
-        file.seek(SeekFrom::Start(off))?;
-        file.write_all(&buf)?;
-        Ok(())
+        let mut h = crc32::Hasher::new();
+        h.update(&buf[..12]).update(&buf[SPILL_HEADER_BYTES as usize..]);
+        let crc = h.finish();
+        buf[12..16].copy_from_slice(&crc.to_le_bytes());
+        let off = rec as u64 * self.record_bytes();
+        self.ensure_file()?;
+        let mut backoff = self.retry_backoff_ms;
+        let mut attempt = 0;
+        loop {
+            let res = {
+                let file = self.file.as_mut().expect("spill file ensured above");
+                match self.backend.write_at(file, off, &buf) {
+                    Ok(()) => self.backend.sync(file),
+                    Err(e) => Err(e),
+                }
+            };
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= self.retry_attempts {
+                        return Err(anyhow::Error::from(e)
+                            .context(format!("KV spill record {rec} write (retries exhausted)")));
+                    }
+                    self.faults.io_retries += 1;
+                    if backoff > 0 {
+                        std::thread::sleep(Duration::from_millis(backoff));
+                        backoff = backoff.saturating_mul(2);
+                    }
+                }
+            }
+        }
     }
 
+    /// Read a record through the backend and verify magic, version,
+    /// used-count, and CRC before returning any payload — a corrupt or
+    /// torn record errors instead of serving wrong bytes. Transient
+    /// read failures get the same bounded retry as writes (a CRC
+    /// mismatch is retried too: torn *reads* can clear, and the caller
+    /// handles the persistent case through its degradation ladder).
     fn read_record(&mut self, rec: usize, used: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        let off = rec as u64 * self.slot_bytes();
+        anyhow::ensure!(self.file.is_some(), "KV spill file missing for record {rec}");
+        let mut backoff = self.retry_backoff_ms;
+        let mut attempt = 0;
+        loop {
+            match self.read_record_verified(rec, used) {
+                Ok(planes) => return Ok(planes),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= self.retry_attempts {
+                        return Err(e
+                            .context(format!("KV spill record {rec} read (retries exhausted)")));
+                    }
+                    self.faults.io_retries += 1;
+                    if backoff > 0 {
+                        std::thread::sleep(Duration::from_millis(backoff));
+                        backoff = backoff.saturating_mul(2);
+                    }
+                }
+            }
+        }
+    }
+
+    fn read_record_verified(&mut self, rec: usize, used: usize) -> Result<(Vec<f32>, Vec<f32>)> {
         let plane = self.pool.n_layers() * used;
-        let mut buf = vec![0u8; 2 * plane * 4];
-        let file = self
-            .file
-            .as_mut()
-            .ok_or_else(|| anyhow::anyhow!("KV spill file missing for record {rec}"))?;
-        file.seek(SeekFrom::Start(off))?;
-        file.read_exact(&mut buf)?;
-        let floats: Vec<f32> = buf
+        let payload = 2 * plane * 4;
+        let off = rec as u64 * self.record_bytes();
+        let mut buf = vec![0u8; SPILL_HEADER_BYTES as usize + payload];
+        {
+            let file = self
+                .file
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("KV spill file missing for record {rec}"))?;
+            self.backend.read_at(file, off, &mut buf)?;
+        }
+        if buf[..4] != SPILL_MAGIC {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("spill record {rec}: bad magic (corrupt or torn record)");
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != SPILL_VERSION {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("spill record {rec}: format version {version} != {SPILL_VERSION}");
+        }
+        let hdr_used = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+        if hdr_used != used {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("spill record {rec}: header used={hdr_used}, expected {used}");
+        }
+        let stored = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+        let mut h = crc32::Hasher::new();
+        h.update(&buf[..12]).update(&buf[SPILL_HEADER_BYTES as usize..]);
+        if h.finish() != stored {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("spill record {rec}: CRC mismatch (corruption detected)");
+        }
+        let floats: Vec<f32> = buf[SPILL_HEADER_BYTES as usize..]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         Ok((floats[..plane].to_vec(), floats[plane..].to_vec()))
+    }
+
+    /// Test hook: flip one byte of a parked ticket's stored state —
+    /// payload, CRC, or (on SSD) header, chosen by `byte_idx` modulo
+    /// the record size — bypassing the backend. Powers the
+    /// flip-a-byte property proving a corrupt record never
+    /// round-trips. Returns false for unknown tickets.
+    #[doc(hidden)]
+    pub fn corrupt_parked_byte(&mut self, ticket: KvTicket, byte_idx: usize) -> bool {
+        let id = ticket.id();
+        if let Some(sp) = self.dram.get_mut(&id) {
+            let kb = sp.k.len() * 4;
+            let vb = sp.v.len() * 4;
+            let i = byte_idx % (kb + vb + 4);
+            if i < kb {
+                let f = &mut sp.k[i / 4];
+                *f = f32::from_bits(f.to_bits() ^ (0x40 << (8 * (i % 4))));
+            } else if i < kb + vb {
+                let f = &mut sp.v[(i - kb) / 4];
+                *f = f32::from_bits(f.to_bits() ^ (0x40 << (8 * ((i - kb) % 4))));
+            } else {
+                sp.crc ^= 0x40 << (8 * (i - kb - vb));
+            }
+            return true;
+        }
+        if let Some(&(rec, used)) = self.ssd.get(&id) {
+            let payload = 2 * self.pool.n_layers() * used * 4;
+            let i = byte_idx % (SPILL_HEADER_BYTES as usize + payload);
+            let off = rec as u64 * self.record_bytes() + i as u64;
+            let Some(file) = self.file.as_mut() else {
+                return false;
+            };
+            let mut b = [0u8; 1];
+            if file.seek(SeekFrom::Start(off)).is_err() || file.read_exact(&mut b).is_err() {
+                return false;
+            }
+            b[0] ^= 0x40;
+            return file.seek(SeekFrom::Start(off)).is_ok() && file.write_all(&b).is_ok();
+        }
+        false
     }
 }
 

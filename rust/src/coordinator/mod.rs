@@ -44,7 +44,7 @@ pub use scheduler::{
     ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, SessionEvent,
     TickReport, DEFAULT_STARVATION_GUARD,
 };
-pub use kv_store::{KvStore, SpillTier};
+pub use kv_store::{FaultConfig, FaultyBackend, KvStore, RealBackend, SpillBackend, SpillTier};
 pub use prefix::{
     PrefixConfig, PrefixCostModel, PrefixHit, PrefixHome, PrefixStats, TieredPrefixCache,
     VirtualPrefixCache,

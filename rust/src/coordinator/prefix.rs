@@ -63,6 +63,10 @@ pub struct PrefixStats {
     pub demotions: u64,
     /// Times the cost model chose recompute over a tier round-trip.
     pub recomputes_chosen: u64,
+    /// Entries dropped because their tier read failed verification
+    /// (corrupt or unreadable spill state) — admission fell back to
+    /// cold prefill, byte-identically.
+    pub invalidated: u64,
     /// Attach bytes served per tier.
     pub bytes_hbm: u64,
     pub bytes_dram: u64,
@@ -467,6 +471,7 @@ impl TieredPrefixCache {
                 Ok(b) => (Tier::Dram, b),
                 Err(_) => {
                     self.remove_entry(kv, eid);
+                    self.stats.invalidated += 1;
                     self.stats.misses += 1;
                     return None;
                 }
@@ -475,6 +480,7 @@ impl TieredPrefixCache {
                 Ok(b) => (Tier::Ssd, b),
                 Err(_) => {
                     self.remove_entry(kv, eid);
+                    self.stats.invalidated += 1;
                     self.stats.misses += 1;
                     return None;
                 }
@@ -611,6 +617,7 @@ impl TieredPrefixCache {
             }
             Err(_) => {
                 kv.release(slot);
+                self.stats.invalidated += 1;
                 self.remove_entry(kv, eid);
             }
         }

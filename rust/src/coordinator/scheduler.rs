@@ -195,6 +195,14 @@ pub enum SessionEvent {
     /// A preempted session's KV was restored into an HBM slot; it is
     /// active again and continues byte-identically.
     Resumed { id: u64 },
+    /// A parked session's spilled KV could not be restored (corrupt
+    /// record, exhausted retries), so the scheduler re-enqueued the
+    /// request for recompute-from-prompt under its original admission
+    /// key — the degradation ladder instead of a `Failed`.
+    /// Non-terminal; the token stream for this id restarts from index
+    /// 0 (at-least-once token delivery — determinism makes the replay
+    /// byte-identical, and the final `Done` reply is authoritative).
+    Recovered { id: u64 },
 }
 
 impl SessionEvent {
@@ -205,7 +213,8 @@ impl SessionEvent {
             | SessionEvent::Failed { id, .. }
             | SessionEvent::Cancelled { id, .. }
             | SessionEvent::Preempted { id }
-            | SessionEvent::Resumed { id } => *id,
+            | SessionEvent::Resumed { id }
+            | SessionEvent::Recovered { id } => *id,
             SessionEvent::Done(c) => c.response.id,
         }
     }
@@ -218,6 +227,7 @@ impl SessionEvent {
                 | SessionEvent::Token { .. }
                 | SessionEvent::Preempted { .. }
                 | SessionEvent::Resumed { .. }
+                | SessionEvent::Recovered { .. }
         )
     }
 }
@@ -274,6 +284,13 @@ struct Queued {
     deadline_abs: Option<u64>,
     /// Arrival stamp (FIFO tie-break).
     seq: u64,
+    /// Set when this entry is a recompute-from-prompt re-enqueue after
+    /// a failed KV restore; carries the session's prior preemption
+    /// count so its preempt-cap budget (and termination of the
+    /// recovery loop) survives the recompute. Re-admission of a
+    /// recovered entry bumps no admission counters and emits no
+    /// duplicate `Admitted`.
+    recovered: Option<u32>,
 }
 
 /// An in-flight session plus its scheduling key.
@@ -335,6 +352,9 @@ pub struct Scheduler<E: SessionEngine> {
     pub preemptions: u64,
     /// Parked sessions restored into an HBM slot.
     pub resumes: u64,
+    /// Parked sessions whose restore failed and were re-enqueued for
+    /// recompute-from-prompt instead of failing ([`SessionEvent::Recovered`]).
+    pub recoveries: u64,
     /// Admissions that attached a cached shared prefix
     /// ([`SessionEngine::prefix_attach`]).
     pub prefix_hits: u64,
@@ -377,6 +397,7 @@ impl<E: SessionEngine> Scheduler<E> {
             cancelled: 0,
             preemptions: 0,
             resumes: 0,
+            recoveries: 0,
             prefix_hits: 0,
             prefix_hit_tokens: 0,
             classes: [ClassCounters::default(); N_CLASSES],
@@ -444,6 +465,7 @@ impl<E: SessionEngine> Scheduler<E> {
             deadline_abs,
             seq: self.stamp,
             req,
+            recovered: None,
         });
     }
 
@@ -607,7 +629,7 @@ impl<E: SessionEngine> Scheduler<E> {
         };
         let id = q.req.id;
         let class = q.req.priority.index();
-        let (seq, deadline_abs) = (q.seq, q.deadline_abs);
+        let (seq, deadline_abs, recovered) = (q.seq, q.deadline_abs, q.recovered);
         match self.engine.open(q.req) {
             Ok(mut s) => {
                 // Shared-prefix attachment: the engine copies any cached
@@ -619,17 +641,24 @@ impl<E: SessionEngine> Scheduler<E> {
                     self.prefix_hits += 1;
                     self.prefix_hit_tokens += depth as u64;
                 }
-                self.admitted += 1;
-                self.classes[class].admitted += 1;
+                // A recompute re-admission was already admitted once:
+                // no counter bumps, no duplicate Admitted event, and
+                // its preempt-cap budget carries over.
+                if recovered.is_none() {
+                    self.admitted += 1;
+                    self.classes[class].admitted += 1;
+                }
                 self.stamp += 1;
                 self.active.push(Active {
                     s,
                     deadline_abs,
                     stamp: self.stamp,
                     seq,
-                    preemptions: 0,
+                    preemptions: recovered.unwrap_or(0),
                 });
-                report.events.push(SessionEvent::Admitted { id });
+                if recovered.is_none() {
+                    report.events.push(SessionEvent::Admitted { id });
+                }
             }
             Err(e) => {
                 self.rejected += 1;
@@ -640,8 +669,13 @@ impl<E: SessionEngine> Scheduler<E> {
     }
 
     /// Restore one parked session into a free slot. A failed restore
-    /// fails the request (propagated, not panicked): the engine holds
-    /// no slot on error and the ticket's state is discarded here.
+    /// climbs the degradation ladder instead of failing the request:
+    /// the unreadable ticket is discarded (the engine holds no slot on
+    /// error) and the request re-enters the backlog for
+    /// recompute-from-prompt under its *original* admission key — the
+    /// scheduler still owns the prompt, and determinism makes the
+    /// recomputed tokens byte-identical. [`SessionEvent::Recovered`]
+    /// (non-terminal) marks the restart.
     fn resume_parked(&mut self, idx: usize, report: &mut TickReport) {
         let mut p = self.parked.swap_remove(idx);
         match self.engine.restore(&mut p.s, p.ticket) {
@@ -670,13 +704,26 @@ impl<E: SessionEngine> Scheduler<E> {
                     preemptions: p.preemptions,
                 });
             }
-            Err(e) => {
+            Err(_) => {
+                // The parked KV is gone (corrupt record, retries
+                // exhausted, no slot) but the prompt is not: discard
+                // the dead ticket and re-enqueue for recompute-from-
+                // prompt. The entry keeps its original (class,
+                // deadline, arrival) key so EDF ordering is untouched,
+                // and its preemption count rides along so the
+                // preempt cap still bounds the recovery loop.
                 let id = p.s.id;
-                let msg = format!("restore after preemption failed: {e:#}");
                 self.engine.discard(&mut p.s, p.ticket);
-                self.completed += 1;
-                self.classes[p.s.priority.index()].failed += 1;
-                report_failed(report, id, msg);
+                self.recoveries += 1;
+                let req = Request::new(id, p.s.prompt.clone(), p.s.max_new)
+                    .with_class(p.s.priority, None);
+                self.backlog.push_back(Queued {
+                    req,
+                    deadline_abs: p.deadline_abs,
+                    seq: p.seq,
+                    recovered: Some(p.preemptions),
+                });
+                report.events.push(SessionEvent::Recovered { id });
             }
         }
     }
@@ -1804,6 +1851,104 @@ mod tests {
         assert_eq!(sched.cancelled, 1);
         assert_eq!(sched.resumes, 0, "cancelled parked session must not resume");
         assert_eq!(sched.engine().free.len(), 1);
+    }
+
+    #[test]
+    fn failed_restore_recovers_by_recompute_from_prompt() {
+        // The degradation ladder: every restore fails (corrupt spill
+        // records), yet no request fails — preempted sessions re-enter
+        // the backlog under their original key, re-prefill from the
+        // prompt, and finish with the uncontended bytes. Same trace as
+        // preemption_oversubscribes_2x_slots_with_byte_identical_resumes.
+        struct CorruptSpills {
+            inner: Stub,
+        }
+        impl SessionEngine for CorruptSpills {
+            fn capacity(&self) -> usize {
+                self.inner.capacity()
+            }
+            fn open(&mut self, r: Request) -> Result<DecodeSession> {
+                self.inner.open(r)
+            }
+            fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+                self.inner.forward(s, token)
+            }
+            fn close(&mut self, s: &mut DecodeSession) {
+                self.inner.close(s)
+            }
+            fn supports_spill(&self) -> bool {
+                true
+            }
+            fn spill(&mut self, s: &DecodeSession) -> Result<KvTicket> {
+                self.inner.spill(s)
+            }
+            fn restore(&mut self, _s: &mut DecodeSession, _t: KvTicket) -> Result<()> {
+                anyhow::bail!("injected: spill record CRC mismatch")
+            }
+            fn discard(&mut self, s: &mut DecodeSession, t: KvTicket) {
+                self.inner.discard(s, t)
+            }
+        }
+        let reference: HashMap<u64, Vec<u32>> = {
+            let mut eng = Stub::new(1);
+            let mut out = HashMap::new();
+            for id in 1..=4u64 {
+                let mut s = eng.open(req(id, &[id as u32, 3], 6)).unwrap();
+                while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {}
+                eng.close(&mut s);
+                out.insert(id, s.generated);
+            }
+            out
+        };
+        let eng = CorruptSpills { inner: Stub::spilling(2) };
+        let mut sched = Scheduler::new(eng, 4);
+        sched.set_virtual_now_ms(0);
+        sched.submit(req(1, &[1, 3], 6).with_class(Priority::Normal, Some(9_000)));
+        sched.submit(req(2, &[2, 3], 6).with_class(Priority::Normal, Some(8_000)));
+        sched.tick();
+        sched.submit(req(3, &[3, 3], 6).with_class(Priority::Normal, Some(100)));
+        sched.submit(req(4, &[4, 3], 6).with_class(Priority::Normal, Some(200)));
+        let mut events = Vec::new();
+        let mut outs = Vec::new();
+        while !sched.is_idle() {
+            let r = sched.tick();
+            events.extend(r.events);
+            outs.extend(r.outcomes);
+        }
+        assert_eq!(sched.preemptions, 2);
+        assert_eq!(sched.resumes, 0, "no restore ever succeeds");
+        assert_eq!(sched.recoveries, 2, "both parked sessions recompute");
+        let recovered: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                SessionEvent::Recovered { id } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(recovered.len(), 2);
+        assert!(
+            events.iter().filter(|e| matches!(e, SessionEvent::Admitted { .. })).count() == 4,
+            "recompute re-admission must not re-emit Admitted"
+        );
+        assert_eq!(outs.len(), 4);
+        for o in outs {
+            match o {
+                Outcome::Done(c) => assert_eq!(
+                    c.response.tokens, reference[&c.response.id],
+                    "req {} recompute bytes diverged",
+                    c.response.id
+                ),
+                Outcome::Failed { id, error } => {
+                    panic!("degradation ladder leaked a failure: req {id}: {error}")
+                }
+            }
+        }
+        assert_eq!(sched.admitted, 4, "re-admission double-counted");
+        assert_eq!(sched.completed, 4);
+        assert_eq!(sched.classes[Priority::Normal.index()].completed, 4);
+        assert_eq!(sched.classes[Priority::Normal.index()].failed, 0);
+        assert_eq!(sched.engine().inner.free.len(), 2, "leaked slots");
+        assert!(sched.engine().inner.parked.is_empty(), "leaked spill tickets");
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //!   `RESUMED <id>`         scheduler parks a session's KV below HBM
 //!                          and later restores it (tokens pause in
 //!                          between, then continue byte-identically)
+//!   `RECOVERED <id>`     → unsolicited status frame when a parked
+//!                          session's KV restore failed (I/O error or
+//!                          CRC mismatch) and the scheduler healed it
+//!                          by recomputing from the prompt; the token
+//!                          stream restarts from index 0 and the final
+//!                          `END` is authoritative (v1 clients block on
+//!                          one reply and never learn)
 //!   errors               → `ERR <code> <id> <msg...>` with the stable
 //!                          codes of [`ParseError::code`] and the
 //!                          `ERR_*` constants; `<id>` is 0 for
@@ -249,6 +256,12 @@ struct ConnTx {
     /// `--max-requests` run is on the wire before the process can
     /// exit (the old synchronous write path gave that for free).
     pending: std::sync::atomic::AtomicUsize,
+    /// Requests submitted on this connection and not yet answered
+    /// (queued or mid-decode). The idle reaper only closes a
+    /// connection when this is zero — a client silently waiting for a
+    /// long decode is not idle, a client that sent nothing and went
+    /// away is.
+    inflight: std::sync::atomic::AtomicUsize,
 }
 
 type ConnWriter = Arc<ConnTx>;
@@ -264,6 +277,7 @@ fn spawn_conn_writer(conn: TcpStream) -> ConnWriter {
         tx,
         dead: AtomicBool::new(false),
         pending: std::sync::atomic::AtomicUsize::new(0),
+        inflight: std::sync::atomic::AtomicUsize::new(0),
     });
     let mark = Arc::clone(&writer);
     std::thread::spawn(move || {
@@ -338,6 +352,10 @@ struct Shared {
     /// Every connection's outbox (weak: a closed connection's entry
     /// just stops upgrading) — shutdown drains these before returning.
     writers: Mutex<Vec<std::sync::Weak<ConnTx>>>,
+    /// Half-open-connection hardening: a connection whose read side has
+    /// been silent this long *with no request in flight* is reaped (its
+    /// handler returns and the socket closes). None disables reaping.
+    idle_timeout: Option<std::time::Duration>,
 }
 
 /// Take a lock even when another thread panicked while holding it. The
@@ -383,6 +401,8 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
          \"preempt\":{{\"parked\":{},\"preemptions\":{},\"resumes\":{},\
          \"spill_dram_b\":{},\"spill_ssd_b\":{},\"restore_b\":{}}},\
          \"prefix\":{{\"hits\":{},\"hit_tokens\":{}}},\
+         \"faults\":{{\"injected\":{},\"io_retries\":{},\"crc_failures\":{},\
+         \"degraded_spills\":{},\"ssd_degraded\":{},\"recoveries\":{}}},\
          \"classes\":{{{}}}}}\n",
         s.active,
         s.backlog,
@@ -400,6 +420,12 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
         s.kv_spill.restore_bytes(),
         s.prefix_hits,
         s.prefix_hit_tokens,
+        s.faults.injected(),
+        s.faults.io_retries,
+        s.faults.crc_failures,
+        s.faults.degraded_spills,
+        s.faults.ssd_degraded,
+        s.recoveries,
         classes.join(",")
     )
 }
@@ -415,6 +441,27 @@ pub fn serve<E: SessionEngine>(
     engine: E,
     addr: &str,
     max_requests: Option<u64>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<E> {
+    serve_with_opts(engine, addr, max_requests, DEFAULT_IDLE_TIMEOUT, on_bound)
+}
+
+/// Idle-connection reap window for [`serve`]: generous enough that no
+/// interactive client ever trips it, bounded so half-open connections
+/// (client died without FIN, NAT dropped the mapping) cannot pin
+/// handler threads and outboxes forever.
+pub const DEFAULT_IDLE_TIMEOUT: Option<std::time::Duration> =
+    Some(std::time::Duration::from_secs(60));
+
+/// [`serve`] with an explicit idle-connection timeout: a connection
+/// whose read side stays silent that long with zero requests in flight
+/// is closed by the server. `None` keeps connections forever (the
+/// pre-hardening behavior). Tests use short timeouts to pin the reaper.
+pub fn serve_with_opts<E: SessionEngine>(
+    engine: E,
+    addr: &str,
+    max_requests: Option<u64>,
+    idle_timeout: Option<std::time::Duration>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<E> {
     let listener = TcpListener::bind(addr)?;
@@ -433,6 +480,7 @@ pub fn serve<E: SessionEngine>(
         stop: AtomicBool::new(false),
         next_id: AtomicU64::new(1),
         writers: Mutex::new(Vec::new()),
+        idle_timeout,
     });
 
     // Acceptor thread: parse lines, enqueue.
@@ -497,6 +545,7 @@ pub fn serve<E: SessionEngine>(
                         guard.stats.classes[req.priority.index()].cancelled += 1;
                         if let Some(i) = guard.pending.iter().position(|p| p.req.id == id) {
                             let p = guard.pending.swap_remove(i);
+                            p.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                             // The owner hears about it in its own
                             // protocol's shape.
                             let line = match p.proto {
@@ -613,6 +662,7 @@ pub fn serve<E: SessionEngine>(
                 SessionEvent::Done(done) => {
                     let r = &done.response;
                     if let Some(c) = conns.remove(&r.id) {
+                        c.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         let line = match c.proto {
                             Proto::V1 => format!(
                                 "OK {} {:.1} {:.1} {:.1} {}\n",
@@ -635,6 +685,7 @@ pub fn serve<E: SessionEngine>(
                 }
                 SessionEvent::Failed { id, error } => {
                     if let Some(c) = conns.remove(&id) {
+                        c.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         let line = match c.proto {
                             Proto::V1 => format!("ERR {error}\n"),
                             Proto::V2 => format!("ERR {ERR_SESSION} {id} {error}\n"),
@@ -644,6 +695,7 @@ pub fn serve<E: SessionEngine>(
                 }
                 SessionEvent::Cancelled { id, tokens } => {
                     if let Some(c) = conns.remove(&id) {
+                        c.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         // A v1 owner never learns v2 frames: its
                         // one-shot reply becomes a legal v1 ERR line.
                         let line = match c.proto {
@@ -671,6 +723,18 @@ pub fn serve<E: SessionEngine>(
                         }
                     }
                 }
+                // A failed KV restore healed by recompute-from-prompt:
+                // non-terminal, the session re-decodes from scratch.
+                // v2 clients are told their token stream restarts at
+                // index 0 (the final END is authoritative); v1 clients
+                // block on one reply and never learn.
+                SessionEvent::Recovered { id } => {
+                    if let Some(c) = conns.get(&id) {
+                        if c.proto == Proto::V2 {
+                            write_line(&c.conn, &format!("RECOVERED {id}\n"));
+                        }
+                    }
+                }
             }
         }
     }
@@ -683,6 +747,7 @@ pub fn serve<E: SessionEngine>(
         let mut guard = lock_unpoisoned(&shared.state);
         while guard.queue.pop().is_some() {}
         for p in guard.pending.drain(..) {
+            p.conn.inflight.fetch_sub(1, Ordering::SeqCst);
             let line = match p.proto {
                 Proto::V1 => "ERR server shutting down\n".to_string(),
                 Proto::V2 => format!("ERR {ERR_SHUTDOWN} {} server shutting down\n", p.req.id),
@@ -739,9 +804,49 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
         writers.retain(|w| w.strong_count() > 0);
         writers.push(Arc::downgrade(&writer));
     }
-    let mut lines = BufReader::new(reader).lines();
+    // Half-open-connection hardening: bound every blocking read so the
+    // handler can notice a silent peer. A timed-out read with no
+    // request in flight past the idle window reaps the connection —
+    // a client that died without FIN (or a NAT that dropped the
+    // mapping) can no longer pin this thread and its outbox forever.
+    if let Some(window) = shared.idle_timeout {
+        let _ = reader.set_read_timeout(Some(window.min(std::time::Duration::from_secs(1))));
+    }
+    let mut reader = BufReader::new(reader);
+    let mut buf = String::new();
+    let mut last_activity = std::time::Instant::now();
     let mut proto = Proto::V1;
-    while let Some(Ok(line)) = lines.next() {
+    loop {
+        // `read_line` appends: bytes of a line split across timeouts
+        // accumulate in `buf` until the newline arrives.
+        let had = buf.len();
+        let line = match reader.read_line(&mut buf) {
+            Ok(0) => break, // EOF — client closed its write half.
+            Ok(_) => {
+                last_activity = std::time::Instant::now();
+                std::mem::take(&mut buf)
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if buf.len() > had {
+                    // A partial line trickled in: the peer is slow, not
+                    // gone.
+                    last_activity = std::time::Instant::now();
+                }
+                let idle = shared
+                    .idle_timeout
+                    .is_some_and(|w| last_activity.elapsed() >= w);
+                if idle && writer.inflight.load(Ordering::SeqCst) == 0 {
+                    break; // Reap: silent past the window, nothing owed.
+                }
+                continue;
+            }
+            Err(_) => break,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -834,6 +939,10 @@ fn handle_conn(conn: TcpStream, shared: Arc<Shared>) {
                     } else {
                         let ok = g.queue.push(req.clone());
                         if ok {
+                            // Counted under the same lock that admits
+                            // it, so the idle reaper can never see an
+                            // admitted-but-uncounted request.
+                            writer.inflight.fetch_add(1, Ordering::SeqCst);
                             g.pending.push(Pending {
                                 req,
                                 conn: Arc::clone(&writer),
@@ -988,6 +1097,27 @@ mod tests {
         let j = stats_json(0, 0, 0, &s);
         assert!(
             j.contains("\"prefix\":{\"hits\":5,\"hit_tokens\":80}"),
+            "{j}"
+        );
+    }
+
+    #[test]
+    fn stats_json_carries_fault_and_recovery_counters() {
+        let mut s = StatsSnapshot {
+            recoveries: 3,
+            ..Default::default()
+        };
+        s.faults.io_retries = 4;
+        s.faults.crc_failures = 2;
+        s.faults.degraded_spills = 1;
+        s.faults.ssd_degraded = true;
+        s.faults.injected_bit_flips = 6;
+        let j = stats_json(0, 0, 0, &s);
+        assert!(
+            j.contains(
+                "\"faults\":{\"injected\":6,\"io_retries\":4,\"crc_failures\":2,\
+                 \"degraded_spills\":1,\"ssd_degraded\":true,\"recoveries\":3}"
+            ),
             "{j}"
         );
     }

@@ -16,7 +16,7 @@
 use crate::coordinator::request::Request;
 use crate::coordinator::scheduler::{SchedConfig, Scheduler, SessionEvent};
 use crate::coordinator::session::SessionEngine;
-use crate::telemetry::{ClassCounters, SpillCounters, N_CLASSES};
+use crate::telemetry::{ClassCounters, FaultCounters, SpillCounters, N_CLASSES};
 
 /// One coherent view of the serving state, taken from the scheduler and
 /// the engine's telemetry in a single call — the replacement for the
@@ -54,6 +54,11 @@ pub struct StatsSnapshot {
     pub prefix_hits: u64,
     /// Prompt tokens those hits skipped prefilling.
     pub prefix_hit_tokens: u64,
+    /// Sessions whose failed KV restore was healed by recompute-from-
+    /// prompt instead of surfacing a `Failed` event.
+    pub recoveries: u64,
+    /// Injected-fault and self-healing counters, from engine telemetry.
+    pub faults: FaultCounters,
 }
 
 impl StatsSnapshot {
@@ -161,6 +166,8 @@ impl<E: SessionEngine> ServingCore<E> {
             kv_spill: tel.map_or(SpillCounters::default(), |t| t.kv_spill),
             prefix_hits: self.sched.prefix_hits,
             prefix_hit_tokens: self.sched.prefix_hit_tokens,
+            recoveries: self.sched.recoveries,
+            faults: tel.map_or(FaultCounters::default(), |t| t.faults),
         }
     }
 
@@ -169,9 +176,11 @@ impl<E: SessionEngine> ServingCore<E> {
     /// keeps one.
     pub fn into_engine(self) -> E {
         let classes = self.sched.classes;
+        let recoveries = self.sched.recoveries;
         let mut engine = self.sched.into_engine();
         if let Some(tel) = engine.telemetry_mut() {
             tel.classes = classes;
+            tel.recoveries = recoveries;
         }
         engine
     }

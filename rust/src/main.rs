@@ -78,6 +78,34 @@ fn engine_config(args: &Args) -> EngineConfig {
     if args.flag("no-continuous") {
         cfg.continuous = false;
     }
+    // Chaos engineering: seeded fault injection into the KV spill
+    // path. All probabilities default to 0.0 (off); the faulty backend
+    // is only installed when one is non-zero, so plain runs stay
+    // bit-identical to the pre-fault-injection engine.
+    if let Some(p) = args.get("fault-read").and_then(|v| v.parse().ok()) {
+        cfg.faults.read_error = p;
+    }
+    if let Some(p) = args.get("fault-write").and_then(|v| v.parse().ok()) {
+        cfg.faults.write_error = p;
+    }
+    if let Some(p) = args.get("fault-torn").and_then(|v| v.parse().ok()) {
+        cfg.faults.torn_write = p;
+    }
+    if let Some(p) = args.get("fault-flip").and_then(|v| v.parse().ok()) {
+        cfg.faults.bit_flip = p;
+    }
+    if let Some(p) = args.get("fault-spike").and_then(|v| v.parse().ok()) {
+        cfg.faults.latency_spike = p;
+    }
+    if let Some(ms) = args.get("fault-spike-ms").and_then(|v| v.parse().ok()) {
+        cfg.faults.spike_ms = ms;
+    }
+    if let Some(s) = args.get("fault-seed").and_then(|v| v.parse().ok()) {
+        cfg.faults.seed = s;
+    }
+    cfg.spill_retries = args
+        .get_usize("spill-retries", cfg.spill_retries as usize)
+        .max(1) as u32;
     if args.flag("no-ssd") {
         cfg.use_ssd = false;
     }
@@ -144,6 +172,15 @@ COMMANDS:
                   [--no-continuous]    admit only at turn assembly (v2
                                        default admits into in-flight
                                        turns)
+                  [--fault-read P] [--fault-write P] [--fault-torn P]
+                  [--fault-flip P] [--fault-spike P] [--fault-spike-ms M]
+                  [--fault-seed S]     seeded chaos: inject spill-path
+                                       faults at the given per-op
+                                       probabilities (self-healing:
+                                       CRC + retries + recompute keep
+                                       outputs byte-identical)
+                  [--spill-retries N]  attempts per spill I/O op before
+                                       the degradation ladder engages
                   protocol v1: `GEN <max_new> <prompt>` or
                   `GEN@<class>[:<deadline_ms>] <max_new> <prompt>`
                   with class in {high, normal, batch}

@@ -67,6 +67,50 @@ impl SpillCounters {
     }
 }
 
+/// Fault-injection and self-healing counters for the storage
+/// hierarchy: what the seeded [`FaultyBackend`] injected, how the
+/// store's retry/checksum machinery absorbed it, and whether the
+/// degradation ladder's last rung (DRAM-only spill mode) engaged.
+/// All zero on a fault-free run — the checksum/retry layer adds no
+/// semantic change on the happy path.
+///
+/// [`FaultyBackend`]: crate::coordinator::kv_store::FaultyBackend
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Transient read errors injected by the fault backend.
+    pub injected_read_errors: u64,
+    /// Transient (dropped) write errors injected.
+    pub injected_write_errors: u64,
+    /// Torn/short writes injected (partial record bytes landed).
+    pub injected_torn_writes: u64,
+    /// Bit-flip corruptions injected into record or DRAM-park bytes.
+    pub injected_bit_flips: u64,
+    /// Latency spikes injected on spill-file I/O.
+    pub injected_latency_spikes: u64,
+    /// Spill I/O attempts retried after a transient failure.
+    pub io_retries: u64,
+    /// Records (SSD or DRAM park) rejected by checksum/format
+    /// verification instead of being silently served.
+    pub crc_failures: u64,
+    /// Spills that fell back to the DRAM area after SSD record writes
+    /// exhausted their retries.
+    pub degraded_spills: u64,
+    /// True once persistent SSD failure flipped the store into
+    /// DRAM-only spill mode.
+    pub ssd_degraded: bool,
+}
+
+impl FaultCounters {
+    /// Total faults injected across all kinds.
+    pub fn injected(&self) -> u64 {
+        self.injected_read_errors
+            + self.injected_write_errors
+            + self.injected_torn_writes
+            + self.injected_bit_flips
+            + self.injected_latency_spikes
+    }
+}
+
 /// Decode-phase wall/simulated time breakdown (Fig 11b).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PhaseTimes {
@@ -175,6 +219,12 @@ pub struct Telemetry {
     /// cold-prefilling, and the prompt tokens those hits skipped.
     pub prefix_hits: u64,
     pub prefix_hit_tokens: u64,
+    /// Storage-hierarchy fault-injection and self-healing counters
+    /// (see [`FaultCounters`]).
+    pub faults: FaultCounters,
+    /// Sessions recovered by recompute-from-prompt after a failed KV
+    /// restore (the scheduler's degradation ladder, not a `Failed`).
+    pub recoveries: u64,
     /// Free-form counters for experiment-specific series.
     pub counters: BTreeMap<String, u64>,
 }
@@ -250,6 +300,20 @@ impl Telemetry {
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)
             .field_num("ffn_s", self.phases.ffn_s);
+        w.key("faults")
+            .begin_obj()
+            .field_int("injected", self.faults.injected() as i64)
+            .field_int("read_errors", self.faults.injected_read_errors as i64)
+            .field_int("write_errors", self.faults.injected_write_errors as i64)
+            .field_int("torn_writes", self.faults.injected_torn_writes as i64)
+            .field_int("bit_flips", self.faults.injected_bit_flips as i64)
+            .field_int("latency_spikes", self.faults.injected_latency_spikes as i64)
+            .field_int("io_retries", self.faults.io_retries as i64)
+            .field_int("crc_failures", self.faults.crc_failures as i64)
+            .field_int("degraded_spills", self.faults.degraded_spills as i64)
+            .field_bool("ssd_degraded", self.faults.ssd_degraded)
+            .field_int("recoveries", self.recoveries as i64)
+            .end_obj();
         w.key("classes").begin_obj();
         for (name, c) in ["high", "normal", "batch"].iter().zip(self.classes.iter()) {
             w.key(name)
@@ -415,6 +479,32 @@ mod tests {
         let j = t.to_json();
         assert!(j.contains("\"prefix_hits\":3"), "{j}");
         assert!(j.contains("\"prefix_hit_tokens\":42"), "{j}");
+    }
+
+    #[test]
+    fn fault_counters_aggregate_and_json() {
+        let f = FaultCounters {
+            injected_read_errors: 1,
+            injected_write_errors: 2,
+            injected_torn_writes: 3,
+            injected_bit_flips: 4,
+            injected_latency_spikes: 5,
+            io_retries: 6,
+            crc_failures: 7,
+            degraded_spills: 8,
+            ssd_degraded: true,
+        };
+        assert_eq!(f.injected(), 15);
+        let t = Telemetry {
+            faults: f,
+            recoveries: 9,
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert!(j.contains("\"faults\":{\"injected\":15"), "{j}");
+        assert!(j.contains("\"crc_failures\":7"), "{j}");
+        assert!(j.contains("\"ssd_degraded\":true"), "{j}");
+        assert!(j.contains("\"recoveries\":9"), "{j}");
     }
 
     #[test]

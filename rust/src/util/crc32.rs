@@ -1,0 +1,93 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the
+//! spill-record checksum. Table-driven, one table built at first use;
+//! no external crates (offline environment), and the few well-known
+//! test vectors below pin the implementation against the standard so
+//! on-disk records stay readable across builds.
+
+/// Lazily built 256-entry lookup table for the reflected polynomial.
+fn table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// Running CRC-32 over byte chunks; [`finish`](Hasher::finish) applies
+/// the final complement.
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Self {
+        let t = table();
+        for &b in bytes {
+            self.state = t[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_vectors() {
+        // The canonical check value for CRC-32/ISO-HDLC.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn chunked_equals_one_shot() {
+        let data = b"spill record payload bytes";
+        let mut h = Hasher::new();
+        h.update(&data[..7]).update(&data[7..]);
+        assert_eq!(h.finish(), crc32(data));
+    }
+
+    #[test]
+    fn single_byte_flip_changes_the_sum() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let base = crc32(&data);
+        for i in 0..data.len() {
+            let mut d = data.clone();
+            d[i] ^= 0x40;
+            assert_ne!(crc32(&d), base, "flip at byte {i} went undetected");
+        }
+    }
+}

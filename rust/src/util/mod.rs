@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod crc32;
 pub mod pool;
 pub mod rng;
 pub mod text;

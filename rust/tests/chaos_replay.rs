@@ -1,0 +1,378 @@
+//! Chaos tier — runs WITHOUT `make artifacts`.
+//!
+//! Replays the PR-5 preemption traces through a scheduler whose engine
+//! parks KV state in the *real* tiered [`KvStore`] behind a seeded
+//! [`FaultyBackend`]: transient read/write errors, torn writes, silent
+//! single-bit corruption, and latency spikes, all on one deterministic
+//! schedule per seed. The self-healing contract under fire:
+//!
+//! - **zero `Failed` outcomes** — every injected fault is absorbed by
+//!   retry, DRAM fallback, or recompute-from-prompt recovery;
+//! - **byte-equality** — every request's tokens equal the fault-free
+//!   sequential reference, recovered sessions included;
+//! - **no leaks** — every KV slot and spill ticket is accounted for
+//!   when the trace drains;
+//! - **exact replay** — the same seed yields the same bytes and the
+//!   same injected-fault counters, twice.
+//!
+//! Extra seeds come from the `CHAOS_SEED` env var (CI runs the tier
+//! under several). The prefix-corruption and degraded-mode tests pin
+//! the remaining rungs of the degradation ladder.
+
+use anyhow::Result;
+use m2cache::coordinator::workload::{generate, Mix, TraceEvent, TraceSpec};
+use m2cache::coordinator::{
+    DecodeSession, FaultConfig, KvStore, KvTicket, Outcome, PrefixConfig, PrefixCostModel,
+    Request, SchedConfig, Scheduler, SessionEngine, SessionEvent, SpillTier, TieredPrefixCache,
+};
+use m2cache::telemetry::FaultCounters;
+use std::collections::HashMap;
+
+const VOCAB: usize = 97;
+/// KV geometry of the chaos engine: positions per slot and values per
+/// token per layer plane. Small on purpose — spill records stay cheap
+/// while every byte still travels through the checksummed format.
+const MAX_POS: usize = 64;
+const D: usize = 2;
+
+/// Deterministic engine over the real tiered store: next token is a
+/// pure function of the fed token and position (so any correct
+/// scheduler reproduces the same bytes regardless of interleaving),
+/// while every forward writes a KV row and every park/restore moves
+/// real bytes through the fault-injected backend.
+struct ChaosEngine {
+    kv: KvStore,
+}
+
+impl ChaosEngine {
+    fn new(slots: usize, faults: FaultConfig) -> ChaosEngine {
+        // DRAM budget 0: every clean park exercises the SSD record
+        // path; the degradation ladder may still fall back to DRAM.
+        ChaosEngine {
+            kv: KvStore::new(slots, 2, MAX_POS * D, 0)
+                .with_faults(faults)
+                .with_retry(3, 0),
+        }
+    }
+}
+
+impl SessionEngine for ChaosEngine {
+    fn capacity(&self) -> usize {
+        self.kv.capacity()
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .kv
+            .acquire()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        // A real KV write per forward, so parked state is never
+        // trivially zero and corruption has something to corrupt.
+        let pos = s.pos() % MAX_POS;
+        let val = token as f32 + s.pos() as f32 * 0.5;
+        self.kv
+            .write_token(s.slot(), s.pos() % 2, pos, D, &[val; D], &[-val; D]);
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[((token as usize).wrapping_mul(31) + s.pos() * 7 + 1) % VOCAB] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        self.kv.release(s.slot());
+    }
+
+    fn supports_spill(&self) -> bool {
+        true
+    }
+
+    fn spill(&mut self, s: &DecodeSession) -> Result<KvTicket> {
+        self.kv.spill(s.slot())
+    }
+
+    fn restore(&mut self, s: &mut DecodeSession, ticket: KvTicket) -> Result<()> {
+        let slot = self.kv.restore(ticket)?;
+        s.rebind_slot(slot);
+        Ok(())
+    }
+
+    fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
+        self.kv.discard(ticket);
+    }
+}
+
+fn spec(n: usize) -> TraceSpec {
+    TraceSpec {
+        mix: Mix::AdversarialLongPrompt,
+        n,
+        seed: 0x7ACE,
+        vocab: VOCAB as u32,
+    }
+}
+
+/// Reference: every request alone on a fault-free engine.
+fn sequential_reference(events: &[TraceEvent]) -> HashMap<u64, Vec<u32>> {
+    let mut eng = ChaosEngine::new(1, FaultConfig::default());
+    let mut tokens = HashMap::new();
+    for ev in events {
+        let mut s = eng.open(ev.to_request()).unwrap();
+        while !s.is_done() {
+            s.step(&mut eng).unwrap();
+        }
+        eng.close(&mut s);
+        tokens.insert(ev.id, s.generated);
+    }
+    tokens
+}
+
+/// The base chaos seeds CI sweeps, plus whatever `CHAOS_SEED` adds.
+fn chaos_seeds() -> Vec<u64> {
+    let mut seeds = vec![0xC4A0_51, 0xC4A0_52, 0xC4A0_53];
+    if let Ok(s) = std::env::var("CHAOS_SEED") {
+        if let Ok(v) = s.parse::<u64>() {
+            if !seeds.contains(&v) {
+                seeds.push(v);
+            }
+        }
+    }
+    seeds
+}
+
+fn chaos_faults(seed: u64) -> FaultConfig {
+    FaultConfig {
+        seed,
+        read_error: 0.25,
+        write_error: 0.25,
+        torn_write: 0.15,
+        bit_flip: 0.10,
+        latency_spike: 0.5,
+        spike_ms: 0, // count spikes, keep the clock virtual
+    }
+}
+
+/// What one chaos replay observed.
+struct ChaosRun {
+    tokens: HashMap<u64, Vec<u32>>,
+    recovered_events: u64,
+    preemptions: u64,
+    resumes: u64,
+    recoveries: u64,
+    faults: FaultCounters,
+}
+
+/// Drive a trace to idle under 2x oversubscription with the given
+/// fault schedule. Panics on any `Failed` outcome; asserts no slot or
+/// ticket leaks once the trace drains.
+fn chaos_replay(events: &[TraceEvent], faults: FaultConfig) -> ChaosRun {
+    const SLOTS: usize = 2;
+    let mut sched = Scheduler::with_config(
+        ChaosEngine::new(SLOTS, faults),
+        2 * SLOTS,
+        SchedConfig::default(),
+    );
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut tokens: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut recovered_events = 0u64;
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        for ev in &r.events {
+            if matches!(ev, SessionEvent::Recovered { .. }) {
+                recovered_events += 1;
+            }
+        }
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => {
+                    panic!("degradation ladder leaked a failure: req {id}: {error}")
+                }
+            }
+        }
+    }
+    assert_eq!(sched.engine().kv.in_use(), 0, "leaked KV slots");
+    assert_eq!(sched.engine().kv.spilled(), 0, "leaked spill tickets");
+    ChaosRun {
+        tokens,
+        recovered_events,
+        preemptions: sched.preemptions,
+        resumes: sched.resumes,
+        recoveries: sched.recoveries,
+        faults: sched.engine().kv.fault_counters(),
+    }
+}
+
+#[test]
+fn chaos_schedules_preserve_bytes_and_leak_nothing() {
+    let events = generate(&spec(40));
+    let reference = sequential_reference(&events);
+    let mut injected_total = 0u64;
+    for seed in chaos_seeds() {
+        let run = chaos_replay(&events, chaos_faults(seed));
+        assert_eq!(
+            run.tokens.len(),
+            events.len(),
+            "seed {seed:#x}: lost requests"
+        );
+        for (id, toks) in &run.tokens {
+            assert_eq!(
+                toks, &reference[id],
+                "seed {seed:#x}: request {id} bytes diverged under faults"
+            );
+        }
+        assert!(run.preemptions > 0, "seed {seed:#x}: trace never preempted");
+        // Every preemption settles exactly one way: a clean restore or
+        // a recompute-from-prompt recovery.
+        assert_eq!(
+            run.preemptions,
+            run.resumes + run.recoveries,
+            "seed {seed:#x}: preemptions must pair with resumes + recoveries"
+        );
+        assert_eq!(
+            run.recovered_events, run.recoveries,
+            "seed {seed:#x}: Recovered events disagree with the counter"
+        );
+        injected_total += run.faults.injected();
+        // Exact replay: the same seed reproduces bytes, recovery
+        // decisions, and the injected-fault schedule bit-for-bit.
+        let again = chaos_replay(&events, chaos_faults(seed));
+        assert_eq!(again.tokens, run.tokens, "seed {seed:#x}: bytes not replayable");
+        assert_eq!(again.recoveries, run.recoveries, "seed {seed:#x}");
+        assert_eq!(again.faults, run.faults, "seed {seed:#x}: fault schedule drifted");
+    }
+    assert!(
+        injected_total > 0,
+        "chaos seeds injected nothing — the tier is vacuous"
+    );
+}
+
+#[test]
+fn all_restores_corrupt_forces_recompute_for_every_preemption() {
+    // bit_flip 1.0: every spill record lands silently corrupt, so every
+    // restore must fail the CRC check and climb the ladder to
+    // recompute-from-prompt — deterministically, whatever the RNG does.
+    let events = generate(&spec(40));
+    let reference = sequential_reference(&events);
+    let faults = FaultConfig {
+        bit_flip: 1.0,
+        ..FaultConfig::default()
+    };
+    let run = chaos_replay(&events, faults);
+    assert!(run.preemptions > 0, "trace never preempted");
+    assert_eq!(run.resumes, 0, "a corrupt record restored");
+    assert_eq!(run.recoveries, run.preemptions);
+    assert!(run.faults.crc_failures >= run.preemptions);
+    for (id, toks) in &run.tokens {
+        assert_eq!(toks, &reference[id], "recovered request {id} diverged");
+    }
+}
+
+#[test]
+fn corrupt_prefix_cache_entry_is_invalidated_with_cold_prefill_fallback() {
+    // hot_slots 0 + DRAM budget 0: the insert parks straight to the
+    // SSD file; bit_flip 1.0 corrupts the record in flight.
+    let faults = FaultConfig {
+        bit_flip: 1.0,
+        ..FaultConfig::default()
+    };
+    let mut kv = KvStore::new(4, 2, 8 * D, 0).with_faults(faults).with_retry(1, 0);
+    let mut pc = TieredPrefixCache::new(PrefixConfig {
+        max_entries: 8,
+        min_depth: 1,
+        hot_slots: 0,
+        promote_hits: 2,
+        vals_per_token: D,
+        cost: PrefixCostModel::default(),
+    });
+    let prompt = [5, 1, 4, 1];
+    let src = kv.acquire().unwrap();
+    for (pos, &t) in prompt.iter().enumerate() {
+        for layer in 0..2 {
+            let base = t as f32 * 10.0 + layer as f32;
+            kv.write_token(src, layer, pos, D, &[base, base + 0.5], &[-base, -base - 0.5]);
+        }
+    }
+    pc.insert(&mut kv, &prompt, src);
+    kv.release(src);
+    assert_eq!(pc.len(), 1);
+    assert_eq!(kv.ssd_parked(), 1, "insert must park to the SSD file");
+    // Attach must catch the flipped bit via the record CRC, drop the
+    // entry, and report a miss — the caller cold-prefills instead of
+    // consuming corrupt rows.
+    let dst = kv.acquire().unwrap();
+    assert!(pc.attach(&mut kv, &prompt, dst).is_none());
+    let stats = *pc.stats();
+    assert_eq!(stats.invalidated, 1);
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.hits, 0);
+    assert_eq!(pc.len(), 0, "broken entry must leave the index");
+    assert!(kv.fault_counters().crc_failures >= 1);
+    assert_eq!(kv.spilled(), 0, "invalidated entry leaked its ticket");
+    // The next lookup is a plain miss: no poisoned state left behind.
+    assert!(pc.attach(&mut kv, &prompt, dst).is_none());
+    assert_eq!(pc.stats().invalidated, 1, "double invalidation");
+    kv.release(dst);
+    pc.drain(&mut kv);
+    assert_eq!((kv.pins(), kv.spilled(), kv.in_use()), (0, 0, 0));
+}
+
+#[test]
+fn persistent_write_failure_degrades_to_dram_only_spill() {
+    // Every SSD write errors before any byte lands. Three exhausted
+    // spills in a row flip the store into DRAM-only mode; later parks
+    // go straight to DRAM without touching the file, and everything
+    // still round-trips.
+    let faults = FaultConfig {
+        write_error: 1.0,
+        ..FaultConfig::default()
+    };
+    let mut kv = KvStore::new(4, 2, 8 * D, 0).with_faults(faults).with_retry(2, 0);
+    let mut tickets = Vec::new();
+    for i in 0..4u64 {
+        let s = kv.acquire().expect("pool has room");
+        let val = (i + 1) as f32;
+        kv.write_token(s, 0, 0, D, &[val; D], &[-val; D]);
+        let t = kv.spill(s).expect("spill must degrade, not fail");
+        assert_eq!(kv.ticket_tier(t), Some(SpillTier::Dram));
+        tickets.push((t, val));
+        let f = kv.fault_counters();
+        if i < 3 {
+            assert_eq!(f.degraded_spills, i + 1);
+            assert_eq!(f.ssd_degraded, i == 2, "streak flips at the third exhaustion");
+        } else {
+            // Degraded mode: the fourth park never touched the file.
+            assert_eq!(f.degraded_spills, 3);
+            assert_eq!(f.injected_write_errors, 3 * 2, "retry budget is 2 attempts");
+            assert!(f.ssd_degraded);
+        }
+    }
+    assert!(kv.ssd_degraded());
+    assert_eq!(kv.ssd_parked(), 0);
+    for (t, val) in tickets {
+        let s = kv.restore(t).expect("DRAM fallback restores cleanly");
+        assert_eq!(&kv.k_layer(s, 0)[..D], &[val; D]);
+        kv.release(s);
+    }
+    assert_eq!(kv.spilled(), 0);
+}

@@ -185,6 +185,57 @@ fn oversubscribed_exec_serving_resumes_byte_identically() {
 }
 
 #[test]
+fn corrupt_spill_recovers_by_recompute_on_the_executed_engine() {
+    // The degradation ladder on the real rust→PJRT stack: every spill
+    // record is silently bit-flipped in flight, so the preempted
+    // session's restore fails its CRC check and the scheduler
+    // recomputes it from the prompt. No request fails, and the
+    // recomputed bytes equal the uncontended reference.
+    let art = need_artifacts!();
+    use m2cache::coordinator::Priority;
+    let reqs = [("the quick brown fox ", 10usize), ("pack my box with ", 6usize)];
+    let mut reference = Vec::new();
+    for (p, n) in &reqs {
+        let mut e = ExecEngine::new(&art, EngineConfig::full()).unwrap();
+        reference.push(e.generate(&tokenize(p), *n).unwrap());
+    }
+    let mut cfg = EngineConfig::full();
+    cfg.max_sessions = 2;
+    cfg.kv_slots = Some(1);
+    cfg.faults.bit_flip = 1.0; // corrupt every spill record in flight
+    let eng = ExecEngine::new(&art, cfg).unwrap();
+    let mut sched = Scheduler::with_config(eng, 2, SchedConfig::default());
+    sched.submit(
+        Request::new(1, tokenize(reqs[0].0), reqs[0].1).with_class(Priority::Batch, None),
+    );
+    for _ in 0..3 {
+        sched.tick(); // request 1 reaches decode, KV populated
+    }
+    sched.submit(
+        Request::new(2, tokenize(reqs[1].0), reqs[1].1)
+            .with_class(Priority::High, Some(600_000)),
+    );
+    let outs = sched.run_until_idle();
+    assert_eq!(sched.preemptions, 1, "High must preempt the Batch resident");
+    assert_eq!(sched.resumes, 0, "a corrupt record must never restore");
+    assert_eq!(sched.recoveries, 1, "the preempted session recomputes");
+    let mut got: Vec<(u64, Vec<u32>)> = outs
+        .into_iter()
+        .map(|o| match o {
+            Outcome::Done(c) => (c.response.id, c.response.tokens),
+            Outcome::Failed { id, error } => panic!("req {id}: {error}"),
+        })
+        .collect();
+    got.sort_by_key(|(id, _)| *id);
+    assert_eq!(got.len(), 2);
+    assert_eq!(got[0].1, reference[0], "recomputed bytes diverged");
+    assert_eq!(got[1].1, reference[1]);
+    let tel = &sched.engine().tel;
+    assert!(tel.faults.injected_bit_flips >= 1, "{:?}", tel.faults);
+    assert!(tel.faults.crc_failures >= 1, "{:?}", tel.faults);
+}
+
+#[test]
 fn batched_serving_matches_sequential() {
     // The tentpole's executed-path acceptance: serving the same
     // requests through batched turn-set assembly (shared per-layer

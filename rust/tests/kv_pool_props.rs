@@ -8,7 +8,7 @@
 //! identically through whichever spill tier (DRAM area or SSD file)
 //! took it, and no slot or ticket may ever leak.
 
-use m2cache::coordinator::{KvPool, KvStore, KvTicket, SpillTier};
+use m2cache::coordinator::{FaultConfig, KvPool, KvStore, KvTicket, SpillTier};
 use m2cache::util::check::Check;
 use m2cache::util::rng::Rng;
 use std::collections::{BTreeSet, HashMap};
@@ -332,6 +332,72 @@ fn spill_file_high_water_plateaus_under_steady_churn() {
         assert_eq!(kv.file_free_records(), high, "records not recycled at round {round}");
         assert_eq!(kv.ssd_parked(), 0);
     }
+}
+
+/// A corrupt spill record can never round-trip. Park a sentinel
+/// through each spill tier, flip one byte (sweeping every byte index
+/// in the record via the test-only corruption hook), and the restore
+/// must error — never hand back silently wrong bytes. The failed
+/// restore leaks no slot, and the ticket stays discardable.
+#[test]
+fn flipping_any_byte_of_a_parked_record_fails_restore() {
+    // 2 layers x stride 8 -> 128 payload bytes (+16-byte header on
+    // SSD); DRAM parks sweep k-bytes + v-bytes + the stored CRC.
+    let record = KvStore::new(2, 2, 8, 0).record_bytes() as usize;
+    for budget in [0u64, u64::MAX / 2] {
+        let expect_tier = if budget == 0 { SpillTier::Ssd } else { SpillTier::Dram };
+        for byte_idx in 0..record {
+            let mut kv = KvStore::new(2, 2, 8, budget);
+            let s = kv.acquire().expect("pool has room");
+            kv.write_token(s, 0, 0, 2, &[1.5, -2.5], &[3.5, -4.5]);
+            kv.write_token(s, 1, 3, 2, &[9.0, 8.0], &[7.0, 6.0]);
+            let t = kv.spill(s).expect("clean spill");
+            assert_eq!(kv.ticket_tier(t), Some(expect_tier));
+            assert!(kv.corrupt_parked_byte(t, byte_idx), "hook lost the ticket");
+            assert!(
+                kv.restore(t).is_err(),
+                "byte {byte_idx} round-tripped through {expect_tier:?}"
+            );
+            assert!(kv.fault_counters().crc_failures >= 1, "byte {byte_idx}: CRC silent");
+            assert_eq!(kv.in_use(), 0, "byte {byte_idx}: failed restore leaked a slot");
+            assert!(kv.discard(t), "byte {byte_idx}: ticket lost after failed restore");
+            assert_eq!(kv.spilled(), 0);
+        }
+    }
+}
+
+/// Publish-ordering pin: a spill ticket is only published once the
+/// full record is durably on disk. With every SSD write torn (a
+/// strict prefix lands, then the write errors), no ticket may ever
+/// point at a torn record — the store retries, exhausts, recycles the
+/// failed record allocation, and parks the state in DRAM instead,
+/// byte-intact.
+#[test]
+fn torn_writes_never_publish_a_ticket_onto_a_torn_record() {
+    let cfg = FaultConfig {
+        torn_write: 1.0,
+        ..FaultConfig::default()
+    };
+    // DRAM budget 0 forces the SSD attempt first.
+    let mut kv = KvStore::new(2, 2, 8, 0).with_faults(cfg).with_retry(3, 0);
+    let s = kv.acquire().expect("pool has room");
+    kv.write_token(s, 1, 2, 2, &[5.0, 6.0], &[-5.0, -6.0]);
+    let t = kv.spill(s).expect("spill must degrade, not fail");
+    assert_eq!(
+        kv.ticket_tier(t),
+        Some(SpillTier::Dram),
+        "ticket published against a torn SSD record"
+    );
+    assert_eq!(kv.ssd_parked(), 0);
+    let f = kv.fault_counters();
+    assert!(f.injected_torn_writes >= 3, "retries not exhausted: {f:?}");
+    assert_eq!(f.degraded_spills, 1, "{f:?}");
+    // The failed record allocation was recycled, not leaked.
+    assert_eq!(kv.file_free_records(), kv.file_high_water());
+    // And the parked bytes are intact through the fallback tier.
+    let s = kv.restore(t).expect("restore from the DRAM fallback");
+    assert_eq!(&kv.k_layer(s, 1)[4..6], &[5.0, 6.0]);
+    assert_eq!(&kv.v_layer(s, 1)[4..6], &[-5.0, -6.0]);
 }
 
 #[test]

@@ -558,3 +558,44 @@ fn v2_parse_errors_carry_stable_codes() {
     }
     handle.join().unwrap();
 }
+
+#[test]
+fn half_open_connections_are_reaped_while_live_clients_stay_served() {
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server::serve_with_opts(
+            StubSessionEngine::new(1),
+            "127.0.0.1:0",
+            Some(1),
+            Some(Duration::from_millis(250)),
+            move |a| {
+                let _ = addr_tx.send(a);
+            },
+        )
+        .unwrap()
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    // A half-open client: connects, dribbles a partial line (no
+    // newline), then stalls forever. The reaper must close the socket
+    // without waiting for the line to complete — before this test's
+    // generous read timeout, and without the server shutting down.
+    let mut staller = TcpStream::connect(addr).unwrap();
+    staller.write_all(b"GEN 5 never finished").unwrap();
+    staller
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    let mut sink = Vec::new();
+    let n = std::io::Read::read_to_end(&mut staller, &mut sink)
+        .expect("reaper should close the stalled socket, not strand it");
+    assert_eq!(n, 0, "reaped connection produced bytes: {sink:?}");
+
+    // The server is still up: a live client gets a normal v1 reply
+    // (this also consumes the max-requests bound and shuts it down).
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "GEN 3 hello world");
+    let reply = read_line(&mut reader);
+    assert!(reply.starts_with("OK "), "live client got {reply:?}");
+    handle.join().unwrap();
+}
