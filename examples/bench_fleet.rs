@@ -1,0 +1,222 @@
+//! Heterogeneous-fleet bench: replays one decode-heavy trace over
+//! several replica mixes — homogeneous top-tier, homogeneous
+//! old-fashioned, and a mixed fleet that disaggregates prefill onto
+//! the fast GPU while carbon-scored handoffs drain decode onto the
+//! frugal ones — all on the virtual clock, costed by the PR-7 carbon
+//! model (operational + amortized embodied). Writes `BENCH_fleet.json`
+//! so CI can archive the gCO2/token-vs-TTFT frontier per PR.
+//!
+//!   cargo run --release --example bench_fleet            # full run
+//!   cargo run --release --example bench_fleet -- --quick # CI smoke
+//!                                        [--out PATH]    # json path
+//!
+//! Acceptance bars (asserted in the full run, reported in both):
+//!   - the mixed fleet emits less gCO2 per token than the all-fast
+//!     homogeneous fleet;
+//!   - its p99 TTFT stays within `MAX_TTFT_INFLATION` of all-fast
+//!     (the dedicated prefill replica keeps admission snappy);
+//!   - it strictly dominates at least one homogeneous config on BOTH
+//!     axes at once (less carbon per token AND no worse p99 TTFT).
+
+use m2cache::carbon::{find_gpu, GpuSpec};
+use m2cache::coordinator::workload::{generate, Mix, TraceSpec};
+use m2cache::coordinator::{EngineConfig, FleetConfig, FleetRunReport, SimEngine};
+use m2cache::memsim::HardwareSpec;
+use m2cache::model::spec::ModelSpec;
+use m2cache::util::bench::fmt_dur;
+use m2cache::util::text::JsonWriter;
+use std::time::{Duration, Instant};
+
+/// Stretch the DecodeHeavy inter-arrival gaps so the offered decode
+/// load fits the slow pair without saturating it — the bench measures
+/// the routing policy, not a pathological queueing collapse.
+const ARRIVAL_SCALE: u64 = 50;
+/// The mixed fleet may trade at most this much p99 TTFT against the
+/// all-fast baseline for its carbon win.
+const MAX_TTFT_INFLATION: f64 = 1.5;
+
+struct Case {
+    name: &'static str,
+    gpus: Vec<&'static GpuSpec>,
+    rep: FleetRunReport,
+    host: Duration,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_fleet.json".to_string());
+    let (n, slots): (usize, usize) = if quick { (16, 8) } else { (48, 8) };
+
+    let spec = ModelSpec::llama2_7b();
+    let vocab = spec.vocab as u32;
+    let mut events = generate(&TraceSpec {
+        mix: Mix::DecodeHeavy,
+        n,
+        seed: 0xF1EE7,
+        vocab,
+    });
+    for ev in &mut events {
+        ev.at_ms *= ARRIVAL_SCALE;
+    }
+    let engine = SimEngine::new(spec, HardwareSpec::rtx3090_testbed(), EngineConfig::full());
+
+    let a100 = find_gpu("A100").expect("gpu db has A100");
+    let m40 = find_gpu("M40").expect("gpu db has M40");
+    let mixes: Vec<(&'static str, Vec<&'static GpuSpec>)> = vec![
+        ("3xA100", vec![a100, a100, a100]),
+        ("2xA100", vec![a100, a100]),
+        ("1xA100+2xM40", vec![a100, m40, m40]),
+        ("3xM40", vec![m40, m40, m40]),
+    ];
+    let cases: Vec<Case> = mixes
+        .into_iter()
+        .map(|(name, gpus)| {
+            let host = Instant::now();
+            let rep = engine
+                .run_fleet(&gpus, slots, &events, FleetConfig::default())
+                .expect("fleet replay must drain the trace");
+            Case {
+                name,
+                gpus,
+                rep,
+                host: host.elapsed(),
+            }
+        })
+        .collect();
+
+    println!(
+        "Carbon-aware fleet mixes, llama2-7b cost model, decode-heavy \
+         trace (n={n}, arrivals x{ARRIVAL_SCALE}), virtual clock:\n"
+    );
+    println!(
+        "{:<13} {:>7} {:>9} {:>8} {:>8} {:>9} {:>9} {:>9} {:>6} {:>9}",
+        "mix", "tokens", "tok/s(v)", "gCO2 g", "mg/tok", "p50 TTFT", "p99 TTFT", "handoffs",
+        "recov", "host"
+    );
+    for c in &cases {
+        println!(
+            "{:<13} {:>7} {:>9.1} {:>8.3} {:>8.3} {:>9.1} {:>9.1} {:>9} {:>6} {:>9}",
+            c.name,
+            c.rep.tokens,
+            c.rep.tok_per_s,
+            c.rep.gco2_g,
+            c.rep.gco2_mg_per_token,
+            c.rep.p50_ttft_ms,
+            c.rep.p99_ttft_ms,
+            c.rep.counters.handoffs,
+            c.rep.counters.handoff_recoveries,
+            fmt_dur(c.host),
+        );
+    }
+
+    let by = |name: &str| cases.iter().find(|c| c.name == name).expect("known mix");
+    let fast3 = by("3xA100");
+    let mixed = by("1xA100+2xM40");
+    let carbon_saving = 1.0 - mixed.rep.gco2_mg_per_token / fast3.rep.gco2_mg_per_token;
+    let ttft_inflation = mixed.rep.p99_ttft_ms / fast3.rep.p99_ttft_ms.max(1e-9);
+    // A homogeneous config is dominated when the mixed fleet beats it
+    // on carbon per token without giving up tail admission latency.
+    let dominates: Vec<&str> = cases
+        .iter()
+        .filter(|c| !c.name.contains('+'))
+        .filter(|h| {
+            mixed.rep.gco2_mg_per_token < h.rep.gco2_mg_per_token
+                && mixed.rep.p99_ttft_ms <= h.rep.p99_ttft_ms
+        })
+        .map(|h| h.name)
+        .collect();
+    println!(
+        "\nmixed fleet: {:.1}% less gCO2/token than 3xA100 at {ttft_inflation:.2}x its \
+         p99 TTFT; dominates [{}] on both axes",
+        carbon_saving * 100.0,
+        dominates.join(", "),
+    );
+
+    let mut w = JsonWriter::new();
+    w.begin_obj()
+        .field_str("engine", "simengine-fleet-virtual-clock")
+        .field_str("model", "llama2-7b")
+        .field_str("trace", "decode-heavy")
+        .field_int("n", n as i64)
+        .field_int("slots_per_replica", slots as i64)
+        .field_int("arrival_scale", ARRIVAL_SCALE as i64)
+        .field_num("mixed_carbon_saving_vs_3xA100", carbon_saving)
+        .field_num("mixed_p99_ttft_inflation_vs_3xA100", ttft_inflation)
+        .field_str("mixed_dominates", &dominates.join(","));
+    w.key("cases").begin_arr();
+    for c in &cases {
+        let names: Vec<&str> = c.gpus.iter().map(|g| g.name).collect();
+        w.begin_obj()
+            .field_str("name", c.name)
+            .field_str("gpus", &names.join(","))
+            .field_int("tokens", c.rep.tokens as i64)
+            .field_num("tok_per_s_virtual", c.rep.tok_per_s)
+            .field_num("gco2_g", c.rep.gco2_g)
+            .field_num("gco2_mg_per_token", c.rep.gco2_mg_per_token)
+            .field_num("p50_ttft_ms", c.rep.p50_ttft_ms)
+            .field_num("p99_ttft_ms", c.rep.p99_ttft_ms)
+            .field_num("makespan_ms", c.rep.makespan_ms)
+            .field_int("handoffs", c.rep.counters.handoffs as i64)
+            .field_int("handoff_bytes", c.rep.counters.handoff_bytes as i64)
+            .field_int("handoff_aborts", c.rep.counters.handoff_aborts as i64)
+            .field_int("handoff_recoveries", c.rep.counters.handoff_recoveries as i64)
+            .field_num("host_ms", c.host.as_secs_f64() * 1e3);
+        w.key("replicas").begin_arr();
+        for r in c.rep.counters.live() {
+            w.begin_obj()
+                .field_str("gpu", r.gpu)
+                .field_int("prefill_turns", r.prefill_turns as i64)
+                .field_int("decode_turns", r.decode_turns as i64)
+                .field_int("handoffs_in", r.handoffs_in as i64)
+                .field_int("handoffs_out", r.handoffs_out as i64)
+                .field_num("gco2_g", r.gco2_g)
+                .end_obj();
+        }
+        w.end_arr().end_obj();
+    }
+    w.end_arr().end_obj();
+    std::fs::write(&out_path, w.finish()).expect("write BENCH_fleet.json");
+    println!("wrote {out_path}");
+
+    // Structural bars hold in both modes: every mix drains the same
+    // trace to the same token count, and the mixed fleet actually
+    // migrated sessions (otherwise the comparison is vacuous).
+    for c in &cases {
+        assert!(c.rep.tokens > 0, "{}: empty replay", c.name);
+        assert_eq!(c.rep.tokens, cases[0].rep.tokens, "{}: token count drifted", c.name);
+    }
+    assert!(mixed.rep.counters.handoffs > 0, "mixed fleet never handed off");
+
+    if !quick {
+        // The PR acceptance bars — fail loudly on regression.
+        assert!(
+            mixed.rep.gco2_mg_per_token < fast3.rep.gco2_mg_per_token,
+            "REGRESSION: mixed fleet emits more than all-fast \
+             ({:.3} vs {:.3} mg/token)",
+            mixed.rep.gco2_mg_per_token,
+            fast3.rep.gco2_mg_per_token,
+        );
+        assert!(
+            ttft_inflation <= MAX_TTFT_INFLATION,
+            "REGRESSION: mixed p99 TTFT inflated {ttft_inflation:.2}x \
+             (> {MAX_TTFT_INFLATION}x)"
+        );
+        assert!(
+            !dominates.is_empty(),
+            "REGRESSION: mixed fleet dominates no homogeneous config"
+        );
+        println!(
+            "acceptance: {:.1}% carbon saving vs 3xA100, p99 inflation \
+             {ttft_inflation:.2}x <= {MAX_TTFT_INFLATION}x, dominates \
+             [{}] — PASS",
+            carbon_saving * 100.0,
+            dominates.join(", "),
+        );
+    }
+}

@@ -19,7 +19,7 @@ use crate::cache::{
     NeuronAt, Preloader,
 };
 use crate::coordinator::config::EngineConfig;
-use crate::coordinator::kv_store::KvStore;
+use crate::coordinator::kv_store::{HandoffRecord, KvStore};
 use crate::coordinator::prefix::{PrefixConfig, PrefixStats, TieredPrefixCache};
 use crate::coordinator::request::Request;
 use crate::coordinator::session::{DecodeSession, KvTicket, SessionEngine};
@@ -194,7 +194,9 @@ impl ExecEngine {
         )
         .with_faults(cfg.faults)
         .with_retry(cfg.spill_retries, 1);
-        let legacy_slot = kv.acquire().expect("fresh pool has a slot");
+        let legacy_slot = kv
+            .acquire()
+            .ok_or_else(|| anyhow::anyhow!("fresh KV pool yielded no legacy feed slot"))?;
         let prefix = cfg.prefix_cache.then(|| {
             TieredPrefixCache::new(PrefixConfig {
                 max_entries: cfg.prefix_max_entries,
@@ -1069,6 +1071,64 @@ impl SessionEngine for ExecEngine {
         self.kv.discard(ticket);
         self.snap_kv_tel();
         self.fold_closed(s);
+    }
+
+    fn supports_handoff(&self) -> bool {
+        true
+    }
+
+    fn export_kv(&mut self, s: &mut DecodeSession) -> Result<HandoffRecord> {
+        // Copy-park the rows decode has written (the slot stays bound),
+        // lift the parked record out of the store as a portable
+        // checksummed M2KV buffer, and only then free the slot. A
+        // failure at either stage discards the park and leaves the
+        // session serviceable in place — the fleet's abort contract.
+        let used = s.pos() * self.spec().d_model;
+        let ticket = self.kv.park_prefix_copy(s.slot(), used);
+        self.snap_kv_tel();
+        let ticket = ticket?;
+        let bytes = match self.kv.export_record(ticket) {
+            Ok(b) => b,
+            Err(e) => {
+                self.kv.discard(ticket);
+                self.snap_kv_tel();
+                return Err(e);
+            }
+        };
+        self.snap_kv_tel();
+        self.kv.release(s.slot());
+        self.tel.bump("sessions_handed_off", 1);
+        Ok(HandoffRecord {
+            session_id: s.id,
+            used: s.pos(),
+            kv_bytes: bytes.len() as u64,
+            bytes,
+        })
+    }
+
+    fn import_kv(&mut self, s: &mut DecodeSession, rec: &HandoffRecord) -> Result<()> {
+        anyhow::ensure!(rec.session_id == s.id, "handoff record for wrong session");
+        // Verify the record end-to-end, park it through the normal tier
+        // choice, then redeem it into a free HBM slot. Any failure
+        // leaves this engine unchanged and the fleet recomputes the
+        // session from its prompt — wrong bytes are never served.
+        let ticket = self.kv.import_record(&rec.bytes);
+        self.snap_kv_tel();
+        let ticket = ticket?;
+        let slot = self.kv.restore(ticket);
+        self.snap_kv_tel();
+        match slot {
+            Ok(slot) => {
+                s.rebind_slot(slot);
+                self.tel.bump("sessions_handed_in", 1);
+                Ok(())
+            }
+            Err(e) => {
+                self.kv.discard(ticket);
+                self.snap_kv_tel();
+                Err(e)
+            }
+        }
     }
 
     fn prefix_attach(&mut self, s: &mut DecodeSession) -> usize {

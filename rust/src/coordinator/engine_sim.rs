@@ -10,7 +10,12 @@ use crate::cache::{
     StorageMix,
 };
 use crate::coordinator::config::EngineConfig;
+use crate::coordinator::fleet::{
+    Fleet, FleetConfig, FleetRunReport, PhaseCost, VirtualReplicaEngine,
+};
 use crate::coordinator::request::Priority;
+use crate::coordinator::workload::TraceEvent;
+use anyhow::Result;
 use crate::memsim::{Channel, Completion, HardwareSpec, Link, SimClock, Tier};
 use crate::model::spec::ModelSpec;
 use crate::precision::plan::{plan_from_active, LayerPlan};
@@ -949,6 +954,52 @@ impl SimEngine {
             telemetry: self.tel.clone(),
             carbon,
         }
+    }
+
+    /// Per-token step costs this engine's (model, config) would see on
+    /// `gpu` — what the fleet router prices placements with. Prefill is
+    /// compute-bound at the GPU's peak FLOPs; decode streams the
+    /// mixed-precision-resident fraction of the weights at memory
+    /// bandwidth plus the calibrated host overhead (without MP the full
+    /// fp16 footprint streams).
+    pub fn fleet_phase_cost(&self, gpu: &GpuSpec) -> PhaseCost {
+        let frac = if self.cfg.use_mp {
+            self.cfg.ratios.active_fraction().clamp(0.05, 1.0)
+        } else {
+            1.0
+        };
+        PhaseCost::derive(
+            self.spec.total_params() as f64,
+            self.spec.fp16_bytes() as f64,
+            frac,
+            self.hw.token_overhead_s,
+            gpu,
+        )
+    }
+
+    /// Fleet mode: replay `events` over one replica per entry of
+    /// `gpus`, each costed by [`Self::fleet_phase_cost`] and sized at
+    /// `slots_per_replica` concurrent sessions, with KV handoffs
+    /// metered at this model's per-token KV footprint. This is the
+    /// sweep surface behind `bench_fleet`'s tokens/sec-vs-gCO2
+    /// frontiers across heterogeneous replica mixes.
+    pub fn run_fleet(
+        &self,
+        gpus: &[&'static GpuSpec],
+        slots_per_replica: usize,
+        events: &[TraceEvent],
+        cfg: FleetConfig,
+    ) -> Result<FleetRunReport> {
+        let mut fleet = Fleet::new(cfg);
+        for &gpu in gpus {
+            let eng = VirtualReplicaEngine::new(
+                slots_per_replica,
+                self.spec.vocab,
+                self.spec.kv_bytes_per_token(),
+            );
+            fleet.add_replica(eng, gpu, self.fleet_phase_cost(gpu));
+        }
+        fleet.run_trace(events)
     }
 
     /// Multi-tenant decode with the PR-1 shape: every tenant untagged
@@ -1964,5 +2015,38 @@ mod tests {
         fn cfg_dram() -> u64 {
             40 * (1 << 30)
         }
+    }
+
+    #[test]
+    fn fleet_mode_sweeps_replica_mixes() {
+        // Fleet mode on the sim geometry: a heterogeneous 1×A100+1×M40
+        // pair must complete a decode-heavy trace with handoffs firing
+        // and per-replica carbon rows summing to the total; the
+        // homogeneous fast pair finishes no slower but burns more
+        // operational+embodied carbon per token.
+        use crate::coordinator::workload::{generate, Mix, TraceSpec};
+        let e = engine(ModelSpec::llama2_7b(), EngineConfig::full());
+        let events = generate(&TraceSpec {
+            mix: Mix::DecodeHeavy,
+            n: 12,
+            seed: 21,
+            vocab: e.spec.vocab as u32,
+        });
+        let a100 = find_gpu("A100").unwrap();
+        let m40 = find_gpu("M40").unwrap();
+        let cost = e.fleet_phase_cost(a100);
+        assert!(cost.prefill_ms > 0.0 && cost.decode_ms > cost.prefill_ms);
+        let mixed = e.run_fleet(&[a100, m40], 8, &events, FleetConfig::default()).unwrap();
+        let fast = e.run_fleet(&[a100, a100], 8, &events, FleetConfig::default()).unwrap();
+        assert_eq!(mixed.tokens, fast.tokens);
+        assert!(mixed.tokens > 0);
+        let sum: f64 = mixed.counters.live().iter().map(|r| r.gco2_g).sum();
+        assert!((sum - mixed.gco2_g).abs() < 1e-9);
+        assert!(
+            mixed.gco2_mg_per_token < fast.gco2_mg_per_token,
+            "mixed {} vs fast {}",
+            mixed.gco2_mg_per_token,
+            fast.gco2_mg_per_token
+        );
     }
 }

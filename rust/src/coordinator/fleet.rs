@@ -1,0 +1,909 @@
+//! Carbon-aware heterogeneous replica fleet: prefill/decode
+//! disaggregation with ticket-based KV handoff.
+//!
+//! A [`Fleet`] owns N engine replicas, each bound to a GPU model from
+//! [`crate::carbon::gpu_db`] with per-phase step costs derived from its
+//! spec sheet ([`PhaseCost`]). The router classifies every session step
+//! as prefill or decode and scores placements with a carbon/latency
+//! cost model, so compute-bound prefill lands on fast replicas and
+//! bandwidth-bound steady-state decode drains to low-carbon ones.
+//!
+//! Migration reuses the checksummed M2KV spill-record format: the
+//! source serializes a session's KV rows into a portable
+//! [`HandoffRecord`] ([`SessionEngine::export_kv`]), the inter-replica
+//! NIC link is charged for the bytes, and the destination verifies the
+//! record end-to-end before landing it in a free slot
+//! ([`SessionEngine::import_kv`]). A failed export aborts the handoff
+//! (the session keeps decoding in place); a failed import recomputes
+//! the session from its prompt on the destination — deterministic
+//! greedy decode makes the replay byte-identical, so a faulted handoff
+//! is a latency event, never a failed request.
+//!
+//! The fleet runs on a discrete-event virtual clock (per-replica
+//! `busy_until`), so replica mixes sweep in milliseconds and results
+//! replay bit-identically from a seed.
+
+use crate::carbon::gpu_db::GpuSpec;
+use crate::carbon::model::{LIFESPAN_HOURS, PAPER_INTENSITY_G_PER_KWH};
+use crate::coordinator::kv_store::HandoffRecord;
+use crate::coordinator::request::Request;
+use crate::coordinator::session::{DecodeSession, SessionEngine, StepOutcome};
+use crate::coordinator::workload::TraceEvent;
+use crate::memsim::{HardwareSpec, LinkSpec};
+use crate::telemetry::{FleetCounters, ReplicaCounters, MAX_FLEET_REPLICAS};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+
+/// Fraction of a GPU's peak FLOPs a chunked prefill sustains (memory
+/// stalls, launch overhead — the executed path's observed efficiency
+/// band).
+pub const PREFILL_EFF: f64 = 0.3;
+
+/// Board-power utilization while running prefill (compute-bound, near
+/// peak). Scales TDP when attributing operational carbon to busy time.
+pub const PREFILL_UTIL: f64 = 0.9;
+
+/// Board-power utilization while running decode (bandwidth-bound, most
+/// of the die idle).
+pub const DECODE_UTIL: f64 = 0.35;
+
+/// Embodied manufacturing carbon amortized per provisioned hour,
+/// gCO2e/h — charged on wall-clock for every replica in the fleet
+/// whether busy or idle (idle hardware still depreciates).
+pub fn embodied_g_per_hour(gpu: &GpuSpec) -> f64 {
+    gpu.embodied_kg * 1000.0 / LIFESPAN_HOURS
+}
+
+/// Per-token step costs of one (model, GPU) pairing, virtual ms.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseCost {
+    /// One prompt-token feed: compute-bound, `2·params / (peak·eff)`.
+    pub prefill_ms: f64,
+    /// One decode feed: host overhead plus streaming the active
+    /// (mixed-precision resident) weight bytes at memory bandwidth.
+    pub decode_ms: f64,
+}
+
+impl PhaseCost {
+    /// Derive step costs from a model geometry and a GPU spec sheet.
+    ///
+    /// - `total_params`: model parameters (a prompt token costs
+    ///   2·params FLOPs).
+    /// - `fp16_bytes`: full fp16 weight footprint in bytes.
+    /// - `mp_active_frac`: fraction of those bytes the mixed-precision
+    ///   plan keeps hot per token (1.0 = dense fp16 streaming).
+    /// - `token_overhead_s`: fixed per-token host/launch overhead.
+    pub fn derive(
+        total_params: f64,
+        fp16_bytes: f64,
+        mp_active_frac: f64,
+        token_overhead_s: f64,
+        gpu: &GpuSpec,
+    ) -> PhaseCost {
+        let prefill_s = 2.0 * total_params / (gpu.tflops * 1e12 * PREFILL_EFF);
+        let decode_s = token_overhead_s + fp16_bytes * mp_active_frac / (gpu.mem_bw_gbps * 1e9);
+        PhaseCost {
+            prefill_ms: (prefill_s * 1e3).max(1e-3),
+            decode_ms: (decode_s * 1e3).max(1e-3),
+        }
+    }
+
+    /// Equal prefill/decode cost — stub engines and tests.
+    pub fn uniform(ms: f64) -> PhaseCost {
+        PhaseCost {
+            prefill_ms: ms,
+            decode_ms: ms,
+        }
+    }
+}
+
+/// Router knobs. Defaults reproduce the paper's grid intensity and a
+/// 100 GbE inter-replica link; the carbon bias is in scheduling-ms per
+/// mg CO2e, i.e. how many milliseconds of extra latency one milligram
+/// of operational carbon is worth avoiding.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Grid carbon intensity, gCO2e/kWh.
+    pub intensity_g_per_kwh: f64,
+    /// Master switch: false = sessions finish where they prefilled.
+    pub handoff: bool,
+    /// Decode tokens a session must have produced before it becomes a
+    /// drain candidate (TTFT is already paid; don't thrash fresh
+    /// sessions).
+    pub handoff_after: usize,
+    /// Minimum tokens still to generate for a migration to amortize
+    /// its transfer.
+    pub min_remaining: usize,
+    /// Per-session handoff budget (1 = at most one migration).
+    pub max_handoffs: usize,
+    /// Test/bench knob: migrate every eligible session regardless of
+    /// score, so handoff paths exercise deterministically.
+    pub force_handoff: bool,
+    /// Scheduling-ms one mg of operational CO2e is worth avoiding.
+    pub carbon_bias_ms_per_mg: f64,
+    /// Hysteresis: migrate only when the destination's per-token score
+    /// beats `margin ×` the source's (avoids ping-pong on near-ties).
+    pub handoff_margin: f64,
+    /// Inter-replica link the handoff bytes are charged on.
+    pub link: LinkSpec,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            intensity_g_per_kwh: PAPER_INTENSITY_G_PER_KWH,
+            handoff: true,
+            handoff_after: 2,
+            min_remaining: 2,
+            max_handoffs: 1,
+            force_handoff: false,
+            carbon_bias_ms_per_mg: 500.0,
+            handoff_margin: 0.98,
+            link: HardwareSpec::rtx3090_testbed().links.replica_to_replica,
+        }
+    }
+}
+
+/// One engine replica plus its DES state and per-replica counters.
+struct Replica<E> {
+    engine: E,
+    gpu: &'static GpuSpec,
+    cost: PhaseCost,
+    /// The replica's compute channel is busy until this virtual ms
+    /// (one step at a time; concurrency comes from interleaving).
+    busy_until_ms: f64,
+    busy_prefill_ms: f64,
+    busy_decode_ms: f64,
+    prefill_turns: u64,
+    decode_turns: u64,
+    handoffs_in: u64,
+    handoffs_out: u64,
+    handoff_bytes_in: u64,
+    handoff_bytes_out: u64,
+    /// Fleet-slot indices currently resident here.
+    active: Vec<usize>,
+}
+
+impl<E> Replica<E> {
+    /// Operational carbon of one busy ms in the given phase, mg CO2e.
+    /// (g/h → mg/ms is a factor of 1/3600.)
+    fn op_mg_per_ms(&self, intensity: f64, prefill: bool) -> f64 {
+        let util = if prefill { PREFILL_UTIL } else { DECODE_UTIL };
+        self.gpu.oce_per_hour_g(intensity) / 3600.0 * util
+    }
+
+    fn prefill_mg_per_token(&self, intensity: f64) -> f64 {
+        self.op_mg_per_ms(intensity, true) * self.cost.prefill_ms
+    }
+
+    fn decode_mg_per_token(&self, intensity: f64) -> f64 {
+        self.op_mg_per_ms(intensity, false) * self.cost.decode_ms
+    }
+}
+
+/// One in-flight session tracked by the fleet.
+struct FleetSlot {
+    s: DecodeSession,
+    /// Original request, kept for recompute-from-prompt recovery.
+    req: Request,
+    /// Replica index currently holding the session's KV.
+    replica: usize,
+    submit_ms: f64,
+    /// Earliest virtual ms the session may step again (admission time,
+    /// or handoff-transfer completion).
+    ready_at_ms: f64,
+    handoffs: usize,
+    first_token_ms: Option<f64>,
+    done: bool,
+}
+
+/// Aggregate outcome of one fleet run on the virtual clock.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetRunReport {
+    /// Tokens generated across all completed sessions.
+    pub tokens: u64,
+    /// Last completion time, virtual ms.
+    pub makespan_ms: f64,
+    pub tok_per_s: f64,
+    /// Operational + amortized-embodied carbon, grams CO2e.
+    pub gco2_g: f64,
+    pub gco2_mg_per_token: f64,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    /// Per-replica rows and handoff aggregates (what serving
+    /// telemetry publishes as the `"fleet"` block).
+    pub counters: FleetCounters,
+}
+
+/// The router/DES driver over N replicas. Generic over the engine so
+/// the same control flow serves the virtual simulation engine, stub
+/// engines in tests, and real in-process
+/// [`crate::coordinator::ExecEngine`]s.
+pub struct Fleet<E: SessionEngine> {
+    cfg: FleetConfig,
+    replicas: Vec<Replica<E>>,
+    slots: Vec<FleetSlot>,
+    /// Arrivals waiting for any replica slot, FIFO: (arrival_ms, req).
+    pending: VecDeque<(f64, Request)>,
+    /// Round-robin tie-break order over runnable fleet slots.
+    rr: VecDeque<usize>,
+    handoffs: u64,
+    handoff_bytes: u64,
+    handoff_aborts: u64,
+    handoff_recoveries: u64,
+    /// (id, generated) of completed sessions.
+    finished: Vec<(u64, Vec<u32>)>,
+    last_done_ms: f64,
+    ttfts_ms: Vec<f64>,
+}
+
+impl<E: SessionEngine> Fleet<E> {
+    pub fn new(cfg: FleetConfig) -> Fleet<E> {
+        Fleet {
+            cfg,
+            replicas: Vec::new(),
+            slots: Vec::new(),
+            pending: VecDeque::new(),
+            rr: VecDeque::new(),
+            handoffs: 0,
+            handoff_bytes: 0,
+            handoff_aborts: 0,
+            handoff_recoveries: 0,
+            finished: Vec::new(),
+            last_done_ms: 0.0,
+            ttfts_ms: Vec::new(),
+        }
+    }
+
+    /// Provision a replica. Insertion order is the replica id used in
+    /// reports and telemetry.
+    pub fn add_replica(&mut self, engine: E, gpu: &'static GpuSpec, cost: PhaseCost) -> usize {
+        self.replicas.push(Replica {
+            engine,
+            gpu,
+            cost,
+            busy_until_ms: 0.0,
+            busy_prefill_ms: 0.0,
+            busy_decode_ms: 0.0,
+            prefill_turns: 0,
+            decode_turns: 0,
+            handoffs_in: 0,
+            handoffs_out: 0,
+            handoff_bytes_in: 0,
+            handoff_bytes_out: 0,
+            active: Vec::new(),
+        });
+        self.replicas.len() - 1
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn engine(&self, replica: usize) -> &E {
+        &self.replicas[replica].engine
+    }
+
+    pub fn engine_mut(&mut self, replica: usize) -> &mut E {
+        &mut self.replicas[replica].engine
+    }
+
+    /// Completed sessions' generated tokens, ordered by request id —
+    /// what byte-identity tests compare against a single-replica
+    /// reference.
+    pub fn outputs(&self) -> Vec<(u64, Vec<u32>)> {
+        let mut out = self.finished.clone();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.pending.is_empty() && self.slots.iter().all(|sl| sl.done)
+    }
+
+    /// Best replica with a free engine slot for a prompt of `plen`
+    /// tokens arriving now: queue wait plus the contended prefill time
+    /// plus the carbon bias.
+    fn best_prefill_replica(&self, now: f64, plen: usize) -> Option<usize> {
+        let intensity = self.cfg.intensity_g_per_kwh;
+        let mut best: Option<(f64, usize)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.active.len() >= r.engine.capacity() {
+                continue;
+            }
+            let wait = (r.busy_until_ms - now).max(0.0);
+            let work = plen as f64 * r.cost.prefill_ms * (r.active.len() + 1) as f64;
+            let carbon = plen as f64 * r.prefill_mg_per_token(intensity);
+            let score = wait + work + self.cfg.carbon_bias_ms_per_mg * carbon;
+            if best.is_none_or(|(b, _)| score < b) {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Submit an arrival at virtual ms `at_ms`: admit immediately when
+    /// a replica slot is free, else queue FIFO.
+    pub fn submit_at(&mut self, at_ms: u64, req: Request) -> Result<()> {
+        self.pending.push_back((at_ms as f64, req));
+        self.try_admit(at_ms as f64)
+    }
+
+    /// Drain the admission queue in order while replicas have slots.
+    fn try_admit(&mut self, now: f64) -> Result<()> {
+        loop {
+            let head = self.pending.front().map(|(a, r)| (*a, r.prompt.len()));
+            let Some((at, plen)) = head else {
+                break;
+            };
+            let eff_now = now.max(at);
+            let Some(ri) = self.best_prefill_replica(eff_now, plen) else {
+                break;
+            };
+            let (_, req) = self.pending.pop_front().expect("front checked");
+            let opened = self.replicas[ri].engine.open(req.clone());
+            let mut s = opened.with_context(|| format!("fleet admit request {}", req.id))?;
+            s.set_clock_ms(Some(eff_now.round() as u64));
+            let idx = self.slots.len();
+            self.slots.push(FleetSlot {
+                s,
+                req,
+                replica: ri,
+                submit_ms: at,
+                ready_at_ms: eff_now,
+                handoffs: 0,
+                first_token_ms: None,
+                done: false,
+            });
+            self.replicas[ri].active.push(idx);
+            self.rr.push_back(idx);
+        }
+        Ok(())
+    }
+
+    /// Earliest virtual ms any runnable session could start its next
+    /// step — the DES frontier `run_trace` compares arrivals against.
+    /// None = nothing runnable.
+    pub fn next_start_ms(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for &i in &self.rr {
+            let sl = &self.slots[i];
+            if sl.done {
+                continue;
+            }
+            let start = self.replicas[sl.replica].busy_until_ms.max(sl.ready_at_ms);
+            if best.is_none_or(|b| start < b) {
+                best = Some(start);
+            }
+        }
+        best
+    }
+
+    /// Run one session-step on the (replica, session) pair with the
+    /// earliest possible start (round-robin on ties). Returns false
+    /// when nothing is runnable.
+    pub fn step(&mut self) -> Result<bool> {
+        // Pick the min-start runnable slot; rr order breaks ties.
+        let mut chosen: Option<(f64, usize, usize)> = None; // (start, rr_pos, slot)
+        for (pos, &i) in self.rr.iter().enumerate() {
+            let sl = &self.slots[i];
+            if sl.done {
+                continue;
+            }
+            let start = self.replicas[sl.replica].busy_until_ms.max(sl.ready_at_ms);
+            if chosen.is_none_or(|(b, _, _)| start < b) {
+                chosen = Some((start, pos, i));
+            }
+        }
+        let Some((start, pos, i)) = chosen else {
+            return Ok(false);
+        };
+        // Rotate the served slot to the back for fairness.
+        self.rr.remove(pos);
+        self.rr.push_back(i);
+
+        let ri = self.slots[i].replica;
+        let prefill = self.slots[i].s.is_prefilling();
+        let dur = if prefill {
+            self.replicas[ri].cost.prefill_ms
+        } else {
+            self.replicas[ri].cost.decode_ms
+        };
+        let end = start + dur;
+        let tok_opt = {
+            let sl = &mut self.slots[i];
+            sl.s.set_clock_ms(Some(end.round() as u64));
+            sl.s.begin_step()?
+        };
+        let Some(tok) = tok_opt else {
+            // Aborted externally: free the engine slot and drop the
+            // session from its replica's active set.
+            self.replicas[ri].engine.close(&mut self.slots[i].s);
+            self.replicas[ri].active.retain(|&x| x != i);
+            self.slots[i].done = true;
+            return Ok(true);
+        };
+        let outcome = {
+            let sl = &mut self.slots[i];
+            let logits = self.replicas[ri].engine.forward(&sl.s, tok)?;
+            sl.s.complete_step(logits)
+        };
+        {
+            let r = &mut self.replicas[ri];
+            r.busy_until_ms = end;
+            if prefill {
+                r.prefill_turns += 1;
+                r.busy_prefill_ms += dur;
+            } else {
+                r.decode_turns += 1;
+                r.busy_decode_ms += dur;
+            }
+        }
+        if self.slots[i].first_token_ms.is_none() && !self.slots[i].s.generated.is_empty() {
+            self.slots[i].first_token_ms = Some(end);
+            self.ttfts_ms.push(end - self.slots[i].submit_ms);
+        }
+        match outcome {
+            StepOutcome::Finished => {
+                let sl = &mut self.slots[i];
+                sl.done = true;
+                self.replicas[ri].engine.close(&mut sl.s);
+                self.replicas[ri].active.retain(|&x| x != i);
+                self.finished.push((sl.s.id, sl.s.generated.clone()));
+                self.last_done_ms = self.last_done_ms.max(end);
+                // A slot freed: admit whoever queued.
+                self.try_admit(end)?;
+            }
+            StepOutcome::Working => {
+                if !self.slots[i].s.is_prefilling() {
+                    self.maybe_handoff(i, end)?;
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Decode-drain decision for session `i` at virtual ms `now`:
+    /// score per-token decode cost (queueing × step time + carbon
+    /// bias + amortized transfer) on the current replica against every
+    /// other replica with a free slot, and migrate when the winner
+    /// clears the hysteresis margin — or unconditionally under
+    /// `force_handoff`.
+    fn maybe_handoff(&mut self, i: usize, now: f64) -> Result<()> {
+        if !self.cfg.handoff || !self.replicas[self.slots[i].replica].engine.supports_handoff() {
+            return Ok(());
+        }
+        let src = self.slots[i].replica;
+        let generated = self.slots[i].s.generated.len();
+        let remaining = self.slots[i].s.max_new.saturating_sub(generated);
+        if self.slots[i].handoffs >= self.cfg.max_handoffs
+            || generated < self.cfg.handoff_after
+            || remaining < self.cfg.min_remaining
+        {
+            return Ok(());
+        }
+        let bias = self.cfg.carbon_bias_ms_per_mg;
+        let intensity = self.cfg.intensity_g_per_kwh;
+        // Bytes estimate for scoring; the real record refines it.
+        let kv_guess = self.slots[i].s.pos() as u64 * 4;
+        let src_score = {
+            let r = &self.replicas[src];
+            let depth = r.active.len().max(1) as f64;
+            r.cost.decode_ms * depth + bias * r.decode_mg_per_token(intensity)
+        };
+        let mut best: Option<(f64, usize)> = None;
+        for (j, r) in self.replicas.iter().enumerate() {
+            let full = r.active.len() >= r.engine.capacity();
+            if j == src || full || !r.engine.supports_handoff() {
+                continue;
+            }
+            let transfer = self.cfg.link.time_s(kv_guess) * 1e3 / remaining as f64;
+            let queue = r.cost.decode_ms * (r.active.len() + 1) as f64;
+            let score = queue + bias * r.decode_mg_per_token(intensity) + transfer;
+            if best.is_none_or(|(b, _)| score < b) {
+                best = Some((score, j));
+            }
+        }
+        let Some((dst_score, dst)) = best else {
+            return Ok(());
+        };
+        if !self.cfg.force_handoff && dst_score >= self.cfg.handoff_margin * src_score {
+            return Ok(());
+        }
+
+        // Export on the source. Failure = abort: the session never
+        // left; it keeps decoding in place, engine unchanged.
+        let rec = match self.replicas[src].engine.export_kv(&mut self.slots[i].s) {
+            Ok(rec) => rec,
+            Err(_) => {
+                self.handoff_aborts += 1;
+                return Ok(());
+            }
+        };
+        self.replicas[src].active.retain(|&x| x != i);
+        self.replicas[src].handoffs_out += 1;
+        self.replicas[src].handoff_bytes_out += rec.kv_bytes;
+        self.slots[i].handoffs += 1;
+
+        // Charge the NIC for the record, then land it.
+        let transfer_ms = self.cfg.link.time_s(rec.kv_bytes) * 1e3;
+        self.slots[i].ready_at_ms = now + transfer_ms;
+        self.replicas[dst].handoff_bytes_in += rec.kv_bytes;
+        match self.replicas[dst].engine.import_kv(&mut self.slots[i].s, &rec) {
+            Ok(()) => {
+                self.replicas[dst].handoffs_in += 1;
+                self.handoffs += 1;
+                self.handoff_bytes += rec.kv_bytes;
+            }
+            Err(_) => {
+                // The record failed verification: recompute the
+                // session from its prompt on the destination. Greedy
+                // decode is deterministic, so the replay reproduces
+                // the same bytes — the request never fails.
+                self.handoff_recoveries += 1;
+                let req = self.slots[i].req.clone();
+                let id = self.slots[i].s.id;
+                let opened = self.replicas[dst].engine.open(req);
+                let mut fresh =
+                    opened.with_context(|| format!("fleet recovery reopen session {id}"))?;
+                fresh.set_clock_ms(Some(now.round() as u64));
+                self.slots[i].s = fresh;
+            }
+        }
+        self.slots[i].replica = dst;
+        self.replicas[dst].active.push(i);
+        Ok(())
+    }
+
+    /// Replay a time-ordered trace to completion: submit arrivals
+    /// whenever they precede the DES frontier, otherwise step.
+    pub fn run_trace(&mut self, events: &[TraceEvent]) -> Result<FleetRunReport> {
+        let mut next = 0usize;
+        loop {
+            if next < events.len() {
+                let at = events[next].at_ms as f64;
+                if self.next_start_ms().is_none_or(|f| at <= f) {
+                    let ev = &events[next];
+                    next += 1;
+                    self.submit_at(ev.at_ms, ev.to_request())?;
+                    continue;
+                }
+            }
+            if !self.step()? {
+                break;
+            }
+        }
+        anyhow::ensure!(self.all_done(), "fleet trace ended with live sessions");
+        Ok(self.report())
+    }
+
+    /// Fold the run into counters and a summary. Operational carbon is
+    /// charged on busy time scaled per phase; embodied is amortized on
+    /// the makespan for *every* provisioned replica, busy or not —
+    /// that is what makes over-provisioning fast GPUs show up in
+    /// gCO2/token.
+    pub fn report(&self) -> FleetRunReport {
+        let makespan = self.last_done_ms;
+        let intensity = self.cfg.intensity_g_per_kwh;
+        let mut counters = FleetCounters {
+            n_replicas: self.replicas.len(),
+            handoffs: self.handoffs,
+            handoff_bytes: self.handoff_bytes,
+            handoff_aborts: self.handoff_aborts,
+            handoff_recoveries: self.handoff_recoveries,
+            ..FleetCounters::default()
+        };
+        let mut gco2 = 0.0;
+        for (idx, r) in self.replicas.iter().enumerate() {
+            let prefill_mg = r.busy_prefill_ms * r.op_mg_per_ms(intensity, true);
+            let decode_mg = r.busy_decode_ms * r.op_mg_per_ms(intensity, false);
+            let op_g = (prefill_mg + decode_mg) / 1e3;
+            let emb_g = makespan / 3.6e6 * embodied_g_per_hour(r.gpu);
+            gco2 += op_g + emb_g;
+            if idx < MAX_FLEET_REPLICAS {
+                counters.replicas[idx] = ReplicaCounters {
+                    gpu: r.gpu.name,
+                    prefill_turns: r.prefill_turns,
+                    decode_turns: r.decode_turns,
+                    handoffs_in: r.handoffs_in,
+                    handoffs_out: r.handoffs_out,
+                    handoff_bytes_in: r.handoff_bytes_in,
+                    handoff_bytes_out: r.handoff_bytes_out,
+                    busy_prefill_ms: r.busy_prefill_ms.round() as u64,
+                    busy_decode_ms: r.busy_decode_ms.round() as u64,
+                    gco2_g: op_g + emb_g,
+                };
+            }
+        }
+        let tokens: u64 = self.finished.iter().map(|(_, g)| g.len() as u64).sum();
+        let mut ttfts = self.ttfts_ms.clone();
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if ttfts.is_empty() {
+                return 0.0;
+            }
+            let k = ((ttfts.len() - 1) as f64 * p).round() as usize;
+            ttfts[k.min(ttfts.len() - 1)]
+        };
+        let tok_per_s = if makespan > 0.0 {
+            tokens as f64 / (makespan / 1e3)
+        } else {
+            0.0
+        };
+        let mg_per_token = if tokens > 0 {
+            gco2 * 1e3 / tokens as f64
+        } else {
+            0.0
+        };
+        FleetRunReport {
+            tokens,
+            makespan_ms: makespan,
+            tok_per_s,
+            gco2_g: gco2,
+            gco2_mg_per_token: mg_per_token,
+            p50_ttft_ms: pct(0.50),
+            p99_ttft_ms: pct(0.99),
+            counters,
+        }
+    }
+}
+
+/// Deterministic slot-bounded engine for fleet simulation: logits are
+/// a pure function of `(token, pos)`, so any interleaving — including
+/// mid-decode replica handoffs and recompute recoveries — reproduces
+/// the single-replica byte stream. The KV payload is synthetic; the
+/// record's `kv_bytes` meters the logical transfer on the NIC link.
+pub struct VirtualReplicaEngine {
+    vocab: usize,
+    free: Vec<usize>,
+    slots: usize,
+    /// Bytes one KV row (token position) costs on the wire.
+    kv_bytes_per_token: u64,
+    /// Test knob: fail this many upcoming imports (exercises the
+    /// recompute-recovery path deterministically).
+    pub fail_next_imports: usize,
+}
+
+impl VirtualReplicaEngine {
+    pub fn new(slots: usize, vocab: usize, kv_bytes_per_token: u64) -> VirtualReplicaEngine {
+        VirtualReplicaEngine {
+            vocab: vocab.max(2),
+            free: (0..slots).rev().collect(),
+            slots,
+            kv_bytes_per_token,
+            fail_next_imports: 0,
+        }
+    }
+
+    /// Slots currently bound to sessions (0 after a clean run — the
+    /// leak check fleet tests assert on).
+    pub fn in_use(&self) -> usize {
+        self.slots - self.free.len()
+    }
+}
+
+impl SessionEngine for VirtualReplicaEngine {
+    fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("virtual replica out of KV slots"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        let mut logits = vec![0.0f32; self.vocab];
+        logits[(token as usize * 31 + s.pos() * 7 + 1) % self.vocab] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        self.free.push(s.slot());
+    }
+
+    fn supports_handoff(&self) -> bool {
+        true
+    }
+
+    fn export_kv(&mut self, s: &mut DecodeSession) -> Result<HandoffRecord> {
+        let rec = HandoffRecord {
+            session_id: s.id,
+            used: s.pos(),
+            bytes: Vec::new(),
+            kv_bytes: s.pos() as u64 * self.kv_bytes_per_token,
+        };
+        self.free.push(s.slot());
+        Ok(rec)
+    }
+
+    fn import_kv(&mut self, s: &mut DecodeSession, rec: &HandoffRecord) -> Result<()> {
+        anyhow::ensure!(rec.session_id == s.id, "handoff record for wrong session");
+        if self.fail_next_imports > 0 {
+            self.fail_next_imports -= 1;
+            anyhow::bail!("injected import verification failure");
+        }
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("virtual replica out of KV slots"))?;
+        s.rebind_slot(slot);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::gpu_db::find;
+    use crate::coordinator::workload::{generate, Mix, TraceSpec};
+    use crate::model::spec::ModelSpec;
+
+    fn phase_cost_for(gpu: &GpuSpec) -> PhaseCost {
+        let m = ModelSpec::llama2_7b();
+        PhaseCost::derive(m.total_params() as f64, m.fp16_bytes() as f64, 0.3, 20e-3, gpu)
+    }
+
+    fn decode_mg(gpu: &GpuSpec, c: &PhaseCost) -> f64 {
+        gpu.oce_per_hour_g(PAPER_INTENSITY_G_PER_KWH) / 3600.0 * DECODE_UTIL * c.decode_ms
+    }
+
+    /// Single-replica reference: run every request to completion
+    /// sequentially on one engine.
+    fn reference_outputs(events: &[TraceEvent], vocab: usize) -> Vec<(u64, Vec<u32>)> {
+        let mut eng = VirtualReplicaEngine::new(1, vocab, 64);
+        let mut out = Vec::new();
+        for ev in events {
+            let mut s = eng.open(ev.to_request()).unwrap();
+            while !matches!(s.step(&mut eng).unwrap(), StepOutcome::Finished) {}
+            eng.close(&mut s);
+            out.push((s.id, s.generated.clone()));
+        }
+        out.sort_by_key(|(id, _)| *id);
+        out
+    }
+
+    fn trace(n: usize, seed: u64) -> Vec<TraceEvent> {
+        generate(&TraceSpec {
+            mix: Mix::DecodeHeavy,
+            n,
+            seed,
+            vocab: 64,
+        })
+    }
+
+    #[test]
+    fn phase_costs_follow_spec_sheets() {
+        let a100 = phase_cost_for(find("A100").unwrap());
+        let m40 = phase_cost_for(find("M40").unwrap());
+        // Prefill is compute-bound: the A100 is ~10x the M40 in FLOPs.
+        assert!(a100.prefill_ms * 5.0 < m40.prefill_ms, "{a100:?} vs {m40:?}");
+        // Decode is bandwidth + overhead bound: much closer.
+        assert!(a100.decode_ms < m40.decode_ms);
+        assert!(m40.decode_ms < a100.decode_ms * 2.0);
+        // The carbon ordering flips: per decode token the M40 draws
+        // less operational power despite being slower.
+        assert!(
+            decode_mg(find("M40").unwrap(), &m40) < decode_mg(find("A100").unwrap(), &a100),
+            "M40 must win decode carbon/token"
+        );
+    }
+
+    #[test]
+    fn forced_handoff_is_byte_identical_to_single_replica() {
+        let events = trace(12, 7);
+        let want = reference_outputs(&events, 64);
+        let mut fleet = Fleet::new(FleetConfig {
+            force_handoff: true,
+            handoff_after: 1,
+            min_remaining: 1,
+            ..FleetConfig::default()
+        });
+        let a100 = find("A100").unwrap();
+        let m40 = find("M40").unwrap();
+        fleet.add_replica(VirtualReplicaEngine::new(4, 64, 64), a100, phase_cost_for(a100));
+        fleet.add_replica(VirtualReplicaEngine::new(4, 64, 64), m40, phase_cost_for(m40));
+        let report = fleet.run_trace(&events).unwrap();
+        assert!(report.counters.handoffs > 0, "forced handoffs must fire");
+        assert_eq!(fleet.outputs(), want, "handoff changed generated bytes");
+        // Zero leaked slots on either replica.
+        assert_eq!(fleet.engine(0).in_use(), 0);
+        assert_eq!(fleet.engine(1).in_use(), 0);
+    }
+
+    #[test]
+    fn router_prefills_fast_and_drains_to_low_carbon() {
+        // Decode-heavy burst: prefill goes to the A100 (compute), and
+        // with the A100's queue deep the router drains steady-state
+        // decode to the M40 (lower operational carbon per token).
+        let mut events = trace(16, 11);
+        for ev in &mut events {
+            ev.at_ms = 0; // burst: builds queue depth on the fast replica
+            ev.max_new = 32;
+        }
+        let mut fleet = Fleet::new(FleetConfig::default());
+        let a100 = find("A100").unwrap();
+        let m40 = find("M40").unwrap();
+        fleet.add_replica(VirtualReplicaEngine::new(16, 64, 64), a100, phase_cost_for(a100));
+        fleet.add_replica(VirtualReplicaEngine::new(16, 64, 64), m40, phase_cost_for(m40));
+        let report = fleet.run_trace(&events).unwrap();
+        let rows = report.counters.live();
+        assert!(
+            rows[0].prefill_turns > rows[1].prefill_turns,
+            "prefill must favor the A100: {rows:?}"
+        );
+        assert!(report.counters.handoffs > 0, "drain must migrate sessions");
+        assert!(
+            rows[1].handoffs_in > 0 && rows[0].handoffs_out > 0,
+            "drain direction must be A100 -> M40: {rows:?}"
+        );
+        assert_eq!(fleet.outputs(), reference_outputs(&events, 64));
+    }
+
+    #[test]
+    fn failed_import_recovers_by_recompute() {
+        let events = trace(6, 3);
+        let want = reference_outputs(&events, 64);
+        let mut fleet = Fleet::new(FleetConfig {
+            force_handoff: true,
+            handoff_after: 1,
+            min_remaining: 1,
+            ..FleetConfig::default()
+        });
+        let a100 = find("A100").unwrap();
+        let m40 = find("M40").unwrap();
+        fleet.add_replica(VirtualReplicaEngine::new(4, 64, 64), a100, phase_cost_for(a100));
+        let mut bad = VirtualReplicaEngine::new(4, 64, 64);
+        bad.fail_next_imports = 2;
+        fleet.add_replica(bad, m40, phase_cost_for(m40));
+        let report = fleet.run_trace(&events).unwrap();
+        assert!(report.counters.handoff_recoveries >= 1, "{report:?}");
+        assert_eq!(fleet.outputs(), want, "recovery changed bytes");
+        assert_eq!(fleet.engine(0).in_use(), 0);
+        assert_eq!(fleet.engine(1).in_use(), 0);
+    }
+
+    #[test]
+    fn carbon_accounting_sums_and_replays_exactly() {
+        let events = trace(10, 5);
+        let a100 = find("A100").unwrap();
+        let run = || {
+            let mut fleet = Fleet::new(FleetConfig::default());
+            fleet.add_replica(VirtualReplicaEngine::new(8, 64, 64), a100, phase_cost_for(a100));
+            fleet.run_trace(&events).unwrap()
+        };
+        let solo = run();
+        assert!(solo.tokens > 0 && solo.gco2_g > 0.0);
+        let sum: f64 = solo.counters.live().iter().map(|r| r.gco2_g).sum();
+        assert!((sum - solo.gco2_g).abs() < 1e-9, "per-replica rows must sum");
+        assert!(
+            (solo.counters.gco2_total() - solo.gco2_g).abs() < 1e-9,
+            "telemetry aggregate must match"
+        );
+        // Determinism: the same trace replays to the same report.
+        let again = run();
+        assert_eq!(solo.tokens, again.tokens);
+        assert_eq!(solo.makespan_ms, again.makespan_ms);
+        assert_eq!(solo.gco2_g, again.gco2_g);
+    }
+
+    #[test]
+    fn handoff_disabled_keeps_sessions_in_place() {
+        let events = trace(8, 9);
+        let mut fleet = Fleet::new(FleetConfig {
+            handoff: false,
+            ..FleetConfig::default()
+        });
+        let a100 = find("A100").unwrap();
+        let m40 = find("M40").unwrap();
+        fleet.add_replica(VirtualReplicaEngine::new(4, 64, 64), a100, phase_cost_for(a100));
+        fleet.add_replica(VirtualReplicaEngine::new(4, 64, 64), m40, phase_cost_for(m40));
+        let report = fleet.run_trace(&events).unwrap();
+        assert_eq!(report.counters.handoffs, 0);
+        assert_eq!(fleet.outputs(), reference_outputs(&events, 64));
+    }
+}

@@ -72,6 +72,50 @@ fn planes_crc(k: &[f32], v: &[f32]) -> u32 {
     h.finish()
 }
 
+/// Serialize used-rows K/V planes into one self-verifying M2KV record:
+/// header (magic, version, used, CRC over header + payload) followed by
+/// the little-endian f32 payload. The layout is exactly what the SSD
+/// spill file stores per record, which is what lets a record travel
+/// between stores ([`KvStore::export_record`] /
+/// [`KvStore::import_record`]) with end-to-end integrity.
+fn encode_record_buf(used: usize, k: &[f32], v: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(SPILL_HEADER_BYTES as usize + (k.len() + v.len()) * 4);
+    buf.extend_from_slice(&SPILL_MAGIC);
+    buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+    buf.extend_from_slice(&0u16.to_le_bytes());
+    buf.extend_from_slice(&(used as u32).to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]); // CRC placeholder
+    for &x in k.iter().chain(v.iter()) {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    let mut h = crc32::Hasher::new();
+    h.update(&buf[..12]).update(&buf[SPILL_HEADER_BYTES as usize..]);
+    let crc = h.finish();
+    buf[12..16].copy_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// A session's KV state serialized for transfer to another replica: the
+/// checksummed M2KV record bytes plus the cursors the destination needs
+/// to re-park and re-bind it. Produced by
+/// [`crate::coordinator::session::SessionEngine::export_kv`] and
+/// consumed by
+/// [`crate::coordinator::session::SessionEngine::import_kv`] — the
+/// record that makes the slot-agnostic restore *replica*-agnostic.
+#[derive(Debug, Clone)]
+pub struct HandoffRecord {
+    /// Session the state belongs to (sanity-checked at import).
+    pub session_id: u64,
+    /// Token rows decode has written (the session's position at
+    /// export).
+    pub used: usize,
+    /// Self-verifying M2KV record bytes. Index-only stub engines may
+    /// leave this empty and let `kv_bytes` meter the logical transfer.
+    pub bytes: Vec<u8>,
+    /// Bytes the inter-replica link is charged for the handoff.
+    pub kv_bytes: u64,
+}
+
 /// The I/O seam between the [`KvStore`] and its spill media. The real
 /// backend does plain seeks and writes; the fault backend decorates
 /// them with seeded failures. Methods take the already-opened spill
@@ -588,6 +632,15 @@ impl KvStore {
             k.extend_from_slice(&self.pool.k_layer(slot, l)[..used]);
             v.extend_from_slice(&self.pool.v_layer(slot, l)[..used]);
         }
+        self.park_planes(id, used, k, v, bytes);
+        self.next_ticket += 1;
+        Ok(KvTicket::new(id))
+    }
+
+    /// Park gathered planes under ticket id `id` through the normal
+    /// tier choice and degradation ladder — the shared tail of
+    /// [`Self::park_prefix_copy`] and [`Self::import_record`].
+    fn park_planes(&mut self, id: u64, used: usize, k: Vec<f32>, v: Vec<f32>, bytes: u64) {
         match self.spill_tier_for(bytes) {
             SpillTier::Dram => self.park_dram(id, k, v, bytes),
             SpillTier::Ssd => {
@@ -617,8 +670,6 @@ impl KvStore {
                 }
             }
         }
-        self.next_ticket += 1;
-        Ok(KvTicket::new(id))
     }
 
     /// Park planes in the DRAM spill area under a CRC taken over their
@@ -787,6 +838,125 @@ impl KvStore {
         false
     }
 
+    // ------------------------- replica handoff
+
+    /// Serialize a parked ticket into a portable, self-verifying M2KV
+    /// record and consume the ticket — the export half of a fleet
+    /// handoff. A DRAM park is CRC-verified *before* encoding, so bit
+    /// rot surfaces here at the source (the ticket stays parked and
+    /// discardable on error); an SSD park ships its stored record bytes
+    /// as-is, so corruption written at park time travels with the
+    /// record and fails the destination's CRC check instead of being
+    /// laundered under a fresh checksum. Transient file reads get the
+    /// usual bounded retry; on any error the ticket remains redeemable.
+    pub fn export_record(&mut self, ticket: KvTicket) -> Result<Vec<u8>> {
+        let id = ticket.id();
+        if self.dram.contains_key(&id) {
+            self.verify_dram(id).context("KV handoff export")?;
+            let sp = self.dram.remove(&id).expect("verified entry present");
+            let bytes = (sp.k.len() + sp.v.len()) as u64 * 4;
+            self.dram_used -= bytes;
+            let used = sp.k.len() / self.pool.n_layers().max(1);
+            return Ok(encode_record_buf(used, &sp.k, &sp.v));
+        }
+        let Some(&(rec, used)) = self.ssd.get(&id) else {
+            anyhow::bail!("unknown KV ticket {id}");
+        };
+        let payload = 2 * self.pool.n_layers() * used * 4;
+        let off = rec as u64 * self.record_bytes();
+        let mut buf = vec![0u8; SPILL_HEADER_BYTES as usize + payload];
+        let mut backoff = self.retry_backoff_ms;
+        let mut attempt = 0;
+        loop {
+            let res = {
+                let file = self
+                    .file
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("KV spill file missing for record {rec}"))?;
+                self.backend.read_at(file, off, &mut buf)
+            };
+            match res {
+                Ok(()) => break,
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= self.retry_attempts {
+                        let ctx = format!("KV handoff export of record {rec}: retries exhausted");
+                        return Err(anyhow::Error::from(e).context(ctx));
+                    }
+                    self.faults.io_retries += 1;
+                    if backoff > 0 {
+                        std::thread::sleep(Duration::from_millis(backoff));
+                        backoff = backoff.saturating_mul(2);
+                    }
+                }
+            }
+        }
+        self.ssd.remove(&id);
+        self.file_free.push(rec);
+        Ok(buf)
+    }
+
+    /// Admit a record exported from another replica's store
+    /// ([`Self::export_record`]): verify magic, version, geometry, and
+    /// CRC end-to-end *before* admitting anything, then park the planes
+    /// through the normal tier choice, returning a ticket redeemable by
+    /// [`Self::restore`]. A record corrupted at the source, in transit,
+    /// or in the source's spill file fails here with this store
+    /// unchanged — the caller recomputes from the prompt (the PR-8
+    /// degradation ladder) instead of ever serving wrong bytes.
+    pub fn import_record(&mut self, buf: &[u8]) -> Result<KvTicket> {
+        let (used, k, v) = self.decode_record_buf(buf).context("KV handoff import")?;
+        let bytes = 2 * (self.pool.n_layers().max(1) * used) as u64 * 4;
+        let id = self.next_ticket;
+        self.park_planes(id, used, k, v, bytes);
+        self.next_ticket += 1;
+        Ok(KvTicket::new(id))
+    }
+
+    /// Decode and verify one portable M2KV record buffer against this
+    /// store's geometry. Every rejection counts as a CRC failure — the
+    /// record was supposed to be self-verifying and is not usable.
+    fn decode_record_buf(&mut self, buf: &[u8]) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+        let hdr = SPILL_HEADER_BYTES as usize;
+        if buf.len() < hdr {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("handoff record truncated ({} bytes)", buf.len());
+        }
+        if buf[..4] != SPILL_MAGIC {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("handoff record: bad magic (corrupt or torn record)");
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != SPILL_VERSION {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("handoff record: format version {version} != {SPILL_VERSION}");
+        }
+        let used = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+        let n_layers = self.pool.n_layers().max(1);
+        let plane = n_layers * used;
+        if used > self.pool.stride() || buf.len() != hdr + 2 * plane * 4 {
+            self.faults.crc_failures += 1;
+            anyhow::bail!(
+                "handoff record: geometry mismatch (used {used}, {} bytes, {n_layers} layers, \
+                 stride {})",
+                buf.len(),
+                self.pool.stride()
+            );
+        }
+        let stored = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+        let mut h = crc32::Hasher::new();
+        h.update(&buf[..12]).update(&buf[hdr..]);
+        if h.finish() != stored {
+            self.faults.crc_failures += 1;
+            anyhow::bail!("handoff record: CRC mismatch (corruption detected)");
+        }
+        let floats: Vec<f32> = buf[hdr..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((used, floats[..plane].to_vec(), floats[plane..].to_vec()))
+    }
+
     // ------------------------- SSD spill file plumbing
 
     fn alloc_record(&mut self) -> usize {
@@ -821,19 +991,7 @@ impl KvStore {
     /// Only returns Ok once the full record is durably on the file —
     /// the caller publishes the ticket after that.
     fn write_record(&mut self, rec: usize, used: usize, k: &[f32], v: &[f32]) -> Result<()> {
-        let mut buf = Vec::with_capacity(SPILL_HEADER_BYTES as usize + (k.len() + v.len()) * 4);
-        buf.extend_from_slice(&SPILL_MAGIC);
-        buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
-        buf.extend_from_slice(&0u16.to_le_bytes());
-        buf.extend_from_slice(&(used as u32).to_le_bytes());
-        buf.extend_from_slice(&[0u8; 4]); // CRC placeholder
-        for &x in k.iter().chain(v.iter()) {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-        let mut h = crc32::Hasher::new();
-        h.update(&buf[..12]).update(&buf[SPILL_HEADER_BYTES as usize..]);
-        let crc = h.finish();
-        buf[12..16].copy_from_slice(&crc.to_le_bytes());
+        let buf = encode_record_buf(used, k, v);
         let off = rec as u64 * self.record_bytes();
         self.ensure_file()?;
         let mut backoff = self.retry_backoff_ms;

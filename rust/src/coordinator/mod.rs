@@ -26,6 +26,7 @@
 pub mod config;
 pub mod engine_exec;
 pub mod engine_sim;
+pub mod fleet;
 pub mod kv_store;
 pub mod prefix;
 pub mod request;
@@ -44,7 +45,10 @@ pub use scheduler::{
     ActiveInfo, Completed, Outcome, SchedConfig, SchedMode, Scheduler, SessionEvent,
     TickReport, DEFAULT_STARVATION_GUARD,
 };
-pub use kv_store::{FaultConfig, FaultyBackend, KvStore, RealBackend, SpillBackend, SpillTier};
+pub use fleet::{Fleet, FleetConfig, FleetRunReport, PhaseCost, VirtualReplicaEngine};
+pub use kv_store::{
+    FaultConfig, FaultyBackend, HandoffRecord, KvStore, RealBackend, SpillBackend, SpillTier,
+};
 pub use prefix::{
     PrefixConfig, PrefixCostModel, PrefixHit, PrefixHome, PrefixStats, TieredPrefixCache,
     VirtualPrefixCache,

@@ -394,6 +394,19 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
             )
         })
         .collect();
+    let replicas: Vec<String> = s
+        .fleet
+        .live()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            format!(
+                "{{\"id\":{i},\"gpu\":\"{}\",\"prefill_turns\":{},\"decode_turns\":{},\
+                 \"handoffs_in\":{},\"handoffs_out\":{},\"gco2_g\":{:.6}}}",
+                r.gpu, r.prefill_turns, r.decode_turns, r.handoffs_in, r.handoffs_out, r.gco2_g
+            )
+        })
+        .collect();
     format!(
         "{{\"depth\":{depth},\"enqueued\":{enqueued},\"rejected\":{rejected},\
          \"active\":{},\"backlog\":{},\"served\":{},\"cancelled\":{},\
@@ -403,6 +416,8 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
          \"prefix\":{{\"hits\":{},\"hit_tokens\":{}}},\
          \"faults\":{{\"injected\":{},\"io_retries\":{},\"crc_failures\":{},\
          \"degraded_spills\":{},\"ssd_degraded\":{},\"recoveries\":{}}},\
+         \"fleet\":{{\"replicas\":{},\"handoffs\":{},\"handoff_bytes\":{},\"aborted\":{},\
+         \"recovered\":{},\"gco2_g\":{:.6},\"per_replica\":[{}]}},\
          \"classes\":{{{}}}}}\n",
         s.active,
         s.backlog,
@@ -426,6 +441,13 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
         s.faults.degraded_spills,
         s.faults.ssd_degraded,
         s.recoveries,
+        s.fleet.n_replicas,
+        s.fleet.handoffs,
+        s.fleet.handoff_bytes,
+        s.fleet.handoff_aborts,
+        s.fleet.handoff_recoveries,
+        s.fleet.gco2_total(),
+        replicas.join(","),
         classes.join(",")
     )
 }
@@ -1120,6 +1142,54 @@ mod tests {
             ),
             "{j}"
         );
+    }
+
+    #[test]
+    fn stats_json_carries_fleet_counters() {
+        use crate::telemetry::{FleetCounters, ReplicaCounters};
+        let fleet = FleetCounters {
+            n_replicas: 2,
+            handoffs: 4,
+            handoff_bytes: 4096,
+            handoff_recoveries: 1,
+            ..FleetCounters::default()
+        };
+        let mut s = StatsSnapshot {
+            fleet,
+            ..Default::default()
+        };
+        s.fleet.replicas[0] = ReplicaCounters {
+            gpu: "A100",
+            prefill_turns: 9,
+            handoffs_out: 4,
+            gco2_g: 0.25,
+            ..ReplicaCounters::default()
+        };
+        s.fleet.replicas[1] = ReplicaCounters {
+            gpu: "M40",
+            decode_turns: 30,
+            handoffs_in: 4,
+            gco2_g: 0.5,
+            ..ReplicaCounters::default()
+        };
+        let j = stats_json(0, 0, 0, &s);
+        assert!(
+            j.contains(
+                "\"fleet\":{\"replicas\":2,\"handoffs\":4,\"handoff_bytes\":4096,\
+                 \"aborted\":0,\"recovered\":1,\"gco2_g\":0.750000"
+            ),
+            "{j}"
+        );
+        assert!(
+            j.contains("{\"id\":0,\"gpu\":\"A100\",\"prefill_turns\":9,\"decode_turns\":0,"),
+            "{j}"
+        );
+        assert!(
+            j.contains("{\"id\":1,\"gpu\":\"M40\",\"prefill_turns\":0,\"decode_turns\":30,"),
+            "{j}"
+        );
+        // The reply must stay one line (the wire contract).
+        assert_eq!(j.matches('\n').count(), 1);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use crate::coordinator::request::Request;
 use crate::coordinator::scheduler::{SchedConfig, Scheduler, SessionEvent};
 use crate::coordinator::session::SessionEngine;
-use crate::telemetry::{ClassCounters, FaultCounters, SpillCounters, N_CLASSES};
+use crate::telemetry::{ClassCounters, FaultCounters, FleetCounters, SpillCounters, N_CLASSES};
 
 /// One coherent view of the serving state, taken from the scheduler and
 /// the engine's telemetry in a single call — the replacement for the
@@ -59,6 +59,9 @@ pub struct StatsSnapshot {
     pub recoveries: u64,
     /// Injected-fault and self-healing counters, from engine telemetry.
     pub faults: FaultCounters,
+    /// Heterogeneous-fleet counters (per-replica rows, handoffs), from
+    /// engine telemetry. All-zero when serving a single replica.
+    pub fleet: FleetCounters,
 }
 
 impl StatsSnapshot {
@@ -168,6 +171,7 @@ impl<E: SessionEngine> ServingCore<E> {
             prefix_hit_tokens: self.sched.prefix_hit_tokens,
             recoveries: self.sched.recoveries,
             faults: tel.map_or(FaultCounters::default(), |t| t.faults),
+            fleet: tel.map_or(FleetCounters::default(), |t| t.fleet),
         }
     }
 

@@ -483,6 +483,41 @@ pub trait SessionEngine {
     /// release (the slot went back to the pool at spill time).
     fn discard(&mut self, _s: &mut DecodeSession, _ticket: KvTicket) {}
 
+    /// Whether this engine can export a session's KV for a *different*
+    /// replica to import — the fleet handoff on top of spill/restore.
+    /// [`crate::coordinator::fleet::Fleet`] only migrates sessions
+    /// between engines that report true.
+    fn supports_handoff(&self) -> bool {
+        false
+    }
+
+    /// Serialize this session's KV into a portable
+    /// [`crate::coordinator::kv_store::HandoffRecord`] and free its HBM
+    /// slot here — the source half of a replica handoff. On success the
+    /// session holds no state on this engine (the record is the only
+    /// copy); on error the engine and session are unchanged, so the
+    /// caller simply keeps decoding in place.
+    fn export_kv(
+        &mut self,
+        _s: &mut DecodeSession,
+    ) -> Result<crate::coordinator::kv_store::HandoffRecord> {
+        anyhow::bail!("engine does not support KV handoff")
+    }
+
+    /// Admit a handed-off session: verify the record end-to-end, land
+    /// its KV in a free slot, and rebind the session
+    /// ([`DecodeSession::rebind_slot`]) — the destination half of a
+    /// replica handoff. On error this engine is unchanged and the
+    /// record is unusable; the caller recomputes the session from its
+    /// prompt (deterministic decode makes the replay byte-identical).
+    fn import_kv(
+        &mut self,
+        _s: &mut DecodeSession,
+        _rec: &crate::coordinator::kv_store::HandoffRecord,
+    ) -> Result<()> {
+        anyhow::bail!("engine does not support KV handoff")
+    }
+
     /// Attach the longest cached shared prefix to a *freshly opened*
     /// session: copy the cached KV rows into its slot and advance its
     /// prefill cursor ([`DecodeSession::attach_prefix`]), so prefill

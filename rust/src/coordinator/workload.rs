@@ -13,6 +13,12 @@
 //!   requests with sparse high-priority short requests woven in; the
 //!   head-of-line-blocking scenario where chunked-prefill EDF must beat
 //!   plain round-robin on high-priority TTFT.
+//! - [`Mix::PrefillHeavy`] / [`Mix::DecodeHeavy`] — the fleet
+//!   scenarios: long prompts with short continuations (compute-bound,
+//!   wants fast-GPU prefill) vs short prompts with long continuations
+//!   (bandwidth-light steady decode, the work the carbon-aware router
+//!   drains to old low-carbon replicas). The fleet sweep and the
+//!   handoff tests share these so placement results replay exactly.
 //!
 //! Everything derives from `util::rng` (xoshiro256++), so a (mix, seed)
 //! pair replays bit-identically — the property the harness's
@@ -27,6 +33,27 @@ pub enum Mix {
     Steady,
     Bursty,
     AdversarialLongPrompt,
+    /// Fleet scenario: long prompts, short continuations — prefill
+    /// dominates the step mix.
+    PrefillHeavy,
+    /// Fleet scenario: short prompts, long continuations — steady-state
+    /// decode dominates, the drain-to-low-carbon-replica regime.
+    DecodeHeavy,
+}
+
+impl Mix {
+    /// Parse a CLI name (`steady`, `bursty`, `adversarial`,
+    /// `prefill-heavy`, `decode-heavy`).
+    pub fn parse(s: &str) -> Option<Mix> {
+        match s.to_ascii_lowercase().as_str() {
+            "steady" => Some(Mix::Steady),
+            "bursty" => Some(Mix::Bursty),
+            "adversarial" | "adversarial-long-prompt" => Some(Mix::AdversarialLongPrompt),
+            "prefill-heavy" | "prefill" => Some(Mix::PrefillHeavy),
+            "decode-heavy" | "decode" => Some(Mix::DecodeHeavy),
+            _ => None,
+        }
+    }
 }
 
 /// One request arrival on the virtual clock.
@@ -144,6 +171,37 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
                         deadline_ms: None,
                         cancel_after_ms: None,
                     }
+                }
+            }
+            Mix::PrefillHeavy => {
+                now_ms += rng.range(8, 24) as u64;
+                // Mostly long-prompt summarization-shaped work with a
+                // sprinkle of tight-deadline interactive requests.
+                let high = rng.below(5) == 0;
+                let plen = if high { rng.range(4, 10) } else { rng.range(48, 128) };
+                TraceEvent {
+                    at_ms: now_ms,
+                    id,
+                    prompt: prompt(&mut rng, plen, spec.vocab),
+                    max_new: rng.range(2, 8),
+                    priority: if high { Priority::High } else { Priority::Normal },
+                    deadline_ms: if high { Some(rng.range(80, 250) as u64) } else { None },
+                    cancel_after_ms: None,
+                }
+            }
+            Mix::DecodeHeavy => {
+                now_ms += rng.range(8, 24) as u64;
+                // Chat-shaped work: short prompts, long continuations;
+                // a slice rides the batch class (no deadline).
+                let batch = rng.below(4) == 0;
+                TraceEvent {
+                    at_ms: now_ms,
+                    id,
+                    prompt: prompt(&mut rng, rng.range(2, 8), spec.vocab),
+                    max_new: rng.range(24, 64),
+                    priority: if batch { Priority::Batch } else { Priority::Normal },
+                    deadline_ms: None,
+                    cancel_after_ms: None,
                 }
             }
         };
@@ -302,6 +360,41 @@ mod tests {
                 _ => assert!(e.prompt.len() >= 48, "flood prompt too short"),
             }
         }
+    }
+
+    #[test]
+    fn fleet_mixes_are_deterministic_and_phase_skewed() {
+        for mix in [Mix::PrefillHeavy, Mix::DecodeHeavy] {
+            let a = generate(&spec(mix));
+            let b = generate(&spec(mix));
+            assert_eq!(a.len(), 60);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.at_ms, y.at_ms);
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.max_new, y.max_new);
+                assert_eq!(x.priority, y.priority);
+            }
+            assert!(a.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+        }
+        // The two regimes skew opposite ways, which is what makes them
+        // exercise both sides of the prefill/decode disaggregation.
+        let p = generate(&spec(Mix::PrefillHeavy));
+        let (pp, pd): (usize, usize) =
+            (p.iter().map(|e| e.prompt.len()).sum(), p.iter().map(|e| e.max_new).sum());
+        assert!(pp > 3 * pd, "prefill-heavy: {pp} prompt vs {pd} decode tokens");
+        let d = generate(&spec(Mix::DecodeHeavy));
+        let (dp, dd): (usize, usize) =
+            (d.iter().map(|e| e.prompt.len()).sum(), d.iter().map(|e| e.max_new).sum());
+        assert!(dd > 3 * dp, "decode-heavy: {dp} prompt vs {dd} decode tokens");
+    }
+
+    #[test]
+    fn mix_parse_cli_names() {
+        assert_eq!(Mix::parse("steady"), Some(Mix::Steady));
+        assert_eq!(Mix::parse("PREFILL-HEAVY"), Some(Mix::PrefillHeavy));
+        assert_eq!(Mix::parse("decode"), Some(Mix::DecodeHeavy));
+        assert_eq!(Mix::parse("adversarial"), Some(Mix::AdversarialLongPrompt));
+        assert_eq!(Mix::parse("nope"), None);
     }
 
     #[test]

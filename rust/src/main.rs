@@ -5,6 +5,7 @@
 //!   generate  [--prompt ...]     executed tiny-model generation
 //!   serve     [--addr ...]       TCP serving over the executed engine
 //!   simulate  [--model 13B ...]  simulated run on a large geometry
+//!   fleet     [--gpus A100,M40]  heterogeneous replica fleet (virtual)
 //!   experiment <id>|all          regenerate a paper figure/table
 //!   ratio-search                 Algorithm 1 (alias: experiment alg1)
 //!   carbon-report                Fig 1 + Fig 12 summary
@@ -124,6 +125,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "generate" => generate(args),
         "serve" => serve(args),
         "simulate" => simulate(args),
+        "fleet" => fleet(args),
         "experiment" => experiment(args),
         "ratio-search" => {
             print!("{}", experiments::run("alg1", opts_of(args))?);
@@ -192,6 +194,16 @@ COMMANDS:
                   [--policy atu|lru|window|setassoc] (default: setassoc,
                   the cache_policy sweep winner)
                   [--capture-trace F] [--no-ssd] [--no-cache] [--no-mp]
+  fleet           heterogeneous replica fleet on the virtual clock:
+                  prefill lands on fast replicas, steady-state decode
+                  drains to low-carbon ones via checksummed KV handoff
+                  --gpus A100,M40,M40  one replica per name (gpu_db)
+                  [--model 7B] [--requests N] [--seed S] [--slots K]
+                  [--mix decode-heavy|prefill-heavy|steady|bursty]
+                  [--arrival-scale X]  stretch trace inter-arrivals ×X
+                  [--intensity G]      grid gCO2/kWh (default 820)
+                  [--no-handoff]       sessions finish where they
+                                       prefilled (ablation)
   experiment ID   regenerate a paper artifact: fig1 fig4 fig5 fig6 fig9
                   fig10 fig11 fig12 fig13 table14 alg1 cache_policy,
                   or `all`
@@ -366,6 +378,80 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         let trace = e.take_captured_plans().expect("capture was enabled");
         trace.save(path)?;
         println!("captured {} plan records to {path}", trace.len());
+    }
+    Ok(())
+}
+
+/// `fleet`: replay a seeded trace over heterogeneous replicas on the
+/// virtual clock — the CLI face of `SimEngine::run_fleet` (carbon-aware
+/// prefill/decode disaggregation with ticket-based KV handoff).
+fn fleet(args: &Args) -> anyhow::Result<()> {
+    use m2cache::coordinator::workload::{generate as gen_trace, Mix, TraceSpec};
+    use m2cache::coordinator::FleetConfig;
+    let model = args.get_or("model", "7B");
+    let spec = ModelSpec::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let names = args.get_or("gpus", "A100,M40,M40");
+    let mut gpus = Vec::new();
+    for name in names.split(',').filter(|s| !s.trim().is_empty()) {
+        let g = m2cache::carbon::find_gpu(name.trim())
+            .ok_or_else(|| anyhow::anyhow!("unknown gpu {name}"))?;
+        gpus.push(g);
+    }
+    anyhow::ensure!(!gpus.is_empty(), "--gpus names no replicas");
+    let mix_name = args.get_or("mix", "decode-heavy");
+    let mix = Mix::parse(mix_name).ok_or_else(|| anyhow::anyhow!("unknown mix {mix_name}"))?;
+    let n = args.get_usize("requests", 32);
+    let seed = args.get_u64("seed", 17);
+    let slots = args.get_usize("slots", 8).max(1);
+    let scale = args.get_u64("arrival-scale", 35).max(1);
+    let mut events = gen_trace(&TraceSpec {
+        mix,
+        n,
+        seed,
+        vocab: spec.vocab as u32,
+    });
+    for ev in &mut events {
+        ev.at_ms *= scale;
+    }
+    let fc = FleetConfig {
+        intensity_g_per_kwh: args
+            .get_f64("intensity", m2cache::carbon::PAPER_INTENSITY_G_PER_KWH),
+        handoff: !args.flag("no-handoff"),
+        ..FleetConfig::default()
+    };
+    let e = SimEngine::new(spec, HardwareSpec::rtx3090_testbed(), engine_config(args));
+    let r = e.run_fleet(&gpus, slots, &events, fc)?;
+    println!(
+        "fleet[{}] {}: {} tokens in {:.2}s = {:.1} tok/s (virtual)",
+        names,
+        e.spec.name,
+        r.tokens,
+        r.makespan_ms / 1e3,
+        r.tok_per_s
+    );
+    println!(
+        "carbon {:.2} g = {:.3} mg/token | ttft p50 {:.0} ms p99 {:.0} ms | \
+         handoffs {} ({} aborted, {} recovered, {} B moved)",
+        r.gco2_g,
+        r.gco2_mg_per_token,
+        r.p50_ttft_ms,
+        r.p99_ttft_ms,
+        r.counters.handoffs,
+        r.counters.handoff_aborts,
+        r.counters.handoff_recoveries,
+        r.counters.handoff_bytes,
+    );
+    for (i, row) in r.counters.live().iter().enumerate() {
+        println!(
+            "  replica {i} {:<8} prefill {:<6} decode {:<7} in/out {}/{} | {:.2} gCO2",
+            row.gpu,
+            row.prefill_turns,
+            row.decode_turns,
+            row.handoffs_in,
+            row.handoffs_out,
+            row.gco2_g
+        );
     }
     Ok(())
 }

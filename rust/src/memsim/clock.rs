@@ -20,9 +20,11 @@ pub enum Channel {
     Ssd,
     /// Host CPU (cache management, memcpy within DRAM).
     Cpu,
+    /// Inter-replica network (KV handoff between fleet replicas).
+    Nic,
 }
 
-pub const N_CHANNELS: usize = 5;
+pub const N_CHANNELS: usize = 6;
 
 impl Channel {
     fn idx(self) -> usize {
@@ -32,6 +34,7 @@ impl Channel {
             Channel::PcieD2h => 2,
             Channel::Ssd => 3,
             Channel::Cpu => 4,
+            Channel::Nic => 5,
         }
     }
 
@@ -42,6 +45,7 @@ impl Channel {
             Channel::PcieD2h => "pcie_d2h",
             Channel::Ssd => "ssd",
             Channel::Cpu => "cpu",
+            Channel::Nic => "nic",
         }
     }
 }

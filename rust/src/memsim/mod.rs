@@ -21,6 +21,7 @@ pub fn channel_for(link: Link) -> Channel {
         Link::HbmToDram => Channel::PcieD2h,
         Link::SsdToDram => Channel::Ssd,
         Link::DramToSsd => Channel::Ssd,
+        Link::ReplicaToReplica => Channel::Nic,
     }
 }
 

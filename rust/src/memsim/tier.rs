@@ -40,6 +40,10 @@ pub enum Link {
     SsdToDram,
     /// DRAM -> SSD (NVMe write — the KV spill file's ingest path).
     DramToSsd,
+    /// Replica -> replica over the datacenter network (the fleet's KV
+    /// handoff path: a serialized spill record shipped to another
+    /// engine's host).
+    ReplicaToReplica,
 }
 
 /// Cost-model parameters for one link.
@@ -91,6 +95,7 @@ pub struct Links {
     pub hbm_to_dram: LinkSpec,
     pub ssd_to_dram: LinkSpec,
     pub dram_to_ssd: LinkSpec,
+    pub replica_to_replica: LinkSpec,
 }
 
 impl Links {
@@ -102,6 +107,7 @@ impl Links {
             Link::HbmToDram => self.hbm_to_dram,
             Link::SsdToDram => self.ssd_to_dram,
             Link::DramToSsd => self.dram_to_ssd,
+            Link::ReplicaToReplica => self.replica_to_replica,
         }
     }
 }
@@ -149,6 +155,12 @@ impl HardwareSpec {
                 dram_to_ssd: LinkSpec {
                     bandwidth_bps: 2.7e9,
                     base_latency_s: 90.0e-6,
+                },
+                // 100 GbE effective (~12.5 GB/s) with RPC/queueing
+                // latency — the KV handoff path between replicas.
+                replica_to_replica: LinkSpec {
+                    bandwidth_bps: 12.5e9,
+                    base_latency_s: 50.0e-6,
                 },
             },
         }

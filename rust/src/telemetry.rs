@@ -111,6 +111,87 @@ impl FaultCounters {
     }
 }
 
+/// Most replicas one fleet tracks per-replica counters for. Fixed so
+/// [`FleetCounters`] stays `Copy` (it rides in the serving stats
+/// snapshot, which is copied under the server's stats lock); fleets
+/// larger than this still run, aggregates stay exact, and replicas past
+/// the cap simply drop their per-replica row.
+pub const MAX_FLEET_REPLICAS: usize = 8;
+
+/// Per-replica serving counters for the heterogeneous fleet: phase
+/// turns run here, KV handoffs in/out with their bytes, busy time per
+/// phase, and the replica's attributed carbon. Filled by
+/// `coordinator::fleet::Fleet`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaCounters {
+    /// GPU model serving this replica (from `carbon::gpu_db`).
+    pub gpu: &'static str,
+    /// Prefill steps this replica ran.
+    pub prefill_turns: u64,
+    /// Decode steps this replica ran.
+    pub decode_turns: u64,
+    /// Sessions handed off *to* this replica (import side).
+    pub handoffs_in: u64,
+    /// Sessions handed off *away* (export side).
+    pub handoffs_out: u64,
+    pub handoff_bytes_in: u64,
+    pub handoff_bytes_out: u64,
+    /// Virtual-clock ms spent running prefill / decode steps.
+    pub busy_prefill_ms: u64,
+    pub busy_decode_ms: u64,
+    /// Operational + amortized-embodied carbon attributed to this
+    /// replica over the run, grams CO2e.
+    pub gco2_g: f64,
+}
+
+impl Default for ReplicaCounters {
+    fn default() -> Self {
+        ReplicaCounters {
+            gpu: "",
+            prefill_turns: 0,
+            decode_turns: 0,
+            handoffs_in: 0,
+            handoffs_out: 0,
+            handoff_bytes_in: 0,
+            handoff_bytes_out: 0,
+            busy_prefill_ms: 0,
+            busy_decode_ms: 0,
+            gco2_g: 0.0,
+        }
+    }
+}
+
+/// Fleet-level serving counters: the per-replica rows plus handoff
+/// aggregates. `n_replicas == 0` means no fleet ran (single-engine
+/// serving) — the JSON/STATS block still renders, with zeros.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FleetCounters {
+    /// Replicas actually provisioned (rows `0..n_replicas` are live).
+    pub n_replicas: usize,
+    pub replicas: [ReplicaCounters; MAX_FLEET_REPLICAS],
+    /// Completed KV handoffs between replicas.
+    pub handoffs: u64,
+    /// Record bytes moved by completed handoffs.
+    pub handoff_bytes: u64,
+    /// Handoffs abandoned at export (session kept decoding in place).
+    pub handoff_aborts: u64,
+    /// Handoffs whose import failed verification; the session was
+    /// recomputed from its prompt (never a `Failed` outcome).
+    pub handoff_recoveries: u64,
+}
+
+impl FleetCounters {
+    /// The live per-replica rows.
+    pub fn live(&self) -> &[ReplicaCounters] {
+        &self.replicas[..self.n_replicas.min(MAX_FLEET_REPLICAS)]
+    }
+
+    /// Total carbon attributed across replicas, grams CO2e.
+    pub fn gco2_total(&self) -> f64 {
+        self.live().iter().map(|r| r.gco2_g).sum()
+    }
+}
+
 /// Decode-phase wall/simulated time breakdown (Fig 11b).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PhaseTimes {
@@ -225,6 +306,9 @@ pub struct Telemetry {
     /// Sessions recovered by recompute-from-prompt after a failed KV
     /// restore (the scheduler's degradation ladder, not a `Failed`).
     pub recoveries: u64,
+    /// Heterogeneous-fleet serving counters (see [`FleetCounters`];
+    /// all-zero with `n_replicas == 0` outside fleet mode).
+    pub fleet: FleetCounters,
     /// Free-form counters for experiment-specific series.
     pub counters: BTreeMap<String, u64>,
 }
@@ -324,7 +408,32 @@ impl Telemetry {
                 .field_num("mean_ttft_s", c.mean_ttft_s())
                 .end_obj();
         }
-        w.end_obj().end_obj();
+        w.end_obj();
+        w.key("fleet")
+            .begin_obj()
+            .field_int("replicas", self.fleet.n_replicas as i64)
+            .field_int("handoffs", self.fleet.handoffs as i64)
+            .field_int("handoff_bytes", self.fleet.handoff_bytes as i64)
+            .field_int("aborted", self.fleet.handoff_aborts as i64)
+            .field_int("recovered", self.fleet.handoff_recoveries as i64)
+            .field_num("gco2_g", self.fleet.gco2_total());
+        w.key("per_replica").begin_arr();
+        for (i, r) in self.fleet.live().iter().enumerate() {
+            w.begin_obj()
+                .field_int("id", i as i64)
+                .field_str("gpu", r.gpu)
+                .field_int("prefill_turns", r.prefill_turns as i64)
+                .field_int("decode_turns", r.decode_turns as i64)
+                .field_int("handoffs_in", r.handoffs_in as i64)
+                .field_int("handoffs_out", r.handoffs_out as i64)
+                .field_int("handoff_bytes_in", r.handoff_bytes_in as i64)
+                .field_int("handoff_bytes_out", r.handoff_bytes_out as i64)
+                .field_int("busy_prefill_ms", r.busy_prefill_ms as i64)
+                .field_int("busy_decode_ms", r.busy_decode_ms as i64)
+                .field_num("gco2_g", r.gco2_g)
+                .end_obj();
+        }
+        w.end_arr().end_obj().end_obj();
         w.finish()
     }
 }

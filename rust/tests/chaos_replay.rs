@@ -20,10 +20,12 @@
 //! the remaining rungs of the degradation ladder.
 
 use anyhow::Result;
+use m2cache::carbon::find_gpu;
 use m2cache::coordinator::workload::{generate, Mix, TraceEvent, TraceSpec};
 use m2cache::coordinator::{
-    DecodeSession, FaultConfig, KvStore, KvTicket, Outcome, PrefixConfig, PrefixCostModel,
-    Request, SchedConfig, Scheduler, SessionEngine, SessionEvent, SpillTier, TieredPrefixCache,
+    DecodeSession, FaultConfig, Fleet, FleetConfig, HandoffRecord, KvStore, KvTicket, Outcome,
+    PhaseCost, PrefixConfig, PrefixCostModel, Request, SchedConfig, Scheduler, SessionEngine,
+    SessionEvent, SpillTier, TieredPrefixCache,
 };
 use m2cache::telemetry::FaultCounters;
 use std::collections::HashMap;
@@ -102,6 +104,46 @@ impl SessionEngine for ChaosEngine {
 
     fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
         self.kv.discard(ticket);
+    }
+
+    fn supports_handoff(&self) -> bool {
+        true
+    }
+
+    fn export_kv(&mut self, s: &mut DecodeSession) -> Result<HandoffRecord> {
+        // The engine wraps KV rows at MAX_POS, so the record carries at
+        // most one slot's worth of values.
+        let used = s.pos().min(MAX_POS) * D;
+        let ticket = self.kv.park_prefix_copy(s.slot(), used)?;
+        let bytes = match self.kv.export_record(ticket) {
+            Ok(b) => b,
+            Err(e) => {
+                self.kv.discard(ticket);
+                return Err(e);
+            }
+        };
+        self.kv.release(s.slot());
+        Ok(HandoffRecord {
+            session_id: s.id,
+            used: s.pos(),
+            kv_bytes: bytes.len() as u64,
+            bytes,
+        })
+    }
+
+    fn import_kv(&mut self, s: &mut DecodeSession, rec: &HandoffRecord) -> Result<()> {
+        anyhow::ensure!(rec.session_id == s.id, "handoff record for wrong session");
+        let ticket = self.kv.import_record(&rec.bytes)?;
+        match self.kv.restore(ticket) {
+            Ok(slot) => {
+                s.rebind_slot(slot);
+                Ok(())
+            }
+            Err(e) => {
+                self.kv.discard(ticket);
+                Err(e)
+            }
+        }
     }
 }
 
@@ -375,4 +417,64 @@ fn persistent_write_failure_degrades_to_dram_only_spill() {
         kv.release(s);
     }
     assert_eq!(kv.spilled(), 0);
+}
+
+#[test]
+fn fleet_handoff_under_corruption_recovers_by_recompute_and_never_fails() {
+    // Replica 0 flips a bit in every spill record it writes (DRAM
+    // budget 0, so parks go through the SSD path), which poisons
+    // handoffs in BOTH directions: records exported from 0 ship the
+    // corruption to the peer (whose import CRC-rejects them before
+    // admitting any bytes), and clean records imported INTO 0 corrupt
+    // at park time so the post-import restore CRC-fails. Either way
+    // the fleet's recovery ladder must fire — recompute-from-prompt on
+    // the destination — and the trace must finish with reference bytes
+    // and zero leaked slots or tickets, never a failed session.
+    let events = generate(&TraceSpec {
+        mix: Mix::DecodeHeavy,
+        n: 10,
+        seed: 0xF1E7,
+        vocab: VOCAB as u32,
+    });
+    let reference = sequential_reference(&events);
+    let mut fleet = Fleet::new(FleetConfig {
+        force_handoff: true,
+        handoff_after: 1,
+        min_remaining: 1,
+        ..FleetConfig::default()
+    });
+    let a100 = find_gpu("A100").unwrap();
+    let m40 = find_gpu("M40").unwrap();
+    let flip = FaultConfig {
+        bit_flip: 1.0,
+        ..FaultConfig::default()
+    };
+    fleet.add_replica(ChaosEngine::new(10, flip), a100, PhaseCost::uniform(1.0));
+    fleet.add_replica(
+        ChaosEngine::new(10, FaultConfig::default()),
+        m40,
+        PhaseCost::uniform(1.0),
+    );
+    let report = fleet
+        .run_trace(&events)
+        .expect("a faulted handoff must degrade, never fail the trace");
+    assert!(
+        report.counters.handoff_recoveries >= 1,
+        "corruption never tripped a recovery: {:?}",
+        report.counters
+    );
+    let got = fleet.outputs();
+    assert_eq!(got.len(), events.len(), "lost requests");
+    for (id, toks) in &got {
+        assert_eq!(toks, &reference[id], "request {id} diverged under faulted handoff");
+    }
+    for r in 0..2 {
+        assert_eq!(fleet.engine(r).kv.in_use(), 0, "replica {r} leaked KV slots");
+        assert_eq!(fleet.engine(r).kv.spilled(), 0, "replica {r} leaked tickets");
+    }
+    // Every recovery traces back to a CRC rejection somewhere in the
+    // two stores — recompute is a response to detected corruption, not
+    // a spurious slow path.
+    let crc: u64 = (0..2).map(|r| fleet.engine(r).kv.fault_counters().crc_failures).sum();
+    assert!(crc >= report.counters.handoff_recoveries, "recoveries without CRC rejections");
 }

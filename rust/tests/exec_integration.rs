@@ -345,3 +345,62 @@ fn telemetry_accounting_consistent() {
     assert!(t.traffic.dram_to_hbm > 0);
     assert!(t.hit_ratio() > 0.0 && t.hit_ratio() < 1.0);
 }
+
+#[test]
+fn fleet_handoff_between_exec_engines_is_byte_identical() {
+    // The fleet tentpole's executed-path acceptance: two in-process
+    // ExecEngines over the same artifact set, every session forced to
+    // migrate mid-decode with its real KV rows travelling as an M2KV
+    // handoff record. Greedy decode is deterministic, so the fleet's
+    // outputs must match a lone engine decoding each prompt by itself.
+    let art = need_artifacts!();
+    use m2cache::carbon::find_gpu;
+    use m2cache::coordinator::{Fleet, FleetConfig, PhaseCost};
+    let reqs = [
+        ("the quick brown fox ", 10usize),
+        ("pack my box with ", 8usize),
+        ("a journey of a thousand ", 6usize),
+    ];
+    let mut reference = Vec::new();
+    for (p, n) in &reqs {
+        let mut e = ExecEngine::new(&art, EngineConfig::full()).unwrap();
+        reference.push(e.generate(&tokenize(p), *n).unwrap());
+    }
+    let mk = || {
+        let mut cfg = EngineConfig::full();
+        cfg.max_sessions = reqs.len();
+        cfg.kv_slots = Some(reqs.len());
+        ExecEngine::new(&art, cfg).unwrap()
+    };
+    let mut fleet = Fleet::new(FleetConfig {
+        force_handoff: true,
+        handoff_after: 1,
+        min_remaining: 1,
+        ..FleetConfig::default()
+    });
+    fleet.add_replica(mk(), find_gpu("A100").unwrap(), PhaseCost::uniform(1.0));
+    fleet.add_replica(mk(), find_gpu("M40").unwrap(), PhaseCost::uniform(1.0));
+    for (i, (p, n)) in reqs.iter().enumerate() {
+        fleet.submit_at(0, Request::new(i as u64 + 1, tokenize(p), *n)).unwrap();
+    }
+    while fleet.step().unwrap() {}
+    assert!(fleet.all_done());
+    let report = fleet.report();
+    // Slots match sessions on both replicas, so the forced migration
+    // of every session is structurally guaranteed.
+    assert_eq!(report.counters.handoffs, reqs.len() as u64, "{:?}", report.counters);
+    assert_eq!(report.counters.handoff_recoveries, 0, "clean handoffs must not recompute");
+    let got = fleet.outputs();
+    assert_eq!(got.len(), reqs.len());
+    for (i, want) in reference.iter().enumerate() {
+        assert_eq!(got[i].0, i as u64 + 1);
+        assert_eq!(&got[i].1, want, "request {} bytes diverged after handoff", i + 1);
+    }
+    // The engines' own telemetry saw the migrations too.
+    let out0 = fleet.engine(0).tel.counters.get("sessions_handed_off").copied().unwrap_or(0);
+    let out1 = fleet.engine(1).tel.counters.get("sessions_handed_off").copied().unwrap_or(0);
+    let in0 = fleet.engine(0).tel.counters.get("sessions_handed_in").copied().unwrap_or(0);
+    let in1 = fleet.engine(1).tel.counters.get("sessions_handed_in").copied().unwrap_or(0);
+    assert_eq!(out0 + out1, reqs.len() as u64);
+    assert_eq!(in0 + in1, reqs.len() as u64);
+}

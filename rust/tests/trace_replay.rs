@@ -19,12 +19,14 @@
 //!   trace and the same simulated clock.
 
 use anyhow::Result;
+use m2cache::carbon::find_gpu;
 use m2cache::coordinator::workload::{
     generate, inject_cancellations, inject_shared_prefix, Mix, TraceEvent, TraceSpec,
 };
 use m2cache::coordinator::{
-    DecodeSession, KvTicket, Outcome, Priority, Request, SchedConfig, SchedMode, Scheduler,
-    SessionEngine, SessionEvent, StubSessionEngine,
+    DecodeSession, Fleet, FleetConfig, HandoffRecord, KvStore, KvTicket, Outcome, PhaseCost,
+    Priority, Request, SchedConfig, SchedMode, Scheduler, SessionEngine, SessionEvent,
+    StubSessionEngine,
 };
 use m2cache::telemetry::{ClassCounters, N_CLASSES};
 use std::collections::{HashMap, HashSet};
@@ -786,4 +788,192 @@ fn chunked_edf_beats_round_robin_p99_ttft_for_high_priority() {
         edf.classes[Priority::Batch.index()].completed,
         rr.classes[Priority::Batch.index()].completed
     );
+}
+
+// --------------------------------------------------------------- fleet
+
+/// KV geometry of the fleet engine: enough positions for DecodeHeavy's
+/// deepest session (8 prompt + 64 generated), D values per token per
+/// layer plane.
+const FLEET_MAX_POS: usize = 96;
+const FLEET_D: usize = 2;
+
+/// The KV row a correct engine must hold for `(session, pos)` — a pure
+/// function both replicas can recompute, so imported KV is verified row
+/// by row on the destination instead of being taken on faith.
+fn fleet_row(id: u64, pos: usize) -> f32 {
+    id as f32 * 100.0 + pos as f32 * 0.5
+}
+
+/// Fleet engine over the real tiered [`KvStore`]: every forward first
+/// re-verifies every previously written row of its slot — so a session
+/// that just migrated proves the bytes that travelled through the
+/// checksummed M2KV handoff record are exactly what the source wrote —
+/// then writes the row for the current position. Logits reuse the
+/// stub's pure `(token, pos)` function, keeping outputs byte-comparable
+/// to a single-replica reference.
+struct FleetKvEngine {
+    kv: KvStore,
+    rows_verified: u64,
+}
+
+impl FleetKvEngine {
+    fn new(slots: usize) -> FleetKvEngine {
+        // A roomy DRAM spill budget: handoff exports park in DRAM, so
+        // this exercises the CRC-verified DRAM export path (the chaos
+        // tier covers the SSD record path).
+        FleetKvEngine {
+            kv: KvStore::new(slots, 2, FLEET_MAX_POS * FLEET_D, 1 << 20),
+            rows_verified: 0,
+        }
+    }
+}
+
+impl SessionEngine for FleetKvEngine {
+    fn capacity(&self) -> usize {
+        self.kv.capacity()
+    }
+
+    fn open(&mut self, req: Request) -> Result<DecodeSession> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self
+            .kv
+            .acquire()
+            .ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+        Ok(DecodeSession::new(req, slot))
+    }
+
+    fn forward(&mut self, s: &DecodeSession, token: u32) -> Result<Vec<f32>> {
+        assert!(s.pos() < FLEET_MAX_POS, "session outgrew the KV geometry");
+        for p in 0..s.pos() {
+            let want = fleet_row(s.id, p);
+            for layer in 0..2 {
+                let k = &self.kv.k_layer(s.slot(), layer)[p * FLEET_D..(p + 1) * FLEET_D];
+                let v = &self.kv.v_layer(s.slot(), layer)[p * FLEET_D..(p + 1) * FLEET_D];
+                assert!(
+                    k.iter().all(|&x| x == want) && v.iter().all(|&x| x == -want),
+                    "session {} row {p} corrupt after handoff",
+                    s.id
+                );
+            }
+            self.rows_verified += 1;
+        }
+        let val = fleet_row(s.id, s.pos());
+        let (k_row, v_row) = ([val; FLEET_D], [-val; FLEET_D]);
+        for layer in 0..2 {
+            self.kv.write_token(s.slot(), layer, s.pos(), FLEET_D, &k_row, &v_row);
+        }
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[((token as usize).wrapping_mul(31) + s.pos() * 7 + 1) % VOCAB] = 1.0;
+        Ok(logits)
+    }
+
+    fn close(&mut self, s: &mut DecodeSession) {
+        self.kv.release(s.slot());
+    }
+
+    fn supports_handoff(&self) -> bool {
+        true
+    }
+
+    fn export_kv(&mut self, s: &mut DecodeSession) -> Result<HandoffRecord> {
+        let ticket = self.kv.park_prefix_copy(s.slot(), s.pos() * FLEET_D)?;
+        let bytes = match self.kv.export_record(ticket) {
+            Ok(b) => b,
+            Err(e) => {
+                self.kv.discard(ticket);
+                return Err(e);
+            }
+        };
+        self.kv.release(s.slot());
+        Ok(HandoffRecord {
+            session_id: s.id,
+            used: s.pos(),
+            kv_bytes: bytes.len() as u64,
+            bytes,
+        })
+    }
+
+    fn import_kv(&mut self, s: &mut DecodeSession, rec: &HandoffRecord) -> Result<()> {
+        anyhow::ensure!(rec.session_id == s.id, "handoff record for wrong session");
+        let ticket = self.kv.import_record(&rec.bytes)?;
+        match self.kv.restore(ticket) {
+            Ok(slot) => {
+                s.rebind_slot(slot);
+                Ok(())
+            }
+            Err(e) => {
+                self.kv.discard(ticket);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Single-replica reference: each request alone on a one-slot engine.
+fn fleet_reference(events: &[TraceEvent]) -> Vec<(u64, Vec<u32>)> {
+    let mut eng = FleetKvEngine::new(1);
+    let mut out = Vec::new();
+    for ev in events {
+        let mut s = eng.open(ev.to_request()).unwrap();
+        while !s.is_done() {
+            s.step(&mut eng).unwrap();
+        }
+        eng.close(&mut s);
+        out.push((s.id, s.generated.clone()));
+    }
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn fleet_forced_handoff_replay_is_byte_identical_with_zero_leaks() {
+    // The fleet tentpole's trace tier: every session migrates between
+    // replicas mid-decode exactly once (force_handoff with a budget of
+    // one), its KV rows travelling as a checksummed M2KV record over
+    // the replica link. Contract: the destination re-verifies every
+    // imported row on its next forward, outputs are byte-identical to
+    // the single-replica reference, and both replicas end with zero
+    // held slots and zero parked tickets.
+    const N: usize = 12;
+    let events = generate(&TraceSpec {
+        mix: Mix::DecodeHeavy,
+        n: N,
+        seed: 0xF1EE7,
+        vocab: VOCAB as u32,
+    });
+    let reference = fleet_reference(&events);
+    let mut fleet = Fleet::new(FleetConfig {
+        force_handoff: true,
+        handoff_after: 1,
+        min_remaining: 1,
+        ..FleetConfig::default()
+    });
+    let a100 = find_gpu("A100").unwrap();
+    let m40 = find_gpu("M40").unwrap();
+    // N slots per replica: admission never queues and the peer always
+    // has a free slot, so the forced migration of every session is
+    // structurally guaranteed rather than load-dependent.
+    fleet.add_replica(FleetKvEngine::new(N), a100, PhaseCost::uniform(1.0));
+    fleet.add_replica(FleetKvEngine::new(N), m40, PhaseCost::uniform(2.0));
+    let report = fleet.run_trace(&events).unwrap();
+    assert_eq!(
+        report.counters.handoffs,
+        N as u64,
+        "every session must hand off exactly once: {:?}",
+        report.counters
+    );
+    assert!(report.counters.handoff_bytes > 0, "records carried no bytes");
+    assert_eq!(report.counters.handoff_aborts, 0, "clean stores must not abort");
+    assert_eq!(report.counters.handoff_recoveries, 0, "clean stores must not recompute");
+    assert_eq!(fleet.outputs(), reference, "handoff changed generated bytes");
+    for r in 0..2 {
+        assert_eq!(fleet.engine(r).kv.in_use(), 0, "replica {r} leaked KV slots");
+        assert_eq!(fleet.engine(r).kv.spilled(), 0, "replica {r} leaked tickets");
+        assert!(fleet.engine(r).rows_verified > 0, "replica {r} verified nothing");
+    }
+    // Handoff accounting balances across the per-replica rows.
+    let rows = report.counters.live();
+    assert_eq!(rows.iter().map(|r| r.handoffs_out).sum::<u64>(), N as u64);
+    assert_eq!(rows.iter().map(|r| r.handoffs_in).sum::<u64>(), N as u64);
 }
