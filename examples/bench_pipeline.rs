@@ -1,0 +1,397 @@
+//! Pipelined-datapath bench: quantifies the overlapped decode tentpole
+//! against the synchronous baseline on the REAL storage stack — a
+//! `WeightStore::create` tiny model on disk (the SSD tier), a
+//! deliberately undersized `DramCache`, the batched `Preloader`, and
+//! the speculative `StagingArea` — plus the overlapped KV-restore path
+//! of `KvStore::begin_restore`. Writes `BENCH_pipeline.json` so CI can
+//! archive the pipeline trajectory per PR.
+//!
+//!   cargo run --release --example bench_pipeline            # full run
+//!   cargo run --release --example bench_pipeline -- --quick # CI smoke
+//!                                           [--out PATH]    # json path
+//!
+//! Acceptance bars (asserted in the full run, reported in both):
+//!   - pipelined decode sustains >= 1.3x the synchronous tok/s under
+//!     SSD-resident cache pressure;
+//!   - overlapped restore (prefetch begun at the scheduler hint, then
+//!     redeemed) beats the cold demand restore on mean latency.
+//!
+//! Structural invariants (asserted in BOTH runs — determinism, not
+//! timing): the pipelined leg consumes byte-identical neuron values to
+//! the synchronous leg (rolling hash over the consumed stream in plan
+//! order), and every overlapped restore both begins and redeems its
+//! prefetch with byte-identical restored KV planes.
+
+use m2cache::cache::{DramCache, FileFlash, Preloader, StageJob, StagingArea};
+use m2cache::coordinator::KvStore;
+use m2cache::model::{ModelSpec, PredictorWeights, WeightStore};
+use m2cache::precision::plan::{LayerPlan, PrecisionRatios};
+use m2cache::precision::Dtype;
+use m2cache::sparsity::candidate_plan;
+use m2cache::util::bench::Table;
+use m2cache::util::text::JsonWriter;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-layer "GEMM" stand-in: the compute window the staging workers
+/// get to hide their work behind.
+const COMPUTE_PER_LAYER: Duration = Duration::from_micros(600);
+/// Decode acceptance bar (full run): pipelined tok/s vs synchronous.
+const MIN_DECODE_SPEEDUP: f64 = 1.3;
+/// Overlap window between the scheduler's readmission hint and the
+/// actual restore — the turn of compute the prefetch hides behind.
+const RESTORE_OVERLAP_WINDOW: Duration = Duration::from_micros(600);
+
+fn spin(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// FNV-1a fold over a neuron-value stream — the byte-identity witness.
+fn fold(h: u64, neuron: u32, vals: &[f32]) -> u64 {
+    let mut h = h ^ u64::from(neuron);
+    for v in vals {
+        h = (h ^ u64::from(v.to_bits())).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic hidden state entering `layer` for token `token`:
+/// varies per token, drifts only slightly across layers, so the
+/// cross-layer speculation (predictor for L+1 scored on the state
+/// entering L) lands most of its guesses — with a realistic mispredict
+/// tail feeding `prefetch_wasted`.
+fn hidden(token: usize, layer: usize, d: usize) -> Vec<f32> {
+    (0..d)
+        .map(|i| ((token * 131 + i * 17) % 97) as f32 / 97.0 + layer as f32 * 0.002)
+        .collect()
+}
+
+struct Decode {
+    tok_s: f64,
+    hash: u64,
+    staged: u64,
+    staged_hits: u64,
+    wasted: u64,
+    failures: u64,
+    ensure_stalls: u64,
+}
+
+fn plan_for(
+    preds: &[PredictorWeights],
+    layer: usize,
+    x: &[f32],
+    ratios: &PrecisionRatios,
+    scores: &mut Vec<f32>,
+) -> LayerPlan {
+    candidate_plan(&preds[layer], x, Some(ratios), 0, scores)
+}
+
+/// Demand-path load: DRAM frame record if resident, SSD read otherwise
+/// — identical in both legs so the comparison isolates the overlap.
+fn demand(
+    store: &WeightStore,
+    dram: &mut DramCache,
+    layer: usize,
+    neuron: u32,
+    dtype: Dtype,
+) -> Vec<f32> {
+    let rec_bytes = store.record_bytes(dtype);
+    if let Some(frame) = dram.lookup(layer) {
+        if let Some(rec) = frame.neuron_record(dtype, neuron, rec_bytes) {
+            return store.dequantize_record(rec, dtype);
+        }
+    }
+    let raw = store.read_neuron_raw(layer, neuron, dtype).expect("ssd read");
+    store.dequantize_record(&raw, dtype)
+}
+
+/// One decode leg over the real storage stack. `io_threads == 0` means
+/// the synchronous baseline (no staging, single preloader thread);
+/// otherwise the pipelined datapath with that many workers.
+fn run_decode(store: &Arc<WeightStore>, tokens: usize, io_threads: usize) -> Decode {
+    let (n_layers, d) = (store.spec.n_layers, store.spec.d_model);
+    let ratios = PrecisionRatios::new(0.3, 0.3, 0.3);
+    let preds: Vec<PredictorWeights> = (0..n_layers)
+        .map(|l| store.read_predictor(l).expect("predictor"))
+        .collect();
+
+    let flash = Arc::new(FileFlash::new((**store).clone()));
+    let layer_bytes = flash.layer_bytes(0);
+    // Two frames of DRAM for four layers: the SSD tier stays hot.
+    let mut dram = DramCache::new(2 * layer_bytes, 0);
+    let mut pre = Preloader::new(flash, io_threads.max(1), 2);
+    let mut staging =
+        (io_threads > 0).then(|| StagingArea::new(Arc::clone(store), io_threads));
+
+    let mut scores = Vec::new();
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    let mut timed = Duration::ZERO;
+    for token in 0..tokens + 1 {
+        let warmup = token == 0;
+        let t0 = Instant::now();
+        for l in 0..n_layers {
+            pre.drain(&mut dram);
+            pre.ensure(l, &mut dram).expect("preload ensure");
+            let x = hidden(token, l, d);
+            let plan = plan_for(&preds, l, &x, &ratios, &mut scores);
+            // Speculate L+1's plan from the state entering L and hand
+            // it to the staging workers before L's own loads/compute.
+            if let Some(stg) = staging.as_mut() {
+                if l + 1 < n_layers {
+                    let cand = plan_for(&preds, l + 1, &x, &ratios, &mut scores);
+                    let jobs: Vec<StageJob> = cand
+                        .iter()
+                        .map(|(neuron, dtype)| {
+                            let rec_bytes = store.record_bytes(dtype);
+                            let bytes = dram
+                                .lookup(l + 1)
+                                .and_then(|f| f.neuron_record(dtype, neuron, rec_bytes))
+                                .map(<[u8]>::to_vec);
+                            StageJob { neuron, dtype, bytes }
+                        })
+                        .collect();
+                    stg.submit(l + 1, jobs);
+                }
+                stg.settle(l);
+            }
+            for (neuron, dtype) in plan.iter() {
+                let vals = match staging.as_mut().and_then(|s| s.take(l, neuron, dtype)) {
+                    Some(vals) => vals,
+                    None => demand(store, &mut dram, l, neuron, dtype),
+                };
+                if !warmup {
+                    hash = fold(hash, neuron, &vals);
+                }
+            }
+            if let Some(stg) = staging.as_mut() {
+                stg.finish(l);
+            }
+            spin(COMPUTE_PER_LAYER);
+            pre.kick(l, &dram);
+        }
+        if !warmup {
+            timed += t0.elapsed();
+        }
+    }
+    if let Some(stg) = staging.as_mut() {
+        stg.quiesce();
+    }
+    let (staged, staged_hits, wasted, failures) = staging
+        .as_ref()
+        .map_or((0, 0, 0, 0), |s| (s.staged, s.hits, s.wasted, s.failures));
+    Decode {
+        tok_s: tokens as f64 / timed.as_secs_f64(),
+        hash,
+        staged,
+        staged_hits,
+        wasted,
+        failures,
+        ensure_stalls: pre.stalls,
+    }
+}
+
+struct Restore {
+    mean_us: f64,
+    p99_us: f64,
+    plane_hash: u64,
+    begun: u64,
+    hits: u64,
+}
+
+/// One preempt/resume leg: spill a written slot to the SSD spill file,
+/// then time `restore` — cold on the demand leg, after
+/// `begin_restore` plus an overlap window on the overlapped leg.
+fn run_restore(dir: &std::path::Path, iters: usize, overlapped: bool) -> Restore {
+    let (n_layers, d, max_pos) = (2usize, 128usize, 1024usize);
+    let stride = d * max_pos;
+    let tag = if overlapped { "overlap" } else { "demand" };
+    let mut kv = KvStore::new(2, n_layers, stride, 0)
+        .with_spill_path(dir.join(format!("kv-{tag}.spill")));
+    let mut lat = Vec::with_capacity(iters);
+    let mut plane_hash = 0xcbf2_9ce4_8422_2325u64;
+    for it in 0..iters {
+        let slot = kv.acquire().expect("slot");
+        let mut k_row = vec![0.0f32; d];
+        let mut v_row = vec![0.0f32; d];
+        for l in 0..n_layers {
+            for pos in 0..max_pos {
+                for (i, (k, v)) in k_row.iter_mut().zip(v_row.iter_mut()).enumerate() {
+                    let base = ((it * 31 + l * 7 + pos * 3 + i) % 251) as f32;
+                    *k = base * 0.5;
+                    *v = base * -0.25;
+                }
+                kv.write_token(slot, l, pos, d, &k_row, &v_row);
+            }
+        }
+        let ticket = kv.spill_prefix(slot, stride).expect("spill");
+        if overlapped {
+            assert!(kv.begin_restore(ticket), "prefetch must begin");
+            spin(RESTORE_OVERLAP_WINDOW);
+        }
+        let t0 = Instant::now();
+        let back = kv.restore(ticket).expect("restore");
+        lat.push(t0.elapsed());
+        for l in 0..n_layers {
+            plane_hash = fold(plane_hash, l as u32, kv.k_layer(back, l));
+            plane_hash = fold(plane_hash, l as u32, kv.v_layer(back, l));
+        }
+        kv.release(back);
+    }
+    let (begun, hits) = kv.overlap_counters();
+    if overlapped {
+        assert_eq!(begun, iters as u64, "every hint must start a prefetch");
+        assert_eq!(hits, iters as u64, "every restore must redeem its prefetch");
+    } else {
+        assert_eq!((begun, hits), (0, 0), "demand leg must not prefetch");
+    }
+    let mean_us = lat.iter().map(Duration::as_secs_f64).sum::<f64>() / iters as f64 * 1e6;
+    let mut sorted = lat.clone();
+    sorted.sort_unstable();
+    let p99 = sorted[((iters as f64 * 0.99).ceil() as usize - 1).min(iters - 1)];
+    Restore {
+        mean_us,
+        p99_us: p99.as_secs_f64() * 1e6,
+        plane_hash,
+        begun,
+        hits,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_pipeline.json".to_string());
+
+    let (tokens, iters) = if quick { (6, 6) } else { (32, 32) };
+
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("m2cache-bench-pipeline-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench dir");
+    let store =
+        Arc::new(WeightStore::create(&dir, &ModelSpec::tiny(), 0x91B3).expect("weight store"));
+
+    println!("== decode: synchronous vs pipelined ({tokens} tokens) ==");
+    let sync = run_decode(&store, tokens, 0);
+    let pipe = run_decode(&store, tokens, 4);
+    assert_eq!(
+        sync.hash, pipe.hash,
+        "pipelined decode must consume byte-identical neuron values"
+    );
+    let decode_speedup = pipe.tok_s / sync.tok_s;
+
+    println!("== restore: demand vs overlapped ({iters} spill/restore cycles) ==");
+    let demand_leg = run_restore(&dir, iters, false);
+    let overlap_leg = run_restore(&dir, iters, true);
+    assert_eq!(
+        demand_leg.plane_hash, overlap_leg.plane_hash,
+        "overlapped restore must land byte-identical KV planes"
+    );
+    let restore_speedup = demand_leg.mean_us / overlap_leg.mean_us;
+
+    let mut t = Table::new(["case", "metric", "value"]);
+    t.row([
+        "decode/sync".to_string(),
+        "tok/s".to_string(),
+        format!("{:.1}", sync.tok_s),
+    ]);
+    t.row([
+        "decode/pipelined".to_string(),
+        "tok/s".to_string(),
+        format!("{:.1}", pipe.tok_s),
+    ]);
+    t.row([
+        "decode".to_string(),
+        "speedup".to_string(),
+        format!("{decode_speedup:.2}x"),
+    ]);
+    t.row([
+        "decode/pipelined".to_string(),
+        "staged / hits / wasted".to_string(),
+        format!("{} / {} / {}", pipe.staged, pipe.staged_hits, pipe.wasted),
+    ]);
+    t.row([
+        "restore/demand".to_string(),
+        "mean".to_string(),
+        format!("{:.0} us", demand_leg.mean_us),
+    ]);
+    t.row([
+        "restore/overlap".to_string(),
+        "mean".to_string(),
+        format!("{:.0} us", overlap_leg.mean_us),
+    ]);
+    t.row([
+        "restore".to_string(),
+        "speedup".to_string(),
+        format!("{restore_speedup:.2}x"),
+    ]);
+    t.print();
+
+    let mut w = JsonWriter::new();
+    w.begin_obj()
+        .field_str("bench", "pipeline")
+        .field_bool("quick", quick)
+        .key("decode")
+        .begin_obj()
+        .field_int("tokens", tokens as i64)
+        .field_num("sync_tok_s", sync.tok_s)
+        .field_num("pipelined_tok_s", pipe.tok_s)
+        .field_num("speedup", decode_speedup)
+        .field_int("staged", pipe.staged as i64)
+        .field_int("staged_hits", pipe.staged_hits as i64)
+        .field_int("prefetch_wasted", pipe.wasted as i64)
+        .field_int("staged_failures", pipe.failures as i64)
+        .field_int("sync_ensure_stalls", sync.ensure_stalls as i64)
+        .field_int("pipelined_ensure_stalls", pipe.ensure_stalls as i64)
+        .field_bool("byte_identical", sync.hash == pipe.hash)
+        .end_obj()
+        .key("restore")
+        .begin_obj()
+        .field_int("iters", iters as i64)
+        .field_num("demand_mean_us", demand_leg.mean_us)
+        .field_num("demand_p99_us", demand_leg.p99_us)
+        .field_num("overlap_mean_us", overlap_leg.mean_us)
+        .field_num("overlap_p99_us", overlap_leg.p99_us)
+        .field_num("speedup", restore_speedup)
+        .field_int("overlap_begun", overlap_leg.begun as i64)
+        .field_int("overlap_hits", overlap_leg.hits as i64)
+        .field_bool(
+            "byte_identical",
+            demand_leg.plane_hash == overlap_leg.plane_hash,
+        )
+        .end_obj()
+        .end_obj();
+    std::fs::write(&out_path, w.finish()).expect("write json");
+    println!("wrote {out_path}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if !quick {
+        assert!(
+            pipe.staged_hits > 0,
+            "speculative staging never landed a hit"
+        );
+        assert!(
+            decode_speedup >= MIN_DECODE_SPEEDUP,
+            "pipelined decode {:.1} tok/s is under {MIN_DECODE_SPEEDUP}x the \
+             synchronous {:.1} tok/s",
+            pipe.tok_s,
+            sync.tok_s
+        );
+        assert!(
+            overlap_leg.mean_us < demand_leg.mean_us,
+            "overlapped restore ({:.0} us) must beat demand restore ({:.0} us)",
+            overlap_leg.mean_us,
+            demand_leg.mean_us
+        );
+        println!("acceptance: decode {decode_speedup:.2}x, restore {restore_speedup:.2}x -- OK");
+    }
+}

@@ -10,6 +10,7 @@ pub mod hbm;
 pub mod preloader;
 pub mod setassoc;
 pub mod ssd;
+pub mod staging;
 
 pub use dram::{DramCache, LayerData};
 pub use hbm::{
@@ -18,4 +19,5 @@ pub use hbm::{
 };
 pub use preloader::Preloader;
 pub use setassoc::SetAssocPolicy;
+pub use staging::{StageJob, StagingArea};
 pub use ssd::{FaultyFlash, FileFlash, FlashStore, SimFlash, StorageMix, FRAME_DTYPES};

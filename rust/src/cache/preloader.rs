@@ -26,6 +26,7 @@ type Done = (usize, Result<Option<LayerData>>);
 pub struct Preloader {
     flash: Arc<dyn FlashStore + Sync>,
     pool: ThreadPool,
+    io_threads: usize,
     tx: Sender<Done>,
     rx: Receiver<Done>,
     inflight: HashSet<usize>,
@@ -35,6 +36,14 @@ pub struct Preloader {
     pub bytes_loaded: u64,
     pub loads: u64,
     pub failures: u64,
+    /// Batched-read telemetry: pool submits vs layers they carried
+    /// (layers / submits = coalescing ratio).
+    pub batched_submits: u64,
+    pub batched_layers: u64,
+    /// Stall telemetry: `ensure` calls that found the layer missing,
+    /// and the wall-clock seconds they spent blocked on it.
+    pub stalls: u64,
+    pub stall_s: f64,
 }
 
 impl Preloader {
@@ -44,9 +53,11 @@ impl Preloader {
         depth: usize,
     ) -> Preloader {
         let (tx, rx) = channel();
+        let io_threads = io_threads.max(1);
         Preloader {
             flash,
-            pool: ThreadPool::new(io_threads.max(1)),
+            pool: ThreadPool::new(io_threads),
+            io_threads,
             tx,
             rx,
             inflight: HashSet::new(),
@@ -54,37 +65,68 @@ impl Preloader {
             bytes_loaded: 0,
             loads: 0,
             failures: 0,
+            batched_submits: 0,
+            batched_layers: 0,
+            stalls: 0,
+            stall_s: 0.0,
         }
     }
 
     /// Request layers `current+1 ..= current+depth` (mod ring) that are
-    /// neither DRAM-resident nor already in flight. Effective look-ahead
-    /// is clamped to `n_layers - 1`: a deeper window would wrap onto
-    /// (or past) the currently-computing layer, wasting SSD reads on a
-    /// frame `ensure` already holds.
+    /// neither DRAM-resident nor already in flight, coalesced into at
+    /// most `io_threads` batched reads. Effective look-ahead is clamped
+    /// to `n_layers - 1`: a deeper window would wrap onto (or past) the
+    /// currently-computing layer, wasting SSD reads on a frame `ensure`
+    /// already holds.
     pub fn kick(&mut self, current_layer: usize, dram: &DramCache) {
         let n = self.flash.n_layers();
+        let mut wanted = Vec::new();
         for ahead in 1..=self.depth.min(n.saturating_sub(1)) {
             let layer = (current_layer + ahead) % n;
             if dram.is_resident(layer) || self.inflight.contains(&layer) {
                 continue;
             }
-            self.request(layer);
+            wanted.push(layer);
         }
+        self.request_batch(&wanted);
     }
 
     /// Issue one async layer read.
     pub fn request(&mut self, layer: usize) {
-        if !self.inflight.insert(layer) {
+        self.request_batch(&[layer]);
+    }
+
+    /// Issue async reads for every not-yet-inflight layer in `layers`,
+    /// split into at most `io_threads` contiguous chunks — each chunk
+    /// is ONE pool submit driving [`FlashStore::read_layers`], so a
+    /// multi-layer look-ahead window costs one coalesced request per
+    /// I/O thread instead of one submit per layer. Per-layer results
+    /// still land individually on the completion channel.
+    pub fn request_batch(&mut self, layers: &[usize]) {
+        let mut fresh: Vec<usize> = Vec::with_capacity(layers.len());
+        for &layer in layers {
+            if self.inflight.insert(layer) {
+                fresh.push(layer);
+            }
+        }
+        if fresh.is_empty() {
             return;
         }
-        let flash = Arc::clone(&self.flash);
-        let tx = self.tx.clone();
-        self.pool.submit(move || {
-            let result = flash.read_layer(layer);
-            // Receiver may be gone during shutdown; ignore send errors.
-            let _ = tx.send((layer, result));
-        });
+        let chunk_size = fresh.len().div_ceil(self.io_threads);
+        for chunk in fresh.chunks(chunk_size) {
+            self.batched_submits += 1;
+            self.batched_layers += chunk.len() as u64;
+            let flash = Arc::clone(&self.flash);
+            let tx = self.tx.clone();
+            let chunk = chunk.to_vec();
+            self.pool.submit(move || {
+                for done in flash.read_layers(&chunk) {
+                    // Receiver may be gone during shutdown; ignore
+                    // send errors.
+                    let _ = tx.send(done);
+                }
+            });
+        }
     }
 
     /// Non-blocking: insert every completed frame into DRAM. Returns the
@@ -122,8 +164,22 @@ impl Preloader {
 
     /// Block until `layer` is DRAM-resident: drains completions, waits
     /// for an in-flight read, or falls back to a synchronous demand read
-    /// (with one retry, covering transient injected faults).
+    /// (with one retry, covering transient injected faults). Calls that
+    /// find the layer missing are metered as demand-miss stalls
+    /// (`stalls` / `stall_s`) — the time the compute stream spent
+    /// blocked on the storage tiers.
     pub fn ensure(&mut self, layer: usize, dram: &mut DramCache) -> Result<()> {
+        if dram.is_resident(layer) {
+            return Ok(());
+        }
+        let t0 = std::time::Instant::now();
+        let res = self.ensure_slow(layer, dram);
+        self.stalls += 1;
+        self.stall_s += t0.elapsed().as_secs_f64();
+        res
+    }
+
+    fn ensure_slow(&mut self, layer: usize, dram: &mut DramCache) -> Result<()> {
         let mut scratch = 0;
         loop {
             if dram.is_resident(layer) {
@@ -221,6 +277,47 @@ mod tests {
             assert!(dram.is_resident(l));
         }
         assert_eq!(pre.loads, 3);
+    }
+
+    #[test]
+    fn kick_coalesces_window_into_batched_submits() {
+        // One I/O thread -> the whole 3-layer look-ahead window rides
+        // a single batched `read_layers` submit (coalescing ratio 3).
+        let flash = Arc::new(SimFlash::new(ModelSpec::tiny(), StorageMix::dense_fp16()));
+        let bytes = flash.layer_bytes(0);
+        let mut pre = Preloader::new(flash, 1, 3);
+        let mut dram = DramCache::new(bytes * 8, 1);
+        pre.kick(0, &dram);
+        assert_eq!(pre.batched_submits, 1, "one submit for the window");
+        assert_eq!(pre.batched_layers, 3);
+        pre.quiesce(&mut dram);
+        for l in 1..4 {
+            assert!(dram.is_resident(l));
+        }
+        assert_eq!(pre.loads, 3);
+    }
+
+    #[test]
+    fn kick_splits_batches_across_io_threads() {
+        let flash = Arc::new(SimFlash::new(ModelSpec::tiny(), StorageMix::dense_fp16()));
+        let bytes = flash.layer_bytes(0);
+        let mut pre = Preloader::new(flash, 3, 3);
+        let mut dram = DramCache::new(bytes * 8, 1);
+        pre.kick(0, &dram);
+        assert_eq!(pre.batched_submits, 3, "one chunk per I/O thread");
+        assert_eq!(pre.batched_layers, 3);
+        pre.quiesce(&mut dram);
+        assert_eq!(pre.loads, 3);
+    }
+
+    #[test]
+    fn ensure_meters_demand_stalls() {
+        let (mut pre, mut dram) = sim_preloader(2);
+        pre.ensure(3, &mut dram).unwrap(); // cold demand miss: a stall
+        assert_eq!(pre.stalls, 1);
+        assert!(pre.stall_s >= 0.0);
+        pre.ensure(3, &mut dram).unwrap(); // resident: free, no stall
+        assert_eq!(pre.stalls, 1);
     }
 
     #[test]

@@ -26,6 +26,19 @@ pub trait FlashStore: Send {
     /// Read one full layer frame. `Ok(None)` in metadata-only stores.
     fn read_layer(&self, layer: usize) -> Result<Option<LayerData>>;
 
+    /// Read several layer frames in one request. The default loops
+    /// [`FlashStore::read_layer`]; stores with cheaper bulk paths (or
+    /// io_uring-style submission queues) can override to coalesce. One
+    /// failed layer never poisons the batch — each entry carries its
+    /// own result, so callers retry failures individually through the
+    /// demand path.
+    fn read_layers(&self, layers: &[usize]) -> Vec<(usize, Result<Option<LayerData>>)> {
+        layers
+            .iter()
+            .map(|&layer| (layer, self.read_layer(layer)))
+            .collect()
+    }
+
     /// Read a single neuron record (demand misses that bypass DRAM).
     fn read_neuron(&self, layer: usize, neuron: u32, dtype: Dtype) -> Result<Option<Vec<u8>>>;
 

@@ -1,0 +1,281 @@
+//! Double-buffered speculative staging area for the pipelined decode
+//! datapath: while layer L's kernel runs, staging workers materialize
+//! the dequantized values of layer L+1's *predicted* HBM misses (from
+//! speculative plans — see `sparsity::speculate`), either from record
+//! bytes snapshotted out of a DRAM frame at submit time or by reading
+//! the SSD store directly on the worker (a genuinely overlapped read).
+//!
+//! The area holds at most two in-flight layer stages — the buffer L+1
+//! consumes and the one being filled for L+2 — so a misprediction
+//! storm can never grow an unbounded queue. Staged values are a pure
+//! function of `(layer, neuron, dtype)` over the immutable weight
+//! store, so consuming a staged entry is byte-identical to the demand
+//! path by construction; entries the exact plan never asks for are
+//! dropped and counted as wasted bandwidth.
+
+use crate::model::weights::WeightStore;
+use crate::precision::Dtype;
+use crate::util::pool::ThreadPool;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// One staging job: produce the dequantized values for `(neuron,
+/// dtype)` of the stage's layer.
+pub struct StageJob {
+    pub neuron: u32,
+    pub dtype: Dtype,
+    /// Record bytes copied from the DRAM frame at submit time; `None`
+    /// sends the worker to the SSD store instead.
+    pub bytes: Option<Vec<u8>>,
+}
+
+/// `(layer, neuron, dtype, values)` — `None` values mean the worker's
+/// SSD read failed; the neuron falls back to the demand path.
+type Done = (usize, u32, Dtype, Option<Vec<f32>>);
+
+struct LayerStage {
+    layer: usize,
+    /// Submitted jobs whose completion has not yet been drained.
+    outstanding: usize,
+    ready: HashMap<(u32, Dtype), Vec<f32>>,
+}
+
+/// The staging area itself. Counters are read by the engine into
+/// `Telemetry::pipeline` — `staged` submissions split into `hits`
+/// (consumed), `wasted` (mispredicted), and `failures` (worker read
+/// errors that fell back to the demand path).
+pub struct StagingArea {
+    store: Arc<WeightStore>,
+    pool: ThreadPool,
+    tx: Sender<Done>,
+    rx: Receiver<Done>,
+    stages: VecDeque<LayerStage>,
+    pub staged: u64,
+    pub hits: u64,
+    pub wasted: u64,
+    pub failures: u64,
+}
+
+impl StagingArea {
+    pub fn new(store: Arc<WeightStore>, workers: usize) -> StagingArea {
+        let (tx, rx) = channel();
+        StagingArea {
+            store,
+            pool: ThreadPool::new(workers.max(1)),
+            tx,
+            rx,
+            stages: VecDeque::new(),
+            staged: 0,
+            hits: 0,
+            wasted: 0,
+            failures: 0,
+        }
+    }
+
+    /// Begin staging `layer` from a speculative plan's predicted
+    /// misses. A layer already staging is left alone (one candidate
+    /// per layer per token); when both double-buffer slots are full
+    /// the oldest stage retires first, its unconsumed entries counted
+    /// as wasted.
+    pub fn submit(&mut self, layer: usize, jobs: Vec<StageJob>) {
+        if jobs.is_empty() || self.stages.iter().any(|s| s.layer == layer) {
+            return;
+        }
+        while self.stages.len() >= 2 {
+            self.retire_front();
+        }
+        self.staged += jobs.len() as u64;
+        let outstanding = jobs.len();
+        for job in jobs {
+            let store = Arc::clone(&self.store);
+            let tx = self.tx.clone();
+            self.pool.submit(move || {
+                let raw = match job.bytes {
+                    Some(b) => Some(b),
+                    None => store.read_neuron_raw(layer, job.neuron, job.dtype).ok(),
+                };
+                let vals = raw.map(|b| store.dequantize_record(&b, job.dtype));
+                // Receiver may be gone during shutdown.
+                let _ = tx.send((layer, job.neuron, job.dtype, vals));
+            });
+        }
+        self.stages.push_back(LayerStage {
+            layer,
+            outstanding,
+            ready: HashMap::new(),
+        });
+    }
+
+    /// Block until every job submitted for `layer` has completed, so
+    /// reconciliation sees the full staged set. No-op for layers never
+    /// staged.
+    pub fn settle(&mut self, layer: usize) {
+        while self
+            .stages
+            .iter()
+            .any(|s| s.layer == layer && s.outstanding > 0)
+        {
+            match self.rx.recv() {
+                Ok(done) => self.route(done),
+                Err(_) => return, // workers gone (shutdown)
+            }
+        }
+    }
+
+    /// Non-blocking: file any completed jobs into their stages.
+    pub fn drain(&mut self) {
+        while let Ok(done) = self.rx.try_recv() {
+            self.route(done);
+        }
+    }
+
+    /// Consume a staged value. `Some` is a staged hit — the demand
+    /// load this prefetch absorbed.
+    pub fn take(&mut self, layer: usize, neuron: u32, dtype: Dtype) -> Option<Vec<f32>> {
+        let stage = self.stages.iter_mut().find(|s| s.layer == layer)?;
+        let vals = stage.ready.remove(&(neuron, dtype))?;
+        self.hits += 1;
+        Some(vals)
+    }
+
+    /// Retire `layer`'s stage after its reconciliation consumed what
+    /// it wanted; whatever remains was mispredicted bandwidth.
+    pub fn finish(&mut self, layer: usize) {
+        if let Some(i) = self.stages.iter().position(|s| s.layer == layer) {
+            let stage = self.stages.remove(i).expect("position just found");
+            self.wasted += stage.ready.len() as u64;
+            // Late completions of this layer (outstanding > 0) route
+            // to no stage and count as wasted when drained.
+        }
+    }
+
+    /// Drop every stage and wait out the workers (engine teardown and
+    /// tests). Unconsumed entries count as wasted.
+    pub fn quiesce(&mut self) {
+        self.pool.wait_idle();
+        self.drain();
+        while !self.stages.is_empty() {
+            self.retire_front();
+        }
+    }
+
+    fn retire_front(&mut self) {
+        if let Some(stage) = self.stages.pop_front() {
+            self.wasted += stage.ready.len() as u64;
+        }
+    }
+
+    fn route(&mut self, (layer, neuron, dtype, vals): Done) {
+        let stage = self.stages.iter_mut().find(|s| s.layer == layer);
+        match (stage, vals) {
+            (Some(stage), Some(vals)) => {
+                stage.outstanding -= 1;
+                stage.ready.insert((neuron, dtype), vals);
+            }
+            (Some(stage), None) => {
+                stage.outstanding -= 1;
+                self.failures += 1;
+            }
+            // Stage already retired: the work still ran.
+            (None, Some(_)) => self.wasted += 1,
+            (None, None) => self.failures += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelSpec;
+
+    fn test_store(tag: &str) -> (std::path::PathBuf, Arc<WeightStore>) {
+        let dir = std::env::temp_dir().join(format!("m2c-stage-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = WeightStore::create(&dir, &ModelSpec::tiny(), 5).unwrap();
+        (dir, Arc::new(store))
+    }
+
+    #[test]
+    fn staged_values_match_demand_path() {
+        let (dir, store) = test_store("eq");
+        let mut area = StagingArea::new(Arc::clone(&store), 2);
+        // One job with pre-copied bytes, one that reads SSD itself.
+        let raw = store.read_neuron_raw(1, 3, Dtype::Int8).unwrap();
+        area.submit(
+            1,
+            vec![
+                StageJob { neuron: 3, dtype: Dtype::Int8, bytes: Some(raw) },
+                StageJob { neuron: 5, dtype: Dtype::F16, bytes: None },
+            ],
+        );
+        area.settle(1);
+        for (neuron, dtype) in [(3u32, Dtype::Int8), (5u32, Dtype::F16)] {
+            let staged = area.take(1, neuron, dtype).expect("staged");
+            let demand = store.dequantize_record(
+                &store.read_neuron_raw(1, neuron, dtype).unwrap(),
+                dtype,
+            );
+            assert_eq!(staged, demand, "staged bytes must equal demand path");
+        }
+        assert_eq!(area.hits, 2);
+        area.finish(1);
+        assert_eq!(area.wasted, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unconsumed_entries_count_as_wasted() {
+        let (dir, store) = test_store("waste");
+        let mut area = StagingArea::new(store, 1);
+        area.submit(
+            0,
+            vec![
+                StageJob { neuron: 0, dtype: Dtype::F16, bytes: None },
+                StageJob { neuron: 1, dtype: Dtype::F16, bytes: None },
+            ],
+        );
+        area.settle(0);
+        let _ = area.take(0, 0, Dtype::F16).expect("staged");
+        area.finish(0); // neuron 1 never consumed
+        assert_eq!(area.hits, 1);
+        assert_eq!(area.wasted, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn double_buffer_retires_oldest_stage() {
+        let (dir, store) = test_store("dbuf");
+        let mut area = StagingArea::new(store, 1);
+        for layer in 0..3 {
+            area.submit(
+                layer,
+                vec![StageJob { neuron: 0, dtype: Dtype::F16, bytes: None }],
+            );
+            area.settle(layer);
+        }
+        // Layer 0's stage was pushed out by layer 2's submission.
+        assert!(area.take(0, 0, Dtype::F16).is_none());
+        assert!(area.take(2, 0, Dtype::F16).is_some());
+        assert_eq!(area.wasted, 1, "evicted stage's entry is wasted");
+        area.quiesce();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_reads_fall_back_silently() {
+        let (dir, store) = test_store("fail");
+        let mut area = StagingArea::new(store, 1);
+        // An out-of-range layer read errors on the worker; the entry
+        // simply never becomes ready and counts as a failure.
+        area.submit(
+            99,
+            vec![StageJob { neuron: 0, dtype: Dtype::F16, bytes: None }],
+        );
+        area.settle(99);
+        assert!(area.take(99, 0, Dtype::F16).is_none());
+        assert_eq!(area.failures, 1);
+        area.finish(99);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

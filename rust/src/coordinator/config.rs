@@ -94,6 +94,21 @@ pub struct EngineConfig {
     pub fixed_layers: usize,
     /// Preload look-ahead depth (paper: 2).
     pub preload_depth: usize,
+    /// I/O threads for the SSD preloader and speculative staging
+    /// workers (`--io-threads N`). 1 keeps the original single-thread
+    /// shape; the preloader coalesces its look-ahead window into at
+    /// most this many batched reads per kick.
+    pub io_threads: usize,
+    /// Pipelined decode datapath (`--pipeline`): speculative next-layer
+    /// plans pre-stage predicted HBM misses into a double-buffered
+    /// staging area while the current layer computes, and the scheduler
+    /// prefetches the EDF-head parked session's spill record during the
+    /// turn before its admission. Outputs stay byte-identical — the
+    /// exact plan is still computed and reconciled at every layer, so
+    /// mispredicts only waste bandwidth (`pipeline.prefetch_wasted`).
+    /// Off by default: traffic counters and fault-injection schedules
+    /// stay bit-exact with the serial datapath unless asked for.
+    pub pipeline: bool,
     pub int4_group: usize,
     pub seed: u64,
     /// Token-to-token overlap for synthetic traces (Fig 6: ~0.8).
@@ -188,6 +203,8 @@ impl Default for EngineConfig {
             dram_capacity: 40 * (1 << 30),
             fixed_layers: 2,
             preload_depth: 2,
+            io_threads: 1,
+            pipeline: false,
             int4_group: crate::model::weights::INT4_GROUP,
             seed: 0,
             trace_overlap: 0.8,
@@ -329,6 +346,18 @@ mod tests {
         // exists (and stays off) on every stage.
         assert!(!EngineConfig::ablation_mp_only().prefix_cache);
         assert!(!EngineConfig::full().prefix_cache);
+    }
+
+    #[test]
+    fn pipeline_defaults_off_with_single_io_thread() {
+        // The pipelined datapath and wider I/O are opt-in: every
+        // pre-existing counter, fault schedule, and traffic meter
+        // stays bit-exact unless `--pipeline` / `--io-threads` ask.
+        let c = EngineConfig::default();
+        assert!(!c.pipeline, "pipeline is opt-in");
+        assert_eq!(c.io_threads, 1, "one I/O thread keeps today's shape");
+        assert!(!EngineConfig::ablation_mp_only().pipeline);
+        assert_eq!(EngineConfig::full().io_threads, 1);
     }
 
     #[test]

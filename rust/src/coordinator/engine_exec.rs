@@ -16,7 +16,7 @@
 
 use crate::cache::{
     partition_by_union, union_plans, CacheUnit, DramCache, FileFlash, FlashStore, HbmPolicy,
-    NeuronAt, Preloader,
+    NeuronAt, Preloader, StageJob, StagingArea,
 };
 use crate::coordinator::config::EngineConfig;
 use crate::coordinator::kv_store::{HandoffRecord, KvStore};
@@ -93,6 +93,11 @@ pub struct ExecEngine {
     /// built; the batched path then runs the per-session kernel against
     /// the shared per-layer weight literal).
     batch_lanes: usize,
+    /// Pipelined-datapath staging area (`cfg.pipeline`): while layer L
+    /// computes, background workers pre-dequantize the *speculative*
+    /// plan for L+1 into a double-buffered stage. `None` keeps the
+    /// fully synchronous datapath.
+    staging: Option<StagingArea>,
 }
 
 impl ExecEngine {
@@ -170,7 +175,7 @@ impl ExecEngine {
             )
         };
         let mut dram = DramCache::new(dram_cap, fixed);
-        let mut preloader = Preloader::new(flash, 1, cfg.preload_depth);
+        let mut preloader = Preloader::new(flash, cfg.io_threads, cfg.preload_depth);
         if !cfg.use_ssd {
             for l in 0..spec.n_layers {
                 preloader.ensure(l, &mut dram)?;
@@ -210,6 +215,9 @@ impl ExecEngine {
             kv_pool_bytes: kv.bytes(),
             ..Telemetry::default()
         };
+        let staging = cfg
+            .pipeline
+            .then(|| StagingArea::new(Arc::clone(&store), cfg.io_threads));
         Ok(ExecEngine {
             rt,
             store,
@@ -239,6 +247,7 @@ impl ExecEngine {
             stage_v: Vec::new(),
             stage_pos: Vec::new(),
             batch_lanes,
+            staging,
         })
     }
 
@@ -366,6 +375,12 @@ impl ExecEngine {
             // low-rank scoring; the predictor HLO exists for parity)
             // and plan precision classes.
             let plan = self.plan_layer(l, &x)?;
+            // Pipelined datapath: speculate L+1's plan from the hidden
+            // state entering L and let the staging workers warm it
+            // while L loads and computes below.
+            if l + 1 < n_layers {
+                self.speculate_next(l + 1, std::slice::from_ref(&x))?;
+            }
             self.tel.phases.predict_s += timer.lap_s();
 
             // 3. DRAM/SSD tier.
@@ -393,12 +408,31 @@ impl ExecEngine {
             self.tel.phases.cache_mgmt_s += timer.lap_s();
 
             let v = self.store.neuron_values();
+            if let Some(stg) = self.staging.as_mut() {
+                stg.settle(l);
+            }
             for na in &upd.load {
-                let rec = self.record_from_dram(l, na)?;
-                let vals = self.store.dequantize_record(&rec, na.dtype);
+                // Staged-first reconciliation: a correctly predicted
+                // miss was already read + dequantized off-thread; only
+                // mispredicts fall back to the demand path. Byte meters
+                // charge the same wire traffic either way.
+                let vals = match self
+                    .staging
+                    .as_mut()
+                    .and_then(|s| s.take(l, na.neuron, na.dtype))
+                {
+                    Some(vals) => vals,
+                    None => {
+                        let rec = self.record_from_dram(l, na)?;
+                        self.store.dequantize_record(&rec, na.dtype)
+                    }
+                };
                 self.units[l].insert(na.neuron, na.dtype, &vals);
                 self.tel.traffic.dram_to_hbm +=
                     wire_bytes(na.dtype, v, self.store.int4_group);
+            }
+            if let Some(stg) = self.staging.as_mut() {
+                stg.finish(l);
             }
             self.tel.phases.transfer_s += timer.lap_s();
 
@@ -472,6 +506,7 @@ impl ExecEngine {
         self.tel.phases.other_s += timer.lap_s();
         self.tel.traffic.ssd_to_dram = self.preloader.bytes_loaded;
         self.tel.peak_dram_bytes = self.tel.peak_dram_bytes.max(self.dram.used_bytes());
+        self.snap_pipeline_tel();
         Ok(to_vec_f32(&logits)?)
     }
 
@@ -510,6 +545,11 @@ impl ExecEngine {
             for x in &xs {
                 plans.push(self.plan_layer(l, x)?);
             }
+            // Pipelined datapath: speculate L+1 for the whole batch —
+            // one dedup'd union of the per-lane candidate plans.
+            if l + 1 < n_layers {
+                self.speculate_next(l + 1, &xs)?;
+            }
             self.tel.phases.predict_s += timer.lap_s();
 
             // 2. DRAM/SSD tier — once per layer for the whole batch.
@@ -524,6 +564,9 @@ impl ExecEngine {
             // low-overlap batch whose union of (neuron, dtype) entries
             // exceeds the unit splits and amortizes within each group).
             let groups = partition_by_union(&plans, self.units[l].capacity);
+            if let Some(stg) = self.staging.as_mut() {
+                stg.settle(l);
+            }
             for group in &groups {
                 let union = union_plans(group.iter().map(|&i| &plans[i]));
                 if let Some(trace) = self.plan_trace.as_mut() {
@@ -547,8 +590,17 @@ impl ExecEngine {
                 // group instead of once per session.
                 let v = self.store.neuron_values();
                 for na in &upd.load {
-                    let rec = self.record_from_dram(l, na)?;
-                    let vals = self.store.dequantize_record(&rec, na.dtype);
+                    let vals = match self
+                        .staging
+                        .as_mut()
+                        .and_then(|s| s.take(l, na.neuron, na.dtype))
+                    {
+                        Some(vals) => vals,
+                        None => {
+                            let rec = self.record_from_dram(l, na)?;
+                            self.store.dequantize_record(&rec, na.dtype)
+                        }
+                    };
                     self.units[l].insert(na.neuron, na.dtype, &vals);
                     self.tel.traffic.dram_to_hbm +=
                         wire_bytes(na.dtype, v, self.store.int4_group);
@@ -571,6 +623,9 @@ impl ExecEngine {
                 }
                 self.tel.phases.ffn_s += timer.lap_s();
             }
+            if let Some(stg) = self.staging.as_mut() {
+                stg.finish(l);
+            }
             if groups.len() > 1 {
                 self.tel.bump("batch_union_splits", (groups.len() - 1) as u64);
             }
@@ -591,6 +646,7 @@ impl ExecEngine {
         self.tel.phases.other_s += timer.lap_s();
         self.tel.traffic.ssd_to_dram = self.preloader.bytes_loaded;
         self.tel.peak_dram_bytes = self.tel.peak_dram_bytes.max(self.dram.used_bytes());
+        self.snap_pipeline_tel();
         Ok(outs)
     }
 
@@ -784,6 +840,74 @@ impl ExecEngine {
         self.store.read_neuron_raw(layer, na.neuron, na.dtype)
     }
 
+    /// Speculate layer `layer`'s plan from the CURRENT hidden state(s)
+    /// (cross-layer activation similarity makes the previous layer's
+    /// input a usable predictor) and hand the predicted HBM misses to
+    /// the staging workers, which warm DRAM and pre-dequantize while
+    /// the current layer computes. Purely a warm-up: the exact plan is
+    /// still computed at layer entry and reconciled against the stage,
+    /// so outputs stay byte-identical — staged values are pure
+    /// functions of (layer, neuron, dtype) over the immutable weight
+    /// store. Mispredicted entries retire as `prefetch_wasted`.
+    fn speculate_next(&mut self, layer: usize, xs: &[xla::Literal]) -> Result<()> {
+        let Some(mut stg) = self.staging.take() else {
+            return Ok(());
+        };
+        let mut jobs: Vec<StageJob> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for x in xs {
+            let xv = to_vec_f32(x)?;
+            let mut scores = std::mem::take(&mut self.scores_buf);
+            let cand = sparsity::candidate_plan(
+                &self.predictors[layer],
+                &xv,
+                self.cfg.use_mp.then_some(&self.cfg.ratios),
+                self.cfg.plan_size(self.spec().ffn_hidden),
+                &mut scores,
+            );
+            self.scores_buf = scores;
+            for (neuron, dtype) in cand.iter() {
+                if !seen.insert((neuron, dtype)) {
+                    continue; // lane overlap: stage each entry once
+                }
+                if self.units[layer].slot_at(NeuronAt { neuron, dtype }).is_some() {
+                    continue; // residency is exact state, not a guess
+                }
+                let rec_bytes = self.store.record_bytes(dtype);
+                let bytes = self
+                    .dram
+                    .lookup(layer)
+                    .and_then(|f| f.neuron_record(dtype, neuron, rec_bytes))
+                    .map(<[u8]>::to_vec);
+                match &bytes {
+                    Some(_) => self.tel.dram_hits += 1,
+                    None => self.tel.dram_misses += 1,
+                }
+                jobs.push(StageJob { neuron, dtype, bytes });
+            }
+        }
+        stg.submit(layer, jobs);
+        self.staging = Some(stg);
+        Ok(())
+    }
+
+    /// Re-snapshot the pipeline's component counters (staging area,
+    /// preloader demand stalls, overlapped KV restores) into
+    /// `Telemetry::pipeline`.
+    fn snap_pipeline_tel(&mut self) {
+        if let Some(stg) = self.staging.as_ref() {
+            self.tel.pipeline.staged = stg.staged;
+            self.tel.pipeline.staged_hits = stg.hits;
+            self.tel.pipeline.prefetch_wasted = stg.wasted;
+            self.tel.pipeline.staged_failures = stg.failures;
+        }
+        self.tel.pipeline.ensure_stalls = self.preloader.stalls;
+        self.tel.pipeline.ensure_stall_s = self.preloader.stall_s;
+        let (begun, hits) = self.kv.overlap_counters();
+        self.tel.pipeline.overlap_restores_begun = begun;
+        self.tel.pipeline.overlap_restore_hits = hits;
+    }
+
     /// Greedy-decode `n_gen` tokens after feeding `prompt`, as a
     /// single-session run through the session machinery (one request,
     /// stepped to completion). Telemetry accumulates.
@@ -860,6 +984,9 @@ impl ExecEngine {
     fn snap_kv_tel(&mut self) {
         self.tel.kv_spill = *self.kv.counters();
         self.tel.faults = self.kv.fault_counters();
+        let (begun, hits) = self.kv.overlap_counters();
+        self.tel.pipeline.overlap_restores_begun = begun;
+        self.tel.pipeline.overlap_restore_hits = hits;
     }
 
     /// Shared-prefix cache counters, if the cache is enabled.
@@ -1073,6 +1200,19 @@ impl SessionEngine for ExecEngine {
         self.fold_closed(s);
     }
 
+    fn begin_restore(&mut self, ticket: KvTicket) {
+        // Scheduler hint: this parked session is expected to be
+        // admitted next turn, so start pulling its spilled KV off SSD
+        // on the I/O thread while the current turn computes. Advisory —
+        // `restore` redeems the prefetched bytes if they arrived, and
+        // falls back to the demand path otherwise.
+        if !self.cfg.pipeline {
+            return;
+        }
+        self.kv.begin_restore(ticket);
+        self.snap_kv_tel();
+    }
+
     fn supports_handoff(&self) -> bool {
         true
     }
@@ -1186,6 +1326,7 @@ impl SessionEngine for ExecEngine {
             continuous: self.cfg.continuous,
             batch: self.cfg.batch,
             preempt_cap: self.cfg.preempt_cap,
+            overlap_restore: self.cfg.pipeline,
             ..crate::coordinator::scheduler::SchedConfig::default()
         }
     }

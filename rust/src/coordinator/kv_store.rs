@@ -37,6 +37,7 @@
 use crate::coordinator::session::{KvPool, KvTicket};
 use crate::telemetry::{FaultCounters, SpillCounters};
 use crate::util::crc32;
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -44,6 +45,7 @@ use std::fs::{File, OpenOptions};
 use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
 /// Magic prefix of every on-SSD spill record.
@@ -137,6 +139,15 @@ pub trait SpillBackend: std::fmt::Debug + Send {
     fn injected_counters(&self) -> FaultCounters {
         FaultCounters::default()
     }
+    /// Whether the spill file may additionally be read from background
+    /// threads via positional reads — the overlapped-restore fast path
+    /// ([`KvStore::begin_restore`]). Deterministic decorators (fault
+    /// injection) say no, which keeps every backend RNG draw on the
+    /// engine thread in program order so a seeded chaos schedule
+    /// replays exactly.
+    fn supports_async(&self) -> bool {
+        false
+    }
 }
 
 /// The production backend: plain seek + full read/write + fdatasync.
@@ -156,6 +167,10 @@ impl SpillBackend for RealBackend {
 
     fn sync(&mut self, file: &mut File) -> io::Result<()> {
         file.sync_data()
+    }
+
+    fn supports_async(&self) -> bool {
+        true
     }
 }
 
@@ -322,6 +337,18 @@ struct DramSpill {
     crc: u32,
 }
 
+/// State of one overlapped-restore prefetch (see
+/// [`KvStore::begin_restore`]).
+#[derive(Debug)]
+enum PendingRestore {
+    /// A background positional read of the record bytes is in flight.
+    Inflight,
+    /// Raw record bytes arrived; CRC verification and decode still
+    /// happen on the engine thread when [`KvStore::restore`] consumes
+    /// them.
+    Ready(Vec<u8>),
+}
+
 /// Which spill tier currently holds a parked ticket's state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SpillTier {
@@ -365,12 +392,24 @@ pub struct KvStore {
     /// Consecutive record writes that exhausted their retries —
     /// reaching [`SSD_DEGRADE_AFTER`] flips DRAM-only spill mode.
     ssd_write_streak: u32,
+    /// Overlapped-restore prefetches keyed by ticket id (see
+    /// [`Self::begin_restore`]).
+    pending: HashMap<u64, PendingRestore>,
+    /// Lazily spawned I/O thread serving async prefetch reads.
+    overlap_pool: Option<ThreadPool>,
+    overlap_tx: Sender<(u64, io::Result<Vec<u8>>)>,
+    overlap_rx: Receiver<(u64, io::Result<Vec<u8>>)>,
+    /// Prefetches begun, and prefetches a restore consumed (the
+    /// overlap win the pipeline telemetry reports).
+    overlap_begun: u64,
+    overlap_hits: u64,
 }
 
 impl KvStore {
     /// A store of `slots` HBM KV slots (geometry as [`KvPool::new`])
     /// over a DRAM spill area of `dram_spill_bytes`.
     pub fn new(slots: usize, n_layers: usize, stride: usize, dram_spill_bytes: u64) -> KvStore {
+        let (tx, rx) = channel();
         KvStore {
             pool: KvPool::new(slots, n_layers, stride),
             dram_budget: dram_spill_bytes,
@@ -389,6 +428,12 @@ impl KvStore {
             retry_backoff_ms: DEFAULT_RETRY_BACKOFF_MS,
             faults: FaultCounters::default(),
             ssd_write_streak: 0,
+            pending: HashMap::new(),
+            overlap_pool: None,
+            overlap_tx: tx,
+            overlap_rx: rx,
+            overlap_begun: 0,
+            overlap_hits: 0,
         }
     }
 
@@ -768,6 +813,12 @@ impl KvStore {
             self.dram.contains_key(&id) || self.ssd.contains_key(&id),
             "unknown KV ticket {id}"
         );
+        // A prefetch begun for this ticket finishes here (CRC-verified
+        // on this thread); any unusable prefetch falls through to the
+        // demand path below.
+        if let Some(done) = self.take_overlapped(id) {
+            return done;
+        }
         let slot = self
             .pool
             .acquire()
@@ -821,10 +872,154 @@ impl KvStore {
         }
     }
 
+    // ------------------------- overlapped restore
+
+    /// Begin prefetching a parked ticket's spill-file record so a
+    /// following [`Self::restore`] finds the bytes already read — the
+    /// scheduler calls this for the parked session it knows it will
+    /// admit next turn, overlapping the SSD read with the current
+    /// turn's compute. Only the raw read moves off-thread: CRC
+    /// verification, decode, and slot acquisition all still happen on
+    /// the engine thread at restore time, so integrity checking is
+    /// unchanged and a prefetch never holds a slot or consumes the
+    /// ticket. Returns true if a prefetch is now staged (or already
+    /// was); false means there is nothing to overlap — unknown ticket,
+    /// DRAM park (a verified memcpy hides nothing), or an I/O error
+    /// the demand path's bounded retry will absorb.
+    pub fn begin_restore(&mut self, ticket: KvTicket) -> bool {
+        let id = ticket.id();
+        if self.pending.contains_key(&id) {
+            return true;
+        }
+        let Some(&(rec, used)) = self.ssd.get(&id) else {
+            return false;
+        };
+        let payload = 2 * self.pool.n_layers() * used * 4;
+        let len = SPILL_HEADER_BYTES as usize + payload;
+        let off = rec as u64 * self.record_bytes();
+        #[cfg(unix)]
+        if self.backend.supports_async() {
+            // Positional reads (pread) on a cloned handle: cloned
+            // descriptors share one file cursor, so a seeking read
+            // here would race the engine thread's own seek+read I/O.
+            let Some(cloned) = self.file.as_ref().and_then(|f| f.try_clone().ok()) else {
+                return false;
+            };
+            let tx = self.overlap_tx.clone();
+            self.overlap_pool
+                .get_or_insert_with(|| ThreadPool::new(1))
+                .submit(move || {
+                    use std::os::unix::fs::FileExt;
+                    let mut buf = vec![0u8; len];
+                    let res = cloned.read_exact_at(&mut buf, off).map(|()| buf);
+                    // Receiver may be gone during store teardown.
+                    let _ = tx.send((id, res));
+                });
+            self.pending.insert(id, PendingRestore::Inflight);
+            self.overlap_begun += 1;
+            return true;
+        }
+        // Deterministic backends (fault injection) and non-unix hosts
+        // read at begin time on the engine thread, keeping every
+        // backend RNG draw in program order; the overlap is then only
+        // the restore-time read this absorbs, but a seeded chaos
+        // schedule still replays exactly.
+        let mut buf = vec![0u8; len];
+        let res = match self.file.as_mut() {
+            Some(file) => self.backend.read_at(file, off, &mut buf),
+            None => return false,
+        };
+        match res {
+            Ok(()) => {
+                self.pending.insert(id, PendingRestore::Ready(buf));
+                self.overlap_begun += 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// `(prefetches begun, prefetches a restore consumed)` — folded
+    /// into `Telemetry::pipeline` by the engine.
+    pub fn overlap_counters(&self) -> (u64, u64) {
+        (self.overlap_begun, self.overlap_hits)
+    }
+
+    /// File any completed prefetch reads into [`Self::pending`].
+    fn drain_overlap(&mut self) {
+        while let Ok(done) = self.overlap_rx.try_recv() {
+            self.route_overlap(done);
+        }
+    }
+
+    fn route_overlap(&mut self, (id, res): (u64, io::Result<Vec<u8>>)) {
+        if !self.pending.contains_key(&id) {
+            return; // ticket discarded or exported while the read flew
+        }
+        match res {
+            Ok(buf) => {
+                self.pending.insert(id, PendingRestore::Ready(buf));
+            }
+            // Failed prefetch: forget it — the demand path re-reads
+            // with bounded retry.
+            Err(_) => {
+                self.pending.remove(&id);
+            }
+        }
+    }
+
+    /// Try to finish a restore from prefetched record bytes. `None`
+    /// means no usable prefetch (the caller falls through to the
+    /// demand path); `Some(Err)` is a hard error (no free slot) with
+    /// the ticket still parked and redeemable.
+    fn take_overlapped(&mut self, id: u64) -> Option<Result<usize>> {
+        self.drain_overlap();
+        while matches!(self.pending.get(&id), Some(PendingRestore::Inflight)) {
+            match self.overlap_rx.recv() {
+                Ok(done) => self.route_overlap(done),
+                Err(_) => {
+                    // Workers gone (teardown race): demand path.
+                    self.pending.remove(&id);
+                    break;
+                }
+            }
+        }
+        let PendingRestore::Ready(buf) = self.pending.remove(&id)? else {
+            return None;
+        };
+        // Decode + CRC-verify on the engine thread, exactly as the
+        // demand path would; a corrupt prefetch falls back to the
+        // demand read (torn reads can clear on retry).
+        let (used, k, v) = self.decode_record_buf(&buf).ok()?;
+        let &(rec, rec_used) = self.ssd.get(&id)?;
+        if rec_used != used {
+            return None;
+        }
+        let slot = match self.pool.acquire() {
+            Some(s) => s,
+            None => {
+                return Some(Err(anyhow::anyhow!(
+                    "no free HBM KV slot to restore ticket {id} into"
+                )))
+            }
+        };
+        let bytes = (k.len() + v.len()) as u64 * 4;
+        self.load_prefix(slot, &k, &v);
+        self.ssd.remove(&id);
+        self.file_free.push(rec);
+        self.counters.restores_ssd += 1;
+        self.counters.restore_bytes_ssd += bytes;
+        self.overlap_hits += 1;
+        Some(Ok(slot))
+    }
+
     /// Drop a parked ticket without restoring it (a preempted session
     /// cancelled). Returns false for unknown tickets.
     pub fn discard(&mut self, ticket: KvTicket) -> bool {
         let id = ticket.id();
+        // An outstanding prefetch dies with the ticket; a late
+        // completion routes to no pending entry and is dropped.
+        self.pending.remove(&id);
         if let Some(sp) = self.dram.remove(&id) {
             self.dram_used -= (sp.k.len() + sp.v.len()) as u64 * 4;
             self.counters.discards += 1;
@@ -851,6 +1046,8 @@ impl KvStore {
     /// usual bounded retry; on any error the ticket remains redeemable.
     pub fn export_record(&mut self, ticket: KvTicket) -> Result<Vec<u8>> {
         let id = ticket.id();
+        // A handoff export supersedes any overlapped-restore prefetch.
+        self.pending.remove(&id);
         if self.dram.contains_key(&id) {
             self.verify_dram(id).context("KV handoff export")?;
             let sp = self.dram.remove(&id).expect("verified entry present");
@@ -1330,6 +1527,90 @@ mod tests {
         assert_eq!(kv.ssd_parked(), 0);
         assert_eq!(kv.file_high_water(), 1);
         assert_eq!(kv.file_free_records(), 1);
+    }
+
+    #[test]
+    fn overlapped_restore_roundtrips_byte_identically() {
+        let mut kv = KvStore::new(2, 2, 6, 0); // zero DRAM budget: SSD park
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[1.5, -2.5], &[f32::NAN, -0.0]);
+        kv.write_token(a, 1, 1, 2, &[3.0, 4.0], &[5.0, 6.0]);
+        let k0 = kv.k_layer(a, 0).to_vec();
+        let v1 = kv.v_layer(a, 1).to_vec();
+        let t = kv.spill(a).unwrap();
+        assert!(kv.begin_restore(t), "SSD park must be prefetchable");
+        assert!(kv.begin_restore(t), "idempotent while staged");
+        let b = kv.restore(t).unwrap();
+        assert_eq!(bits(kv.k_layer(b, 0)), bits(&k0));
+        assert_eq!(bits(kv.v_layer(b, 1)), bits(&v1));
+        assert_eq!(kv.overlap_counters(), (1, 1));
+        assert_eq!(kv.counters().restores_ssd, 1);
+        assert_eq!(kv.file_free_records(), 1, "record recycled");
+        assert!(kv.restore(t).is_err(), "ticket redeems once");
+    }
+
+    #[test]
+    fn begin_restore_on_dram_park_is_a_noop() {
+        let mut kv = KvStore::new(1, 1, 4, 1 << 20);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[1.0, 2.0], &[3.0, 4.0]);
+        let t = kv.spill(a).unwrap();
+        assert!(!kv.begin_restore(t), "DRAM memcpy hides nothing");
+        assert!(!kv.begin_restore(KvTicket::new(99)), "unknown ticket");
+        let b = kv.restore(t).unwrap();
+        assert_eq!(&kv.k_layer(b, 0)[..2], &[1.0, 2.0]);
+        assert_eq!(kv.overlap_counters(), (0, 0));
+        assert_eq!(kv.counters().restores_dram, 1);
+    }
+
+    #[test]
+    fn prefetch_survives_full_pool_and_discard_leaks_nothing() {
+        let mut kv = KvStore::new(1, 1, 4, 0);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[9.0, 8.0], &[7.0, 6.0]);
+        let t = kv.spill(a).unwrap();
+        assert!(kv.begin_restore(t));
+        let b = kv.acquire().unwrap(); // the only slot, taken again
+        assert!(kv.restore(t).is_err(), "no free slot");
+        assert_eq!(kv.spilled(), 1, "ticket stays parked");
+        kv.release(b);
+        // The failed attempt consumed the prefetch: the demand path
+        // must still redeem the ticket byte-identically.
+        let c = kv.restore(t).unwrap();
+        assert_eq!(&kv.k_layer(c, 0)[..2], &[9.0, 8.0]);
+        kv.release(c);
+        // And discarding a prefetched ticket frees its record.
+        let d = kv.acquire().unwrap();
+        let t2 = kv.spill(d).unwrap();
+        assert!(kv.begin_restore(t2));
+        assert!(kv.discard(t2));
+        assert_eq!(kv.spilled(), 0);
+        assert_eq!(kv.file_free_records(), 1);
+    }
+
+    #[test]
+    fn deterministic_backend_prefetches_at_begin_time() {
+        // An active fault config routes I/O through the seeded
+        // FaultyBackend, which refuses background reads; begin_restore
+        // then reads synchronously in program order and the overlapped
+        // restore still round-trips.
+        let cfg = FaultConfig {
+            latency_spike: 1.0,
+            spike_ms: 0,
+            ..FaultConfig::default()
+        };
+        let mut kv = KvStore::new(1, 1, 4, 0).with_faults(cfg);
+        let a = kv.acquire().unwrap();
+        kv.write_token(a, 0, 0, 2, &[1.0, -1.0], &[2.0, -2.0]);
+        let t = kv.spill(a).unwrap();
+        assert!(kv.begin_restore(t));
+        let b = kv.restore(t).unwrap();
+        assert_eq!(&kv.k_layer(b, 0)[..2], &[1.0, -1.0]);
+        assert_eq!(kv.overlap_counters(), (1, 1));
+        assert!(
+            kv.fault_counters().injected_latency_spikes >= 2,
+            "spill write and prefetch read both drew from the seeded RNG"
+        );
     }
 
     #[test]

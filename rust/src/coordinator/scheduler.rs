@@ -125,6 +125,14 @@ pub struct SchedConfig {
     /// meaningful over engines with [`SessionEngine::supports_spill`]
     /// and under [`SchedMode::PriorityEdf`].
     pub preempt_cap: u32,
+    /// Overlapped restore: at the end of every tick, hint the engine
+    /// ([`SessionEngine::begin_restore`]) about the parked session at
+    /// the head of the readmission order, so its spilled KV is
+    /// prefetched on I/O threads while the turn gap and the next
+    /// turn's compute run. Purely advisory — restores stay correct
+    /// either way — and off by default so demand-restore byte meters
+    /// and fault schedules stay bit-exact.
+    pub overlap_restore: bool,
 }
 
 impl Default for SchedConfig {
@@ -136,6 +144,7 @@ impl Default for SchedConfig {
             continuous: true,
             batch: false,
             preempt_cap: DEFAULT_PREEMPT_CAP,
+            overlap_restore: false,
         }
     }
 }
@@ -1007,6 +1016,7 @@ impl<E: SessionEngine> Scheduler<E> {
             report_done(&mut report, finish(entry.s, missed));
             self.admit_with(&mut report, false);
         }
+        self.hint_next_restore();
         report
     }
 
@@ -1171,7 +1181,28 @@ impl<E: SessionEngine> Scheduler<E> {
             // index into `active`.
             self.admit_with(&mut report, false);
         }
+        self.hint_next_restore();
         report
+    }
+
+    /// Overlapped-restore hint ([`SchedConfig::overlap_restore`]): at
+    /// tick end, tell the engine which parked session leads the
+    /// readmission order — the one [`Self::admit_with`] would resume
+    /// first — so its spilled KV prefetch overlaps the next turn's
+    /// compute. A wrong guess (the next turn admits from the backlog
+    /// instead, or the session is cancelled) wastes only the prefetch
+    /// read.
+    fn hint_next_restore(&mut self) {
+        if !self.cfg.overlap_restore {
+            return;
+        }
+        let best = self
+            .parked
+            .iter()
+            .min_by_key(|p| (p.s.priority.index(), p.deadline_abs.unwrap_or(u64::MAX), p.seq));
+        if let Some(p) = best {
+            self.engine.begin_restore(p.ticket);
+        }
     }
 
     /// Drive until every submitted request has completed or failed.
@@ -1222,6 +1253,8 @@ mod tests {
         can_spill: bool,
         next_ticket: u64,
         parked: std::collections::HashSet<u64>,
+        /// Ticket ids the scheduler hinted via `begin_restore`.
+        restore_hints: Vec<u64>,
     }
 
     impl Stub {
@@ -1234,6 +1267,7 @@ mod tests {
                 can_spill: false,
                 next_ticket: 0,
                 parked: std::collections::HashSet::new(),
+                restore_hints: Vec::new(),
             }
         }
 
@@ -1298,6 +1332,10 @@ mod tests {
         }
         fn discard(&mut self, _s: &mut DecodeSession, t: KvTicket) {
             self.parked.remove(&t.id());
+        }
+        fn begin_restore(&mut self, t: KvTicket) {
+            assert!(self.parked.contains(&t.id()), "hint for unknown ticket");
+            self.restore_hints.push(t.id());
         }
     }
 
@@ -1783,6 +1821,52 @@ mod tests {
         }
         assert_eq!(sched.engine().free.len(), 2, "all slots returned");
         assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
+    }
+
+    #[test]
+    fn overlap_hint_targets_the_readmission_head() {
+        // With overlap_restore on, every tick that leaves sessions
+        // parked hints the engine about the one the next admission
+        // pass would resume first — and serving output is unchanged.
+        let cfg = SchedConfig {
+            overlap_restore: true,
+            ..SchedConfig::default()
+        };
+        let mut sched = Scheduler::with_config(Stub::spilling(1), 3, cfg);
+        sched.set_virtual_now_ms(0);
+        sched.submit(req(1, &[1, 2], 6).with_class(Priority::Normal, Some(10_000)));
+        sched.tick(); // resident and decoding
+        sched.submit(req(2, &[2, 2], 2).with_class(Priority::Normal, Some(100)));
+        let outs = sched.run_until_idle();
+        assert_eq!(sched.preemptions, 1);
+        assert_eq!(sched.resumes, 1);
+        assert_eq!(outs.len(), 2);
+        for o in outs {
+            assert!(matches!(o, Outcome::Done(_)), "no session may fail");
+        }
+        let hints = &sched.engine().restore_hints;
+        assert!(!hints.is_empty(), "parked turns must hint the engine");
+        assert!(
+            hints.iter().all(|&t| t == 1),
+            "only session 1's ticket was ever parked"
+        );
+        assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
+        assert_eq!(sched.engine().free.len(), 1, "leaked slots");
+    }
+
+    #[test]
+    fn overlap_hint_off_by_default() {
+        let mut sched = Scheduler::new(Stub::spilling(1), 3);
+        sched.set_virtual_now_ms(0);
+        sched.submit(req(1, &[1, 2], 6).with_class(Priority::Normal, Some(10_000)));
+        sched.tick();
+        sched.submit(req(2, &[2, 2], 2).with_class(Priority::Normal, Some(100)));
+        sched.run_until_idle();
+        assert_eq!(sched.preemptions, 1, "setup must still preempt");
+        assert!(
+            sched.engine().restore_hints.is_empty(),
+            "default config must never call begin_restore"
+        );
     }
 
     #[test]

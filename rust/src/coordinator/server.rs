@@ -416,6 +416,9 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
          \"prefix\":{{\"hits\":{},\"hit_tokens\":{}}},\
          \"faults\":{{\"injected\":{},\"io_retries\":{},\"crc_failures\":{},\
          \"degraded_spills\":{},\"ssd_degraded\":{},\"recoveries\":{}}},\
+         \"pipeline\":{{\"staged\":{},\"staged_hits\":{},\"prefetch_wasted\":{},\
+         \"staged_failures\":{},\"ensure_stalls\":{},\"ensure_stall_s\":{:.6},\
+         \"overlap_restores_begun\":{},\"overlap_restore_hits\":{}}},\
          \"fleet\":{{\"replicas\":{},\"handoffs\":{},\"handoff_bytes\":{},\"aborted\":{},\
          \"recovered\":{},\"gco2_g\":{:.6},\"per_replica\":[{}]}},\
          \"classes\":{{{}}}}}\n",
@@ -441,6 +444,14 @@ fn stats_json(depth: usize, enqueued: u64, rejected: u64, s: &StatsSnapshot) -> 
         s.faults.degraded_spills,
         s.faults.ssd_degraded,
         s.recoveries,
+        s.pipeline.staged,
+        s.pipeline.staged_hits,
+        s.pipeline.prefetch_wasted,
+        s.pipeline.staged_failures,
+        s.pipeline.ensure_stalls,
+        s.pipeline.ensure_stall_s,
+        s.pipeline.overlap_restores_begun,
+        s.pipeline.overlap_restore_hits,
         s.fleet.n_replicas,
         s.fleet.handoffs,
         s.fleet.handoff_bytes,
@@ -1139,6 +1150,34 @@ mod tests {
             j.contains(
                 "\"faults\":{\"injected\":6,\"io_retries\":4,\"crc_failures\":2,\
                  \"degraded_spills\":1,\"ssd_degraded\":true,\"recoveries\":3}"
+            ),
+            "{j}"
+        );
+    }
+
+    #[test]
+    fn stats_json_carries_pipeline_counters() {
+        use crate::telemetry::PipelineCounters;
+        let pipeline = PipelineCounters {
+            staged: 10,
+            staged_hits: 7,
+            prefetch_wasted: 3,
+            ensure_stalls: 2,
+            ensure_stall_s: 0.25,
+            overlap_restores_begun: 4,
+            overlap_restore_hits: 4,
+            ..PipelineCounters::default()
+        };
+        let s = StatsSnapshot {
+            pipeline,
+            ..Default::default()
+        };
+        let j = stats_json(0, 0, 0, &s);
+        assert!(
+            j.contains(
+                "\"pipeline\":{\"staged\":10,\"staged_hits\":7,\"prefetch_wasted\":3,\
+                 \"staged_failures\":0,\"ensure_stalls\":2,\"ensure_stall_s\":0.250000,\
+                 \"overlap_restores_begun\":4,\"overlap_restore_hits\":4}"
             ),
             "{j}"
         );

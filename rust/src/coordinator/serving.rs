@@ -16,7 +16,9 @@
 use crate::coordinator::request::Request;
 use crate::coordinator::scheduler::{SchedConfig, Scheduler, SessionEvent};
 use crate::coordinator::session::SessionEngine;
-use crate::telemetry::{ClassCounters, FaultCounters, FleetCounters, SpillCounters, N_CLASSES};
+use crate::telemetry::{
+    ClassCounters, FaultCounters, FleetCounters, PipelineCounters, SpillCounters, N_CLASSES,
+};
 
 /// One coherent view of the serving state, taken from the scheduler and
 /// the engine's telemetry in a single call — the replacement for the
@@ -62,6 +64,9 @@ pub struct StatsSnapshot {
     /// Heterogeneous-fleet counters (per-replica rows, handoffs), from
     /// engine telemetry. All-zero when serving a single replica.
     pub fleet: FleetCounters,
+    /// Pipelined-datapath counters (speculative staging, demand stalls,
+    /// overlapped restores). All-zero when `pipeline` is off.
+    pub pipeline: PipelineCounters,
 }
 
 impl StatsSnapshot {
@@ -172,6 +177,7 @@ impl<E: SessionEngine> ServingCore<E> {
             recoveries: self.sched.recoveries,
             faults: tel.map_or(FaultCounters::default(), |t| t.faults),
             fleet: tel.map_or(FleetCounters::default(), |t| t.fleet),
+            pipeline: tel.map_or(PipelineCounters::default(), |t| t.pipeline),
         }
     }
 

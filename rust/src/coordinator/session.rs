@@ -483,6 +483,15 @@ pub trait SessionEngine {
     /// release (the slot went back to the pool at spill time).
     fn discard(&mut self, _s: &mut DecodeSession, _ticket: KvTicket) {}
 
+    /// Hint that `ticket`'s session is expected to be admitted next
+    /// turn: the engine may start prefetching the spilled KV state on
+    /// I/O threads so the following [`Self::restore`] finds the bytes
+    /// already read — overlapping the restore with the current turn's
+    /// compute. Purely advisory: a hint for a session that never
+    /// resumes wastes only bandwidth, and [`Self::restore`] must stay
+    /// correct whether or not this was called. Default: no-op.
+    fn begin_restore(&mut self, _ticket: KvTicket) {}
+
     /// Whether this engine can export a session's KV for a *different*
     /// replica to import — the fleet handoff on top of spill/restore.
     /// [`crate::coordinator::fleet::Fleet`] only migrates sessions

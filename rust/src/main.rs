@@ -54,6 +54,12 @@ fn engine_config(args: &Args) -> EngineConfig {
     }
     cfg.fixed_layers = args.get_usize("fixed-layers", cfg.fixed_layers);
     cfg.preload_depth = args.get_usize("preload-depth", cfg.preload_depth);
+    // Pipelined datapath: --io-threads widens the SSD preloader's pool
+    // (and the staging workers); --pipeline turns on speculative
+    // next-layer staging + overlapped KV restore. Both default off so
+    // the synchronous datapath stays bit-identical.
+    cfg.io_threads = args.get_usize("io-threads", cfg.io_threads).max(1);
+    cfg.pipeline = args.flag("pipeline");
     cfg.max_sessions = args.get_usize("sessions", cfg.max_sessions).max(1);
     // Tiered KV: physical HBM slots (default = sessions). Fewer slots
     // than sessions oversubscribes serving — the scheduler preempts by
@@ -183,6 +189,12 @@ COMMANDS:
                                        outputs byte-identical)
                   [--spill-retries N]  attempts per spill I/O op before
                                        the degradation ladder engages
+                  [--pipeline]         pipelined datapath: speculative
+                                       next-layer staging + overlapped
+                                       KV restore (outputs stay
+                                       byte-identical)
+                  [--io-threads N]     SSD preloader / staging worker
+                                       threads (default 1)
                   protocol v1: `GEN <max_new> <prompt>` or
                   `GEN@<class>[:<deadline_ms>] <max_new> <prompt>`
                   with class in {high, normal, batch}

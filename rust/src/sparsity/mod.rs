@@ -6,9 +6,11 @@
 pub mod overlap;
 pub mod plan_trace;
 pub mod predictor;
+pub mod speculate;
 pub mod trace;
 
 pub use overlap::OverlapTracker;
 pub use plan_trace::{PlanRecord, PlanTrace};
 pub use predictor::{recall, score, top_k};
+pub use speculate::candidate_plan;
 pub use trace::{ActivationTrace, TraceConfig};

@@ -1,0 +1,102 @@
+//! Speculative next-layer planning for the pipelined decode datapath.
+//!
+//! Deja-Vu-style predictors take their own layer's input, which does
+//! not exist until the previous layer's kernel has run — exactly the
+//! dependency that serializes tier traffic behind compute. But
+//! adjacent-layer hidden states are highly similar (the same
+//! cross-layer stability the paper's Fig 6 overlap analysis measures),
+//! so scoring layer L+1's predictor on layer L's *input* yields a
+//! cheap candidate plan for L+1 before L executes. Staging workers
+//! warm the tiers against the candidate while L computes; at L+1 entry
+//! the exact plan is still computed from the true hidden state and
+//! reconciled against staged contents, so a mispredicted candidate
+//! only wastes bandwidth (`prefetch_wasted`) — never a byte of output.
+
+use crate::model::weights::PredictorWeights;
+use crate::precision::plan::{plan_from_scores, LayerPlan, PrecisionRatios};
+use crate::sparsity::predictor::{score, top_k};
+
+/// Build a candidate plan for the layer `pred` belongs to from a
+/// *stale* hidden state `x` (the previous layer's input), running the
+/// same scoring + plan construction the exact path uses: the candidate
+/// and the exact plan differ only by how much the hidden state moved
+/// across the layer. `mp` selects mixed-precision class assignment;
+/// `None` plans a flat top-`plan_k` FP16 set (the `--no-mp` ablation).
+/// `scores` is a reusable scratch buffer.
+pub fn candidate_plan(
+    pred: &PredictorWeights,
+    x: &[f32],
+    mp: Option<&PrecisionRatios>,
+    plan_k: usize,
+    scores: &mut Vec<f32>,
+) -> LayerPlan {
+    score(pred, x, scores);
+    match mp {
+        Some(ratios) => plan_from_scores(scores, ratios),
+        None => LayerPlan {
+            fp16: top_k(scores, plan_k),
+            int8: vec![],
+            int4: vec![],
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pred(rng: &mut Rng, d: usize, r: usize, n: usize) -> PredictorWeights {
+        PredictorWeights {
+            a: (0..d * r).map(|_| rng.f32() - 0.5).collect(),
+            b: (0..r * n).map(|_| rng.f32() - 0.5).collect(),
+            rank: r,
+        }
+    }
+
+    #[test]
+    fn candidate_matches_exact_plan_on_same_input() {
+        // The speculation contract's best case: when the hidden state
+        // doesn't move across the layer, the candidate IS the exact
+        // plan — same scoring, same plan construction, no divergence.
+        let mut rng = Rng::new(7);
+        let p = pred(&mut rng, 16, 4, 64);
+        let x: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        let ratios = PrecisionRatios::new(0.1, 0.2, 0.3);
+        let cand = candidate_plan(&p, &x, Some(&ratios), 0, &mut s1);
+        let exact = plan_from_scores(
+            {
+                score(&p, &x, &mut s2);
+                &s2
+            },
+            &ratios,
+        );
+        assert_eq!(cand, exact);
+    }
+
+    #[test]
+    fn candidate_flat_mode_is_top_k() {
+        let mut rng = Rng::new(9);
+        let p = pred(&mut rng, 8, 2, 32);
+        let x: Vec<f32> = (0..8).map(|_| rng.f32() - 0.5).collect();
+        let mut s = Vec::new();
+        let cand = candidate_plan(&p, &x, None, 5, &mut s);
+        assert_eq!(cand.fp16.len(), 5);
+        assert!(cand.int8.is_empty() && cand.int4.is_empty());
+        assert_eq!(cand.fp16, top_k(&s, 5));
+    }
+
+    #[test]
+    fn candidate_is_deterministic() {
+        let mut rng = Rng::new(11);
+        let p = pred(&mut rng, 8, 2, 32);
+        let x: Vec<f32> = (0..8).map(|_| rng.f32() - 0.5).collect();
+        let ratios = PrecisionRatios::new(0.1, 0.2, 0.3);
+        let mut s = Vec::new();
+        let a = candidate_plan(&p, &x, Some(&ratios), 0, &mut s);
+        let b = candidate_plan(&p, &x, Some(&ratios), 0, &mut s);
+        assert_eq!(a, b);
+    }
+}

@@ -67,6 +67,35 @@ impl SpillCounters {
     }
 }
 
+/// Pipelined-datapath counters: speculative next-layer staging
+/// outcomes, the demand-miss stall time the synchronous tiers still
+/// cost, and overlapped KV restores. All zero when the pipeline is off
+/// (`--pipeline` unset) — speculation changes traffic, never bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PipelineCounters {
+    /// Neuron records staged against speculative next-layer plans.
+    pub staged: u64,
+    /// Staged records the exact plan consumed (demand loads avoided).
+    pub staged_hits: u64,
+    /// Staged records never consumed — mispredicted plans' wasted
+    /// bandwidth (the speculation contract's only cost).
+    pub prefetch_wasted: u64,
+    /// Staged reads that failed; their neurons fell back to the
+    /// synchronous demand path.
+    pub staged_failures: u64,
+    /// `Preloader::ensure` calls that found their layer missing from
+    /// DRAM (the compute stream blocked on the storage tiers).
+    pub ensure_stalls: u64,
+    /// Wall-clock seconds spent blocked in those calls.
+    pub ensure_stall_s: f64,
+    /// Overlapped-restore prefetches the scheduler hinted for parked
+    /// sessions about to be admitted.
+    pub overlap_restores_begun: u64,
+    /// Restores served from a prefetched spill record — the SSD read
+    /// came off the resume critical path.
+    pub overlap_restore_hits: u64,
+}
+
 /// Fault-injection and self-healing counters for the storage
 /// hierarchy: what the seeded [`FaultyBackend`] injected, how the
 /// store's retry/checksum machinery absorbed it, and whether the
@@ -300,6 +329,9 @@ pub struct Telemetry {
     /// cold-prefilling, and the prompt tokens those hits skipped.
     pub prefix_hits: u64,
     pub prefix_hit_tokens: u64,
+    /// Pipelined-datapath counters (see [`PipelineCounters`]; all zero
+    /// with the pipeline off).
+    pub pipeline: PipelineCounters,
     /// Storage-hierarchy fault-injection and self-healing counters
     /// (see [`FaultCounters`]).
     pub faults: FaultCounters,
@@ -384,6 +416,23 @@ impl Telemetry {
             .field_num("transfer_s", self.phases.transfer_s)
             .field_num("attention_s", self.phases.attention_s)
             .field_num("ffn_s", self.phases.ffn_s);
+        w.key("pipeline")
+            .begin_obj()
+            .field_int("staged", self.pipeline.staged as i64)
+            .field_int("staged_hits", self.pipeline.staged_hits as i64)
+            .field_int("prefetch_wasted", self.pipeline.prefetch_wasted as i64)
+            .field_int("staged_failures", self.pipeline.staged_failures as i64)
+            .field_int("ensure_stalls", self.pipeline.ensure_stalls as i64)
+            .field_num("ensure_stall_s", self.pipeline.ensure_stall_s)
+            .field_int(
+                "overlap_restores_begun",
+                self.pipeline.overlap_restores_begun as i64,
+            )
+            .field_int(
+                "overlap_restore_hits",
+                self.pipeline.overlap_restore_hits as i64,
+            )
+            .end_obj();
         w.key("faults")
             .begin_obj()
             .field_int("injected", self.faults.injected() as i64)
@@ -588,6 +637,29 @@ mod tests {
         let j = t.to_json();
         assert!(j.contains("\"prefix_hits\":3"), "{j}");
         assert!(j.contains("\"prefix_hit_tokens\":42"), "{j}");
+    }
+
+    #[test]
+    fn pipeline_counters_in_json() {
+        let t = Telemetry {
+            pipeline: PipelineCounters {
+                staged: 20,
+                staged_hits: 17,
+                prefetch_wasted: 3,
+                staged_failures: 1,
+                ensure_stalls: 5,
+                ensure_stall_s: 0.25,
+                overlap_restores_begun: 2,
+                overlap_restore_hits: 2,
+            },
+            ..Default::default()
+        };
+        let j = t.to_json();
+        assert!(j.contains("\"pipeline\":{\"staged\":20"), "{j}");
+        assert!(j.contains("\"staged_hits\":17"), "{j}");
+        assert!(j.contains("\"prefetch_wasted\":3"), "{j}");
+        assert!(j.contains("\"ensure_stalls\":5"), "{j}");
+        assert!(j.contains("\"overlap_restore_hits\":2"), "{j}");
     }
 
     #[test]

@@ -91,12 +91,37 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.cv.wait(q).unwrap();
             }
         };
-        job();
-        let mut inflight = sh.inflight.lock().unwrap();
+        // Decrement through a drop guard so a panicking job still
+        // settles the inflight count during unwind — otherwise
+        // `wait_idle()` (and `Preloader::quiesce`) would block forever
+        // on a count that can never reach zero. The catch keeps the
+        // worker itself alive: on a 1-thread pool a dead worker would
+        // strand every job queued after the panic.
+        let guard = InflightGuard { sh: &sh };
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        drop(guard);
+    }
+}
+
+struct InflightGuard<'a> {
+    sh: &'a Shared,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        let mut inflight = self.sh.inflight.lock().unwrap();
         *inflight -= 1;
         if *inflight == 0 {
-            sh.idle_cv.notify_all();
+            self.sh.idle_cv.notify_all();
         }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.workers.len())
+            .finish_non_exhaustive()
     }
 }
 
@@ -154,6 +179,30 @@ mod tests {
         }
         drop(pool); // joins workers; queued jobs all run first
         assert_eq!(counter.load(Ordering::SeqCst), 10, "drop dropped queued jobs");
+    }
+
+    #[test]
+    fn panicking_job_does_not_strand_wait_idle() {
+        // Regression: `inflight` used to be decremented only after
+        // `job()` returned, so one panicking job left the count stuck
+        // above zero and `wait_idle()` hung forever. The drop guard
+        // settles the count during unwind, and the worker survives to
+        // run jobs queued after the panic.
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("injected job panic"));
+        for _ in 0..3 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must not block
+        assert_eq!(
+            counter.load(Ordering::SeqCst),
+            3,
+            "jobs queued after a panic must still run"
+        );
     }
 
     #[test]

@@ -106,6 +106,12 @@ impl SessionEngine for ChaosEngine {
         self.kv.discard(ticket);
     }
 
+    fn begin_restore(&mut self, ticket: KvTicket) {
+        // Overlapped-restore hint: prefetch the spill record through
+        // the same fault-injected backend the demand path uses.
+        self.kv.begin_restore(ticket);
+    }
+
     fn supports_handoff(&self) -> bool {
         true
     }
@@ -209,13 +215,9 @@ struct ChaosRun {
 /// Drive a trace to idle under 2x oversubscription with the given
 /// fault schedule. Panics on any `Failed` outcome; asserts no slot or
 /// ticket leaks once the trace drains.
-fn chaos_replay(events: &[TraceEvent], faults: FaultConfig) -> ChaosRun {
+fn chaos_replay(events: &[TraceEvent], faults: FaultConfig, cfg: SchedConfig) -> ChaosRun {
     const SLOTS: usize = 2;
-    let mut sched = Scheduler::with_config(
-        ChaosEngine::new(SLOTS, faults),
-        2 * SLOTS,
-        SchedConfig::default(),
-    );
+    let mut sched = Scheduler::with_config(ChaosEngine::new(SLOTS, faults), 2 * SLOTS, cfg);
     sched.set_virtual_now_ms(0);
     let mut now = 0u64;
     let mut next_ev = 0usize;
@@ -271,7 +273,7 @@ fn chaos_schedules_preserve_bytes_and_leak_nothing() {
     let reference = sequential_reference(&events);
     let mut injected_total = 0u64;
     for seed in chaos_seeds() {
-        let run = chaos_replay(&events, chaos_faults(seed));
+        let run = chaos_replay(&events, chaos_faults(seed), SchedConfig::default());
         assert_eq!(
             run.tokens.len(),
             events.len(),
@@ -298,7 +300,7 @@ fn chaos_schedules_preserve_bytes_and_leak_nothing() {
         injected_total += run.faults.injected();
         // Exact replay: the same seed reproduces bytes, recovery
         // decisions, and the injected-fault schedule bit-for-bit.
-        let again = chaos_replay(&events, chaos_faults(seed));
+        let again = chaos_replay(&events, chaos_faults(seed), SchedConfig::default());
         assert_eq!(again.tokens, run.tokens, "seed {seed:#x}: bytes not replayable");
         assert_eq!(again.recoveries, run.recoveries, "seed {seed:#x}");
         assert_eq!(again.faults, run.faults, "seed {seed:#x}: fault schedule drifted");
@@ -306,6 +308,60 @@ fn chaos_schedules_preserve_bytes_and_leak_nothing() {
     assert!(
         injected_total > 0,
         "chaos seeds injected nothing — the tier is vacuous"
+    );
+}
+
+#[test]
+fn pipelined_chaos_replay_composes_overlap_with_fault_injection() {
+    // The pipelined datapath under fire: `overlap_restore` prefetches
+    // spill records through the same FaultyBackend the demand path
+    // uses — synchronously at hint time, because deterministic
+    // decorators refuse the async seam so every RNG draw stays in
+    // program order. Injected corruption can therefore land in the
+    // prefetch buffer itself; the CRC check at redemption must then
+    // route the restore back through the demand path and its ladder.
+    // Contract: zero Failed outcomes, reference bytes, no leaked
+    // slots or tickets, and bit-exact replay per seed.
+    let events = generate(&spec(40));
+    let reference = sequential_reference(&events);
+    let overlap = SchedConfig {
+        overlap_restore: true,
+        ..SchedConfig::default()
+    };
+    let mut injected_total = 0u64;
+    for seed in chaos_seeds() {
+        let run = chaos_replay(&events, chaos_faults(seed), overlap);
+        assert_eq!(
+            run.tokens.len(),
+            events.len(),
+            "seed {seed:#x}: lost requests"
+        );
+        for (id, toks) in &run.tokens {
+            assert_eq!(
+                toks, &reference[id],
+                "seed {seed:#x}: request {id} diverged under overlapped faults"
+            );
+        }
+        assert!(run.preemptions > 0, "seed {seed:#x}: trace never preempted");
+        assert_eq!(
+            run.preemptions,
+            run.resumes + run.recoveries,
+            "seed {seed:#x}: preemptions must pair with resumes + recoveries"
+        );
+        injected_total += run.faults.injected();
+        let again = chaos_replay(&events, chaos_faults(seed), overlap);
+        assert_eq!(
+            again.tokens, run.tokens,
+            "seed {seed:#x}: overlapped bytes not replayable"
+        );
+        assert_eq!(
+            again.faults, run.faults,
+            "seed {seed:#x}: overlapped fault schedule drifted"
+        );
+    }
+    assert!(
+        injected_total > 0,
+        "overlapped chaos seeds injected nothing — the leg is vacuous"
     );
 }
 
@@ -320,7 +376,7 @@ fn all_restores_corrupt_forces_recompute_for_every_preemption() {
         bit_flip: 1.0,
         ..FaultConfig::default()
     };
-    let run = chaos_replay(&events, faults);
+    let run = chaos_replay(&events, faults, SchedConfig::default());
     assert!(run.preemptions > 0, "trace never preempted");
     assert_eq!(run.resumes, 0, "a corrupt record restored");
     assert_eq!(run.recoveries, run.preemptions);

@@ -46,6 +46,12 @@ struct StubEngine {
     can_spill: bool,
     next_ticket: u64,
     parked: HashSet<u64>,
+    /// Overlapped-restore bookkeeping: tickets the scheduler hinted
+    /// via `begin_restore`, hint count, and restores that consumed a
+    /// prefetch — the stub analogue of the engine's pipelined KV path.
+    prefetched: HashSet<u64>,
+    restore_hints: u64,
+    overlap_hits: u64,
 }
 
 impl StubEngine {
@@ -57,6 +63,9 @@ impl StubEngine {
             can_spill: false,
             next_ticket: 0,
             parked: HashSet::new(),
+            prefetched: HashSet::new(),
+            restore_hints: 0,
+            overlap_hits: 0,
         }
     }
 
@@ -115,12 +124,29 @@ impl SessionEngine for StubEngine {
             .pop()
             .ok_or_else(|| anyhow::anyhow!("no free slot to restore into"))?;
         self.parked.remove(&ticket.id());
+        if self.prefetched.remove(&ticket.id()) {
+            self.overlap_hits += 1;
+        }
         s.rebind_slot(slot);
         Ok(())
     }
 
     fn discard(&mut self, _s: &mut DecodeSession, ticket: KvTicket) {
         self.parked.remove(&ticket.id());
+        self.prefetched.remove(&ticket.id());
+    }
+
+    fn begin_restore(&mut self, ticket: KvTicket) {
+        // The scheduler's contract: hints name currently parked
+        // sessions only (a hint for a freed ticket would prefetch a
+        // record another spill may have recycled).
+        assert!(
+            self.parked.contains(&ticket.id()),
+            "overlap hint for ticket {} which is not parked",
+            ticket.id()
+        );
+        self.restore_hints += 1;
+        self.prefetched.insert(ticket.id());
     }
 }
 
@@ -666,6 +692,77 @@ fn preemption_trace_resumes_byte_identically_and_leaks_nothing() {
     assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
 }
 
+#[test]
+fn overlapped_restore_replay_is_byte_identical_and_leaks_nothing() {
+    // Pipelined-datapath trace tier: the same 2x-oversubscribed
+    // adversarial trace as the preemption test, with `overlap_restore`
+    // on — the scheduler hints the engine about the readmission head at
+    // the end of every turn and restores consume the prefetch. The
+    // contract: hints only ever name parked tickets (asserted inside
+    // the stub), at least one restore actually rides a prefetch, and
+    // every session's bytes still equal the uncontended sequential
+    // reference with zero leaked slots or tickets.
+    const SLOTS: usize = 2;
+    let events = generate(&spec(Mix::AdversarialLongPrompt, 40));
+    let reference = sequential_reference(&events);
+    let cfg = SchedConfig {
+        overlap_restore: true,
+        ..SchedConfig::default()
+    };
+    let mut sched = Scheduler::with_config(StubEngine::spilling(SLOTS), 2 * SLOTS, cfg);
+    sched.set_virtual_now_ms(0);
+    let mut now = 0u64;
+    let mut next_ev = 0usize;
+    let mut tokens: HashMap<u64, Vec<u32>> = HashMap::new();
+    loop {
+        while next_ev < events.len() && events[next_ev].at_ms <= now {
+            sched.submit(events[next_ev].to_request());
+            next_ev += 1;
+        }
+        if sched.is_idle() {
+            if next_ev >= events.len() {
+                break;
+            }
+            now = events[next_ev].at_ms;
+            sched.set_virtual_now_ms(now);
+            continue;
+        }
+        let r = sched.tick();
+        now += r.steps_run as u64;
+        sched.set_virtual_now_ms(now);
+        for o in r.outcomes {
+            match o {
+                Outcome::Done(c) => {
+                    tokens.insert(c.response.id, c.response.tokens);
+                }
+                Outcome::Failed { id, error } => panic!("request {id} failed: {error}"),
+            }
+        }
+    }
+    assert_eq!(tokens.len(), events.len(), "lost requests");
+    assert!(sched.preemptions > 0, "trace never exercised preemption");
+    assert!(
+        sched.engine().restore_hints > 0,
+        "overlap hints never fired on a preempting trace"
+    );
+    assert!(
+        sched.engine().overlap_hits > 0,
+        "no restore ever consumed a prefetch"
+    );
+    for (id, toks) in &tokens {
+        assert_eq!(
+            toks, &reference[id],
+            "pipelined replay changed request {id}'s bytes"
+        );
+    }
+    assert_eq!(sched.engine().free.len(), SLOTS, "leaked KV slots");
+    assert!(sched.engine().parked.is_empty(), "leaked spill tickets");
+    assert!(
+        sched.engine().prefetched.is_empty(),
+        "prefetches outlived their tickets"
+    );
+}
+
 /// Drive a trace through the scheduler over the library stub engine
 /// (plain drive-to-idle on the virtual clock, like the batched replay),
 /// returning per-request bytes plus the scheduler's prefix-hit
@@ -674,8 +771,9 @@ fn drive_stub(
     events: &[TraceEvent],
     engine: StubSessionEngine,
     slots: usize,
+    cfg: SchedConfig,
 ) -> (HashMap<u64, Vec<u32>>, u64, u64, u64) {
-    let mut sched = Scheduler::with_config(engine, slots, edf_cfg());
+    let mut sched = Scheduler::with_config(engine, slots, cfg);
     sched.set_virtual_now_ms(0);
     let mut now = 0u64;
     let mut next_ev = 0usize;
@@ -733,11 +831,12 @@ fn shared_prefix_replay_is_byte_identical_and_saves_forwards() {
         .iter()
         .map(|e| (e.id, StubSessionEngine::reference_tokens(&e.prompt, e.max_new)))
         .collect();
-    let (cold, cold_hits, _, cold_fwd) = drive_stub(&events, StubSessionEngine::new(SLOTS), SLOTS);
+    let (cold, cold_hits, _, cold_fwd) =
+        drive_stub(&events, StubSessionEngine::new(SLOTS), SLOTS, edf_cfg());
     assert_eq!(cold, reference, "uncached replay diverged from reference");
     assert_eq!(cold_hits, 0, "no cache, no hits");
     let warm_engine = || StubSessionEngine::new(SLOTS).with_prefix_cache(32);
-    let (warm, hits, hit_tokens, warm_fwd) = drive_stub(&events, warm_engine(), SLOTS);
+    let (warm, hits, hit_tokens, warm_fwd) = drive_stub(&events, warm_engine(), SLOTS, edf_cfg());
     assert_eq!(warm, reference, "prefix-hit decode changed generated bytes");
     assert!(hits >= 8, "prefix skew produced only {hits} hits");
     assert!(
@@ -747,8 +846,35 @@ fn shared_prefix_replay_is_byte_identical_and_saves_forwards() {
     // Every hit token is a prefill forward the engine never ran.
     assert_eq!(warm_fwd + hit_tokens, cold_fwd, "forward savings must equal hit tokens exactly");
     // And the cached replay is as deterministic as the cold one.
-    let again = drive_stub(&events, warm_engine(), SLOTS);
+    let again = drive_stub(&events, warm_engine(), SLOTS, edf_cfg());
     assert_eq!(again, (warm, hits, hit_tokens, warm_fwd));
+}
+
+#[test]
+fn pipelined_prefix_replay_matches_serial_scheduling() {
+    // Prefix-cache leg of the pipelined byte-equality contract: with
+    // `overlap_restore` on, a trace that never parks a session must
+    // replay exactly as it does under the default config — the hint
+    // path has to be inert, not merely harmless.
+    const SLOTS: usize = 3;
+    let mut events = generate(&spec(Mix::Steady, 48));
+    let preamble: Vec<u32> = (0..24).map(|i| (i * 5 + 2) % VOCAB as u32).collect();
+    inject_shared_prefix(&mut events, &preamble, 1, 2);
+    let warm = || StubSessionEngine::new(SLOTS).with_prefix_cache(32);
+    let serial = drive_stub(&events, warm(), SLOTS, edf_cfg());
+    let pipelined = drive_stub(
+        &events,
+        warm(),
+        SLOTS,
+        SchedConfig {
+            overlap_restore: true,
+            ..SchedConfig::default()
+        },
+    );
+    assert_eq!(
+        pipelined, serial,
+        "overlap hints changed the prefix-cache replay"
+    );
 }
 
 #[test]
